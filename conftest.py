@@ -1,0 +1,6 @@
+# Allow `pytest python/tests/` from the repo root: the test modules import
+# the `compile` package which lives under python/.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

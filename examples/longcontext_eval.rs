@@ -1,0 +1,53 @@
+//! Long-context evaluation demo (paper Sec. 5.3): quantize with QuaRot and
+//! RSQ, then run the long-context probe battery (KV retrieval, needle
+//! position, in-context classification, code-pattern completion).
+//!
+//!     cargo run --release --example longcontext_eval -- --config small
+
+use rsq::corpus::{CalibSet, CorpusKind};
+use rsq::eval::longctx_suite;
+use rsq::model::outliers::{inject_outliers, OutlierSpec};
+use rsq::quant::{quantize, Method, QuantOptions};
+use rsq::runtime::Engine;
+use rsq::train::train_or_load;
+use rsq::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let config = args.str_or("config", "small");
+    let engine = Engine::load(&config)?;
+    let cfg = engine.config().clone();
+    let eval_t = *cfg.seq_lens.iter().max().unwrap();
+    let calib_t = args.usize_or("calib-t", 128);
+    let n = args.usize_or("lc-n", 24);
+
+    let (mut params, _) = train_or_load(&engine, 7, args.usize_or("steps", 400), true)?;
+    inject_outliers(&mut params, OutlierSpec::default(), 7);
+    let calib = CalibSet::generate(cfg.vocab, CorpusKind::Wiki, 16, calib_t, 7, 1);
+
+    let full = longctx_suite(&engine, &params, eval_t, 3, n)?;
+    println!("{:<24} {:>8} {:>8} {:>8}", "task", "full", "quarot", "rsq");
+    let (quarot, _) =
+        quantize(&engine, &params, &calib, &QuantOptions::new(Method::QuaRot, 3, calib_t))?;
+    let (rsq, _) =
+        quantize(&engine, &params, &calib, &QuantOptions::new(Method::Rsq, 3, calib_t))?;
+    let rq = longctx_suite(&engine, &quarot, eval_t, 3, n)?;
+    let rr = longctx_suite(&engine, &rsq, eval_t, 3, n)?;
+    for ((f, q), r) in full.iter().zip(&rq).zip(&rr) {
+        println!(
+            "{:<24} {:>7.1}% {:>7.1}% {:>7.1}%",
+            f.name,
+            100.0 * f.score,
+            100.0 * q.score,
+            100.0 * r.score
+        );
+    }
+    let avg = |v: &[rsq::eval::LongCtxResult]| {
+        100.0 * v.iter().map(|r| r.score).sum::<f64>() / v.len() as f64
+    };
+    println!(
+        "{:<24} {:>7.1}% {:>7.1}% {:>7.1}%",
+        "AVG", avg(&full), avg(&rq), avg(&rr)
+    );
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart: quantize a trained model with RTN / GPTQ / QuaRot / RSQ and
+//! compare perplexity + downstream accuracy.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Flags: --config small --bits 3 --steps 400 --calib-n 16
+
+use rsq::corpus::{CalibSet, CorpusKind};
+use rsq::eval::tasks::mean_accuracy;
+use rsq::eval::{perplexity, probe_suite};
+use rsq::model::outliers::{inject_outliers, OutlierSpec};
+use rsq::quant::{quantize, Method, QuantOptions};
+use rsq::runtime::Engine;
+use rsq::train::train_or_load;
+use rsq::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let config = args.str_or("config", "small");
+    let bits = args.usize_or("bits", 3) as u32;
+
+    // 1. load the AOT artifact set (compiled once by `make artifacts`)
+    let engine = Engine::load(&config)?;
+    let cfg = engine.config().clone();
+    let t = *cfg.seq_lens.iter().max().unwrap().min(&128);
+    println!("model {config}: d={} layers={} params={}", cfg.d, cfg.layers, cfg.num_params());
+
+    // 2. obtain a trained checkpoint (cached under artifacts/<config>/)
+    let (mut params, _) = train_or_load(&engine, 7, args.usize_or("steps", 400), true)?;
+    // give the Rotate step real work: sparse outlier injection (DESIGN.md)
+    inject_outliers(&mut params, OutlierSpec::default(), 7);
+
+    // 3. calibration + held-out eval data from the synthetic corpus
+    let calib =
+        CalibSet::generate(cfg.vocab, CorpusKind::Wiki, args.usize_or("calib-n", 16), t, 7, 1);
+    let eval = CalibSet::generate(cfg.vocab, CorpusKind::Wiki, 32, t, 7, 2);
+
+    let full_ppl = perplexity(&engine, &params, &eval, t)?;
+    let full_acc = mean_accuracy(&probe_suite(&engine, &params, t, 3, 32)?);
+    println!("\n{:<10} {:>10} {:>10} {:>12}", "method", "PPL", "acc(%)", "quant time");
+    println!("{:<10} {:>10.3} {:>10.1} {:>12}", "full", full_ppl, 100.0 * full_acc, "-");
+
+    // 4. quantize with each method and evaluate
+    for method in [Method::Rtn, Method::Gptq, Method::QuaRot, Method::Rsq] {
+        let opts = QuantOptions::new(method, bits, t);
+        let (q, report) = quantize(&engine, &params, &calib, &opts)?;
+        let ppl = perplexity(&engine, &q, &eval, t)?;
+        let acc = mean_accuracy(&probe_suite(&engine, &q, t, 3, 32)?);
+        println!(
+            "{:<10} {:>10.3} {:>10.1} {:>11.2}s",
+            method.name(), ppl, 100.0 * acc, report.wall_seconds
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Importance-strategy sweep (paper Figs. 2-3 in one program): compare all
+//! nine strategies at their defaults, plus an r_min mini-sweep for AttnCon.
+//!
+//!     cargo run --release --example strategy_sweep -- --config small
+
+use rsq::corpus::{CalibSet, CorpusKind};
+use rsq::eval::perplexity;
+use rsq::model::outliers::{inject_outliers, OutlierSpec};
+use rsq::quant::{quantize, Method, QuantOptions, Strategy};
+use rsq::runtime::Engine;
+use rsq::train::train_or_load;
+use rsq::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let config = args.str_or("config", "small");
+    let engine = Engine::load(&config)?;
+    let cfg = engine.config().clone();
+    let t = args.usize_or("calib-t", 128);
+    let bits = args.usize_or("bits", 3) as u32;
+
+    let (mut params, _) = train_or_load(&engine, 7, args.usize_or("steps", 400), true)?;
+    inject_outliers(&mut params, OutlierSpec::default(), 7);
+    let calib = CalibSet::generate(cfg.vocab, CorpusKind::Wiki, 16, t, 7, 1);
+    let eval = CalibSet::generate(cfg.vocab, CorpusKind::Wiki, 32, t, 7, 2);
+    println!("full PPL: {:.3}\n", perplexity(&engine, &params, &eval, t)?);
+
+    let strategies = [
+        Strategy::Uniform,
+        Strategy::FirstN(t / 8),
+        Strategy::FirstLastN(t / 8),
+        Strategy::Chunk { index: 1, of: 4 },
+        Strategy::TokenFreq { r_min: 0.05 },
+        Strategy::ActNorm { r_min: 0.005 },
+        Strategy::ActDiff { r_min: 0.05 },
+        Strategy::TokenSim { r_min: 0.005 },
+        Strategy::AttnCon { r_min: 0.05 },
+    ];
+    println!("{:<20} {:>10}", "strategy (RSQ)", "PPL");
+    for strat in strategies {
+        let mut opts = QuantOptions::new(Method::Rsq, bits, t);
+        opts.strategy = strat;
+        let (q, _) = quantize(&engine, &params, &calib, &opts)?;
+        println!("{:<20} {:>10.3}", strat.name(), perplexity(&engine, &q, &eval, t)?);
+    }
+
+    println!("\nAttnCon r_min sweep:");
+    for r_min in [0.005f32, 0.01, 0.05, 0.1, 0.3] {
+        let mut opts = QuantOptions::new(Method::Rsq, bits, t);
+        opts.strategy = Strategy::AttnCon { r_min };
+        let (q, _) = quantize(&engine, &params, &calib, &opts)?;
+        println!("  r_min={r_min:<6} PPL {:.3}", perplexity(&engine, &q, &eval, t)?);
+    }
+    Ok(())
+}

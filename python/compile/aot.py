@@ -1,0 +1,190 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts for the rust runtime.
+
+Usage:  cd python && python -m compile.aot --config tiny --out ../artifacts/tiny
+
+Emits one `<module>.hlo.txt` per compute graph plus `manifest.txt`
+describing the config, the canonical parameter list, and every module's
+signature. The rust side (rust/src/runtime/manifest.rs) parses the manifest,
+compiles each module once on the PJRT CPU client, and never touches python
+again.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids (see
+/opt/xla-example/README.md).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import quantizer as Q
+from .configs import CONFIGS
+
+LDLQ_K = 1024     # codebook entries for the VQ artifacts (Tab. 6); 8-dim
+LDLQ_G = 8        # group (vector) dimension
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _fmt_shape(s):
+    return "x".join(str(d) for d in s) if s else "scalar"
+
+
+class Emitter:
+    def __init__(self, cfg, out_dir):
+        self.cfg = cfg
+        self.out = out_dir
+        self.lines = []
+
+    def emit(self, name, fn, in_specs, n_out, note=""):
+        """Lower fn at in_specs, write HLO text, record a manifest line."""
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, fname), "w") as f:
+            f.write(text)
+        ins = ";".join(
+            f"{s.dtype}:{_fmt_shape(s.shape)}" for s in in_specs
+        )
+        self.lines.append(f"module={name}|file={fname}|in={ins}|nout={n_out}|note={note}")
+        print(f"  {name}: {len(text)} chars, {len(in_specs)} inputs, {n_out} outputs")
+
+    def param_specs(self):
+        cfg = self.cfg
+        return [_spec(cfg.param_shape(n)) for n in cfg.param_names()]
+
+    def write_manifest(self):
+        cfg = self.cfg
+        hdr = [
+            f"config={cfg.name}", f"d={cfg.d}", f"layers={cfg.layers}",
+            f"heads={cfg.heads}", f"ff={cfg.ff}", f"vocab={cfg.vocab}",
+            f"max_seq={cfg.max_seq}", f"batch={cfg.batch}",
+            f"seq_lens={','.join(str(t) for t in cfg.seq_lens)}",
+            f"ldlq_k={LDLQ_K}", f"ldlq_g={LDLQ_G}",
+        ]
+        hdr += [
+            f"param={n}|shape={_fmt_shape(cfg.param_shape(n))}"
+            for n in cfg.param_names()
+        ]
+        with open(os.path.join(self.out, "manifest.txt"), "w") as f:
+            f.write("\n".join(hdr + self.lines) + "\n")
+
+
+def build_config(cfg, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    em = Emitter(cfg, out_dir)
+    b, d, ff, v = cfg.batch, cfg.d, cfg.ff, cfg.vocab
+    pspecs = em.param_specs()
+
+    for t in cfg.seq_lens:
+        tok = _spec((b, t), jnp.int32)
+        em.emit(
+            f"embed_t{t}",
+            lambda tokens, emb, pos: (M.embed(cfg, tokens, emb, pos),),
+            [tok, _spec((v, d)), _spec((cfg.max_seq, d))], 1,
+            note="tokens->Z0",
+        )
+
+        def layer_fn(z, g1, wq, wk, wv, wo, g2, wup, wgate, wdown):
+            lp = dict(g1=g1, wq=wq, wk=wk, wv=wv, wo=wo, g2=g2,
+                      wup=wup, wgate=wgate, wdown=wdown)
+            return M.layer_fwd(cfg, z, lp, capture=True)
+
+        em.emit(
+            f"layer_fwd_t{t}", layer_fn,
+            [_spec((b, t, d)), _spec((d,)), _spec((d, d)), _spec((d, d)),
+             _spec((d, d)), _spec((d, d)), _spec((d,)), _spec((ff, d)),
+             _spec((ff, d)), _spec((d, ff))], 9,
+            note="z->z2,xa,xo,xf,xd,attn_con,act_norm,act_diff,token_sim",
+        )
+
+        from .kernels import hessian_scaled
+        for kdim, tag in ((d, "d"), (ff, "ff")):
+            em.emit(
+                f"hess_{tag}_t{t}",
+                lambda x, r: (hessian_scaled(x, r),),
+                [_spec((b, t, kdim)), _spec((b, t))], 1,
+                note="H=2*X R^2 X^T (pallas)",
+            )
+
+        em.emit(
+            f"lm_nll_t{t}",
+            lambda tokens, *flat: (M.lm_nll(cfg, tokens, list(flat)),),
+            [tok] + pspecs, 1, note="per-position next-token NLL",
+        )
+        em.emit(
+            f"logits_last_t{t}",
+            lambda tokens, *flat: (M.logits_last(cfg, tokens, list(flat)),),
+            [tok] + pspecs, 1, note="log-softmax logits at last position",
+        )
+
+    from .kernels import rtn_quant
+    for (o, i) in {(d, d), (ff, d), (d, ff)}:
+        em.emit(
+            f"gptq_{o}x{i}",
+            lambda w, h, maxq, damp: Q.gptq_quantize(w, h, maxq, damp),
+            [_spec((o, i)), _spec((i, i)), _spec(()), _spec(())], 2,
+            note="GPTQ column solve -> (Q, hessian-weighted err)",
+        )
+        em.emit(
+            f"rtn_{o}x{i}",
+            lambda w, maxq: (rtn_quant(w, maxq),),
+            [_spec((o, i)), _spec(())], 1, note="RTN baseline (pallas)",
+        )
+        em.emit(
+            f"ldlq_{o}x{i}",
+            lambda w, h, cb, damp: Q.ldlq_vq_quantize(w, h, cb, damp, gdim=LDLQ_G),
+            [_spec((o, i)), _spec((i, i)), _spec((LDLQ_K, LDLQ_G)), _spec(())],
+            2, note="LDLQ vector quantization (Tab. 6)",
+        )
+
+    t_train = max(cfg.seq_lens)
+    n = len(pspecs)
+
+    def train_fn(*args):
+        flat = list(args[:n])
+        m = list(args[n:2 * n])
+        vv = list(args[2 * n:3 * n])
+        tokens, step = args[3 * n], args[3 * n + 1]
+        nf, nm, nv, loss = M.train_step(cfg, flat, m, vv, tokens, step)
+        return tuple(nf + nm + nv + [loss])
+
+    em.emit(
+        "train_step", train_fn,
+        pspecs + pspecs + pspecs + [_spec((b, t_train), jnp.int32), _spec(())],
+        3 * n + 1, note="Adam step; outputs params,m,v,loss",
+    )
+
+    em.write_manifest()
+    print(f"[{cfg.name}] wrote {len(em.lines)} modules -> {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", required=True, help="config name or 'all'")
+    ap.add_argument("--out", required=True, help="output directory")
+    args = ap.parse_args()
+    names = list(CONFIGS) if args.config == "all" else [args.config]
+    for name in names:
+        cfg = CONFIGS[name]
+        out = args.out if len(names) == 1 else os.path.join(args.out, name)
+        build_config(cfg, out)
+
+
+if __name__ == "__main__":
+    main()

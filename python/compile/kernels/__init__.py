@@ -1,0 +1,14 @@
+"""L1 Pallas kernels for the RSQ compute hot-spots.
+
+Every kernel has a pure-jnp oracle in ref.py; pytest + hypothesis verify
+them under interpret=True (the only mode runnable on CPU PJRT — real TPU
+lowering emits Mosaic custom-calls the CPU plugin cannot execute).
+"""
+
+from .hessian import hessian_scaled
+from .attn_scores import attn_concentration
+from .rtn import rtn_quant
+from .vq import vq_assign
+from . import ref
+
+__all__ = ["hessian_scaled", "attn_concentration", "rtn_quant", "vq_assign", "ref"]

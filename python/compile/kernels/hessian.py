@@ -1,0 +1,76 @@
+"""Pallas kernel: importance-scaled Hessian accumulation (the RSQ hot spot).
+
+Computes the modified GPTQ second-order statistic of paper Sec. 4.2:
+
+    H_RSQ = 2 * X R^2 X^T = 2 * sum_{b,t} r[b,t]^2 x[b,t] x[b,t]^T
+
+This is the bandwidth-bound core of layer-wise quantization: X is the
+[B*T, K] stream of token features feeding one weight matrix, read exactly
+once per layer. The TPU schedule (DESIGN.md §Hardware-Adaptation):
+
+  * grid over token tiles (BLOCK_T rows of X at a time),
+  * each step loads an [BLOCK_T, K] tile of X and a [BLOCK_T, 1] tile of r
+    into VMEM (BlockSpec below expresses the HBM->VMEM pipeline),
+  * the rank-BLOCK_T update X_b^T diag(r^2) X_b is one [K,BLOCK_T]x[BLOCK_T,K]
+    MXU matmul,
+  * the [K, K] accumulator lives in the output VMEM block, revisited by
+    every grid step (output index map is constant) — the standard Pallas
+    reduction idiom; TPU grid execution is sequential so this is safe.
+
+VMEM footprint: BLOCK_T*K + BLOCK_T + K*K floats. For the paper-scale
+K=4096, BLOCK_T=256: 4.2 MB + 64 MB accumulator — the accumulator dominates,
+so for K > 1024 a production TPU kernel would tile K as well; at this repo's
+scales (K <= 512) everything fits in one VMEM block comfortably.
+
+CPU note: lowered with interpret=True (Mosaic custom-calls cannot run on the
+CPU PJRT plugin); numerics are identical to the TPU path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hessian_kernel(x_ref, r_ref, o_ref):
+    """One grid step: o += 2 * (r*x)^T (r*x) over a BLOCK_T token tile."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xr = x_ref[...] * r_ref[...]          # [BLOCK_T, K] * [BLOCK_T, 1]
+    # MXU contraction in f32 (quantization error feedback needs f32 accum).
+    o_ref[...] += 2.0 * jnp.dot(
+        xr.T, xr, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def hessian_scaled(x: jnp.ndarray, r: jnp.ndarray, *, block_t: int = 64,
+                   interpret: bool = True) -> jnp.ndarray:
+    """H = 2 * X R^2 X^T over token-tiles. x: [B,T,K], r: [B,T] -> [K,K]."""
+    b, t, k = x.shape
+    n = b * t
+    xf = x.reshape(n, k)
+    rf = r.reshape(n, 1)
+    block_t = min(block_t, n)
+    if n % block_t != 0:  # pad token axis; r=0 rows contribute nothing
+        pad = block_t - n % block_t
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        rf = jnp.pad(rf, ((0, pad), (0, 0)))
+        n += pad
+    grid = (n // block_t,)
+    return pl.pallas_call(
+        _hessian_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, k), jnp.float32),
+        interpret=interpret,
+    )(xf, rf)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis in python/tests/test_kernels.py). They are also what the L2
+model would use if the Pallas path were disabled, so they double as
+documentation of each kernel's semantics.
+"""
+
+import jax.numpy as jnp
+
+
+def hessian_scaled_ref(x: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """H = 2 * sum_{b,t} r[b,t]^2 * x[b,t,:] x[b,t,:]^T   (paper Eq. 3->H_RSQ).
+
+    x: [B, T, K] token features feeding one weight matrix.
+    r: [B, T]    token importance (diagonal of R).
+    returns [K, K] float32.
+    """
+    xr = x * r[..., None]
+    flat = xr.reshape(-1, x.shape[-1])
+    return 2.0 * (flat.T @ flat)
+
+
+def attn_concentration_ref(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """AttnCon scores (paper Sec. 4.3): R_j = sum_{m,i} A[m,i,j].
+
+    q, k: [B, M, T, Hd] query/key tensors (unscaled; the kernel applies
+    1/sqrt(Hd)). Causal mask: A[m,i,j]=0 for j>i.
+    returns [B, T] column sums of the softmax attention probability map,
+    summed over heads and query positions.
+    """
+    hd = q.shape[-1]
+    logits = jnp.einsum("bmth,bmsh->bmts", q, k) / jnp.sqrt(jnp.float32(hd))
+    t = q.shape[2]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.sum(probs, axis=(1, 2))
+
+
+def rtn_quant_ref(w: jnp.ndarray, maxq: jnp.ndarray) -> jnp.ndarray:
+    """Per-row asymmetric min-max grid quantize-dequantize (RTN baseline and
+    the grid used inside GPTQ).
+
+    w: [O, I]; maxq: scalar f32 (= 2^bits - 1).
+    """
+    lo = jnp.minimum(jnp.min(w, axis=1, keepdims=True), 0.0)
+    hi = jnp.maximum(jnp.max(w, axis=1, keepdims=True), 0.0)
+    scale = jnp.maximum((hi - lo) / maxq, 1e-8)
+    zero = jnp.round(-lo / scale)
+    q = jnp.clip(jnp.round(w / scale) + zero, 0.0, maxq)
+    return scale * (q - zero)
+
+
+def quant_grid_ref(w, scale, zero, maxq):
+    """Quantize-dequantize values with a fixed per-row grid."""
+    q = jnp.clip(jnp.round(w / scale) + zero, 0.0, maxq)
+    return scale * (q - zero)
+
+
+def vq_assign_ref(groups: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-codeword assignment for vector quantization (paper Tab. 6).
+
+    groups:   [N, G] weight groups (rows already scaled).
+    codebook: [K, G].
+    returns   [N] int32 index of the nearest codeword (L2).
+    """
+    # |g - c|^2 = |g|^2 - 2 g.c + |c|^2 ; |g|^2 is constant per row for argmin.
+    dots = groups @ codebook.T
+    c2 = jnp.sum(codebook * codebook, axis=1)
+    return jnp.argmin(c2[None, :] - 2.0 * dots, axis=1).astype(jnp.int32)

@@ -1,0 +1,50 @@
+"""Pallas kernel: per-row asymmetric grid quantize-dequantize (RTN).
+
+The round-to-nearest baseline and the grid primitive shared by GPTQ: each
+output row gets an asymmetric min-max grid with maxq = 2^bits - 1 levels.
+maxq arrives as a runtime (1,1) scalar so one compiled artifact serves
+2/3/4-bit sweeps (paper Tab. 5) without recompilation.
+
+Grid/BlockSpec: one row-tile [BLOCK_O, I] per step; the reduction (row
+min/max), the rounding, and the dequantize are all VPU elementwise work on
+the resident tile, so the kernel is purely bandwidth-bound — one read and
+one write of W, the roofline for this op.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rtn_kernel(w_ref, maxq_ref, o_ref):
+    w = w_ref[...]
+    maxq = maxq_ref[0, 0]
+    lo = jnp.minimum(jnp.min(w, axis=1, keepdims=True), 0.0)
+    hi = jnp.maximum(jnp.max(w, axis=1, keepdims=True), 0.0)
+    scale = jnp.maximum((hi - lo) / maxq, 1e-8)
+    zero = jnp.round(-lo / scale)
+    q = jnp.clip(jnp.round(w / scale) + zero, 0.0, maxq)
+    o_ref[...] = scale * (q - zero)
+
+
+@functools.partial(jax.jit, static_argnames=("block_o", "interpret"))
+def rtn_quant(w: jnp.ndarray, maxq: jnp.ndarray, *, block_o: int = 64,
+              interpret: bool = True) -> jnp.ndarray:
+    """Per-row grid quantize-dequantize. w: [O, I], maxq: scalar -> [O, I]."""
+    o, i = w.shape
+    block_o = min(block_o, o)
+    assert o % block_o == 0, "O must be a multiple of the row tile"
+    maxq2 = jnp.reshape(maxq.astype(jnp.float32), (1, 1))
+    return pl.pallas_call(
+        _rtn_kernel,
+        grid=(o // block_o,),
+        in_specs=[
+            pl.BlockSpec((block_o, i), lambda bi: (bi, 0)),
+            pl.BlockSpec((1, 1), lambda bi: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_o, i), lambda bi: (bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((o, i), jnp.float32),
+        interpret=interpret,
+    )(w, maxq2)

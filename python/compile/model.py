@@ -1,0 +1,234 @@
+"""L2: the transformer compute graph (JAX, build-time only).
+
+A LLaMA-like decoder: RMSNorm (with learnable gains — fused to 1 before
+rotation, paper Sec. 4.2 "Rotate"), multi-head causal attention, SwiGLU FFN,
+learned absolute positional embeddings, untied LM head.
+
+Everything here is lowered ONCE by aot.py to HLO text and executed from the
+rust coordinator; no function in this file runs at request time.
+
+Parameter ordering contract (must match rust/src/model/params.rs):
+    [emb, pos] + [g1, wq, wk, wv, wo, g2, wup, wgate, wdown] * layers
+              + [gf, head]
+Weights are [out, in]; activations are row-vectors; y = x @ W.T.
+
+Rotation conventions (checked by tests/test_model.py::test_rotation_invariance):
+  residual stream z -> z Q  implies
+    in-dim  rotated:  W' = W @ Q    for wq, wk, wv, wup, wgate, head
+    out-dim rotated:  W' = Q.T @ W  for wo, wdown
+    tables:           emb' = emb @ Q, pos' = pos @ Q
+  valid only after the RMSNorm gains are fused (g == 1), since
+  rmsnorm(zQ) = rmsnorm(z) Q holds for the gain-free norm.
+
+NOTE on linear algebra: no jnp.linalg anywhere in lowered code — on CPU,
+jax lowers linalg to LAPACK custom-calls that xla_extension 0.5.1 (the rust
+runtime) cannot resolve. quantizer.py carries hand-rolled Cholesky and
+triangular inverses built from fori_loop + masked matmuls instead.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attn_concentration
+
+EPS = 1e-6
+
+
+def rmsnorm(x):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS)
+
+
+def split_layer_params(cfg, flat, layer):
+    """Slice one layer's 9 tensors out of the flat parameter list."""
+    base = 2 + layer * 9
+    keys = ("g1", "wq", "wk", "wv", "wo", "g2", "wup", "wgate", "wdown")
+    return dict(zip(keys, flat[base:base + 9]))
+
+
+def embed(cfg, tokens, emb, pos):
+    """tokens i32[B,T] -> Z0 [B,T,d]. pos is the full [max_seq, d] table."""
+    t = tokens.shape[1]
+    return jnp.take(emb, tokens, axis=0) + pos[None, :t, :]
+
+
+def _heads(cfg, x):
+    b, t, _ = x.shape
+    return x.reshape(b, t, cfg.heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def _unheads(x):
+    b, m, t, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, m * hd)
+
+
+def layer_fwd(cfg, z, lp, *, capture=False, interpret=True):
+    """One transformer layer.
+
+    Returns z_next, and when capture=True also the per-weight input streams
+    (Xa -> wq/wk/wv, Xo -> wo, Xf -> wup/wgate, Xd -> wdown) plus the four
+    dynamic token-importance scores of paper Sec. 4.3 computed from this
+    layer (AttnCon via the L1 Pallas kernel; ActNorm / ActDiff / TokenSim
+    as masked jnp reductions). TokenFreq is corpus-side (rust).
+    """
+    xa = rmsnorm(z) * lp["g1"]
+    q = _heads(cfg, xa @ lp["wq"].T)
+    k = _heads(cfg, xa @ lp["wk"].T)
+    v = _heads(cfg, xa @ lp["wv"].T)
+
+    hd = cfg.head_dim
+    t = z.shape[1]
+    logits = jnp.einsum("bmth,bmsh->bmts", q, k) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    logits = jnp.where(mask[None, None], logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    xo = _unheads(probs @ v)
+    z1 = z + xo @ lp["wo"].T
+
+    xf = rmsnorm(z1) * lp["g2"]
+    xd = jax.nn.silu(xf @ lp["wgate"].T) * (xf @ lp["wup"].T)
+    z2 = z1 + xd @ lp["wdown"].T
+
+    if not capture:
+        return z2
+
+    # --- dynamic importance scores (paper Sec. 4.3) ---
+    # AttnCon: R_j = sum_{m,i} A[m,i,j] — streaming Pallas kernel, never
+    # materializes the [T,T] map in HBM on TPU (here probs exist for the
+    # forward anyway; the kernel is the artifact-path implementation).
+    attn_con = attn_concentration(q, k, interpret=interpret)
+    # ActNorm: ||z_i||
+    act_norm = jnp.sqrt(jnp.sum(z * z, axis=-1))
+    # ActDiff: -||Layer(z_i) - z_i|| (steadier tokens matter more)
+    diff = z2 - z
+    act_diff = -jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+    # TokenSim: R_i = sum_j ||z_i - z_j|| (rarer tokens matter more)
+    zz = jnp.sum(z * z, axis=-1)
+    dots = jnp.einsum("btd,bsd->bts", z, z)
+    d2 = jnp.maximum(zz[:, :, None] + zz[:, None, :] - 2.0 * dots, 0.0)
+    token_sim = jnp.sum(jnp.sqrt(d2), axis=-1)
+
+    return z2, xa, xo, xf, xd, attn_con, act_norm, act_diff, token_sim
+
+
+def forward(cfg, tokens, flat, *, ctx=None):
+    """Full forward -> final hidden states [B, Tc, d]."""
+    tc = ctx or tokens.shape[1]
+    tok = tokens[:, :tc]
+    z = embed(cfg, tok, flat[0], flat[1])
+    for l in range(cfg.layers):
+        z = layer_fwd(cfg, z, split_layer_params(cfg, flat, l), capture=False)
+    gf, _ = flat[-2], flat[-1]
+    return rmsnorm(z) * gf
+
+
+def lm_nll(cfg, tokens, flat, *, ctx=None):
+    """Per-position next-token negative log-likelihood.
+
+    Returns nll [B, Tc] where nll[:, t] = -log p(tokens[t+1] | tokens[..t])
+    for t < Tc-1 and 0 at the last position. The [B,T,V] logits never leave
+    the device — only the NLL crosses PJRT (DESIGN.md §Perf / L2).
+    """
+    h = forward(cfg, tokens, flat, ctx=ctx)
+    head = flat[-1]
+    logits = h @ head.T
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tc = h.shape[1]
+    tgt = tokens[:, 1:tc]
+    picked = jnp.take_along_axis(logp[:, :-1, :], tgt[..., None], axis=-1)[..., 0]
+    nll = -picked
+    return jnp.pad(nll, ((0, 0), (0, 1)))
+
+
+def logits_last(cfg, tokens, flat, *, ctx=None):
+    """Log-probabilities of the next token after the last position [B, V]."""
+    h = forward(cfg, tokens, flat, ctx=ctx)
+    head = flat[-1]
+    return jax.nn.log_softmax(h[:, -1, :] @ head.T, axis=-1)
+
+
+def loss_fn(cfg, flat, tokens):
+    nll = lm_nll(cfg, tokens, flat)
+    t = tokens.shape[1]
+    return jnp.sum(nll) / (tokens.shape[0] * (t - 1))
+
+
+def train_step(cfg, flat, m, v, tokens, step, *, lr=1e-3, b1=0.9, b2=0.999,
+               eps=1e-8):
+    """One Adam step. All of flat/m/v are positional lists (device-resident
+    buffers on the rust side; outputs feed the next call without host copies).
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens))(list(flat))
+    new_flat, new_m, new_v = [], [], []
+    t_ = step + 1.0
+    for p, g, mi, vi in zip(flat, grads, m, v):
+        mi = b1 * mi + (1.0 - b1) * g
+        vi = b2 * vi + (1.0 - b2) * g * g
+        mhat = mi / (1.0 - b1 ** t_)
+        vhat = vi / (1.0 - b2 ** t_)
+        new_flat.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_flat, new_m, new_v, loss
+
+
+# --- rotation / fusion helpers (mirrored in rust/src/model/rotate.rs; the
+# python versions exist for the invariance tests and as the executable
+# specification) -----------------------------------------------------------
+
+def fuse_gains(cfg, flat):
+    """Fold RMSNorm gains into the adjacent in-dim weights; set gains to 1.
+
+    g1 -> wq/wk/wv columns, g2 -> wup/wgate columns, gf -> head columns.
+    Function-preserving; prerequisite for rotation (paper Sec. 4.2 Rotate).
+    """
+    out = list(flat)
+    for l in range(cfg.layers):
+        base = 2 + l * 9
+        g1 = out[base]
+        for j in (base + 1, base + 2, base + 3):       # wq wk wv
+            out[j] = out[j] * g1[None, :]
+        out[base] = jnp.ones_like(g1)
+        g2 = out[base + 5]
+        for j in (base + 6, base + 7):                 # wup wgate
+            out[j] = out[j] * g2[None, :]
+        out[base + 5] = jnp.ones_like(g2)
+    gf = out[-2]
+    out[-1] = out[-1] * gf[None, :]
+    out[-2] = jnp.ones_like(gf)
+    return out
+
+
+def rotate_params(cfg, flat, qmat):
+    """Apply the orthogonal transform Q to all weights (paper Sec. 3.2).
+
+    Requires fused gains. rmsnorm(zQ) = rmsnorm(z) Q makes this exactly
+    function-preserving (up to fp error).
+    """
+    out = list(flat)
+    out[0] = out[0] @ qmat                              # emb
+    out[1] = out[1] @ qmat                              # pos
+    for l in range(cfg.layers):
+        base = 2 + l * 9
+        for j in (base + 1, base + 2, base + 3):        # wq wk wv: in-dim
+            out[j] = out[j] @ qmat
+        out[base + 4] = qmat.T @ out[base + 4]          # wo: out-dim
+        for j in (base + 6, base + 7):                  # wup wgate: in-dim
+            out[j] = out[j] @ qmat
+        out[base + 8] = qmat.T @ out[base + 8]          # wdown: out-dim
+    out[-1] = out[-1] @ qmat                            # head: in-dim
+    return out
+
+
+def init_params(cfg, key):
+    """Reference initializer (tests only; the trained-model path inits in rust)."""
+    flat = []
+    for name in cfg.param_names():
+        shape = cfg.param_shape(name)
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            flat.append(jnp.ones(shape, jnp.float32))
+        else:
+            scale = 0.4 / jnp.sqrt(jnp.float32(shape[1]))
+            flat.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return flat

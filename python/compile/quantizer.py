@@ -1,0 +1,162 @@
+"""L2: GPTQ / LDLQ solvers (JAX, build-time only; lowered to HLO by aot.py).
+
+GPTQ (paper Sec. 3.3, Frantar et al. 2023): quantize weight columns one at a
+time against the (RSQ-modified) Hessian H = 2 X R^2 X^T, propagating each
+column's quantization error into the not-yet-quantized columns through the
+Cholesky factor of H^{-1} (OBC formula, paper Eq. 2).
+
+LDLQ + vector quantization (paper Tab. 6, QuIP#-style): same error-feedback
+recurrence, but 8-wide column blocks are quantized jointly against an
+E8-derived codebook (the codebook is a runtime input built by
+rust/src/quant/vq.rs).
+
+All linear algebra is hand-rolled from fori_loop + masked matmuls: on CPU,
+jnp.linalg lowers to LAPACK custom-calls that the rust xla_extension 0.5.1
+runtime cannot resolve (see model.py header). Each helper is tested against
+numpy in python/tests/test_quantizer.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# --- linear algebra ---------------------------------------------------------
+
+def cholesky_lower(a):
+    """Lower Cholesky of SPD a via column-by-column fori_loop.
+
+    Progressive-fill trick: columns >= j of L are still zero when column j is
+    computed, so the full matvec L @ L[j] only sums the k < j terms.
+    """
+    d = a.shape[0]
+    diag_a = jnp.diagonal(a)
+
+    def body(j, l):
+        row_j = jnp.take(l, j, axis=0)
+        s = l @ row_j
+        ljj = jnp.sqrt(jnp.maximum(diag_a[j] - s[j], 1e-12))
+        col = (jnp.take(a, j, axis=1) - s) / ljj
+        idx = jnp.arange(d)
+        col = jnp.where(idx > j, col, 0.0)
+        col = col.at[j].set(ljj)
+        return l.at[:, j].set(col)
+
+    return lax.fori_loop(0, d, body, jnp.zeros_like(a))
+
+
+def tri_inv_lower(l):
+    """Inverse of a lower-triangular matrix by forward substitution rows."""
+    d = l.shape[0]
+
+    def body(i, x):
+        row_l = jnp.take(l, i, axis=0)
+        s = row_l @ x                       # rows >= i of x are still zero
+        e = jax.nn.one_hot(i, d, dtype=x.dtype)
+        row = (e - s) / jnp.take(row_l, i)
+        return x.at[i, :].set(row)
+
+    return lax.fori_loop(0, d, body, jnp.zeros_like(l))
+
+
+def hinv_cholesky_upper(h, damp):
+    """U upper-triangular with U^T U = (H + damp*mean(diag)*I)^{-1}.
+
+    This is the factor GPTQ's recurrence consumes: err_i = (w_i - q_i)/U_ii,
+    update_j = err_i * U_ij for j > i.
+    """
+    d = h.shape[0]
+    dmean = jnp.mean(jnp.diagonal(h))
+    # fully-dead inputs (H ~ 0) still need a usable factor
+    dmean = jnp.maximum(dmean, 1e-8)
+    hd = h + damp * dmean * jnp.eye(d, dtype=h.dtype)
+    l = cholesky_lower(hd)
+    linv = tri_inv_lower(l)
+    hinv = linv.T @ linv
+    return cholesky_lower(hinv).T
+
+
+# --- scalar GPTQ -------------------------------------------------------------
+
+def row_grid(w, maxq):
+    """Per-row asymmetric min-max grid (always includes 0)."""
+    lo = jnp.minimum(jnp.min(w, axis=1, keepdims=True), 0.0)
+    hi = jnp.maximum(jnp.max(w, axis=1, keepdims=True), 0.0)
+    scale = jnp.maximum((hi - lo) / maxq, 1e-8)
+    zero = jnp.round(-lo / scale)
+    return scale[:, 0], zero[:, 0]
+
+
+def gptq_quantize(w, h, maxq, damp):
+    """GPTQ with the (scaled-token) Hessian.
+
+    w: [O, I] weight; h: [I, I] Hessian (2 X R^2 X^T); maxq, damp: scalars.
+    Returns (q, err) — q is the dequantized weight, err the Hessian-weighted
+    reconstruction loss tr((W-Q) H (W-Q)^T) (the paper's layer objective).
+    """
+    o, din = w.shape
+    u = hinv_cholesky_upper(h, damp)
+    scale, zero = row_grid(w, maxq)
+
+    def body(i, carry):
+        wc, qc = carry
+        urow = jnp.take(u, i, axis=0)
+        uii = jnp.take(urow, i)
+        wcol = jnp.take(wc, i, axis=1)
+        qq = jnp.clip(jnp.round(wcol / scale) + zero, 0.0, maxq)
+        deq = scale * (qq - zero)
+        err = (wcol - deq) / uii
+        mask = (jnp.arange(din) > i).astype(w.dtype)
+        wc = wc - jnp.outer(err, urow * mask)
+        qc = qc.at[:, i].set(deq)
+        return wc, qc
+
+    _, q = lax.fori_loop(0, din, body, (w, jnp.zeros_like(w)))
+    diff = q - w
+    err = jnp.sum((diff @ h) * diff)
+    return q, err
+
+
+# --- LDLQ vector quantization (Tab. 6) --------------------------------------
+
+def _tri_inv_upper_small(u):
+    return tri_inv_lower(u.T).T
+
+
+def ldlq_vq_quantize(w, h, codebook, damp, *, gdim=8):
+    """Blocked LDLQ with codebook (vector) quantization.
+
+    Each row is scaled to unit RMS; 8-wide column blocks are assigned to the
+    nearest codeword (same argmin as kernels/vq.assign — inlined jnp here so
+    it fuses into the fori body), and the block's error is propagated to
+    later columns through the Cholesky factor, exactly the GPTQ recurrence
+    generalized to blocks:  E = (W_B - Q_B) U_BB^{-1};  W_later -= E U_B,later.
+    """
+    o, din = w.shape
+    assert din % gdim == 0
+    nblk = din // gdim
+    u = hinv_cholesky_upper(h, damp)
+    s = jnp.sqrt(jnp.mean(w * w, axis=1, keepdims=True)) + 1e-8   # [O,1]
+    c2 = jnp.sum(codebook * codebook, axis=1)
+
+    def body(b, carry):
+        wc, qc = carry
+        c0 = b * gdim
+        blk = lax.dynamic_slice(wc, (0, c0), (o, gdim)) / s
+        dots = blk @ codebook.T
+        idx = jnp.argmin(c2[None, :] - 2.0 * dots, axis=1)
+        deq = s * jnp.take(codebook, idx, axis=0)
+        ubb = lax.dynamic_slice(u, (c0, c0), (gdim, gdim))
+        e = (s * blk - deq) @ _tri_inv_upper_small(ubb)
+        urows = lax.dynamic_slice(u, (c0, 0), (gdim, din))
+        mask = (jnp.arange(din) >= c0 + gdim).astype(w.dtype)
+        wc = wc - e @ (urows * mask[None, :])
+        qc = lax.dynamic_update_slice(qc, deq, (0, c0))
+        return wc, qc
+
+    _, q = lax.fori_loop(0, nblk, body, (w, jnp.zeros_like(w)))
+    diff = q - w
+    err = jnp.sum((diff @ h) * diff)
+    return q, err

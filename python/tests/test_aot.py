@@ -1,0 +1,89 @@
+"""AOT pipeline smoke tests: manifest completeness and HLO-text hygiene
+(no LAPACK/custom-call ops that the rust xla_extension 0.5.1 runtime cannot
+resolve)."""
+
+import os
+
+import pytest
+
+from compile import aot
+from compile.configs import CONFIGS, TINY
+
+
+@pytest.fixture(scope="module")
+def tiny_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts") / "tiny"
+    aot.build_config(TINY, str(out))
+    return str(out)
+
+
+def _manifest(path):
+    with open(os.path.join(path, "manifest.txt")) as f:
+        return f.read().splitlines()
+
+
+def test_manifest_header(tiny_artifacts):
+    lines = _manifest(tiny_artifacts)
+    kv = dict(l.split("=", 1) for l in lines if "|" not in l)
+    assert kv["config"] == "tiny"
+    assert int(kv["d"]) == TINY.d
+    assert int(kv["layers"]) == TINY.layers
+    assert kv["seq_lens"] == ",".join(str(t) for t in TINY.seq_lens)
+
+
+def test_manifest_params_match_config(tiny_artifacts):
+    lines = [l for l in _manifest(tiny_artifacts) if l.startswith("param=")]
+    names = [l.split("|")[0].split("=")[1] for l in lines]
+    assert names == TINY.param_names()
+    for l, n in zip(lines, names):
+        shape = l.split("shape=")[1]
+        want = "x".join(str(d) for d in TINY.param_shape(n))
+        assert shape == want
+
+
+def test_all_modules_emitted(tiny_artifacts):
+    lines = [l for l in _manifest(tiny_artifacts) if l.startswith("module=")]
+    names = {l.split("|")[0].split("=")[1] for l in lines}
+    for t in TINY.seq_lens:
+        for stem in ("embed", "layer_fwd", "hess_d", "hess_ff", "lm_nll",
+                     "logits_last"):
+            assert f"{stem}_t{t}" in names
+    d, ff = TINY.d, TINY.ff
+    for (o, i) in {(d, d), (ff, d), (d, ff)}:
+        for stem in ("gptq", "rtn", "ldlq"):
+            assert f"{stem}_{o}x{i}" in names
+    assert "train_step" in names
+    # every module's HLO file exists and is non-trivial
+    for l in lines:
+        fname = [p for p in l.split("|") if p.startswith("file=")][0][5:]
+        p = os.path.join(tiny_artifacts, fname)
+        assert os.path.getsize(p) > 500
+
+
+def test_no_custom_calls(tiny_artifacts):
+    """custom-call targets (LAPACK etc.) would crash the rust runtime."""
+    for f in os.listdir(tiny_artifacts):
+        if not f.endswith(".hlo.txt"):
+            continue
+        with open(os.path.join(tiny_artifacts, f)) as fh:
+            text = fh.read()
+        assert "custom-call" not in text, f
+        assert "ENTRY" in text, f
+
+
+def test_module_arity_recorded(tiny_artifacts):
+    lines = [l for l in _manifest(tiny_artifacts) if l.startswith("module=")]
+    by_name = {l.split("|")[0].split("=")[1]: l for l in lines}
+    n = len(TINY.param_names())
+    layer = by_name[f"layer_fwd_t{TINY.seq_lens[0]}"]
+    assert "nout=9" in layer
+    train = by_name["train_step"]
+    assert f"nout={3 * n + 1}" in train
+    ins = [p for p in train.split("|") if p.startswith("in=")][0]
+    assert len(ins.split(";")) == 3 * n + 2
+
+
+def test_all_registered_configs_are_valid():
+    for cfg in CONFIGS.values():
+        assert cfg.seq_lens, cfg.name
+        assert cfg.batch >= 1

@@ -1,0 +1,44 @@
+"""Tests for the HLO inspector (compile/inspect_hlo.py)."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import inspect_hlo
+from compile.aot import to_hlo_text
+
+
+def _hlo_of(fn, *specs):
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def test_analyze_counts_dots():
+    spec = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    text = _hlo_of(lambda a, b: (a @ b,), spec, spec)
+    info = inspect_hlo.analyze(text)
+    assert info["n_dot"] >= 1
+    assert info["dot_output_elems"] >= 64
+    assert not info["has_custom_call"]
+
+
+def test_analyze_counts_while_loops():
+    spec = jax.ShapeDtypeStruct((4,), jnp.float32)
+
+    def loopy(x):
+        return (jax.lax.fori_loop(0, 5, lambda i, a: a + 1.0, x),)
+
+    info = inspect_hlo.analyze(_hlo_of(loopy, spec))
+    assert info["n_while"] >= 1
+
+
+def test_flags_custom_calls():
+    fake = 'ENTRY main { ROOT c = f32[2]{0} custom-call(), custom_call_target="lapack_spotrf" }'
+    info = inspect_hlo.analyze(fake)
+    assert info["has_custom_call"]
+    issues = inspect_hlo.check_module("m", info, 0, 0)
+    assert issues and "custom-call" in issues[0]
+
+
+def test_clean_module_has_no_issues():
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    info = inspect_hlo.analyze(_hlo_of(lambda a: (a * 2.0,), spec))
+    assert inspect_hlo.check_module("m", info, 0, 0) == []

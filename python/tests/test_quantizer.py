@@ -1,0 +1,201 @@
+"""GPTQ / LDLQ solver correctness: hand-rolled linear algebra vs numpy, and
+the optimality/ordering properties the paper's quantization step relies on."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantizer as Q
+from compile.kernels import ref
+
+SET = dict(deadline=None, max_examples=10)
+
+
+def _spd(d, seed, cond=None):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(d, d)).astype(np.float32)
+    return a @ a.T + d * np.eye(d, dtype=np.float32)
+
+
+def _hess(din, n, seed, rscale=None):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, din)).astype(np.float32)
+    if rscale is not None:
+        x = x * rscale[:, None]
+    return 2.0 * x.T @ x
+
+
+# --- linear algebra ----------------------------------------------------------
+
+@settings(**SET)
+@given(d=st.sampled_from([4, 16, 33]), seed=st.integers(0, 2**31))
+def test_cholesky_matches_numpy(d, seed):
+    a = _spd(d, seed)
+    l = np.asarray(Q.cholesky_lower(jnp.asarray(a)))
+    np.testing.assert_allclose(l, np.linalg.cholesky(a), rtol=2e-3, atol=2e-3)
+
+
+@settings(**SET)
+@given(d=st.sampled_from([4, 16, 33]), seed=st.integers(0, 2**31))
+def test_tri_inv_lower(d, seed):
+    a = _spd(d, seed)
+    l = jnp.asarray(np.linalg.cholesky(a))
+    li = np.asarray(Q.tri_inv_lower(l))
+    np.testing.assert_allclose(li @ np.asarray(l), np.eye(d), atol=1e-4)
+    assert np.allclose(np.triu(li, 1), 0.0)
+
+
+def test_hinv_cholesky_upper_identity():
+    d = 16
+    h = _spd(d, 3)
+    u = np.asarray(Q.hinv_cholesky_upper(jnp.asarray(h), jnp.float32(0.01)))
+    hd = h + 0.01 * np.mean(np.diag(h)) * np.eye(d, dtype=np.float32)
+    np.testing.assert_allclose(u.T @ u, np.linalg.inv(hd), atol=1e-4)
+    assert np.allclose(np.tril(u, -1), 0.0)
+
+
+def test_hinv_cholesky_degenerate_hessian():
+    """H ~ 0 (dead layer input) must still return a finite factor."""
+    u = np.asarray(Q.hinv_cholesky_upper(
+        jnp.zeros((8, 8), jnp.float32), jnp.float32(0.01)))
+    assert np.isfinite(u).all()
+
+
+# --- GPTQ --------------------------------------------------------------------
+
+def test_gptq_high_bits_lossless():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(8, 16)).astype(np.float32))
+    h = jnp.asarray(_hess(16, 100, 0))
+    q, err = Q.gptq_quantize(w, h, jnp.float32(2.0**20), jnp.float32(0.01))
+    np.testing.assert_allclose(q, w, atol=1e-3)
+    assert float(err) < 1e-2
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31))
+def test_gptq_beats_rtn_in_hessian_metric(seed):
+    """The whole point of OBC/GPTQ: error feedback lowers tr(E H E^T) vs RTN."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(16, 24)).astype(np.float32))
+    h = jnp.asarray(_hess(24, 150, seed))
+    q, err = Q.gptq_quantize(w, h, jnp.float32(7.0), jnp.float32(0.01))
+    rtn = np.asarray(ref.rtn_quant_ref(w, jnp.float32(7.0)))
+    d = rtn - np.asarray(w)
+    rtn_err = float(np.sum((d @ np.asarray(h)) * d))
+    assert float(err) <= rtn_err * 1.001
+
+
+def test_gptq_error_monotone_in_bits():
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(16, 24)).astype(np.float32))
+    h = jnp.asarray(_hess(24, 150, 5))
+    errs = [
+        float(Q.gptq_quantize(w, h, jnp.float32(2.0**b - 1), jnp.float32(0.01))[1])
+        for b in (2, 3, 4, 8)
+    ]
+    assert errs[0] >= errs[1] >= errs[2] >= errs[3]
+
+
+def test_gptq_grid_levels():
+    rng = np.random.default_rng(6)
+    w = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    h = jnp.asarray(_hess(16, 100, 6))
+    q, _ = Q.gptq_quantize(w, h, jnp.float32(7.0), jnp.float32(0.01))
+    for row in np.asarray(q):
+        assert len(np.unique(row)) <= 8
+
+
+def test_gptq_err_matches_direct_computation():
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    h = jnp.asarray(_hess(16, 100, 7))
+    q, err = Q.gptq_quantize(w, h, jnp.float32(3.0), jnp.float32(0.01))
+    d = np.asarray(q) - np.asarray(w)
+    np.testing.assert_allclose(
+        float(err), float(np.sum((d @ np.asarray(h)) * d)), rtol=1e-3)
+
+
+def test_gptq_token_scaling_shifts_error():
+    """RSQ's claim in miniature: scaling up some tokens' importance reduces
+    the reconstruction error measured on exactly those tokens."""
+    rng = np.random.default_rng(8)
+    din, n = 16, 256
+    x = rng.normal(size=(n, din)).astype(np.float32)
+    w = jnp.asarray(rng.normal(size=(8, din)).astype(np.float32))
+    important = np.zeros(n, np.float32)
+    important[: n // 4] = 1.0   # "first chunk" of tokens
+    r_uniform = np.ones(n, np.float32)
+    r_rsq = 0.01 + 0.99 * important    # Eq. 4 with r_min=0.01
+
+    def quant(r):
+        h = jnp.asarray(2.0 * (x * (r**2)[:, None]).T @ x)
+        q, _ = Q.gptq_quantize(w, h, jnp.float32(3.0), jnp.float32(0.01))
+        return np.asarray(q)
+
+    def chunk_err(q):
+        e = (x[: n // 4] @ (q - np.asarray(w)).T)
+        return float(np.sum(e * e))
+
+    assert chunk_err(quant(r_rsq)) < chunk_err(quant(r_uniform))
+
+
+# --- LDLQ vector quantization ------------------------------------------------
+
+def _codebook(k=256, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(k, 8)).astype(np.float32))
+
+
+def test_ldlq_shapes_and_finite():
+    rng = np.random.default_rng(9)
+    w = jnp.asarray(rng.normal(size=(16, 32)).astype(np.float32))
+    h = jnp.asarray(_hess(32, 200, 9))
+    q, err = Q.ldlq_vq_quantize(w, h, _codebook(), jnp.float32(0.01))
+    assert q.shape == w.shape
+    assert np.isfinite(np.asarray(q)).all() and np.isfinite(float(err))
+
+
+def test_ldlq_codeword_structure():
+    """Every 8-wide block of every output row must be s * some codeword."""
+    rng = np.random.default_rng(10)
+    w = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    h = jnp.asarray(_hess(16, 100, 10))
+    cb = _codebook(64)
+    q = np.asarray(Q.ldlq_vq_quantize(w, h, cb, jnp.float32(0.01))[0])
+    s = np.sqrt(np.mean(np.asarray(w)**2, axis=1, keepdims=True)) + 1e-8
+    cbn = np.asarray(cb)
+    for r in range(4):
+        for b in range(2):
+            blk = q[r, b * 8:(b + 1) * 8] / s[r]
+            dmin = np.min(np.linalg.norm(cbn - blk[None, :], axis=1))
+            assert dmin < 1e-4, (r, b, dmin)
+
+
+def test_ldlq_richer_codebook_not_worse():
+    rng = np.random.default_rng(11)
+    w = jnp.asarray(rng.normal(size=(16, 32)).astype(np.float32))
+    h = jnp.asarray(_hess(32, 200, 11))
+    e_small = float(Q.ldlq_vq_quantize(w, h, _codebook(16, 1), jnp.float32(0.01))[1])
+    e_big = float(Q.ldlq_vq_quantize(w, h, _codebook(1024, 1), jnp.float32(0.01))[1])
+    assert e_big <= e_small
+
+
+def test_ldlq_feedback_beats_no_feedback():
+    """Error feedback through U must not hurt the Hessian-weighted error."""
+    rng = np.random.default_rng(12)
+    w = jnp.asarray(rng.normal(size=(16, 32)).astype(np.float32))
+    h = jnp.asarray(_hess(32, 200, 12))
+    cb = _codebook(256, 2)
+    _, err_fb = Q.ldlq_vq_quantize(w, h, cb, jnp.float32(0.01))
+    # no-feedback VQ: independent nearest-codeword per block
+    s = np.sqrt(np.mean(np.asarray(w)**2, axis=1, keepdims=True)) + 1e-8
+    wn, cbn = np.asarray(w), np.asarray(cb)
+    qn = np.zeros_like(wn)
+    for b in range(4):
+        blk = wn[:, b * 8:(b + 1) * 8] / s
+        d2 = ((blk[:, None, :] - cbn[None]) ** 2).sum(-1)
+        qn[:, b * 8:(b + 1) * 8] = s * cbn[np.argmin(d2, axis=1)]
+    dn = qn - wn
+    err_nofb = float(np.sum((dn @ np.asarray(h)) * dn))
+    assert float(err_fb) <= err_nofb * 1.05

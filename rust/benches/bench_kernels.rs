@@ -1,0 +1,107 @@
+//! Micro-benchmarks for every AOT compute module (tiny + small configs) —
+//! the L1/L2 side of EXPERIMENTS.md §Perf. Criterion-style output via the
+//! hand-rolled harness (criterion is not in the offline vendor set).
+//!
+//!     cargo bench --bench bench_kernels
+
+use rsq::model::ParamSet;
+use rsq::runtime::{self, Engine};
+use rsq::tensor::Tensor;
+use rsq::util::{Bench, Pcg};
+
+fn bench_config(config: &str) -> anyhow::Result<()> {
+    let eng = Engine::load(config)?;
+    let cfg = eng.config().clone();
+    let t = *cfg.seq_lens.iter().max().unwrap();
+    let p = ParamSet::init(&cfg, 0);
+    let mut rng = Pcg::new(0);
+    println!("--- config {config}: d={} ff={} T={t} B={} ---", cfg.d, cfg.ff, cfg.batch);
+
+    // embed
+    let tokens: Vec<Vec<i32>> = (0..cfg.batch)
+        .map(|b| (0..t).map(|i| ((b + i * 31) % cfg.vocab) as i32).collect())
+        .collect();
+    let tl = runtime::tokens_literal(&tokens, t)?;
+    let emb_ins = vec![
+        tl.clone(),
+        runtime::tensor_literal(&p.tensors[0])?,
+        runtime::tensor_literal(&p.tensors[1])?,
+    ];
+    Bench::new(&format!("{config}/embed_t{t}"))
+        .iter(|| eng.exec(&format!("embed_t{t}"), &emb_ins).unwrap())
+        .report();
+    let z = eng.exec(&format!("embed_t{t}"), &emb_ins)?.into_iter().next().unwrap();
+
+    // layer_fwd (with capture streams + scores)
+    let mut layer_ins = vec![z];
+    for k in 0..9 {
+        layer_ins.push(runtime::tensor_literal(&p.tensors[2 + k])?);
+    }
+    let flops = 2.0
+        * (cfg.batch * t) as f64
+        * (4.0 * (cfg.d * cfg.d) as f64 + 3.0 * (cfg.d * cfg.ff) as f64);
+    let s = Bench::new(&format!("{config}/layer_fwd_t{t}"))
+        .iter(|| eng.exec(&format!("layer_fwd_t{t}"), &layer_ins).unwrap())
+        .report();
+    println!("    ~ {:.2} GFLOP/s (projection matmuls only)", flops / s / 1e9);
+    let outs = eng.exec(&format!("layer_fwd_t{t}"), &layer_ins)?;
+
+    // hessian accumulation (pallas kernel)
+    let r = runtime::tensor_literal(&Tensor::ones(&[cfg.batch, t]))?;
+    let hess_ins = vec![outs[1].clone(), r.clone()];
+    let hbytes = (cfg.batch * t * cfg.d * 4) as u64;
+    Bench::new(&format!("{config}/hess_d_t{t}"))
+        .throughput_bytes(hbytes)
+        .iter(|| eng.exec(&format!("hess_d_t{t}"), &hess_ins).unwrap())
+        .report();
+    let hess_ff_ins = vec![outs[4].clone(), r];
+    Bench::new(&format!("{config}/hess_ff_t{t}"))
+        .throughput_bytes((cfg.batch * t * cfg.ff * 4) as u64)
+        .iter(|| eng.exec(&format!("hess_ff_t{t}"), &hess_ff_ins).unwrap())
+        .report();
+
+    // gptq / rtn / ldlq solvers at the (d, d) shape
+    let w = Tensor::randn(&[cfg.d, cfg.d], 0.1, &mut rng);
+    let h = runtime::literal_tensor(&eng.exec(&format!("hess_d_t{t}"), &hess_ins)?[0])?;
+    let gptq_ins = vec![
+        runtime::tensor_literal(&w)?,
+        runtime::tensor_literal(&h)?,
+        runtime::scalar_literal(7.0),
+        runtime::scalar_literal(0.01),
+    ];
+    Bench::new(&format!("{config}/gptq_{0}x{0}", cfg.d))
+        .throughput_elements((cfg.d * cfg.d) as u64)
+        .iter(|| eng.exec(&format!("gptq_{0}x{0}", cfg.d), &gptq_ins).unwrap())
+        .report();
+    let rtn_ins = vec![runtime::tensor_literal(&w)?, runtime::scalar_literal(7.0)];
+    Bench::new(&format!("{config}/rtn_{0}x{0}", cfg.d))
+        .throughput_elements((cfg.d * cfg.d) as u64)
+        .iter(|| eng.exec(&format!("rtn_{0}x{0}", cfg.d), &rtn_ins).unwrap())
+        .report();
+    let cb = rsq::quant::vq::e8_codebook(cfg.ldlq_k, 0);
+    let ldlq_ins = vec![
+        runtime::tensor_literal(&w)?,
+        runtime::tensor_literal(&h)?,
+        runtime::tensor_literal(&cb)?,
+        runtime::scalar_literal(0.01),
+    ];
+    Bench::new(&format!("{config}/ldlq_{0}x{0}", cfg.d))
+        .throughput_elements((cfg.d * cfg.d) as u64)
+        .iter(|| eng.exec(&format!("ldlq_{0}x{0}", cfg.d), &ldlq_ins).unwrap())
+        .report();
+
+    // host-side reference GPTQ for comparison (L3 fallback path)
+    Bench::new(&format!("{config}/gptq_rust_ref_{0}x{0}", cfg.d))
+        .samples(5)
+        .iter(|| rsq::quantref::gptq(&w, &runtime::literal_tensor(&gptq_ins[1]).unwrap(), 7.0, 0.01))
+        .report();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== kernel/module micro-benchmarks ===");
+    for config in ["tiny", "small"] {
+        bench_config(config)?;
+    }
+    Ok(())
+}

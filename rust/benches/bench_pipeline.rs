@@ -1,0 +1,77 @@
+//! End-to-end pipeline benchmarks: full quantization wall time per method,
+//! plus the host-side stages (corpus generation, rotation, checkpoint IO).
+//! The L3 side of EXPERIMENTS.md §Perf.
+//!
+//!     cargo bench --bench bench_pipeline
+
+use rsq::corpus::{expand_dataset, CalibSet, CorpusKind};
+use rsq::model::fuse::fuse_gains;
+use rsq::model::outliers::{inject_outliers, OutlierSpec};
+use rsq::model::rotate::{rotate_params, rotation_matrix};
+use rsq::model::ParamSet;
+use rsq::quant::{quantize, Method, QuantOptions};
+use rsq::runtime::Engine;
+use rsq::train::train_or_load;
+use rsq::util::Bench;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== pipeline benchmarks (config tiny) ===");
+    let eng = Engine::load("tiny")?;
+    let cfg = eng.config().clone();
+    let t = *cfg.seq_lens.iter().max().unwrap();
+    let (mut params, _) = train_or_load(&eng, 7, 150, false)?;
+    inject_outliers(&mut params, OutlierSpec::default(), 7);
+    let calib = CalibSet::generate(cfg.vocab, CorpusKind::Wiki, 8, t, 7, 1);
+    let tokens = calib.total_tokens() as u64;
+
+    // warm the compile cache first
+    quantize(&eng, &params, &calib, &QuantOptions::new(Method::Rsq, 3, t))?;
+
+    for method in [Method::Rtn, Method::Gptq, Method::QuaRot, Method::Sq, Method::Rsq] {
+        let opts = QuantOptions::new(method, 3, t);
+        Bench::new(&format!("quantize/{}", method.name()))
+            .samples(5)
+            .throughput_elements(tokens)
+            .iter(|| quantize(&eng, &params, &calib, &opts).unwrap())
+            .report();
+    }
+    // dataset expansion (paper Sec. 4.4) adds 8x batches:
+    let mut opts = QuantOptions::new(Method::Rsq, 3, t);
+    opts.expansion = 8;
+    Bench::new("quantize/rsq+expansion8")
+        .samples(3)
+        .throughput_elements(tokens * 8)
+        .iter(|| quantize(&eng, &params, &calib, &opts).unwrap())
+        .report();
+
+    println!("\n--- host-side stages ---");
+    Bench::new("host/corpus_generate_64x64")
+        .iter(|| CalibSet::generate(cfg.vocab, CorpusKind::Wiki, 64, 64, 1, 1))
+        .report();
+    Bench::new("host/dataset_expansion_m8")
+        .iter(|| expand_dataset(&calib, 8))
+        .report();
+    let q = rotation_matrix(cfg.d, 0);
+    Bench::new("host/fuse+rotate_all_params")
+        .iter(|| {
+            let mut p2 = params.clone();
+            fuse_gains(&mut p2);
+            rotate_params(&mut p2, &q);
+            p2
+        })
+        .report();
+    Bench::new("host/codebook_e8_k1024")
+        .samples(5)
+        .iter(|| rsq::quant::vq::e8_codebook(1024, 0))
+        .report();
+    let dir = std::env::temp_dir().join("rsq_bench_ckpt.bin");
+    Bench::new("host/checkpoint_save+load")
+        .iter(|| {
+            params.save(&dir).unwrap();
+            ParamSet::load(&cfg, &dir).unwrap()
+        })
+        .report();
+
+    eng.print_stats();
+    Ok(())
+}

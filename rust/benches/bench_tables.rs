@@ -1,0 +1,52 @@
+//! One timed end-to-end bench per paper table/figure driver, at minimal
+//! scale (tiny config, 1 seed, few probe instances). These verify every
+//! driver stays runnable and track their wall-time regressions; the
+//! full-scale numbers live in EXPERIMENTS.md (produced by `rsq all`).
+//!
+//!     cargo bench --bench bench_tables
+
+use rsq::repro;
+use rsq::util::{Args, Bench};
+
+fn mini_args(extra: &str) -> Args {
+    // tiny scale so the whole bench suite completes in minutes on 1 core
+    let base = "--config tiny --seeds 1 --steps 150 --calib-n 8 --calib-t 64 \
+                --probe-n 8 --lc-n 8 --eval-n 8";
+    Args::parse(
+        format!("{base} {extra}")
+            .split_whitespace()
+            .map(String::from),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== table/figure driver benchmarks (tiny scale) ===");
+    let runs: Vec<(&str, fn(&Args) -> anyhow::Result<()>, &str)> = vec![
+        ("table1", repro::tables::table1, ""),
+        ("table2", repro::tables::table2, "--configs tiny"),
+        ("table3", repro::tables::table3, ""),
+        ("table4", repro::tables::table4, ""),
+        ("table5", repro::tables::table5, ""),
+        ("table6", repro::tables::table6, ""),
+        ("table7", repro::tables::table7, ""),
+        ("fig2", repro::figs::fig2, ""),
+        ("fig3", repro::figs::fig3, ""),
+        ("fig4", repro::figs::fig4, ""),
+        ("fig5", repro::figs::fig5, "--configs tiny"),
+        ("fig7", repro::figs::fig7, ""),
+        ("fig8", repro::figs::fig8, ""),
+        ("fig9", repro::figs::fig9, ""),
+        ("scores", repro::scores::dump_scores, ""),
+    ];
+    for (name, f, extra) in runs {
+        let args = mini_args(extra);
+        // silence the driver's stdout table; keep only the bench line
+        let mean = Bench::new(&format!("driver/{name}"))
+            .warmup(0)
+            .samples(1)
+            .iter(|| f(&args).unwrap())
+            .mean_s();
+        println!(">>> driver/{name} completed in {mean:.2}s");
+    }
+    Ok(())
+}

@@ -1,0 +1,155 @@
+//! Calibration/eval sets + dataset expansion (paper Sec. 4.4).
+
+use super::{CorpusKind, Generator};
+
+/// A set of fixed-length token samples (calibration or evaluation).
+#[derive(Clone, Debug)]
+pub struct CalibSet {
+    pub samples: Vec<Vec<i32>>,
+    pub seq_len: usize,
+    pub kind: CorpusKind,
+}
+
+impl CalibSet {
+    /// Draw `n` samples of `seq_len` tokens. `stream` decorrelates calib
+    /// (stream 1) from eval (stream 2) from probes (stream 3+) over the
+    /// same token distribution.
+    pub fn generate(
+        vocab: usize,
+        kind: CorpusKind,
+        n: usize,
+        seq_len: usize,
+        master_seed: u64,
+        stream: u64,
+    ) -> Self {
+        let mut g = Generator::new(vocab, kind, master_seed, stream);
+        let samples = (0..n).map(|_| g.sample(seq_len)).collect();
+        CalibSet { samples, seq_len, kind }
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.samples.len() * self.seq_len
+    }
+
+    /// Occurrence counts over the set — feeds the TokenFreq strategy
+    /// (paper Sec. 4.3: rarer tokens are more important).
+    pub fn token_frequencies(&self, vocab: usize) -> Vec<u32> {
+        let mut counts = vec![0u32; vocab];
+        for s in &self.samples {
+            for &t in s {
+                counts[t as usize] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Pad (cycling) the sample list so it is a multiple of `batch`.
+    pub fn pad_to_batch(&mut self, batch: usize) {
+        let mut i = 0;
+        while self.samples.len() % batch != 0 {
+            let s = self.samples[i % self.samples.len()].clone();
+            self.samples.push(s);
+            i += 1;
+        }
+    }
+}
+
+/// Dataset expansion (paper Sec. 4.4): for factor M, append M-1 rotated
+/// copies of each sample, shifted forward by k*T/M with the overflow
+/// re-inserted at the beginning. This moves every token through the
+/// "important" (initial/final) positions that AttnCon favors.
+pub fn expand_dataset(set: &CalibSet, m: usize) -> CalibSet {
+    assert!(m >= 1);
+    let t = set.seq_len;
+    let mut samples = Vec::with_capacity(set.samples.len() * m);
+    for s in &set.samples {
+        samples.push(s.clone());
+        for k in 1..m {
+            let off = k * t / m;
+            // shift forward by `off`: the last `off` tokens wrap to the front
+            let mut rot = Vec::with_capacity(t);
+            rot.extend_from_slice(&s[t - off..]);
+            rot.extend_from_slice(&s[..t - off]);
+            samples.push(rot);
+        }
+    }
+    CalibSet { samples, seq_len: t, kind: set.kind }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set() -> CalibSet {
+        CalibSet::generate(256, CorpusKind::Wiki, 4, 64, 7, 1)
+    }
+
+    #[test]
+    fn generate_shapes() {
+        let s = set();
+        assert_eq!(s.samples.len(), 4);
+        assert!(s.samples.iter().all(|x| x.len() == 64));
+        assert_eq!(s.total_tokens(), 256);
+    }
+
+    #[test]
+    fn calib_and_eval_streams_disjoint() {
+        let a = CalibSet::generate(256, CorpusKind::Wiki, 2, 64, 7, 1);
+        let b = CalibSet::generate(256, CorpusKind::Wiki, 2, 64, 7, 2);
+        assert_ne!(a.samples, b.samples);
+    }
+
+    #[test]
+    fn frequencies_sum_to_tokens() {
+        let s = set();
+        let f = s.token_frequencies(256);
+        assert_eq!(f.iter().sum::<u32>() as usize, s.total_tokens());
+    }
+
+    #[test]
+    fn expansion_count_and_multiset() {
+        let s = set();
+        let e = expand_dataset(&s, 8);
+        assert_eq!(e.samples.len(), 32);
+        // each rotation preserves the token multiset of its source
+        for (i, orig) in s.samples.iter().enumerate() {
+            for k in 0..8 {
+                let mut a = orig.clone();
+                let mut b = e.samples[i * 8 + k].clone();
+                a.sort_unstable();
+                b.sort_unstable();
+                assert_eq!(a, b, "sample {i} rotation {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn expansion_shift_offsets() {
+        let s = CalibSet {
+            samples: vec![(0..8).collect()],
+            seq_len: 8,
+            kind: CorpusKind::Wiki,
+        };
+        let e = expand_dataset(&s, 4);
+        assert_eq!(e.samples[0], vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(e.samples[1], vec![6, 7, 0, 1, 2, 3, 4, 5]);
+        assert_eq!(e.samples[2], vec![4, 5, 6, 7, 0, 1, 2, 3]);
+        assert_eq!(e.samples[3], vec![2, 3, 4, 5, 6, 7, 0, 1]);
+    }
+
+    #[test]
+    fn expansion_factor_one_is_identity() {
+        let s = set();
+        let e = expand_dataset(&s, 1);
+        assert_eq!(e.samples, s.samples);
+    }
+
+    #[test]
+    fn pad_to_batch_cycles() {
+        let mut s = set();
+        s.samples.truncate(3);
+        s.pad_to_batch(4);
+        assert_eq!(s.samples.len(), 4);
+        assert_eq!(s.samples[3], s.samples[0]);
+    }
+}

@@ -1,0 +1,424 @@
+//! Token-stream generators with controllable structure.
+//!
+//! Layout of the token space (vocab V, V >= 32):
+//!   0           BOS  — document start ("attention sink" position)
+//!   1           EOS  — sentence boundary
+//!   2..=11      D0..D9 — digit tokens for arithmetic patterns
+//!   12          OP   — arithmetic operator
+//!   13          EQ   — arithmetic equals
+//!   14..V       content tokens, partitioned into `n_topics` topic blocks
+//!
+//! Per content step the next token is drawn from a mixture of
+//!   (a) a deterministic bigram chain within the current topic,
+//!   (b) the topic's Zipfian unigram,
+//!   (c) the global Zipfian unigram,
+//! plus occasional arithmetic sentences (D_a OP D_b EQ D_{(a+b)%10}) and
+//! long-range 2-gram repeats (induction-head food). All tables derive from
+//! a master seed, so train/eval splits share the distribution while being
+//! disjoint streams.
+
+use super::CorpusKind;
+use crate::util::Pcg;
+
+pub const BOS: i32 = 0;
+pub const EOS: i32 = 1;
+pub const D0: i32 = 2; // digits D0..=D9 are tokens 2..=11
+pub const OP: i32 = 12;
+pub const EQ: i32 = 13;
+pub const CONTENT0: usize = 14;
+
+/// Mixture weights and structural rates for one corpus flavor.
+#[derive(Clone, Copy, Debug)]
+pub struct Profile {
+    pub p_bigram: f32,
+    pub p_topic: f32,
+    pub p_global: f32,
+    pub zipf_alpha: f64,
+    pub arith_rate: f32,
+    pub repeat_rate: f32,
+    pub n_topics: usize,
+    /// fraction of content tokens actually used (PTB has a small vocab)
+    pub vocab_frac: f32,
+    /// fraction of documents that are code-like periodic blocks (RedPajama)
+    pub code_frac: f32,
+}
+
+impl Profile {
+    pub fn for_kind(kind: CorpusKind) -> Self {
+        match kind {
+            CorpusKind::Wiki => Profile {
+                p_bigram: 0.50, p_topic: 0.30, p_global: 0.20,
+                zipf_alpha: 1.2, arith_rate: 0.03, repeat_rate: 0.05,
+                n_topics: 8, vocab_frac: 1.0, code_frac: 0.0,
+            },
+            CorpusKind::C4 => Profile {
+                p_bigram: 0.35, p_topic: 0.30, p_global: 0.35,
+                zipf_alpha: 1.05, arith_rate: 0.01, repeat_rate: 0.03,
+                n_topics: 8, vocab_frac: 1.0, code_frac: 0.0,
+            },
+            CorpusKind::Ptb => Profile {
+                p_bigram: 0.60, p_topic: 0.25, p_global: 0.15,
+                zipf_alpha: 1.4, arith_rate: 0.0, repeat_rate: 0.04,
+                n_topics: 4, vocab_frac: 0.5, code_frac: 0.0,
+            },
+            CorpusKind::RedPajama => Profile {
+                p_bigram: 0.45, p_topic: 0.30, p_global: 0.25,
+                zipf_alpha: 1.2, arith_rate: 0.02, repeat_rate: 0.05,
+                n_topics: 8, vocab_frac: 1.0, code_frac: 0.3,
+            },
+        }
+    }
+}
+
+/// Static structure shared by a (vocab, profile, master-seed) triple:
+/// topic membership, bigram successor tables, Zipf weights.
+pub struct TokenSpace {
+    pub vocab: usize,
+    pub profile: Profile,
+    pub n_content: usize,
+    /// topic id for each content token index (0..n_content)
+    topic_of: Vec<usize>,
+    /// content tokens grouped by topic
+    pub topic_tokens: Vec<Vec<i32>>,
+    /// deterministic bigram successor per content token
+    successor: Vec<i32>,
+    /// Zipf weight per content token (global)
+    zipf_w: Vec<f32>,
+}
+
+impl TokenSpace {
+    pub fn new(vocab: usize, profile: Profile, master_seed: u64) -> Self {
+        assert!(vocab > CONTENT0 + profile.n_topics * 2, "vocab too small: {vocab}");
+        let n_all = vocab - CONTENT0;
+        let n_content = ((n_all as f32 * profile.vocab_frac) as usize).max(profile.n_topics * 2);
+        let mut rng = Pcg::with_stream(master_seed, 0xC0FFEE);
+        let mut topic_of = vec![0usize; n_content];
+        let mut topic_tokens = vec![Vec::new(); profile.n_topics];
+        for (i, t) in topic_of.iter_mut().enumerate() {
+            *t = i % profile.n_topics;
+            topic_tokens[*t].push((CONTENT0 + i) as i32);
+        }
+        // deterministic bigram chain within each topic
+        let mut successor = vec![0i32; n_content];
+        for (i, s) in successor.iter_mut().enumerate() {
+            let peers = &topic_tokens[topic_of[i]];
+            *s = peers[rng.below(peers.len())];
+        }
+        // global Zipf over content tokens in a random frequency order
+        let mut order: Vec<usize> = (0..n_content).collect();
+        rng.shuffle(&mut order);
+        let mut zipf_w = vec![0.0f32; n_content];
+        for (rank, &tok) in order.iter().enumerate() {
+            zipf_w[tok] = (1.0 / (rank as f64 + 1.0).powf(profile.zipf_alpha)) as f32;
+        }
+        TokenSpace { vocab, profile, n_content, topic_of, topic_tokens, successor, zipf_w }
+    }
+
+    pub fn is_content(&self, tok: i32) -> bool {
+        (tok as usize) >= CONTENT0 && ((tok as usize) - CONTENT0) < self.n_content
+    }
+
+    pub fn topic_of_token(&self, tok: i32) -> Option<usize> {
+        self.is_content(tok).then(|| self.topic_of[tok as usize - CONTENT0])
+    }
+
+    pub fn successor_of(&self, tok: i32) -> i32 {
+        self.successor[tok as usize - CONTENT0]
+    }
+
+    fn sample_zipf(&self, rng: &mut Pcg) -> i32 {
+        (CONTENT0 + rng.weighted(&self.zipf_w)) as i32
+    }
+
+    fn sample_topic(&self, topic: usize, rng: &mut Pcg) -> i32 {
+        // Zipf restricted to the topic's tokens
+        let toks = &self.topic_tokens[topic];
+        let ws: Vec<f32> = toks.iter().map(|&t| self.zipf_w[t as usize - CONTENT0]).collect();
+        toks[rng.weighted(&ws)]
+    }
+}
+
+/// Streaming token generator over a `TokenSpace`.
+pub struct Generator {
+    pub space: TokenSpace,
+    rng: Pcg,
+    topic: usize,
+    prev: i32,
+    sent_left: usize,
+    doc_left: usize,
+    history: Vec<i32>,
+    code_mode: bool,
+    code_pattern: Vec<i32>,
+    code_pos: usize,
+    /// queued multi-token emissions (arithmetic sentences / repeats)
+    pending: Vec<i32>,
+}
+
+impl Generator {
+    /// `stream` separates train vs eval vs probe draws over one TokenSpace.
+    pub fn new(vocab: usize, kind: CorpusKind, master_seed: u64, stream: u64) -> Self {
+        let profile = Profile::for_kind(kind);
+        let space = TokenSpace::new(vocab, profile, master_seed);
+        let mut rng = Pcg::with_stream(master_seed ^ 0x9e37_79b9, stream);
+        let topic = rng.below(profile.n_topics);
+        Generator {
+            space,
+            rng,
+            topic,
+            prev: -1,
+            sent_left: 0,
+            doc_left: 0,
+            history: Vec::new(),
+            code_mode: false,
+            code_pattern: Vec::new(),
+            code_pos: 0,
+            pending: Vec::new(),
+        }
+    }
+
+    fn start_doc(&mut self) -> i32 {
+        let p = self.space.profile;
+        self.topic = self.rng.below(p.n_topics);
+        self.doc_left = 64 + self.rng.below(192);
+        self.sent_left = 0;
+        self.prev = -1;
+        self.code_mode = p.code_frac > 0.0 && self.rng.f32() < p.code_frac;
+        if self.code_mode {
+            // a short periodic "function body" repeated verbatim
+            let len = 4 + self.rng.below(5);
+            self.code_pattern = (0..len)
+                .map(|_| self.space.sample_topic(self.topic, &mut self.rng))
+                .collect();
+            self.code_pos = 0;
+        }
+        BOS
+    }
+
+    /// Next token of the infinite stream.
+    pub fn next_token(&mut self) -> i32 {
+        if self.doc_left == 0 {
+            let t = self.start_doc();
+            self.push_history(t);
+            return t;
+        }
+        self.doc_left -= 1;
+
+        if self.code_mode {
+            let t = self.code_pattern[self.code_pos % self.code_pattern.len()];
+            self.code_pos += 1;
+            if self.code_pos % (self.code_pattern.len() * 4) == 0 {
+                // jump to a fresh pattern occasionally
+                self.code_pos = 0;
+                let len = 4 + self.rng.below(5);
+                self.code_pattern = (0..len)
+                    .map(|_| self.space.sample_topic(self.topic, &mut self.rng))
+                    .collect();
+            }
+            self.push_history(t);
+            return t;
+        }
+
+        if self.sent_left == 0 {
+            self.sent_left = 5 + self.rng.below(16);
+            if self.prev >= 0 {
+                self.push_history(EOS);
+                self.sent_left -= 1;
+                return EOS;
+            }
+        }
+        self.sent_left -= 1;
+        let p = self.space.profile;
+
+        // arithmetic sentence: D_a OP D_b EQ D_{(a+b)%10}
+        if self.rng.f32() < p.arith_rate {
+            let a = self.rng.below(10) as i32;
+            let b = self.rng.below(10) as i32;
+            // first token returns now; the remaining four drain via `pending`
+            for t in [D0 + a, OP, D0 + b, EQ, D0 + (a + b) % 10] {
+                self.push_history(t);
+            }
+            let n = self.history.len();
+            self.pending = self.history[n - 4..].to_vec();
+            return self.history[n - 5];
+        }
+
+        // long-range repeat: replay a 2-gram seen earlier (induction food)
+        if p.repeat_rate > 0.0 && self.history.len() > 16 && self.rng.f32() < p.repeat_rate {
+            let i = self.rng.below(self.history.len() - 2);
+            let (a, b) = (self.history[i], self.history[i + 1]);
+            if self.space.is_content(a) && self.space.is_content(b) {
+                self.push_history(a);
+                self.pending = vec![b];
+                return a;
+            }
+        }
+
+        let roll = self.rng.f32() * (p.p_bigram + p.p_topic + p.p_global);
+        let t = if self.prev >= 0 && self.space.is_content(self.prev) && roll < p.p_bigram {
+            self.space.successor_of(self.prev)
+        } else if roll < p.p_bigram + p.p_topic {
+            self.space.sample_topic(self.topic, &mut self.rng)
+        } else {
+            self.space.sample_zipf(&mut self.rng)
+        };
+        self.push_history(t);
+        t
+    }
+
+    fn push_history(&mut self, t: i32) {
+        self.prev = t;
+        self.history.push(t);
+        if self.history.len() > 4096 {
+            self.history.drain(..2048);
+        }
+    }
+
+    /// Fill a fixed-length sample, draining pending queued tokens first.
+    pub fn sample(&mut self, len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        while out.len() < len {
+            if let Some(t) = self.pending_pop() {
+                out.push(t);
+                continue;
+            }
+            out.push(self.next_token());
+        }
+        out
+    }
+
+    fn pending_pop(&mut self) -> Option<i32> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.pending.remove(0))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(kind: CorpusKind) -> Generator {
+        Generator::new(256, kind, 42, 1)
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = gen(CorpusKind::Wiki).sample(256);
+        let b = gen(CorpusKind::Wiki).sample(256);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn streams_differ() {
+        let a = Generator::new(256, CorpusKind::Wiki, 42, 1).sample(256);
+        let b = Generator::new(256, CorpusKind::Wiki, 42, 2).sample(256);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        for kind in CorpusKind::ALL {
+            let s = gen(kind).sample(2000);
+            assert!(s.iter().all(|&t| t >= 0 && (t as usize) < 256), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn bigram_structure_learnable() {
+        // successor pairs must appear far above chance
+        let mut g = gen(CorpusKind::Wiki);
+        let s = g.sample(20_000);
+        let mut hits = 0usize;
+        let mut content_pairs = 0usize;
+        for w in s.windows(2) {
+            if g.space.is_content(w[0]) && g.space.is_content(w[1]) {
+                content_pairs += 1;
+                if g.space.successor_of(w[0]) == w[1] {
+                    hits += 1;
+                }
+            }
+        }
+        let rate = hits as f64 / content_pairs as f64;
+        assert!(rate > 0.2, "bigram hit rate {rate}");
+    }
+
+    #[test]
+    fn zipf_skew() {
+        let mut g = gen(CorpusKind::Wiki);
+        let s = g.sample(30_000);
+        let mut counts = vec![0usize; 256];
+        for &t in &s {
+            counts[t as usize] += 1;
+        }
+        let mut c: Vec<usize> = counts[CONTENT0..].iter().cloned().filter(|&x| x > 0).collect();
+        c.sort_unstable_by(|a, b| b.cmp(a));
+        // top decile of tokens should carry a large share of the mass
+        let top = c.iter().take(c.len() / 10).sum::<usize>() as f64;
+        let all = c.iter().sum::<usize>() as f64;
+        assert!(top / all > 0.25, "top-decile share {}", top / all);
+    }
+
+    #[test]
+    fn arithmetic_patterns_consistent() {
+        let mut g = gen(CorpusKind::Wiki);
+        let s = g.sample(50_000);
+        let mut seen = 0;
+        for w in s.windows(5) {
+            if w[1] == OP && w[3] == EQ {
+                let a = w[0] - D0;
+                let b = w[2] - D0;
+                let c = w[4] - D0;
+                assert!((0..10).contains(&a) && (0..10).contains(&b));
+                assert_eq!(c, (a + b) % 10, "arith pattern broken");
+                seen += 1;
+            }
+        }
+        assert!(seen > 20, "too few arithmetic sentences: {seen}");
+    }
+
+    #[test]
+    fn ptb_uses_fewer_tokens() {
+        let sw = gen(CorpusKind::Wiki).sample(20_000);
+        let sp = gen(CorpusKind::Ptb).sample(20_000);
+        let distinct = |s: &[i32]| {
+            let mut set = std::collections::HashSet::new();
+            set.extend(s.iter().cloned());
+            set.len()
+        };
+        assert!(distinct(&sp) < distinct(&sw));
+    }
+
+    #[test]
+    fn redpajama_has_periodic_blocks() {
+        let mut g = gen(CorpusKind::RedPajama);
+        let s = g.sample(30_000);
+        // code-like docs repeat short patterns: count exact (t, t+k) matches
+        let mut periodic = 0usize;
+        for k in 4..9 {
+            for i in 0..(s.len() - k) {
+                if s[i] == s[i + k] && g.space.is_content(s[i]) {
+                    periodic += 1;
+                }
+            }
+        }
+        let base = gen(CorpusKind::Wiki).sample(30_000);
+        let mut periodic_base = 0usize;
+        for k in 4..9 {
+            for i in 0..(base.len() - k) {
+                if base[i] == base[i + k] {
+                    periodic_base += 1;
+                }
+            }
+        }
+        assert!(periodic > periodic_base, "{periodic} <= {periodic_base}");
+    }
+
+    #[test]
+    fn docs_start_with_bos() {
+        let mut g = gen(CorpusKind::Wiki);
+        let s = g.sample(5000);
+        assert!(s.iter().filter(|&&t| t == BOS).count() > 5);
+    }
+}

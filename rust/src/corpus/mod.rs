@@ -1,0 +1,65 @@
+//! Synthetic corpus machinery — the offline stand-in for WikiText-2 / C4 /
+//! PTB / RedPajama (DESIGN.md §Substitutions).
+//!
+//! The generators produce token streams with *learnable*, non-uniform
+//! structure: Zipfian unigrams, deterministic bigram chains, topic
+//! clusters, sentence/document boundaries, arithmetic patterns, and
+//! occasional long-range repeats. A small transformer trained on this
+//! reaches perplexity far below the vocab size, so quantization deltas
+//! (the paper's signal) are measurable.
+
+pub mod dataset;
+pub mod generator;
+
+pub use dataset::{expand_dataset, CalibSet};
+pub use generator::{Generator, Profile, TokenSpace};
+
+/// Which synthetic corpus to draw from (paper Tab. 4 calibration ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CorpusKind {
+    /// WikiText-2 stand-in: structured encyclopedic-like text.
+    Wiki,
+    /// C4 stand-in: noisier web text (flatter unigrams, weaker bigrams).
+    C4,
+    /// PTB stand-in: small effective vocab, stiff newswire-like bigrams.
+    Ptb,
+    /// RedPajama stand-in: mixture of wiki-like and code-like documents.
+    RedPajama,
+}
+
+impl CorpusKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "wiki" | "wikitext" | "wikitext2" => Some(Self::Wiki),
+            "c4" => Some(Self::C4),
+            "ptb" => Some(Self::Ptb),
+            "rp" | "redpajama" => Some(Self::RedPajama),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Wiki => "wiki",
+            Self::C4 => "c4",
+            Self::Ptb => "ptb",
+            Self::RedPajama => "redpajama",
+        }
+    }
+
+    pub const ALL: [CorpusKind; 4] = [Self::Wiki, Self::C4, Self::Ptb, Self::RedPajama];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_round_trip() {
+        for k in CorpusKind::ALL {
+            assert_eq!(CorpusKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(CorpusKind::parse("wikitext2"), Some(CorpusKind::Wiki));
+        assert_eq!(CorpusKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,251 @@
+//! Long-context probe families (paper Sec. 5.3, Tab. 3 + Tab. 7 analogs).
+//!
+//! Four families mirroring the benchmarks' task *shapes*:
+//!   kv_retrieval  — LongEval: L key-value lines, query one key at the end;
+//!                   the L sweep is the context-pressure axis.
+//!   needle_pos    — Lost-in-the-Middle: a needle ("OP r") at position
+//!                   fraction P of the context, recalled at the end.
+//!   icl_classify  — LongICLBench (Banking77/TecRED): many-class in-context
+//!                   classification from few-shot examples.
+//!   code_pattern  — LongCodeArena: complete a long periodic "function"
+//!                   using project-wide (whole-prompt) context; scored as a
+//!                   [0,1] pattern-match rate (the ChrF analog).
+
+use anyhow::Result;
+
+use super::{argmax, logits_last_batched};
+use crate::corpus::generator::{BOS, CONTENT0, D0, OP};
+use crate::corpus::{CorpusKind, Generator};
+use crate::model::ParamSet;
+use crate::runtime::Engine;
+use crate::util::Pcg;
+
+#[derive(Clone, Debug)]
+pub struct LongCtxResult {
+    pub name: String,
+    pub score: f64,
+    pub n: usize,
+}
+
+/// KV retrieval with `n_pairs` key-value lines inside context length `t`.
+pub fn kv_retrieval(
+    engine: &Engine,
+    params: &ParamSet,
+    t: usize,
+    n_pairs: usize,
+    seed: u64,
+    n: usize,
+) -> Result<LongCtxResult> {
+    let cfg = engine.config();
+    let gen = Generator::new(cfg.vocab, CorpusKind::Wiki, seed, 51);
+    let mut rng = Pcg::with_stream(seed, 52);
+    assert!(2 * n_pairs + 2 <= t, "too many pairs for context {t}");
+    let mut prompts = Vec::new();
+    let mut answers = Vec::new();
+    for _ in 0..n {
+        // distinct keys
+        let mut keys = Vec::with_capacity(n_pairs);
+        while keys.len() < n_pairs {
+            let k = (CONTENT0 + rng.below(gen.space.n_content)) as i32;
+            if !keys.contains(&k) {
+                keys.push(k);
+            }
+        }
+        let vals: Vec<i32> = (0..n_pairs).map(|_| D0 + rng.below(10) as i32).collect();
+        let qi = rng.below(n_pairs);
+        let mut p = vec![BOS];
+        for (k, v) in keys.iter().zip(&vals) {
+            p.push(*k);
+            p.push(*v);
+        }
+        while p.len() < t - 1 {
+            p.push(crate::corpus::generator::EOS);
+        }
+        p.push(keys[qi]);
+        prompts.push(p);
+        answers.push(vals[qi]);
+    }
+    let logits = logits_last_batched(engine, params, &prompts, t)?;
+    let correct = logits
+        .iter()
+        .zip(&answers)
+        .filter(|(row, &a)| {
+            // restricted argmax over the 10 value tokens (the task's label set)
+            let best = (0..10)
+                .max_by(|&x, &y| row[(D0 + x) as usize].total_cmp(&row[(D0 + y) as usize]))
+                .unwrap();
+            D0 + best == a
+        })
+        .count();
+    Ok(LongCtxResult {
+        name: format!("kv_retrieval:L{n_pairs}"),
+        score: correct as f64 / n as f64,
+        n,
+    })
+}
+
+/// Needle at position fraction `frac` of the context (LITM P analog).
+pub fn needle_pos(
+    engine: &Engine,
+    params: &ParamSet,
+    t: usize,
+    frac: f64,
+    seed: u64,
+    n: usize,
+) -> Result<LongCtxResult> {
+    let cfg = engine.config();
+    let mut gen = Generator::new(cfg.vocab, CorpusKind::Wiki, seed, 53);
+    let mut rng = Pcg::with_stream(seed, 54);
+    let mut prompts = Vec::new();
+    let mut answers = Vec::new();
+    for _ in 0..n {
+        let mut p = gen.sample(t);
+        let r = (CONTENT0 + rng.below(gen.space.n_content)) as i32;
+        let pos = 1 + ((t - 8) as f64 * frac) as usize;
+        p[pos] = OP;
+        p[pos + 1] = r;
+        for (i, v) in p.iter_mut().enumerate() {
+            if *v == OP && i != pos && i != t - 1 {
+                *v = crate::corpus::generator::EOS;
+            }
+        }
+        p[t - 1] = OP;
+        prompts.push(p);
+        answers.push(r);
+    }
+    let logits = logits_last_batched(engine, params, &prompts, t)?;
+    let correct = logits
+        .iter()
+        .zip(&answers)
+        .filter(|(row, &a)| argmax(row) as i32 == a)
+        .count();
+    Ok(LongCtxResult {
+        name: format!("needle:P{:.0}", frac * 100.0),
+        score: correct as f64 / n as f64,
+        n,
+    })
+}
+
+/// Few-shot in-context classification over `n_classes` topics with digit
+/// labels (LongICLBench analog).
+pub fn icl_classify(
+    engine: &Engine,
+    params: &ParamSet,
+    t: usize,
+    n_classes: usize,
+    seed: u64,
+    n: usize,
+) -> Result<LongCtxResult> {
+    let cfg = engine.config();
+    let gen = Generator::new(cfg.vocab, CorpusKind::Wiki, seed, 55);
+    let mut rng = Pcg::with_stream(seed, 56);
+    let n_classes = n_classes.min(gen.space.profile.n_topics).min(10);
+    let mut prompts = Vec::new();
+    let mut answers = Vec::new();
+    for _ in 0..n {
+        let mut p = vec![BOS];
+        // few-shot blocks: "<topic token> <digit label>" until the context
+        // is full, covering every class round-robin
+        let mut c = 0usize;
+        while p.len() < t - 2 {
+            let topic = c % n_classes;
+            let tok = gen.space.topic_tokens[topic][rng.below(gen.space.topic_tokens[topic].len())];
+            p.push(tok);
+            p.push(D0 + topic as i32);
+            c += 1;
+        }
+        while p.len() < t - 1 {
+            p.push(crate::corpus::generator::EOS);
+        }
+        let q = rng.below(n_classes);
+        let qtok = gen.space.topic_tokens[q][rng.below(gen.space.topic_tokens[q].len())];
+        p.push(qtok);
+        p.truncate(t);
+        prompts.push(p);
+        answers.push(D0 + q as i32);
+    }
+    let logits = logits_last_batched(engine, params, &prompts, t)?;
+    let correct = logits
+        .iter()
+        .zip(&answers)
+        .filter(|(row, &a)| {
+            let best = (0..n_classes)
+                .max_by(|&x, &y| {
+                    row[(D0 + x as i32) as usize].total_cmp(&row[(D0 + y as i32) as usize])
+                })
+                .unwrap();
+            D0 + best as i32 == a
+        })
+        .count();
+    Ok(LongCtxResult {
+        name: format!("icl_classify:{n_classes}way"),
+        score: correct as f64 / n as f64,
+        n,
+    })
+}
+
+/// Complete a long periodic "code" pattern; score = next-token match rate
+/// across phases (ChrF analog in [0,1]).
+pub fn code_pattern(
+    engine: &Engine,
+    params: &ParamSet,
+    t: usize,
+    seed: u64,
+    n: usize,
+) -> Result<LongCtxResult> {
+    let cfg = engine.config();
+    let gen = Generator::new(cfg.vocab, CorpusKind::Wiki, seed, 57);
+    let mut rng = Pcg::with_stream(seed, 58);
+    let mut prompts = Vec::new();
+    let mut answers = Vec::new();
+    for _ in 0..n {
+        let topic = rng.below(gen.space.profile.n_topics);
+        let period = 4 + rng.below(4);
+        let pat: Vec<i32> = (0..period)
+            .map(|_| gen.space.topic_tokens[topic][rng.below(gen.space.topic_tokens[topic].len())])
+            .collect();
+        let mut p = vec![BOS];
+        let mut i = 0usize;
+        while p.len() < t {
+            p.push(pat[i % period]);
+            i += 1;
+        }
+        p.truncate(t);
+        // answer: the continuation of the pattern after the last token
+        answers.push(pat[(t - 1) % period]);
+        prompts.push(p);
+    }
+    let logits = logits_last_batched(engine, params, &prompts, t)?;
+    let correct = logits
+        .iter()
+        .zip(&answers)
+        .filter(|(row, &a)| argmax(row) as i32 == a)
+        .count();
+    Ok(LongCtxResult {
+        name: "code_pattern".to_string(),
+        score: correct as f64 / n as f64,
+        n,
+    })
+}
+
+/// The full Tab. 3-analog battery at context length `t`.
+pub fn longctx_suite(
+    engine: &Engine,
+    params: &ParamSet,
+    t: usize,
+    seed: u64,
+    n: usize,
+) -> Result<Vec<LongCtxResult>> {
+    let kv_levels = [t / 4 / 2, t * 3 / 8 / 2, (t - 4) / 2];
+    let mut out = Vec::new();
+    for pairs in kv_levels {
+        out.push(kv_retrieval(engine, params, t, pairs.max(2), seed, n)?);
+    }
+    for frac in [0.0, 0.5, 1.0] {
+        out.push(needle_pos(engine, params, t, frac, seed, n)?);
+    }
+    out.push(icl_classify(engine, params, t, 8, seed, n)?); // Banking77 analog
+    out.push(icl_classify(engine, params, t, 4, seed, n)?); // TecRED analog
+    out.push(code_pattern(engine, params, t, seed, n)?);
+    Ok(out)
+}

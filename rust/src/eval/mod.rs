@@ -1,0 +1,110 @@
+//! Evaluation harnesses: perplexity, the ten downstream probe tasks
+//! (Tab. 2 analogs), and the long-context probe families (Tab. 3/7
+//! analogs). All scoring goes through the `lm_nll_t*` / `logits_last_t*`
+//! artifacts — logits never cross PJRT except at the final position.
+
+pub mod longctx;
+pub mod ppl;
+pub mod tasks;
+
+pub use longctx::{longctx_suite, LongCtxResult};
+pub use ppl::perplexity;
+pub use tasks::{probe_suite, ProbeResult};
+
+use crate::model::ParamSet;
+use crate::runtime::{self, Engine};
+use anyhow::Result;
+
+/// Batched last-position log-probs for a set of equal-length prompts.
+/// Pads the final batch by repeating the last prompt; callers slice.
+pub fn logits_last_batched(
+    engine: &Engine,
+    params: &ParamSet,
+    prompts: &[Vec<i32>],
+    t: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let cfg = engine.config();
+    let module = format!("logits_last_t{t}");
+    let p_lits: Vec<xla::Literal> = params
+        .tensors
+        .iter()
+        .map(runtime::tensor_literal)
+        .collect::<Result<_>>()?;
+    let mut out = Vec::with_capacity(prompts.len());
+    let mut i = 0;
+    while i < prompts.len() {
+        let mut batch: Vec<Vec<i32>> = Vec::with_capacity(cfg.batch);
+        for k in 0..cfg.batch {
+            let idx = (i + k).min(prompts.len() - 1);
+            batch.push(prompts[idx].clone());
+        }
+        let tok_lit = runtime::tokens_literal(&batch, t)?;
+        let mut ins: Vec<&xla::Literal> = vec![&tok_lit];
+        ins.extend(p_lits.iter());
+        let outs = engine.exec_ref(&module, &ins)?;
+        let lt = runtime::literal_tensor(&outs[0])?;
+        let v = cfg.vocab;
+        let take = cfg.batch.min(prompts.len() - i);
+        for b in 0..take {
+            out.push(lt.data[b * v..(b + 1) * v].to_vec());
+        }
+        i += cfg.batch;
+    }
+    Ok(out)
+}
+
+/// Batched per-position NLL for a set of equal-length sequences.
+pub fn nll_batched(
+    engine: &Engine,
+    params: &ParamSet,
+    seqs: &[Vec<i32>],
+    t: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let cfg = engine.config();
+    let module = format!("lm_nll_t{t}");
+    let p_lits: Vec<xla::Literal> = params
+        .tensors
+        .iter()
+        .map(runtime::tensor_literal)
+        .collect::<Result<_>>()?;
+    let mut out = Vec::with_capacity(seqs.len());
+    let mut i = 0;
+    while i < seqs.len() {
+        let mut batch: Vec<Vec<i32>> = Vec::with_capacity(cfg.batch);
+        for k in 0..cfg.batch {
+            let idx = (i + k).min(seqs.len() - 1);
+            batch.push(seqs[idx].clone());
+        }
+        let tok_lit = runtime::tokens_literal(&batch, t)?;
+        let mut ins: Vec<&xla::Literal> = vec![&tok_lit];
+        ins.extend(p_lits.iter());
+        let outs = engine.exec_ref(&module, &ins)?;
+        let nt = runtime::literal_tensor(&outs[0])?;
+        let take = cfg.batch.min(seqs.len() - i);
+        for b in 0..take {
+            out.push(nt.data[b * t..(b + 1) * t].to_vec());
+        }
+        i += cfg.batch;
+    }
+    Ok(out)
+}
+
+/// argmax helper over a log-prob row.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(super::argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(super::argmax(&[2.0]), 0);
+    }
+}

@@ -1,0 +1,43 @@
+//! Perplexity evaluation (the paper's primary metric).
+//!
+//! PPL = exp(Σ nll / N) over next-token positions of a held-out set at a
+//! given context length (paper App. C.4 shows context length matters —
+//! Fig. 8's driver sweeps it via the lm_nll_t* artifact variants).
+
+use anyhow::Result;
+
+use super::nll_batched;
+use crate::corpus::CalibSet;
+use crate::model::ParamSet;
+use crate::runtime::Engine;
+
+/// Perplexity of `params` on `eval_set` at context length `t`.
+pub fn perplexity(
+    engine: &Engine,
+    params: &ParamSet,
+    eval_set: &CalibSet,
+    t: usize,
+) -> Result<f64> {
+    assert!(eval_set.seq_len >= t, "eval samples shorter than context");
+    let seqs: Vec<Vec<i32>> = eval_set
+        .samples
+        .iter()
+        .map(|s| s[..t].to_vec())
+        .collect();
+    let nll = nll_batched(engine, params, &seqs, t)?;
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for row in &nll {
+        // last position predicts nothing (zero-padded by the artifact)
+        for &v in &row[..t - 1] {
+            total += v as f64;
+            count += 1;
+        }
+    }
+    Ok((total / count as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    // exercised end-to-end by rust/tests/integration_eval.rs (needs artifacts)
+}

@@ -1,0 +1,377 @@
+//! The ten downstream probe tasks — Tab. 2's task battery, rebuilt as
+//! synthetic probes over the corpus token space (DESIGN.md §Substitutions).
+//!
+//! Each probe is scored exactly like lm-eval scores its real counterpart:
+//! top-1 argmax for cloze-style tasks, log-prob comparison for
+//! multiple-choice. Paper-task mapping:
+//!   bigram_cloze    -> LAMBADA_openai   (next-word prediction)
+//!   lambada_topic   -> LAMBADA_std      (long-range last word)
+//!   topic_choice2   -> WinoGrande       (binary choice)
+//!   choice4_pattern -> ARC-Challenge    (4-way choice)
+//!   induction_copy  -> ARC-Easy         (pattern completion)
+//!   freq_discrim    -> HellaSwag        (plausible continuation)
+//!   eos_sense       -> PIQA             (structural plausibility)
+//!   topic_classify  -> MMLU             (topic knowledge, 8-way)
+//!   arith_mod       -> GSM8k            (arithmetic)
+//!   rare_recall     -> TruthfulQA       (resist frequent-token prior)
+
+use anyhow::Result;
+
+use super::{argmax, logits_last_batched, nll_batched};
+use crate::corpus::generator::{CONTENT0, D0, EOS, OP};
+use crate::corpus::{CorpusKind, Generator};
+use crate::model::ParamSet;
+use crate::runtime::Engine;
+use crate::util::Pcg;
+
+#[derive(Clone, Debug)]
+pub struct ProbeResult {
+    pub name: &'static str,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+/// One instance: a prompt plus how to judge the model's output.
+enum Check {
+    /// argmax over full vocab must equal token
+    #[allow(dead_code)]
+    Top1(i32),
+    /// logprob[first] must beat logprob of every other candidate
+    Choice(Vec<i32>),
+    /// argmax over full vocab must land in this topic
+    TopicTop1(usize),
+}
+
+struct TaskSet {
+    name: &'static str,
+    prompts: Vec<Vec<i32>>,
+    checks: Vec<Check>,
+}
+
+/// Build + score all ten probes. `n` = instances per task.
+pub fn probe_suite(
+    engine: &Engine,
+    params: &ParamSet,
+    t: usize,
+    seed: u64,
+    n: usize,
+) -> Result<Vec<ProbeResult>> {
+    let cfg = engine.config().clone();
+    let vocab = cfg.vocab;
+    let mut gen = Generator::new(vocab, CorpusKind::Wiki, seed, 31);
+    let mut rng = Pcg::with_stream(seed, 41);
+    let mut results = Vec::new();
+
+    let mut logit_tasks: Vec<TaskSet> = Vec::new();
+
+    // -- 1. bigram_cloze ------------------------------------------------
+    {
+        let mut prompts = Vec::new();
+        let mut checks = Vec::new();
+        for _ in 0..n {
+            let mut p = gen.sample(t);
+            // force a content cue token at the end
+            let cue = random_content(&gen, &mut rng);
+            p[t - 1] = cue;
+            let ans = gen.space.successor_of(cue);
+            checks.push(Check::Choice(with_distractors(ans, 8, &gen, &mut rng)));
+            prompts.push(p);
+        }
+        logit_tasks.push(TaskSet { name: "bigram_cloze", prompts, checks });
+    }
+
+    // -- 2. induction_copy ----------------------------------------------
+    {
+        let mut prompts = Vec::new();
+        let mut checks = Vec::new();
+        for _ in 0..n {
+            let mut p = gen.sample(t);
+            let a = random_content(&gen, &mut rng);
+            let b = random_content(&gen, &mut rng);
+            let pos = t / 4 + rng.below(t / 2);
+            p[pos] = a;
+            p[pos + 1] = b;
+            // scrub other occurrences of `a` so the cue is unambiguous
+            for (i, v) in p.iter_mut().enumerate() {
+                if *v == a && i != pos {
+                    *v = EOS;
+                }
+            }
+            p[t - 1] = a;
+            checks.push(Check::Choice(with_distractors(b, 8, &gen, &mut rng)));
+            prompts.push(p);
+        }
+        logit_tasks.push(TaskSet { name: "induction_copy", prompts, checks });
+    }
+
+    // -- 3. rare_recall --------------------------------------------------
+    {
+        let mut prompts = Vec::new();
+        let mut checks = Vec::new();
+        for _ in 0..n {
+            let mut p = gen.sample(t);
+            let r = random_content(&gen, &mut rng);
+            let pos = 2 + rng.below(t / 2);
+            p[pos] = OP;
+            p[pos + 1] = r;
+            for (i, v) in p.iter_mut().enumerate() {
+                if *v == OP && i != pos && i != t - 1 {
+                    *v = EOS;
+                }
+            }
+            p[t - 1] = OP;
+            checks.push(Check::Choice(with_distractors(r, 8, &gen, &mut rng)));
+            prompts.push(p);
+        }
+        logit_tasks.push(TaskSet { name: "rare_recall", prompts, checks });
+    }
+
+    // -- 4. arith_mod ----------------------------------------------------
+    {
+        let mut prompts = Vec::new();
+        let mut checks = Vec::new();
+        for _ in 0..n {
+            let mut p = gen.sample(t);
+            let a = rng.below(10) as i32;
+            let b = rng.below(10) as i32;
+            p[t - 4] = D0 + a;
+            p[t - 3] = OP;
+            p[t - 2] = D0 + b;
+            p[t - 1] = EQ_TOKEN;
+            // label set = the ten digits (GSM8k-style exact-answer scoring)
+            let ans = D0 + (a + b) % 10;
+            let mut cands = vec![ans];
+            cands.extend((0..10).map(|k| D0 + k).filter(|&d| d != ans));
+            checks.push(Check::Choice(cands));
+            prompts.push(p);
+        }
+        logit_tasks.push(TaskSet { name: "arith_mod", prompts, checks });
+    }
+
+    // -- 5. topic_choice2 (WinoGrande analog) ----------------------------
+    {
+        let mut prompts = Vec::new();
+        let mut checks = Vec::new();
+        let n_topics = gen.space.profile.n_topics;
+        for _ in 0..n {
+            let ta = rng.below(n_topics);
+            let tb = (ta + 1 + rng.below(n_topics - 1)) % n_topics;
+            let p = topic_prompt(&gen, ta, t, &mut rng);
+            let good = pick_topic_token(&gen, ta, &mut rng);
+            let bad = pick_topic_token(&gen, tb, &mut rng);
+            checks.push(Check::Choice(vec![good, bad]));
+            prompts.push(p);
+        }
+        logit_tasks.push(TaskSet { name: "topic_choice2", prompts, checks });
+    }
+
+    // -- 6. choice4_pattern (ARC-Challenge analog) ------------------------
+    {
+        let mut prompts = Vec::new();
+        let mut checks = Vec::new();
+        for _ in 0..n {
+            let topic = rng.below(gen.space.profile.n_topics);
+            let cyc: Vec<i32> = (0..4).map(|_| pick_topic_token(&gen, topic, &mut rng)).collect();
+            let mut p = gen.sample(t);
+            let tail = t / 2;
+            for i in 0..tail {
+                p[t - tail + i] = cyc[i % 4];
+            }
+            let answer = cyc[tail % 4];
+            let mut cands = vec![answer];
+            while cands.len() < 4 {
+                let c = pick_topic_token(&gen, topic, &mut rng);
+                if !cands.contains(&c) && !cyc.contains(&c) {
+                    cands.push(c);
+                }
+            }
+            checks.push(Check::Choice(cands));
+            prompts.push(p);
+        }
+        logit_tasks.push(TaskSet { name: "choice4_pattern", prompts, checks });
+    }
+
+    // -- 9. topic_classify (MMLU analog) ----------------------------------
+    {
+        let mut prompts = Vec::new();
+        let mut checks = Vec::new();
+        let n_topics = gen.space.profile.n_topics;
+        for _ in 0..n {
+            let ta = rng.below(n_topics);
+            let p = topic_prompt(&gen, ta, t, &mut rng);
+            let mut cands: Vec<i32> =
+                (0..n_topics).map(|k| gen.space.topic_tokens[k][0]).collect();
+            // rotate so the correct answer is first (Choice contract)
+            cands.rotate_left(ta);
+            checks.push(Check::Choice(cands));
+            prompts.push(p);
+        }
+        logit_tasks.push(TaskSet { name: "topic_classify", prompts, checks });
+    }
+
+    // -- 10. lambada_topic -------------------------------------------------
+    {
+        let mut prompts = Vec::new();
+        let mut checks = Vec::new();
+        let n_topics = gen.space.profile.n_topics;
+        for _ in 0..n {
+            let ta = rng.below(n_topics);
+            let p = topic_prompt(&gen, ta, t, &mut rng);
+            checks.push(Check::TopicTop1(ta));
+            prompts.push(p);
+        }
+        logit_tasks.push(TaskSet { name: "lambada_topic", prompts, checks });
+    }
+
+    // score all logits-based tasks
+    for task in logit_tasks {
+        let logits = logits_last_batched(engine, params, &task.prompts, t)?;
+        let mut correct = 0usize;
+        for (row, check) in logits.iter().zip(&task.checks) {
+            let ok = match check {
+                Check::Top1(ans) => argmax(row) as i32 == *ans,
+                Check::Choice(cands) => {
+                    let best = cands
+                        .iter()
+                        .max_by(|&&a, &&b| row[a as usize].total_cmp(&row[b as usize]))
+                        .unwrap();
+                    *best == cands[0]
+                }
+                Check::TopicTop1(topic) => {
+                    let am = argmax(row) as i32;
+                    gen.space.topic_of_token(am) == Some(*topic)
+                }
+            };
+            correct += ok as usize;
+        }
+        results.push(ProbeResult {
+            name: task.name,
+            accuracy: correct as f64 / task.checks.len() as f64,
+            n: task.checks.len(),
+        });
+    }
+
+    // -- 7. eos_sense (paired logits) --------------------------------------
+    {
+        let mut prompts = Vec::new();
+        for _ in 0..n {
+            // long-sentence prompt (EOS strongly expected soon)
+            let mut long_p = gen.sample(t);
+            for v in long_p[t - 20..].iter_mut() {
+                if *v == EOS {
+                    *v = random_content(&gen, &mut rng);
+                }
+            }
+            // short-sentence prompt: EOS 2 tokens ago
+            let mut short_p = long_p.clone();
+            short_p[t - 3] = EOS;
+            prompts.push(long_p);
+            prompts.push(short_p);
+        }
+        let logits = logits_last_batched(engine, params, &prompts, t)?;
+        let mut correct = 0usize;
+        for pair in logits.chunks(2) {
+            correct += (pair[0][EOS as usize] > pair[1][EOS as usize]) as usize;
+        }
+        results.push(ProbeResult {
+            name: "eos_sense",
+            accuracy: correct as f64 / n as f64,
+            n,
+        });
+    }
+
+    // -- 8. freq_discrim (NLL-scored continuation choice) -------------------
+    {
+        let mut seqs = Vec::new();
+        for _ in 0..n {
+            let real = gen.sample(t);
+            let mut fake = real.clone();
+            // corrupt the 4-token continuation: shuffle it
+            let tail: &mut [i32] = &mut fake[t - 4..];
+            rng.shuffle(tail);
+            if fake == real {
+                fake[t - 1] = random_content(&gen, &mut rng);
+            }
+            seqs.push(real);
+            seqs.push(fake);
+        }
+        let nll = nll_batched(engine, params, &seqs, t)?;
+        let mut correct = 0usize;
+        for pair in nll.chunks(2) {
+            let score = |row: &[f32]| -> f32 { row[t - 5..t - 1].iter().sum() };
+            correct += (score(&pair[0]) < score(&pair[1])) as usize;
+        }
+        results.push(ProbeResult {
+            name: "freq_discrim",
+            accuracy: correct as f64 / n as f64,
+            n,
+        });
+    }
+
+    results.sort_by_key(|r| r.name);
+    Ok(results)
+}
+
+/// Mean accuracy across a probe battery (the paper's "Avg" column).
+pub fn mean_accuracy(results: &[ProbeResult]) -> f64 {
+    results.iter().map(|r| r.accuracy).sum::<f64>() / results.len() as f64
+}
+
+const EQ_TOKEN: i32 = crate::corpus::generator::EQ;
+
+fn random_content(gen: &Generator, rng: &mut Pcg) -> i32 {
+    (CONTENT0 + rng.below(gen.space.n_content)) as i32
+}
+
+/// answer-first candidate list with `n-1` distinct content distractors
+fn with_distractors(ans: i32, n: usize, gen: &Generator, rng: &mut Pcg) -> Vec<i32> {
+    let mut cands = vec![ans];
+    while cands.len() < n {
+        let c = random_content(gen, rng);
+        if !cands.contains(&c) {
+            cands.push(c);
+        }
+    }
+    cands
+}
+
+fn pick_topic_token(gen: &Generator, topic: usize, rng: &mut Pcg) -> i32 {
+    let toks = &gen.space.topic_tokens[topic];
+    toks[rng.below(toks.len())]
+}
+
+/// A prompt dominated by one topic's tokens (bigram-chained for realism).
+fn topic_prompt(gen: &Generator, topic: usize, t: usize, rng: &mut Pcg) -> Vec<i32> {
+    let mut p = Vec::with_capacity(t);
+    p.push(crate::corpus::generator::BOS);
+    let mut cur = pick_topic_token(gen, topic, rng);
+    while p.len() < t {
+        p.push(cur);
+        cur = if rng.f32() < 0.5 {
+            gen.space.successor_of(cur)
+        } else {
+            pick_topic_token(gen, topic, rng)
+        };
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    // probe construction is deterministic; engine-dependent scoring is
+    // covered by rust/tests/integration_eval.rs
+    use super::*;
+
+    #[test]
+    fn topic_prompt_is_on_topic() {
+        let gen = Generator::new(256, CorpusKind::Wiki, 1, 31);
+        let mut rng = Pcg::new(2);
+        let p = topic_prompt(&gen, 3, 64, &mut rng);
+        assert_eq!(p.len(), 64);
+        let on_topic = p
+            .iter()
+            .filter(|&&tk| gen.space.topic_of_token(tk) == Some(3))
+            .count();
+        assert!(on_topic > 48, "{on_topic}");
+    }
+}

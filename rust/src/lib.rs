@@ -1,0 +1,61 @@
+//! # RSQ — Rotate, Scale, then Quantize (full-system reproduction)
+//!
+//! Layer-3 of the three-layer stack (see DESIGN.md): the rust coordinator
+//! that owns the quantization pipeline, the calibration corpus, training,
+//! evaluation, and every table/figure driver from the paper. All heavy
+//! compute executes AOT-compiled HLO (JAX/Pallas, lowered once at build
+//! time) through the PJRT CPU client — python never runs at request time.
+//!
+//! Module map:
+//! - [`util`]     — RNG, bench harness, CLI parsing, JSON writer, property
+//!                  testing (offline substitutes for rand/criterion/clap/
+//!                  proptest, which are not in the vendored crate set).
+//! - [`tensor`]   — minimal row-major f32 tensor + the randomized Hadamard
+//!                  construction used by the Rotate step.
+//! - [`corpus`]   — synthetic corpus generators (WikiText-2/C4/PTB/RedPajama
+//!                  stand-ins), calibration sampling, dataset expansion
+//!                  (paper Sec. 4.4).
+//! - [`model`]    — model configs, parameter store, RMSNorm-gain fusion,
+//!                  rotation, outlier injection.
+//! - [`runtime`]  — PJRT engine: manifest parsing, HLO compile cache,
+//!                  literal/buffer plumbing.
+//! - [`quant`]    — the paper's contribution: importance strategies
+//!                  (Sec. 4.3), the scaled-Hessian GPTQ driver (Sec. 4.2),
+//!                  the layer-by-layer pipeline, RTN / GPTQ / QuaRot / SQ /
+//!                  RSQ / VQ modes.
+//! - [`quantref`] — pure-rust RTN + GPTQ oracle for property tests against
+//!                  the HLO path.
+//! - [`eval`]     — perplexity + 10 downstream probe tasks + long-context
+//!                  probe families.
+//! - [`train`]    — Adam training loop over the `train_step` artifact
+//!                  (used by the end-to-end example).
+//! - [`repro`]    — one driver per paper table/figure.
+
+pub mod corpus;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod quantref;
+pub mod repro;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Default root for AOT artifacts, relative to the repo checkout.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifact directory for a model config, honoring the
+/// `RSQ_ARTIFACTS` environment variable (used by tests and CI).
+pub fn artifacts_dir(config: &str) -> std::path::PathBuf {
+    let root = std::env::var("RSQ_ARTIFACTS").unwrap_or_else(|_| {
+        // tests run from the crate root; binaries may run elsewhere
+        let here = std::path::Path::new(ARTIFACTS_DIR);
+        if here.exists() {
+            ARTIFACTS_DIR.to_string()
+        } else {
+            format!("{}/{}", env!("CARGO_MANIFEST_DIR"), ARTIFACTS_DIR)
+        }
+    });
+    std::path::Path::new(&root).join(config)
+}

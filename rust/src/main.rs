@@ -1,0 +1,160 @@
+//! `rsq` — the L3 coordinator CLI.
+//!
+//! Subcommands map one-to-one to the paper's experiments (DESIGN.md §4):
+//!   rsq table1..table7      regenerate paper tables
+//!   rsq fig2..fig9          regenerate paper figures
+//!   rsq scores              dump Figs. 10-14 score series
+//!   rsq quantize            one-off quantization run
+//!   rsq train               train a checkpoint
+//!   rsq perf                performance profile (EXPERIMENTS.md §Perf)
+//!   rsq all                 every table + figure at default scale
+
+use anyhow::{bail, Result};
+
+use rsq::corpus::CorpusKind;
+use rsq::eval::tasks::mean_accuracy;
+use rsq::eval::{perplexity, probe_suite};
+use rsq::quant::{quantize, Method, QuantOptions, Strategy};
+use rsq::repro::{self, Ctx};
+use rsq::train::{train, TrainOptions};
+use rsq::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "table1" => repro::tables::table1(&args)?,
+        "table2" => repro::tables::table2(&args)?,
+        "table3" => repro::tables::table3(&args)?,
+        "table4" => repro::tables::table4(&args)?,
+        "table5" => repro::tables::table5(&args)?,
+        "table6" => repro::tables::table6(&args)?,
+        "table7" => repro::tables::table7(&args)?,
+        "fig2" => repro::figs::fig2(&args)?,
+        "fig3" => repro::figs::fig3(&args)?,
+        "fig4" => repro::figs::fig4(&args)?,
+        "fig5" | "fig6" => repro::figs::fig5(&args)?,
+        "fig7" => repro::figs::fig7(&args)?,
+        "fig8" => repro::figs::fig8(&args)?,
+        "fig9" => repro::figs::fig9(&args)?,
+        "scores" => repro::scores::dump_scores(&args)?,
+        "perf" => repro::perf::perf(&args)?,
+        "quantize" => cmd_quantize(&args)?,
+        "train" => cmd_train(&args)?,
+        "all" => cmd_all(&args)?,
+        "help" | "--help" | "-h" => print_help(),
+        other => bail!("unknown command {other:?} — try `rsq help`"),
+    }
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "small");
+    let ctx = Ctx::prepare(&config, args)?;
+    let cfg = ctx.engine.config().clone();
+    let t = args.usize_or("calib-t", *cfg.seq_lens.iter().max().unwrap().min(&128));
+    let method = Method::parse(&args.str_or("method", "rsq"))
+        .ok_or_else(|| anyhow::anyhow!("bad --method"))?;
+    let strategy = Strategy::parse(&args.str_or("strategy", "attncon:0.01"))
+        .ok_or_else(|| anyhow::anyhow!("bad --strategy"))?;
+    let mut opts = QuantOptions::new(method, args.usize_or("bits", 3) as u32, t);
+    opts.strategy = strategy;
+    opts.expansion = args.usize_or("expansion", 1);
+    opts.verbose = args.flag("verbose");
+    let corpus = CorpusKind::parse(&args.str_or("corpus", "wiki"))
+        .ok_or_else(|| anyhow::anyhow!("bad --corpus"))?;
+    let calib = ctx.calib(corpus, args.usize_or("calib-n", 16), t, args.u64_or("seed", 0));
+
+    let full_ppl = perplexity(&ctx.engine, &ctx.params, &ctx.eval, t)?;
+    let (q, report) = quantize(&ctx.engine, &ctx.params, &calib, &opts)?;
+    let ppl = perplexity(&ctx.engine, &q, &ctx.eval, t)?;
+    let probes = probe_suite(&ctx.engine, &q, t, 3, args.usize_or("probe-n", 32))?;
+    println!("config       : {config} ({} params)", cfg.num_params());
+    println!("method       : {} / {} / {}bit", method.name(), opts.strategy.name(), opts.bits);
+    println!("full  PPL    : {full_ppl:.3}");
+    println!("quant PPL    : {ppl:.3}");
+    println!("avg accuracy : {:.1}%", 100.0 * mean_accuracy(&probes));
+    println!("kurtosis     : {:.2} -> {:.2}", report.kurtosis_before, report.kurtosis_after);
+    println!("layer errs   : {:?}", report.layer_err);
+    println!("wall         : {:.2}s over {} batches", report.wall_seconds, report.batches);
+    if let Some(out) = args.get("save") {
+        q.save(std::path::Path::new(out))?;
+        println!("saved quantized checkpoint to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "small");
+    let engine = rsq::runtime::Engine::load(&config)?;
+    let mut p = rsq::model::ParamSet::init(engine.config(), args.u64_or("train-seed", 7));
+    let report = train(
+        &engine,
+        &mut p,
+        &TrainOptions {
+            steps: args.usize_or("steps", repro::default_steps(&config)),
+            corpus: CorpusKind::parse(&args.str_or("corpus", "wiki")).unwrap(),
+            seed: args.u64_or("train-seed", 7),
+            log_every: args.usize_or("log-every", 20),
+            verbose: true,
+        },
+    )?;
+    println!("final loss {:.4} after {:.1}s", report.final_loss, report.wall_seconds);
+    if let Some(out) = args.get("save") {
+        p.save(std::path::Path::new(out))?;
+        println!("saved checkpoint to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_all(_args: &Args) -> Result<()> {
+    // Each driver runs in its own subprocess: the prebuilt xla_extension
+    // 0.5.1 leaks ~output-size heap per PJRT execute (upstream C bug — the
+    // rust wrappers free everything they own), so a single long-lived
+    // process accumulates GBs across tens of thousands of executions.
+    // Process isolation bounds it per driver. See EXPERIMENTS.md §Perf.
+    let exe = std::env::current_exe()?;
+    let fwd: Vec<String> = std::env::args().skip(2).collect();
+    for cmd in [
+        "table1", "table2", "table3", "table4", "table5", "table6", "table7",
+        "fig2", "fig3", "fig4", "fig5", "fig7", "fig8", "fig9", "scores",
+    ] {
+        eprintln!("[all] running {cmd} ...");
+        let status = std::process::Command::new(&exe).arg(cmd).args(&fwd).status()?;
+        if !status.success() {
+            bail!("driver {cmd} failed with {status}");
+        }
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "rsq — RSQ (Rotate, Scale, then Quantize) reproduction\n\
+         \n\
+         usage: rsq <command> [flags]\n\
+         \n\
+         commands:\n\
+           table1..table7   regenerate the paper's tables\n\
+           fig2..fig9       regenerate the paper's figures\n\
+           scores           dump Figs. 10-14 token-importance series\n\
+           quantize         one-off quantization (see flags below)\n\
+           train            train a checkpoint on the synthetic corpus\n\
+           perf             performance profile\n\
+           all              run every table + figure\n\
+         \n\
+         common flags:\n\
+           --config NAME    model config (tiny|small|s1|s2|s3|ms1..3|e2e)\n\
+           --seeds N        seeded repetitions (default 3)\n\
+           --steps N        training steps for the base checkpoint\n\
+           --bits B         quantization bits (default 3)\n\
+           --method M       rtn|gptq|quarot|sq|rsq|quarot-vq|rsq-vq\n\
+           --strategy S     uniform|firstn:N|firstlastn:N|chunk:K/M|\n\
+                            tokenfreq:R|actnorm:R|actdiff:R|tokensim:R|attncon:R\n\
+           --calib-n/-t     calibration samples / sequence length\n\
+           --expansion M    dataset expansion factor (paper M=8)\n\
+           --corpus C       wiki|c4|ptb|redpajama\n\
+           --probe-n N      instances per downstream probe task\n\
+           --verbose        chatty pipeline logging"
+    );
+}

@@ -1,0 +1,216 @@
+//! Model hyper-parameters + the canonical parameter-ordering contract.
+//!
+//! Mirrors python/compile/configs.py: the flat parameter list is
+//!   [emb, pos] + [g1, wq, wk, wv, wo, g2, wup, wgate, wdown] * layers
+//!             + [gf, head]
+//! and any change must be made on both sides (the AOT manifest records the
+//! python view; `runtime::Manifest::check_params` cross-validates).
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub batch: usize,
+    pub seq_lens: Vec<usize>,
+    pub ldlq_k: usize,
+    pub ldlq_g: usize,
+}
+
+/// Identifier of one transformer weight inside a layer (paper Fig. 7
+/// ablates RSQ per-module over exactly these seven).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Module {
+    Wq,
+    Wk,
+    Wv,
+    Wo,
+    Wup,
+    Wgate,
+    Wdown,
+}
+
+impl Module {
+    pub const ALL: [Module; 7] = [
+        Module::Wq, Module::Wk, Module::Wv, Module::Wo,
+        Module::Wup, Module::Wgate, Module::Wdown,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Module::Wq => "wq",
+            Module::Wk => "wk",
+            Module::Wv => "wv",
+            Module::Wo => "wo",
+            Module::Wup => "wup",
+            Module::Wgate => "wgate",
+            Module::Wdown => "wdown",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Module> {
+        Module::ALL.into_iter().find(|m| m.name() == s)
+    }
+
+    /// Offset of this weight inside a layer's 9-tensor block.
+    pub fn layer_offset(&self) -> usize {
+        match self {
+            Module::Wq => 1,
+            Module::Wk => 2,
+            Module::Wv => 3,
+            Module::Wo => 4,
+            Module::Wup => 6,
+            Module::Wgate => 7,
+            Module::Wdown => 8,
+        }
+    }
+
+    /// Which captured input stream feeds this weight
+    /// (layer_fwd outputs: Xa -> q/k/v, Xo -> o, Xf -> up/gate, Xd -> down).
+    pub fn input_stream(&self) -> InputStream {
+        match self {
+            Module::Wq | Module::Wk | Module::Wv => InputStream::Xa,
+            Module::Wo => InputStream::Xo,
+            Module::Wup | Module::Wgate => InputStream::Xf,
+            Module::Wdown => InputStream::Xd,
+        }
+    }
+}
+
+/// The four capture streams a layer forward emits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum InputStream {
+    Xa,
+    Xo,
+    Xf,
+    Xd,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d / self.heads
+    }
+
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["emb".to_string(), "pos".to_string()];
+        for l in 0..self.layers {
+            for w in ["g1", "wq", "wk", "wv", "wo", "g2", "wup", "wgate", "wdown"] {
+                names.push(format!("l{l}.{w}"));
+            }
+        }
+        names.push("gf".to_string());
+        names.push("head".to_string());
+        names
+    }
+
+    pub fn param_shape(&self, name: &str) -> Vec<usize> {
+        let (d, ff, v) = (self.d, self.ff, self.vocab);
+        match name {
+            "emb" | "head" => vec![v, d],
+            "pos" => vec![self.max_seq, d],
+            "gf" => vec![d],
+            _ => {
+                let key = name.split('.').nth(1).unwrap_or(name);
+                match key {
+                    "g1" | "g2" => vec![d],
+                    "wq" | "wk" | "wv" | "wo" => vec![d, d],
+                    "wup" | "wgate" => vec![ff, d],
+                    "wdown" => vec![d, ff],
+                    other => panic!("unknown param {other:?}"),
+                }
+            }
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.param_names()
+            .iter()
+            .map(|n| self.param_shape(n).iter().product::<usize>())
+            .sum()
+    }
+
+    /// Flat index of a layer weight in the parameter list.
+    pub fn param_index(&self, layer: usize, module: Module) -> usize {
+        assert!(layer < self.layers);
+        2 + layer * 9 + module.layer_offset()
+    }
+
+    /// (out, in) shape of a layer weight.
+    pub fn weight_shape(&self, module: Module) -> (usize, usize) {
+        match module {
+            Module::Wq | Module::Wk | Module::Wv | Module::Wo => (self.d, self.d),
+            Module::Wup | Module::Wgate => (self.ff, self.d),
+            Module::Wdown => (self.d, self.ff),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            d: 64,
+            layers: 2,
+            heads: 2,
+            ff: 128,
+            vocab: 256,
+            max_seq: 64,
+            batch: 4,
+            seq_lens: vec![32, 64],
+            ldlq_k: 1024,
+            ldlq_g: 8,
+        }
+    }
+
+    #[test]
+    fn param_ordering_matches_python() {
+        let c = cfg();
+        let names = c.param_names();
+        assert_eq!(names.len(), 2 + 9 * 2 + 2);
+        assert_eq!(names[0], "emb");
+        assert_eq!(names[2], "l0.g1");
+        assert_eq!(names[10], "l0.wdown");
+        assert_eq!(names[names.len() - 1], "head");
+    }
+
+    #[test]
+    fn shapes() {
+        let c = cfg();
+        assert_eq!(c.param_shape("emb"), vec![256, 64]);
+        assert_eq!(c.param_shape("l1.wup"), vec![128, 64]);
+        assert_eq!(c.param_shape("l1.wdown"), vec![64, 128]);
+        assert_eq!(c.param_shape("gf"), vec![64]);
+    }
+
+    #[test]
+    fn param_index_contract() {
+        let c = cfg();
+        let names = c.param_names();
+        assert_eq!(names[c.param_index(0, Module::Wq)], "l0.wq");
+        assert_eq!(names[c.param_index(1, Module::Wdown)], "l1.wdown");
+    }
+
+    #[test]
+    fn module_round_trip() {
+        for m in Module::ALL {
+            assert_eq!(Module::parse(m.name()), Some(m));
+        }
+        assert_eq!(Module::parse("nope"), None);
+    }
+
+    #[test]
+    fn num_params_counts() {
+        let c = cfg();
+        // emb+head: 2*256*64, pos: 64*64, per layer: 2*64 + 4*64*64 + 2*128*64 + 64*128, gf: 64
+        let per_layer = 2 * 64 + 4 * 64 * 64 + 2 * 128 * 64 + 64 * 128;
+        let want = 2 * 256 * 64 + 64 * 64 + 2 * per_layer + 64;
+        assert_eq!(c.num_params(), want);
+    }
+}

@@ -1,0 +1,117 @@
+//! RMSNorm-gain fusion (paper Sec. 4.2 "Rotate", following SliceGPT).
+//!
+//! Rotation is only function-preserving for the gain-free RMSNorm, so the
+//! per-channel gains are folded into the adjacent in-dim weights first:
+//! g1 -> wq/wk/wv columns, g2 -> wup/wgate columns, gf -> head columns.
+//! Mirrors python/compile/model.py::fuse_gains (pytest proves the python
+//! version function-preserving; the rust unit test proves both agree).
+
+use super::params::ParamSet;
+
+/// Fold all norm gains into adjacent weights in place; gains become 1.
+pub fn fuse_gains(p: &mut ParamSet) {
+    let layers = p.cfg.layers;
+    for l in 0..layers {
+        let base = 2 + l * 9;
+        // g1 -> wq, wk, wv (scale input columns)
+        let g1 = p.tensors[base].data.clone();
+        for off in 1..=3 {
+            scale_columns(&mut p.tensors[base + off], &g1);
+        }
+        p.tensors[base].data.iter_mut().for_each(|v| *v = 1.0);
+        // g2 -> wup, wgate
+        let g2 = p.tensors[base + 5].data.clone();
+        for off in 6..=7 {
+            scale_columns(&mut p.tensors[base + off], &g2);
+        }
+        p.tensors[base + 5].data.iter_mut().for_each(|v| *v = 1.0);
+    }
+    // gf -> head
+    let n = p.tensors.len();
+    let gf = p.tensors[n - 2].data.clone();
+    scale_columns(&mut p.tensors[n - 1], &gf);
+    p.tensors[n - 2].data.iter_mut().for_each(|v| *v = 1.0);
+}
+
+/// Whether all gains are 1 (the precondition for `rotate::rotate_params`).
+pub fn gains_fused(p: &ParamSet) -> bool {
+    let mut idxs = vec![p.tensors.len() - 2];
+    for l in 0..p.cfg.layers {
+        idxs.push(2 + l * 9);
+        idxs.push(2 + l * 9 + 5);
+    }
+    idxs.iter().all(|&i| p.tensors[i].data.iter().all(|&v| v == 1.0))
+}
+
+fn scale_columns(w: &mut crate::tensor::Tensor, g: &[f32]) {
+    let (rows, cols) = (w.rows(), w.cols());
+    assert_eq!(cols, g.len(), "gain length mismatch");
+    for i in 0..rows {
+        let row = &mut w.data[i * cols..(i + 1) * cols];
+        for (v, &s) in row.iter_mut().zip(g) {
+            *v *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::util::Pcg;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            d: 64, layers: 2, heads: 2, ff: 128, vocab: 256,
+            max_seq: 64, batch: 4, seq_lens: vec![32, 64],
+            ldlq_k: 1024, ldlq_g: 8,
+        }
+    }
+
+    #[test]
+    fn fuse_sets_gains_to_one() {
+        let mut p = ParamSet::init(&cfg(), 0);
+        // perturb gains
+        let mut rng = Pcg::new(1);
+        for l in 0..2 {
+            for idx in [2 + l * 9, 2 + l * 9 + 5] {
+                for v in &mut p.tensors[idx].data {
+                    *v = 1.0 + 0.1 * rng.normal();
+                }
+            }
+        }
+        assert!(!gains_fused(&p));
+        fuse_gains(&mut p);
+        assert!(gains_fused(&p));
+    }
+
+    #[test]
+    fn fuse_scales_expected_columns() {
+        let mut p = ParamSet::init(&cfg(), 2);
+        let wq_before = p.tensors[3].clone();
+        for (c, v) in p.tensors[2].data.iter_mut().enumerate() {
+            *v = 1.0 + c as f32 * 0.01;
+        }
+        let g = p.tensors[2].data.clone();
+        fuse_gains(&mut p);
+        let wq_after = &p.tensors[3];
+        for i in 0..64 {
+            for j in 0..64 {
+                let want = wq_before.at2(i, j) * g[j];
+                assert!((wq_after.at2(i, j) - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn fuse_is_idempotent() {
+        let mut p = ParamSet::init(&cfg(), 3);
+        fuse_gains(&mut p);
+        let snapshot: Vec<Vec<f32>> = p.tensors.iter().map(|t| t.data.clone()).collect();
+        fuse_gains(&mut p);
+        for (a, t) in snapshot.iter().zip(&p.tensors) {
+            assert_eq!(a, &t.data);
+        }
+    }
+}

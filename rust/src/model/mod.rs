@@ -1,0 +1,11 @@
+//! Model substrate: configs, the parameter store, RMSNorm-gain fusion, the
+//! Rotate step (paper Sec. 3.2 / 4.2), and outlier injection.
+
+pub mod config;
+pub mod fuse;
+pub mod outliers;
+pub mod params;
+pub mod rotate;
+
+pub use config::ModelConfig;
+pub use params::ParamSet;

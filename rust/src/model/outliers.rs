@@ -1,0 +1,131 @@
+//! Weight-outlier injection (DESIGN.md §Substitutions).
+//!
+//! Pre-trained LLMs carry sparse, large-magnitude weights (SpQR, SqueezeLLM,
+//! "super weights"); a briefly-trained toy model does not develop them. To
+//! give the Rotate step the phenomenon it exists to fix, we inject sparse
+//! high-kurtosis perturbations into the transformer weights after training:
+//! a small fraction of entries per weight gets `magnitude × row_rms` added
+//! with random sign. The injected model *is* the model under study — all
+//! quantization methods see the same weights and the "Full Model" rows in
+//! every table are evaluated post-injection.
+
+use super::config::Module;
+use super::params::ParamSet;
+use crate::util::Pcg;
+
+#[derive(Clone, Copy, Debug)]
+pub struct OutlierSpec {
+    /// fraction of entries perturbed per weight matrix (e.g. 0.003)
+    pub fraction: f32,
+    /// perturbation magnitude in units of the row RMS (e.g. 6.0)
+    pub magnitude: f32,
+}
+
+impl Default for OutlierSpec {
+    fn default() -> Self {
+        OutlierSpec { fraction: 0.003, magnitude: 6.0 }
+    }
+}
+
+/// Inject outliers into all seven transformer weights of every layer.
+pub fn inject_outliers(p: &mut ParamSet, spec: OutlierSpec, seed: u64) {
+    let mut rng = Pcg::with_stream(seed, 0x0071);
+    for l in 0..p.cfg.layers {
+        for m in Module::ALL {
+            let w = p.weight_mut(l, m);
+            let (rows, cols) = (w.rows(), w.cols());
+            let n_hits = ((rows * cols) as f32 * spec.fraction).ceil() as usize;
+            for _ in 0..n_hits {
+                let i = rng.below(rows);
+                let j = rng.below(cols);
+                let row = &w.data[i * cols..(i + 1) * cols];
+                let rms = (row.iter().map(|v| v * v).sum::<f32>() / cols as f32)
+                    .sqrt()
+                    .max(1e-6);
+                w.data[i * cols + j] += spec.magnitude * rms * rng.sign();
+            }
+        }
+    }
+}
+
+/// Mean per-row max/rms ratio over the layer weights — the "outlier-ness"
+/// metric that rotation is supposed to shrink (reported by `rsq scores`).
+pub fn kurtosis_ratio(p: &ParamSet) -> f32 {
+    let mut total = 0.0f32;
+    let mut count = 0usize;
+    for l in 0..p.cfg.layers {
+        for m in Module::ALL {
+            let w = p.weight(l, m);
+            let cols = w.cols();
+            for i in 0..w.rows() {
+                let row = w.row(i);
+                let mx = row.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+                let rms = (row.iter().map(|v| v * v).sum::<f32>() / cols as f32)
+                    .sqrt()
+                    .max(1e-9);
+                total += mx / rms;
+                count += 1;
+            }
+        }
+    }
+    total / count as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::fuse::fuse_gains;
+    use crate::model::rotate::{rotate_params, rotation_matrix};
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            d: 64, layers: 2, heads: 2, ff: 128, vocab: 256,
+            max_seq: 64, batch: 4, seq_lens: vec![32, 64],
+            ldlq_k: 1024, ldlq_g: 8,
+        }
+    }
+
+    #[test]
+    fn injection_raises_kurtosis() {
+        let mut p = ParamSet::init(&cfg(), 0);
+        let before = kurtosis_ratio(&p);
+        inject_outliers(&mut p, OutlierSpec::default(), 1);
+        let after = kurtosis_ratio(&p);
+        assert!(after > before * 1.1, "{before} -> {after}");
+    }
+
+    #[test]
+    fn rotation_shrinks_injected_kurtosis() {
+        // the end-to-end mechanism the paper's Rotate step relies on
+        let mut p = ParamSet::init(&cfg(), 0);
+        inject_outliers(&mut p, OutlierSpec::default(), 1);
+        fuse_gains(&mut p);
+        let before = kurtosis_ratio(&p);
+        let q = rotation_matrix(64, 2);
+        rotate_params(&mut p, &q);
+        let after = kurtosis_ratio(&p);
+        assert!(after < before, "{after} !< {before}");
+    }
+
+    #[test]
+    fn injection_deterministic() {
+        let mut a = ParamSet::init(&cfg(), 0);
+        let mut b = ParamSet::init(&cfg(), 0);
+        inject_outliers(&mut a, OutlierSpec::default(), 9);
+        inject_outliers(&mut b, OutlierSpec::default(), 9);
+        assert_eq!(a.tensors[3].data, b.tensors[3].data);
+    }
+
+    #[test]
+    fn injection_is_sparse() {
+        let mut p = ParamSet::init(&cfg(), 0);
+        let orig = p.weight(0, Module::Wq).clone();
+        inject_outliers(&mut p, OutlierSpec { fraction: 0.001, magnitude: 6.0 }, 3);
+        let w = p.weight(0, Module::Wq);
+        let changed = w.data.iter().zip(&orig.data).filter(|(a, b)| a != b).count();
+        assert!(changed <= 16, "{changed} entries changed");
+        assert!(changed >= 1);
+    }
+}

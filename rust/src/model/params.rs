@@ -1,0 +1,183 @@
+//! The parameter store: the flat, ordered tensor list shared with every
+//! AOT module, plus init and a simple binary save/load format so trained
+//! checkpoints (examples/e2e_train_quantize.rs) can be reused by drivers.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::config::{ModelConfig, Module};
+use crate::tensor::Tensor;
+use crate::util::Pcg;
+
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub cfg: ModelConfig,
+    pub tensors: Vec<Tensor>,
+}
+
+const MAGIC: &[u8; 8] = b"RSQPRMS1";
+
+impl ParamSet {
+    /// Gaussian init matching the L2 reference initializer: gains = 1,
+    /// weights ~ N(0, (0.4/sqrt(fan_in))^2).
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Pcg::with_stream(seed, 0x1217);
+        let tensors = cfg
+            .param_names()
+            .iter()
+            .map(|name| {
+                let shape = cfg.param_shape(name);
+                if shape.len() == 1 {
+                    Tensor::ones(&shape)
+                } else {
+                    let scale = 0.4 / (shape[1] as f32).sqrt();
+                    Tensor::randn(&shape, scale, &mut rng)
+                }
+            })
+            .collect();
+        ParamSet { cfg: cfg.clone(), tensors }
+    }
+
+    pub fn weight(&self, layer: usize, module: Module) -> &Tensor {
+        &self.tensors[self.cfg.param_index(layer, module)]
+    }
+
+    pub fn weight_mut(&mut self, layer: usize, module: Module) -> &mut Tensor {
+        let idx = self.cfg.param_index(layer, module);
+        &mut self.tensors[idx]
+    }
+
+    pub fn set_weight(&mut self, layer: usize, module: Module, t: Tensor) {
+        let idx = self.cfg.param_index(layer, module);
+        assert_eq!(self.tensors[idx].shape, t.shape, "weight shape mismatch");
+        self.tensors[idx] = t;
+    }
+
+    /// Save as a small binary: magic, count, then per tensor
+    /// (ndim, dims..., f32 data), all little-endian.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {path:?}"))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for t in &self.tensors {
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(cfg: &ModelConfig, path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {path:?}"))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not an RSQ parameter file");
+        }
+        let mut u32buf = [0u8; 4];
+        f.read_exact(&mut u32buf)?;
+        let count = u32::from_le_bytes(u32buf) as usize;
+        let names = cfg.param_names();
+        if count != names.len() {
+            bail!("{path:?} has {count} tensors, config {} expects {}", cfg.name, names.len());
+        }
+        let mut tensors = Vec::with_capacity(count);
+        for name in &names {
+            f.read_exact(&mut u32buf)?;
+            let ndim = u32::from_le_bytes(u32buf) as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                f.read_exact(&mut u32buf)?;
+                shape.push(u32::from_le_bytes(u32buf) as usize);
+            }
+            if shape != cfg.param_shape(name) {
+                bail!("tensor {name}: shape {shape:?} != config {:?}", cfg.param_shape(name));
+            }
+            let n: usize = shape.iter().product();
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push(Tensor::from_vec(&shape, data));
+        }
+        Ok(ParamSet { cfg: cfg.clone(), tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            d: 64, layers: 2, heads: 2, ff: 128, vocab: 256,
+            max_seq: 64, batch: 4, seq_lens: vec![32, 64],
+            ldlq_k: 1024, ldlq_g: 8,
+        }
+    }
+
+    #[test]
+    fn init_shapes_and_gains() {
+        let p = ParamSet::init(&cfg(), 0);
+        assert_eq!(p.tensors.len(), 22);
+        // gains are all ones
+        assert!(p.tensors[2].data.iter().all(|&v| v == 1.0));
+        // weights have roughly the right scale
+        let w = p.weight(0, Module::Wq);
+        let rms = (w.data.iter().map(|v| v * v).sum::<f32>() / w.numel() as f32).sqrt();
+        assert!((rms - 0.05).abs() < 0.01, "{rms}");
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let a = ParamSet::init(&cfg(), 3);
+        let b = ParamSet::init(&cfg(), 3);
+        assert_eq!(a.tensors[3].data, b.tensors[3].data);
+        let c = ParamSet::init(&cfg(), 4);
+        assert_ne!(a.tensors[3].data, c.tensors[3].data);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let p = ParamSet::init(&cfg(), 7);
+        let dir = std::env::temp_dir().join("rsq_param_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.bin");
+        p.save(&path).unwrap();
+        let q = ParamSet::load(&cfg(), &path).unwrap();
+        for (a, b) in p.tensors.iter().zip(&q.tensors) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("rsq_param_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"not a param file").unwrap();
+        assert!(ParamSet::load(&cfg(), &path).is_err());
+    }
+
+    #[test]
+    fn weight_accessors() {
+        let mut p = ParamSet::init(&cfg(), 1);
+        let w = p.weight(1, Module::Wdown).clone();
+        assert_eq!(w.shape, vec![64, 128]);
+        let mut w2 = w.clone();
+        w2.scale_in_place(2.0);
+        p.set_weight(1, Module::Wdown, w2);
+        assert!((p.weight(1, Module::Wdown).data[0] - 2.0 * w.data[0]).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,125 @@
+//! The Rotate step (paper Sec. 3.2 / 4.2): apply a randomized-Hadamard
+//! orthogonal transform Q to the residual stream.
+//!
+//! Conventions (mirroring python/compile/model.py, where
+//! tests/test_model.py::test_rotation_invariance proves function
+//! preservation): with the residual stream mapped z -> zQ,
+//!   in-dim  weights  W' = W·Q    (wq, wk, wv, wup, wgate, head)
+//!   out-dim weights  W' = Qᵀ·W   (wo, wdown)
+//!   tables           emb' = emb·Q, pos' = pos·Q
+//! Gains must already be fused (`fuse::gains_fused`).
+
+use crate::tensor::{randomized_hadamard, Tensor};
+use crate::util::Pcg;
+
+use super::fuse::gains_fused;
+use super::params::ParamSet;
+
+/// Build the rotation matrix for a config (seeded -> reproducible runs).
+pub fn rotation_matrix(d: usize, seed: u64) -> Tensor {
+    let mut rng = Pcg::with_stream(seed, 0x40_7A7E);
+    randomized_hadamard(d, &mut rng)
+}
+
+/// Rotate all parameters in place. Panics if gains are not fused.
+pub fn rotate_params(p: &mut ParamSet, q: &Tensor) {
+    assert!(gains_fused(p), "fuse_gains must run before rotation");
+    assert_eq!(q.rows(), p.cfg.d);
+    let qt = q.transpose2();
+    let layers = p.cfg.layers;
+    p.tensors[0] = p.tensors[0].matmul(q); // emb
+    p.tensors[1] = p.tensors[1].matmul(q); // pos
+    for l in 0..layers {
+        let base = 2 + l * 9;
+        for off in [1, 2, 3] {
+            // wq wk wv: in-dim
+            p.tensors[base + off] = p.tensors[base + off].matmul(q);
+        }
+        p.tensors[base + 4] = qt.matmul(&p.tensors[base + 4]); // wo: out-dim
+        for off in [6, 7] {
+            // wup wgate: in-dim
+            p.tensors[base + off] = p.tensors[base + off].matmul(q);
+        }
+        p.tensors[base + 8] = qt.matmul(&p.tensors[base + 8]); // wdown: out-dim
+    }
+    let n = p.tensors.len();
+    p.tensors[n - 1] = p.tensors[n - 1].matmul(q); // head: in-dim
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{ModelConfig, Module};
+    use crate::model::fuse::fuse_gains;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            d: 64, layers: 2, heads: 2, ff: 128, vocab: 256,
+            max_seq: 64, batch: 4, seq_lens: vec![32, 64],
+            ldlq_k: 1024, ldlq_g: 8,
+        }
+    }
+
+    #[test]
+    fn rotation_matrix_orthogonal_and_seeded() {
+        let q1 = rotation_matrix(64, 5);
+        let q2 = rotation_matrix(64, 5);
+        assert_eq!(q1.data, q2.data);
+        let qtq = q1.transpose2().matmul(&q1);
+        for i in 0..64 {
+            assert!((qtq.at2(i, i) - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rotate_preserves_shapes() {
+        let mut p = ParamSet::init(&cfg(), 0);
+        fuse_gains(&mut p);
+        let shapes: Vec<Vec<usize>> = p.tensors.iter().map(|t| t.shape.clone()).collect();
+        rotate_params(&mut p, &rotation_matrix(64, 1));
+        for (t, s) in p.tensors.iter().zip(&shapes) {
+            assert_eq!(&t.shape, s);
+        }
+    }
+
+    #[test]
+    fn rotate_then_unrotate_is_identity() {
+        let mut p = ParamSet::init(&cfg(), 2);
+        fuse_gains(&mut p);
+        let orig = p.clone();
+        let q = rotation_matrix(64, 3);
+        rotate_params(&mut p, &q);
+        // some weight actually changed
+        assert!(!p.weight(0, Module::Wq).allclose(orig.weight(0, Module::Wq), 1e-4));
+        rotate_params(&mut p, &q.transpose2());
+        for (a, b) in p.tensors.iter().zip(&orig.tensors) {
+            assert!(a.allclose(b, 1e-3), "round trip drifted");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "fuse_gains")]
+    fn rotate_unfused_panics() {
+        let mut p = ParamSet::init(&cfg(), 0);
+        p.tensors[2].data[0] = 1.5; // perturb a gain
+        let q = rotation_matrix(64, 1);
+        rotate_params(&mut p, &q);
+    }
+
+    #[test]
+    fn rotate_preserves_qk_products() {
+        // q·kᵀ per token is invariant: (x Q)(Wq Q)ᵀ(Wk Q)(x Q)ᵀ = x Wqᵀ Wk xᵀ
+        let mut p = ParamSet::init(&cfg(), 4);
+        fuse_gains(&mut p);
+        let wq = p.weight(0, Module::Wq).clone();
+        let wk = p.weight(0, Module::Wk).clone();
+        let m_before = wq.matmul(&wk.transpose2());
+        let q = rotation_matrix(64, 9);
+        rotate_params(&mut p, &q);
+        let wq2 = p.weight(0, Module::Wq);
+        let wk2 = p.weight(0, Module::Wk);
+        let m_after = wq2.matmul(&wk2.transpose2());
+        assert!(m_before.allclose(&m_after, 1e-4));
+    }
+}

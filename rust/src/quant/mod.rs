@@ -1,0 +1,16 @@
+//! The paper's contribution: token-importance-aware layer-wise quantization.
+//!
+//! - [`strategy`] — the importance strategies of Sec. 4.3 (heuristic:
+//!   First-N, First&Last-N, Chunk; dynamic: TokenFreq, ActNorm, ActDiff,
+//!   TokenSim, AttnCon) plus the Eq. 4 normalization.
+//! - [`pipeline`] — the layer-by-layer coordinator implementing RTN, GPTQ,
+//!   QuaRot, SQ (scale w/o rotate), RSQ (rotate+scale) and the VQ variants,
+//!   with streaming Hessian accumulation and dataset expansion.
+//! - [`vq`] — E8-derived codebook construction for Tab. 6.
+
+pub mod pipeline;
+pub mod strategy;
+pub mod vq;
+
+pub use pipeline::{quantize, Method, QuantOptions, QuantReport};
+pub use strategy::Strategy;

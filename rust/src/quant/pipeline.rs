@@ -1,0 +1,382 @@
+//! The RSQ layer-by-layer quantization coordinator (paper Sec. 4.2).
+//!
+//! For each transformer layer:
+//!   pass A  — stream every calibration batch through the (not yet
+//!             quantized) layer, capture the four weight-input streams and
+//!             the dynamic token scores, turn scores into the importance
+//!             matrix R (Sec. 4.3 + Eq. 4), and accumulate the scaled
+//!             Hessians H = 2·X·R²·Xᵀ via the L1 Pallas kernel;
+//!   solve   — quantize the seven weights against their stream's Hessian
+//!             (GPTQ / LDLQ-VQ HLO modules, or RTN which needs no data);
+//!   pass B  — recompute the layer outputs with the *quantized* weights so
+//!             the next layer calibrates on what it will actually see at
+//!             inference (standard GPTQ practice).
+//!
+//! Modes: RTN, GPTQ (no rotate, uniform), QuaRot (rotate, uniform), SQ
+//! (scale only), RSQ (rotate + scale), and the VQ variants of
+//! QuaRot/RSQ (Tab. 6). Fig. 7's per-module ablation is `module_mask`.
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::corpus::{expand_dataset, CalibSet};
+use crate::model::config::{InputStream, Module};
+use crate::model::fuse::fuse_gains;
+use crate::model::outliers::kurtosis_ratio;
+use crate::model::rotate::{rotate_params, rotation_matrix};
+use crate::model::ParamSet;
+use crate::runtime::{self, Engine};
+use crate::tensor::Tensor;
+
+use super::strategy::{LayerScores, Strategy};
+use super::vq::e8_codebook;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Round-to-nearest (data-free baseline).
+    Rtn,
+    /// GPTQ: uniform token weighting, no rotation (paper baseline).
+    Gptq,
+    /// QuaRot: rotation + GPTQ with uniform weighting (paper baseline).
+    QuaRot,
+    /// SQ: token scaling without rotation (paper Fig. 9 ablation).
+    Sq,
+    /// RSQ: rotate, scale, then quantize (the paper's method).
+    Rsq,
+    /// QuaRot with the E8 codebook + LDLQ (Tab. 6 baseline).
+    QuaRotVq,
+    /// RSQ with the E8 codebook + LDLQ (Tab. 6).
+    RsqVq,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "rtn" => Some(Method::Rtn),
+            "gptq" => Some(Method::Gptq),
+            "quarot" => Some(Method::QuaRot),
+            "sq" => Some(Method::Sq),
+            "rsq" => Some(Method::Rsq),
+            "quarot-vq" | "quarotvq" => Some(Method::QuaRotVq),
+            "rsq-vq" | "rsqvq" => Some(Method::RsqVq),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Rtn => "rtn",
+            Method::Gptq => "gptq",
+            Method::QuaRot => "quarot",
+            Method::Sq => "sq",
+            Method::Rsq => "rsq",
+            Method::QuaRotVq => "quarot-vq",
+            Method::RsqVq => "rsq-vq",
+        }
+    }
+
+    pub fn rotates(&self) -> bool {
+        matches!(self, Method::QuaRot | Method::Rsq | Method::QuaRotVq | Method::RsqVq)
+    }
+
+    pub fn scales(&self) -> bool {
+        matches!(self, Method::Sq | Method::Rsq | Method::RsqVq)
+    }
+
+    pub fn vector_quant(&self) -> bool {
+        matches!(self, Method::QuaRotVq | Method::RsqVq)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct QuantOptions {
+    pub method: Method,
+    /// importance strategy used when `method.scales()`
+    pub strategy: Strategy,
+    pub bits: u32,
+    pub damp: f32,
+    /// calibration sequence length (must be one of cfg.seq_lens)
+    pub seq_len: usize,
+    /// dataset-expansion factor M (paper Sec. 4.4); 1 = off
+    pub expansion: usize,
+    /// Fig. 7: scale only these modules (None = all seven)
+    pub module_mask: Option<HashSet<Module>>,
+    pub rot_seed: u64,
+    pub verbose: bool,
+}
+
+impl QuantOptions {
+    pub fn new(method: Method, bits: u32, seq_len: usize) -> Self {
+        QuantOptions {
+            method,
+            strategy: Strategy::AttnCon { r_min: 0.05 },
+            bits,
+            damp: 0.01,
+            seq_len,
+            expansion: 1,
+            module_mask: None,
+            rot_seed: 0x5157, // "QW"
+            verbose: false,
+        }
+    }
+
+    pub fn maxq(&self) -> f32 {
+        ((1u64 << self.bits) - 1) as f32
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct QuantReport {
+    /// Σ over weights of tr((W-Q)H(W-Q)ᵀ), per layer
+    pub layer_err: Vec<f32>,
+    pub kurtosis_before: f32,
+    pub kurtosis_after: f32,
+    pub wall_seconds: f64,
+    pub batches: usize,
+}
+
+/// Quantize `params` with the given options; returns the quantized set and
+/// a report. `params` is cloned — the caller keeps the full-precision model.
+pub fn quantize(
+    engine: &Engine,
+    params: &ParamSet,
+    calib: &CalibSet,
+    opts: &QuantOptions,
+) -> Result<(ParamSet, QuantReport)> {
+    let t0 = Instant::now();
+    let cfg = engine.config().clone();
+    if !cfg.seq_lens.contains(&opts.seq_len) {
+        bail!("seq_len {} not in artifact set {:?}", opts.seq_len, cfg.seq_lens);
+    }
+    let mut p = params.clone();
+    let mut report = QuantReport {
+        kurtosis_before: kurtosis_ratio(&p),
+        ..Default::default()
+    };
+
+    // --- Rotate (paper Sec. 4.2 step 1) ---
+    if opts.method.rotates() {
+        fuse_gains(&mut p);
+        let q = rotation_matrix(cfg.d, opts.rot_seed);
+        rotate_params(&mut p, &q);
+    }
+    report.kurtosis_after = kurtosis_ratio(&p);
+
+    // --- RTN short-circuit: data-free ---
+    if opts.method == Method::Rtn {
+        for l in 0..cfg.layers {
+            let mut errsum = 0.0;
+            for m in Module::ALL {
+                let (o, i) = cfg.weight_shape(m);
+                let w = p.weight(l, m).clone();
+                let outs = engine.exec(
+                    &format!("rtn_{o}x{i}"),
+                    &[runtime::tensor_literal(&w)?, runtime::scalar_literal(opts.maxq())],
+                )?;
+                let q = runtime::literal_tensor(&outs[0])?;
+                errsum += q.sub(&w).frob_norm().powi(2);
+                p.set_weight(l, m, q);
+            }
+            report.layer_err.push(errsum);
+        }
+        report.wall_seconds = t0.elapsed().as_secs_f64();
+        return Ok((p, report));
+    }
+
+    // --- calibration data (Sec. 4.4 expansion) ---
+    let mut calib = if opts.expansion > 1 {
+        expand_dataset(calib, opts.expansion)
+    } else {
+        calib.clone()
+    };
+    calib.pad_to_batch(cfg.batch);
+    let t = opts.seq_len;
+    let batches: Vec<&[Vec<i32>]> = calib.samples.chunks(cfg.batch).collect();
+    report.batches = batches.len();
+    let freq = calib.token_frequencies(cfg.vocab);
+
+    let lname = format!("layer_fwd_t{t}");
+    let hess_d = format!("hess_d_t{t}");
+    let hess_ff = format!("hess_ff_t{t}");
+    let codebook_lit = if opts.method.vector_quant() {
+        Some(runtime::tensor_literal(&e8_codebook(cfg.ldlq_k, opts.rot_seed))?)
+    } else {
+        None
+    };
+
+    // initial hidden states: embed every batch once
+    let emb_lit = runtime::tensor_literal(&p.tensors[0])?;
+    let pos_lit = runtime::tensor_literal(&p.tensors[1])?;
+    let mut z_lits = Vec::with_capacity(batches.len());
+    let mut tok_lits = Vec::with_capacity(batches.len());
+    for b in &batches {
+        let tl = runtime::tokens_literal(b, t)?;
+        let z = engine.exec_ref(&format!("embed_t{t}"), &[&tl, &emb_lit, &pos_lit])?;
+        tok_lits.push(tl);
+        z_lits.push(z.into_iter().next().unwrap());
+    }
+
+    // A partial module mask (Fig. 7) needs BOTH Hessians per stream: the
+    // masked modules use the scaled one, the rest the uniform one. When the
+    // method doesn't scale at all, the "scaled" accumulator already holds
+    // the uniform Hessian (Strategy::Uniform), so no second pass is needed.
+    let needs_uniform = opts.method.scales()
+        && opts
+            .module_mask
+            .as_ref()
+            .map(|m| m.len() < Module::ALL.len())
+            .unwrap_or(false);
+
+    for l in 0..cfg.layers {
+        // layer params as literals, once per layer
+        let base = 2 + l * 9;
+        let lp: Vec<xla::Literal> = (0..9)
+            .map(|k| runtime::tensor_literal(&p.tensors[base + k]))
+            .collect::<Result<_>>()?;
+
+        // --- pass A: captures + scores -> scaled Hessians ---
+        let mut h_scaled: [Option<Tensor>; 4] = [None, None, None, None];
+        let mut h_uniform: [Option<Tensor>; 4] = [None, None, None, None];
+        for (bi, batch) in batches.iter().enumerate() {
+            let mut ins: Vec<&xla::Literal> = vec![&z_lits[bi]];
+            ins.extend(lp.iter());
+            let outs = engine.exec_ref(&lname, &ins)?;
+            // outs: z2, xa, xo, xf, xd, attn_con, act_norm, act_diff, token_sim
+            let scores = LayerScores {
+                attn_con: rows_of(&runtime::literal_tensor(&outs[5])?),
+                act_norm: rows_of(&runtime::literal_tensor(&outs[6])?),
+                act_diff: rows_of(&runtime::literal_tensor(&outs[7])?),
+                token_sim: rows_of(&runtime::literal_tensor(&outs[8])?),
+            };
+            let strategy = if opts.method.scales() { opts.strategy } else { Strategy::Uniform };
+            let r = strategy.importance(
+                &cfg, t, batch.len(), Some(&scores), Some(batch), Some(&freq));
+            let r_lit = runtime::tensor_literal(&Tensor::from_vec(
+                &[batch.len(), t],
+                r.iter().flatten().cloned().collect(),
+            ))?;
+            let uni_lit = runtime::tensor_literal(&Tensor::ones(&[batch.len(), t]))?;
+            for (si, xout) in [(0usize, 1usize), (1, 2), (2, 3), (3, 4)] {
+                let hess_mod = if si == 3 { &hess_ff } else { &hess_d };
+                let h = engine.exec_ref(hess_mod, &[&outs[xout], &r_lit])?;
+                accumulate(&mut h_scaled[si], runtime::literal_tensor(&h[0])?);
+                if needs_uniform {
+                    let hu = engine.exec_ref(hess_mod, &[&outs[xout], &uni_lit])?;
+                    accumulate(&mut h_uniform[si], runtime::literal_tensor(&hu[0])?);
+                }
+            }
+        }
+
+        // --- solve: quantize the seven weights ---
+        let mut errsum = 0.0f32;
+        for m in Module::ALL {
+            let scaled = match &opts.module_mask {
+                Some(mask) => opts.method.scales() && mask.contains(&m),
+                None => opts.method.scales(),
+            };
+            let stream = stream_index(m.input_stream());
+            let h = if scaled {
+                h_scaled[stream].as_ref().unwrap()
+            } else if needs_uniform {
+                h_uniform[stream].as_ref().unwrap()
+            } else {
+                h_scaled[stream].as_ref().unwrap() // uniform strategy ⇒ same
+            };
+            let (o, i) = cfg.weight_shape(m);
+            let w_lit = runtime::tensor_literal(p.weight(l, m))?;
+            let h_lit = runtime::tensor_literal(h)?;
+            let damp_lit = runtime::scalar_literal(opts.damp);
+            let maxq_lit = runtime::scalar_literal(opts.maxq());
+            let outs = if opts.method.vector_quant() {
+                engine.exec_ref(
+                    &format!("ldlq_{o}x{i}"),
+                    &[&w_lit, &h_lit, codebook_lit.as_ref().unwrap(), &damp_lit],
+                )?
+            } else {
+                engine.exec_ref(
+                    &format!("gptq_{o}x{i}"),
+                    &[&w_lit, &h_lit, &maxq_lit, &damp_lit],
+                )?
+            };
+            errsum += runtime::literal_scalar(&outs[1])?;
+            p.set_weight(l, m, runtime::literal_tensor(&outs[0])?);
+        }
+        report.layer_err.push(errsum);
+        if opts.verbose {
+            eprintln!("[quant:{}] layer {l}: hessian-weighted err {errsum:.3}", opts.method.name());
+        }
+
+        // --- pass B: propagate through the quantized layer ---
+        // (skipped for the last layer: its outputs feed nothing — saves
+        //  1/L of the pass-B forward cost; EXPERIMENTS.md §Perf)
+        if l + 1 < cfg.layers {
+            let lp_q: Vec<xla::Literal> = (0..9)
+                .map(|k| runtime::tensor_literal(&p.tensors[base + k]))
+                .collect::<Result<_>>()?;
+            for z in z_lits.iter_mut() {
+                let mut ins: Vec<&xla::Literal> = vec![z];
+                ins.extend(lp_q.iter());
+                let outs = engine.exec_ref(&lname, &ins)?;
+                *z = outs.into_iter().next().unwrap();
+            }
+        }
+    }
+
+    report.wall_seconds = t0.elapsed().as_secs_f64();
+    Ok((p, report))
+}
+
+fn stream_index(s: InputStream) -> usize {
+    match s {
+        InputStream::Xa => 0,
+        InputStream::Xo => 1,
+        InputStream::Xf => 2,
+        InputStream::Xd => 3,
+    }
+}
+
+fn accumulate(acc: &mut Option<Tensor>, h: Tensor) {
+    match acc {
+        Some(a) => a.add_in_place(&h),
+        None => *acc = Some(h),
+    }
+}
+
+fn rows_of(t: &Tensor) -> Vec<Vec<f32>> {
+    let (r, c) = (t.shape[0], t.shape[1]);
+    (0..r).map(|i| t.data[i * c..(i + 1) * c].to_vec()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_round_trip() {
+        for m in [
+            Method::Rtn, Method::Gptq, Method::QuaRot, Method::Sq,
+            Method::Rsq, Method::QuaRotVq, Method::RsqVq,
+        ] {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn method_semantics() {
+        assert!(Method::Rsq.rotates() && Method::Rsq.scales());
+        assert!(Method::QuaRot.rotates() && !Method::QuaRot.scales());
+        assert!(!Method::Sq.rotates() && Method::Sq.scales());
+        assert!(!Method::Gptq.rotates() && !Method::Gptq.scales());
+        assert!(Method::RsqVq.vector_quant() && Method::RsqVq.scales());
+    }
+
+    #[test]
+    fn maxq_from_bits() {
+        assert_eq!(QuantOptions::new(Method::Rsq, 2, 64).maxq(), 3.0);
+        assert_eq!(QuantOptions::new(Method::Rsq, 3, 64).maxq(), 7.0);
+        assert_eq!(QuantOptions::new(Method::Rsq, 4, 64).maxq(), 15.0);
+    }
+}

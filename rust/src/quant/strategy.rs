@@ -1,0 +1,260 @@
+//! Token-importance strategies (paper Sec. 4.3) and the Eq. 4 min-max
+//! normalization into [r_min, 1].
+//!
+//! Heuristic strategies (First-N, First&Last-N, Chunk) produce {0,1} masks
+//! from positions alone. Dynamic strategies consume the per-layer score
+//! streams the `layer_fwd` artifact emits (AttnCon/ActNorm/ActDiff/TokenSim)
+//! or the corpus frequency table (TokenFreq). Importance is computed per
+//! layer and per sample, and is shared by all seven weights of the layer
+//! (the paper found per-weight importance worse).
+
+use crate::model::ModelConfig;
+
+/// Raw per-token score streams captured from one layer forward pass
+/// ([B, T] row-major, one row per sample in the batch).
+#[derive(Clone, Debug)]
+pub struct LayerScores {
+    pub attn_con: Vec<Vec<f32>>,
+    pub act_norm: Vec<Vec<f32>>,
+    pub act_diff: Vec<Vec<f32>>,
+    pub token_sim: Vec<Vec<f32>>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Strategy {
+    /// Conventional layer-wise quantization: every token weighs 1.
+    Uniform,
+    /// r_i = 1 for i < n, else 0 (Sec. 4.3 First-N).
+    FirstN(usize),
+    /// r_i = 1 for i < n/2 or i >= T - n/2 (Sec. 4.3 First&Last-N).
+    FirstLastN(usize),
+    /// Tab. 1: only the k-th of `of` equal chunks is weighted.
+    Chunk { index: usize, of: usize },
+    /// Rarer tokens matter more (corpus frequency table).
+    TokenFreq { r_min: f32 },
+    /// Larger-norm activations matter more.
+    ActNorm { r_min: f32 },
+    /// Steadier tokens (small ||Layer(z)-z||) matter more.
+    ActDiff { r_min: f32 },
+    /// Tokens less similar to the rest matter more.
+    TokenSim { r_min: f32 },
+    /// Tokens receiving more attention matter more (the paper's pick).
+    AttnCon { r_min: f32 },
+}
+
+impl Strategy {
+    /// Parse "attncon:0.01", "firstn:256", "chunk:1/4", "uniform", ...
+    pub fn parse(s: &str) -> Option<Strategy> {
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (s, None),
+        };
+        let rmin = || arg.and_then(|a| a.parse::<f32>().ok()).unwrap_or(0.01);
+        match name.to_ascii_lowercase().as_str() {
+            "uniform" => Some(Strategy::Uniform),
+            "firstn" => Some(Strategy::FirstN(arg?.parse().ok()?)),
+            "firstlastn" => Some(Strategy::FirstLastN(arg?.parse().ok()?)),
+            "chunk" => {
+                let (i, of) = arg?.split_once('/')?;
+                Some(Strategy::Chunk { index: i.parse().ok()?, of: of.parse().ok()? })
+            }
+            "tokenfreq" => Some(Strategy::TokenFreq { r_min: rmin() }),
+            "actnorm" => Some(Strategy::ActNorm { r_min: rmin() }),
+            "actdiff" => Some(Strategy::ActDiff { r_min: rmin() }),
+            "tokensim" => Some(Strategy::TokenSim { r_min: rmin() }),
+            "attncon" => Some(Strategy::AttnCon { r_min: rmin() }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Strategy::Uniform => "uniform".into(),
+            Strategy::FirstN(n) => format!("firstn:{n}"),
+            Strategy::FirstLastN(n) => format!("firstlastn:{n}"),
+            Strategy::Chunk { index, of } => format!("chunk:{index}/{of}"),
+            Strategy::TokenFreq { r_min } => format!("tokenfreq:{r_min}"),
+            Strategy::ActNorm { r_min } => format!("actnorm:{r_min}"),
+            Strategy::ActDiff { r_min } => format!("actdiff:{r_min}"),
+            Strategy::TokenSim { r_min } => format!("tokensim:{r_min}"),
+            Strategy::AttnCon { r_min } => format!("attncon:{r_min}"),
+        }
+    }
+
+    pub fn is_dynamic(&self) -> bool {
+        matches!(
+            self,
+            Strategy::TokenFreq { .. }
+                | Strategy::ActNorm { .. }
+                | Strategy::ActDiff { .. }
+                | Strategy::TokenSim { .. }
+                | Strategy::AttnCon { .. }
+        )
+    }
+
+    /// Compute the importance matrix R [B, T] for one layer of one batch.
+    ///
+    /// `tokens` and `freq` are only used by TokenFreq; `scores` only by the
+    /// other dynamic strategies.
+    pub fn importance(
+        &self,
+        _cfg: &ModelConfig,
+        t: usize,
+        batch: usize,
+        scores: Option<&LayerScores>,
+        tokens: Option<&[Vec<i32>]>,
+        freq: Option<&[u32]>,
+    ) -> Vec<Vec<f32>> {
+        match self {
+            Strategy::Uniform => vec![vec![1.0; t]; batch],
+            Strategy::FirstN(n) => {
+                let row: Vec<f32> =
+                    (0..t).map(|i| if i < *n { 1.0 } else { 0.0 }).collect();
+                vec![row; batch]
+            }
+            Strategy::FirstLastN(n) => {
+                let half = n / 2;
+                let row: Vec<f32> = (0..t)
+                    .map(|i| if i < half || i >= t.saturating_sub(half) { 1.0 } else { 0.0 })
+                    .collect();
+                vec![row; batch]
+            }
+            Strategy::Chunk { index, of } => {
+                let chunk = t / of;
+                let lo = (index - 1) * chunk;
+                let hi = if *index == *of { t } else { index * chunk };
+                let row: Vec<f32> = (0..t)
+                    .map(|i| if i >= lo && i < hi { 1.0 } else { 0.0 })
+                    .collect();
+                vec![row; batch]
+            }
+            Strategy::TokenFreq { r_min } => {
+                let tokens = tokens.expect("TokenFreq needs tokens");
+                let freq = freq.expect("TokenFreq needs the frequency table");
+                tokens
+                    .iter()
+                    .map(|row| {
+                        let raw: Vec<f32> =
+                            row.iter().map(|&tk| -(freq[tk as usize] as f32)).collect();
+                        normalize_eq4(&raw, *r_min)
+                    })
+                    .collect()
+            }
+            Strategy::ActNorm { r_min } => dyn_scores(&scores.unwrap().act_norm, *r_min),
+            Strategy::ActDiff { r_min } => dyn_scores(&scores.unwrap().act_diff, *r_min),
+            Strategy::TokenSim { r_min } => dyn_scores(&scores.unwrap().token_sim, *r_min),
+            Strategy::AttnCon { r_min } => dyn_scores(&scores.unwrap().attn_con, *r_min),
+        }
+    }
+}
+
+fn dyn_scores(raw: &[Vec<f32>], r_min: f32) -> Vec<Vec<f32>> {
+    raw.iter().map(|row| normalize_eq4(row, r_min)).collect()
+}
+
+/// Eq. 4: linearly map scores into [r_min, r_max=1]. Constant rows map to 1
+/// (no preference expressible -> uniform).
+pub fn normalize_eq4(raw: &[f32], r_min: f32) -> Vec<f32> {
+    let lo = raw.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = raw.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !(hi - lo).is_finite() || hi - lo <= 1e-12 {
+        return vec![1.0; raw.len()];
+    }
+    raw.iter()
+        .map(|&r| r_min + (r - lo) / (hi - lo) * (1.0 - r_min))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d: 64, layers: 1, heads: 2, ff: 128, vocab: 64,
+            max_seq: 16, batch: 2, seq_lens: vec![16],
+            ldlq_k: 16, ldlq_g: 8,
+        }
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for s in [
+            "uniform", "firstn:256", "firstlastn:128", "chunk:2/4",
+            "tokenfreq:0.05", "actnorm:0.005", "actdiff:0.01",
+            "tokensim:0.02", "attncon:0.01",
+        ] {
+            let st = Strategy::parse(s).unwrap();
+            assert_eq!(Strategy::parse(&st.name()), Some(st), "{s}");
+        }
+        assert_eq!(Strategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn eq4_normalization() {
+        let r = normalize_eq4(&[0.0, 5.0, 10.0], 0.01);
+        assert!((r[0] - 0.01).abs() < 1e-6);
+        assert!((r[1] - 0.505).abs() < 1e-3);
+        assert!((r[2] - 1.0).abs() < 1e-6);
+        // constant input -> all ones
+        assert_eq!(normalize_eq4(&[3.0, 3.0], 0.01), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn firstn_mask() {
+        let r = Strategy::FirstN(4).importance(&cfg(), 16, 2, None, None, None);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].iter().sum::<f32>(), 4.0);
+        assert_eq!(&r[0][..4], &[1.0; 4]);
+    }
+
+    #[test]
+    fn firstlastn_mask() {
+        let r = Strategy::FirstLastN(4).importance(&cfg(), 16, 1, None, None, None);
+        assert_eq!(r[0].iter().sum::<f32>(), 4.0);
+        assert_eq!(r[0][0], 1.0);
+        assert_eq!(r[0][1], 1.0);
+        assert_eq!(r[0][14], 1.0);
+        assert_eq!(r[0][15], 1.0);
+        assert_eq!(r[0][7], 0.0);
+    }
+
+    #[test]
+    fn chunk_masks_partition() {
+        let mut seen = vec![0.0f32; 16];
+        for k in 1..=4 {
+            let r = Strategy::Chunk { index: k, of: 4 }.importance(&cfg(), 16, 1, None, None, None);
+            for (s, v) in seen.iter_mut().zip(&r[0]) {
+                *s += v;
+            }
+        }
+        assert_eq!(seen, vec![1.0; 16]); // chunks tile the sequence exactly
+    }
+
+    #[test]
+    fn attncon_uses_scores() {
+        let scores = LayerScores {
+            attn_con: vec![vec![10.0, 0.0, 5.0, 0.0]],
+            act_norm: vec![vec![0.0; 4]],
+            act_diff: vec![vec![0.0; 4]],
+            token_sim: vec![vec![0.0; 4]],
+        };
+        let r = Strategy::AttnCon { r_min: 0.01 }.importance(
+            &cfg(), 4, 1, Some(&scores), None, None);
+        assert!((r[0][0] - 1.0).abs() < 1e-6);
+        assert!((r[0][1] - 0.01).abs() < 1e-6);
+        assert!(r[0][2] > r[0][1] && r[0][2] < r[0][0]);
+    }
+
+    #[test]
+    fn tokenfreq_prefers_rare() {
+        let tokens = vec![vec![0, 1, 2]];
+        let freq = vec![100u32, 10, 1];
+        let r = Strategy::TokenFreq { r_min: 0.1 }.importance(
+            &cfg(), 3, 1, None, Some(&tokens), Some(&freq));
+        assert!(r[0][2] > r[0][1] && r[0][1] > r[0][0]);
+        assert!((r[0][2] - 1.0).abs() < 1e-6);
+        assert!((r[0][0] - 0.1).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,152 @@
+//! E8-derived codebook construction for RSQ+VQ (paper Tab. 6).
+//!
+//! QuIP#'s E8P codebook is built from the E8 lattice (all-integer or
+//! all-half-integer 8-vectors with even coordinate sum), whose packing
+//! optimality makes it the right shape for 8-dim weight groups. The paper
+//! swaps GPTQ's scalar grid for this codebook and the quantizer for LDLQ.
+//!
+//! Offline substitute (DESIGN.md): we enumerate low-norm E8 lattice points,
+//! scale them to unit RMS, and keep the `k` lowest-norm ones (ties broken
+//! deterministically), padding with seeded Gaussian-projected lattice points
+//! if the shell enumeration runs short. K is the artifact-baked `ldlq_k`.
+
+use crate::tensor::Tensor;
+use crate::util::Pcg;
+
+/// Build a [k, 8] codebook of E8 lattice points scaled so typical
+/// unit-RMS weight groups are covered. Memoized per (k, seed): the shell
+/// enumeration costs ~150 ms and every VQ quantization run needs the same
+/// book (EXPERIMENTS.md §Perf).
+pub fn e8_codebook(k: usize, seed: u64) -> Tensor {
+    use std::sync::Mutex;
+    static CACHE: Mutex<Vec<((usize, u64), Tensor)>> = Mutex::new(Vec::new());
+    let mut cache = CACHE.lock().unwrap();
+    if let Some((_, t)) = cache.iter().find(|(key, _)| *key == (k, seed)) {
+        return t.clone();
+    }
+    let t = e8_codebook_uncached(k, seed);
+    cache.push(((k, seed), t.clone()));
+    t
+}
+
+fn e8_codebook_uncached(k: usize, seed: u64) -> Tensor {
+    let mut points = enumerate_e8(3); // integer coords in [-3, 3]
+    // sort by norm, then lexicographically for determinism
+    points.sort_by(|a, b| {
+        let na: i32 = a.iter().map(|v| v * v).sum();
+        let nb: i32 = b.iter().map(|v| v * v).sum();
+        na.cmp(&nb).then_with(|| a.cmp(b))
+    });
+    let mut data: Vec<f32> = Vec::with_capacity(k * 8);
+    let mut rng = Pcg::with_stream(seed, 0xE8);
+    let mut used = 0usize;
+    for p in &points {
+        if used >= k {
+            break;
+        }
+        data.extend(p.iter().map(|&v| v as f32 * 0.5));
+        used += 1;
+    }
+    while used < k {
+        // top-up beyond the enumerated shells: random even-sum integer vecs
+        let mut v: Vec<i32> = (0..8).map(|_| rng.below(9) as i32 - 4).collect();
+        let s: i32 = v.iter().sum();
+        if s % 2 != 0 {
+            v[7] += 1;
+        }
+        data.extend(v.iter().map(|&x| x as f32 * 0.5));
+        used += 1;
+    }
+    // scale the whole book so codeword RMS ~ 1 (weights are row-RMS-normalized
+    // before assignment in the LDLQ artifact)
+    let rms = (data.iter().map(|v| v * v).sum::<f32>() / data.len() as f32)
+        .sqrt()
+        .max(1e-6);
+    for v in &mut data {
+        *v /= rms;
+    }
+    Tensor::from_vec(&[k, 8], data)
+}
+
+/// Enumerate E8 points with integer representation c in [-r, r]^8 where the
+/// lattice point is c/2 and sum(c) ≡ 0 (mod 2) — covers both the integer
+/// and half-integer cosets when c has uniform parity.
+fn enumerate_e8(r: i32) -> Vec<Vec<i32>> {
+    // D8 coset (all even-parity "doubled" coordinates): c all even, sum/2 even
+    // plus the half-integer coset: c all odd. Keep it simple: generate all c
+    // with uniform parity and even sum, bounded norm.
+    let mut out = Vec::new();
+    let max_norm = 24; // keeps enumeration tractable and low-shell only
+    let vals: Vec<i32> = (-r..=r).collect();
+    let mut stack = vec![(Vec::<i32>::new(), 0i32, 0i32)];
+    while let Some((prefix, norm, sum)) = stack.pop() {
+        if prefix.len() == 8 {
+            if sum % 2 == 0 {
+                let parities: Vec<i32> = prefix.iter().map(|v| v.rem_euclid(2)).collect();
+                if parities.iter().all(|&p| p == parities[0]) {
+                    out.push(prefix);
+                }
+            }
+            continue;
+        }
+        for &v in &vals {
+            let n2 = norm + v * v;
+            if n2 <= max_norm {
+                let mut p = prefix.clone();
+                p.push(v);
+                stack.push((p, n2, sum + v));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codebook_shape_and_determinism() {
+        let a = e8_codebook(256, 0);
+        let b = e8_codebook(256, 0);
+        assert_eq!(a.shape, vec![256, 8]);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn codebook_has_distinct_rows() {
+        let cb = e8_codebook(128, 0);
+        let mut rows: Vec<Vec<u32>> = (0..128)
+            .map(|i| cb.row(i).iter().map(|v| v.to_bits()).collect())
+            .collect();
+        rows.sort();
+        let before = rows.len();
+        rows.dedup();
+        assert_eq!(rows.len(), before, "duplicate codewords");
+    }
+
+    #[test]
+    fn codebook_rms_is_one() {
+        let cb = e8_codebook(512, 1);
+        let rms =
+            (cb.data.iter().map(|v| v * v).sum::<f32>() / cb.data.len() as f32).sqrt();
+        assert!((rms - 1.0).abs() < 1e-4, "{rms}");
+    }
+
+    #[test]
+    fn contains_zero_and_symmetric_low_shells() {
+        let cb = e8_codebook(64, 0);
+        // first codeword after norm-sort is the origin
+        assert!(cb.row(0).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn e8_parity_invariant() {
+        for p in enumerate_e8(2) {
+            let s: i32 = p.iter().sum();
+            assert_eq!(s % 2, 0);
+            let par: Vec<i32> = p.iter().map(|v| v.rem_euclid(2)).collect();
+            assert!(par.iter().all(|&x| x == par[0]));
+        }
+    }
+}

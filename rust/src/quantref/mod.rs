@@ -1,0 +1,186 @@
+//! Pure-rust reference quantizers (RTN + GPTQ).
+//!
+//! An independent oracle for the HLO solver: rust/tests/prop_quant.rs
+//! property-tests `runtime` GPTQ results against this implementation on
+//! random instances. Mirrors python/compile/quantizer.py exactly (same
+//! grid, same dampening, same Cholesky route).
+
+use crate::tensor::linalg::hinv_cholesky_upper;
+use crate::tensor::Tensor;
+
+/// Per-row asymmetric min-max grid: returns (scale, zero) per row.
+pub fn row_grid(w: &Tensor, maxq: f32) -> (Vec<f32>, Vec<f32>) {
+    let rows = w.rows();
+    let mut scale = Vec::with_capacity(rows);
+    let mut zero = Vec::with_capacity(rows);
+    for i in 0..rows {
+        let row = w.row(i);
+        let lo = row.iter().cloned().fold(0.0f32, f32::min);
+        let hi = row.iter().cloned().fold(0.0f32, f32::max);
+        let s = ((hi - lo) / maxq).max(1e-8);
+        scale.push(s);
+        zero.push((-lo / s).round());
+    }
+    (scale, zero)
+}
+
+fn quant_one(v: f32, s: f32, z: f32, maxq: f32) -> f32 {
+    let q = ((v / s).round() + z).clamp(0.0, maxq);
+    s * (q - z)
+}
+
+/// Round-to-nearest baseline: per-row grid quantize-dequantize.
+pub fn rtn(w: &Tensor, maxq: f32) -> Tensor {
+    let (scale, zero) = row_grid(w, maxq);
+    let mut out = w.clone();
+    for i in 0..w.rows() {
+        for v in out.row_mut(i) {
+            *v = quant_one(*v, scale[i], zero[i], maxq);
+        }
+    }
+    out
+}
+
+/// GPTQ: column-by-column quantization with OBC error feedback through the
+/// Cholesky factor of (H + damp·mean(diag)·I)⁻¹. Returns (Q, err) with err
+/// the Hessian-weighted loss tr((W-Q) H (W-Q)ᵀ), same contract as the HLO
+/// `gptq_*` modules.
+pub fn gptq(w: &Tensor, h: &Tensor, maxq: f32, damp: f32) -> (Tensor, f32) {
+    let (rows, din) = (w.rows(), w.cols());
+    assert_eq!(h.rows(), din);
+    let u = hinv_cholesky_upper(h, damp);
+    let (scale, zero) = row_grid(w, maxq);
+    let mut wc = w.clone();
+    let mut q = Tensor::zeros(&[rows, din]);
+    for i in 0..din {
+        let uii = u.at2(i, i);
+        for r in 0..rows {
+            let wv = wc.at2(r, i);
+            let deq = quant_one(wv, scale[r], zero[r], maxq);
+            q.set2(r, i, deq);
+            let err = (wv - deq) / uii;
+            // propagate into not-yet-quantized columns
+            let urow = u.row(i);
+            let wrow = wc.row_mut(r);
+            for j in (i + 1)..din {
+                wrow[j] -= err * urow[j];
+            }
+        }
+    }
+    let err = hessian_weighted_err(w, &q, h);
+    (q, err)
+}
+
+/// tr((W-Q) H (W-Q)ᵀ) — the layer-reconstruction objective (paper Sec. 3.3).
+pub fn hessian_weighted_err(w: &Tensor, q: &Tensor, h: &Tensor) -> f32 {
+    let diff = q.sub(w);
+    let dh = diff.matmul(h);
+    dh.data.iter().zip(&diff.data).map(|(a, b)| a * b).sum()
+}
+
+/// Assemble H = 2 Σ r² x xᵀ host-side (reference for the Pallas kernel).
+pub fn hessian_scaled(x: &[Vec<f32>], r: &[f32]) -> Tensor {
+    let k = x[0].len();
+    let mut h = Tensor::zeros(&[k, k]);
+    for (xi, &ri) in x.iter().zip(r) {
+        let w = 2.0 * ri * ri;
+        for a in 0..k {
+            let xa = xi[a] * w;
+            if xa == 0.0 {
+                continue;
+            }
+            let row = &mut h.data[a * k..(a + 1) * k];
+            for b in 0..k {
+                row[b] += xa * xi[b];
+            }
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    fn hess(din: usize, n: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg::new(seed);
+        let x: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..din).map(|_| rng.normal()).collect())
+            .collect();
+        let r = vec![1.0f32; n];
+        hessian_scaled(&x, &r)
+    }
+
+    #[test]
+    fn rtn_levels_bounded() {
+        let mut rng = Pcg::new(0);
+        let w = Tensor::randn(&[8, 32], 1.0, &mut rng);
+        let q = rtn(&w, 7.0);
+        for i in 0..8 {
+            let mut lv: Vec<f32> = q.row(i).to_vec();
+            lv.sort_by(f32::total_cmp);
+            lv.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+            assert!(lv.len() <= 8, "{}", lv.len());
+        }
+    }
+
+    #[test]
+    fn rtn_high_bits_lossless() {
+        let mut rng = Pcg::new(1);
+        let w = Tensor::randn(&[4, 16], 1.0, &mut rng);
+        let q = rtn(&w, 65535.0);
+        assert!(q.allclose(&w, 1e-3));
+    }
+
+    #[test]
+    fn gptq_beats_rtn() {
+        let mut rng = Pcg::new(2);
+        let w = Tensor::randn(&[16, 24], 1.0, &mut rng);
+        let h = hess(24, 200, 3);
+        let (_, err_gptq) = gptq(&w, &h, 7.0, 0.01);
+        let q_rtn = rtn(&w, 7.0);
+        let err_rtn = hessian_weighted_err(&w, &q_rtn, &h);
+        assert!(err_gptq <= err_rtn * 1.001, "{err_gptq} !<= {err_rtn}");
+    }
+
+    #[test]
+    fn gptq_error_monotone_in_bits() {
+        let mut rng = Pcg::new(4);
+        let w = Tensor::randn(&[8, 16], 1.0, &mut rng);
+        let h = hess(16, 150, 5);
+        let errs: Vec<f32> = [3.0, 7.0, 15.0, 255.0]
+            .iter()
+            .map(|&mq| gptq(&w, &h, mq, 0.01).1)
+            .collect();
+        assert!(errs[0] >= errs[1] && errs[1] >= errs[2] && errs[2] >= errs[3], "{errs:?}");
+    }
+
+    #[test]
+    fn gptq_high_bits_lossless() {
+        let mut rng = Pcg::new(6);
+        let w = Tensor::randn(&[4, 8], 1.0, &mut rng);
+        let h = hess(8, 64, 7);
+        let (q, err) = gptq(&w, &h, 1_048_575.0, 0.01);
+        assert!(q.allclose(&w, 1e-3));
+        assert!(err < 1e-2, "{err}");
+    }
+
+    #[test]
+    fn hessian_scaled_matches_direct() {
+        let mut rng = Pcg::new(8);
+        let x: Vec<Vec<f32>> = (0..10).map(|_| (0..4).map(|_| rng.normal()).collect()).collect();
+        let r: Vec<f32> = (0..10).map(|_| rng.f32()).collect();
+        let h = hessian_scaled(&x, &r);
+        for a in 0..4 {
+            for b in 0..4 {
+                let want: f32 = x
+                    .iter()
+                    .zip(&r)
+                    .map(|(xi, &ri)| 2.0 * ri * ri * xi[a] * xi[b])
+                    .sum();
+                assert!((h.at2(a, b) - want).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,296 @@
+//! Figure drivers (paper Figs. 2-9). Design-choice evaluations use Wiki
+//! PPL only, like the paper ("to avoid overfitting").
+
+use anyhow::Result;
+
+use crate::corpus::CorpusKind;
+use crate::model::config::Module;
+use crate::quant::{Method, QuantOptions, Strategy};
+use crate::util::{json::Json, Args};
+
+use super::{cell, print_header, run_seeds, seeded, write_record, Ctx};
+
+fn sweep_ppl(
+    ctx: &Ctx,
+    args: &Args,
+    t: usize,
+    calib_n: usize,
+    make_opts: impl Fn(u64) -> QuantOptions,
+) -> Result<Vec<f64>> {
+    let mut ppls = Vec::new();
+    for s in run_seeds(args) {
+        let opts = make_opts(s);
+        let calib = ctx.calib(CorpusKind::Wiki, calib_n, t, s);
+        let (_, ppl) = ctx.quant_ppl(&opts, &calib, t)?;
+        ppls.push(ppl);
+    }
+    Ok(ppls)
+}
+
+/// Fig. 2: First-N and First&Last-N over the number of activated tokens.
+pub fn fig2(args: &Args) -> Result<()> {
+    print_header(
+        "Figure 2 — heuristic strategies vs number of used tokens",
+        "Fig. 2: PPL dips at N ~ 5-10% of tokens; First&Last-N <= First-N",
+    );
+    let ctx = Ctx::prepare(&args.str_or("config", "small"), args)?;
+    let t = args.usize_or("calib-t", 128);
+    let calib_n = args.usize_or("calib-n", 16);
+    let bits = args.usize_or("bits", 3) as u32;
+    let ns: Vec<usize> = [t, t / 2, t / 4, t / 8, t / 16, t / 32]
+        .into_iter()
+        .filter(|&n| n >= 2)
+        .collect();
+    println!("{:<6} {:>18} {:>18}", "N", "First-N PPL", "First&Last-N PPL");
+    let mut rows = Vec::new();
+    for &n in &ns {
+        let p_first = sweep_ppl(&ctx, args, t, calib_n, |s| {
+            let mut o = seeded(QuantOptions::new(Method::Rsq, bits, t), s);
+            o.strategy = Strategy::FirstN(n);
+            o
+        })?;
+        let p_fl = sweep_ppl(&ctx, args, t, calib_n, |s| {
+            let mut o = seeded(QuantOptions::new(Method::Rsq, bits, t), s);
+            o.strategy = Strategy::FirstLastN(n);
+            o
+        })?;
+        println!("{:<6} {:>18} {:>18}", n, cell(&p_first, 3), cell(&p_fl, 3));
+        rows.push(
+            Json::obj()
+                .set("n", n)
+                .set("firstn_ppl", p_first)
+                .set("firstlastn_ppl", p_fl),
+        );
+    }
+    write_record("fig2", Json::obj().set("rows", Json::Arr(rows)))
+}
+
+/// Fig. 3: the five dynamic strategies across r_min.
+pub fn fig3(args: &Args) -> Result<()> {
+    print_header(
+        "Figure 3 — dynamic strategies vs r_min",
+        "Fig. 3: AttnCon best (opt r_min=0.01); TokenFreq/ActDiff weakest",
+    );
+    let ctx = Ctx::prepare(&args.str_or("config", "small"), args)?;
+    let t = args.usize_or("calib-t", 128);
+    let calib_n = args.usize_or("calib-n", 16);
+    let bits = args.usize_or("bits", 3) as u32;
+    let rmins = [0.005f32, 0.01, 0.02, 0.05, 0.1];
+    let strategies: Vec<(&str, fn(f32) -> Strategy)> = vec![
+        ("tokenfreq", |r| Strategy::TokenFreq { r_min: r }),
+        ("actnorm", |r| Strategy::ActNorm { r_min: r }),
+        ("actdiff", |r| Strategy::ActDiff { r_min: r }),
+        ("tokensim", |r| Strategy::TokenSim { r_min: r }),
+        ("attncon", |r| Strategy::AttnCon { r_min: r }),
+    ];
+    print!("{:<10}", "strategy");
+    for r in rmins {
+        print!(" {:>16}", format!("r_min={r}"));
+    }
+    println!();
+    let mut rows = Vec::new();
+    for (name, make) in &strategies {
+        print!("{name:<10}");
+        let mut per_r = Vec::new();
+        for &r in &rmins {
+            let ppls = sweep_ppl(&ctx, args, t, calib_n, |s| {
+                let mut o = seeded(QuantOptions::new(Method::Rsq, bits, t), s);
+                o.strategy = make(r);
+                o
+            })?;
+            print!(" {:>16}", cell(&ppls, 3));
+            per_r.push(Json::obj().set("r_min", r as f64).set("ppl", ppls));
+        }
+        println!();
+        rows.push(Json::obj().set("strategy", *name).set("points", Json::Arr(per_r)));
+    }
+    write_record("fig3", Json::obj().set("rows", Json::Arr(rows)))
+}
+
+/// Fig. 4: dataset expansion (M=8) on/off per strategy at its best setting.
+pub fn fig4(args: &Args) -> Result<()> {
+    print_header(
+        "Figure 4 — dataset expansion (M=8) per strategy",
+        "Fig. 4: most strategies improve with expansion",
+    );
+    let ctx = Ctx::prepare(&args.str_or("config", "small"), args)?;
+    let t = args.usize_or("calib-t", 128);
+    // expansion multiplies tokens; shrink base so budgets stay comparable
+    let calib_n = args.usize_or("calib-n", 8);
+    let m = args.usize_or("expansion", 8);
+    let bits = args.usize_or("bits", 3) as u32;
+    // paper-optimal hyperparameters per strategy (from our fig2/fig3 runs)
+    let variants: Vec<(&str, Strategy)> = vec![
+        ("firstn", Strategy::FirstN(t / 8)),
+        ("firstlastn", Strategy::FirstLastN(t / 8)),
+        ("actnorm", Strategy::ActNorm { r_min: 0.005 }),
+        ("tokensim", Strategy::TokenSim { r_min: 0.005 }),
+        ("attncon", Strategy::AttnCon { r_min: 0.01 }),
+    ];
+    println!("{:<12} {:>16} {:>16}", "strategy", "no expansion", format!("expansion M={m}"));
+    let mut rows = Vec::new();
+    for (name, strat) in &variants {
+        let base = sweep_ppl(&ctx, args, t, calib_n, |s| {
+            let mut o = seeded(QuantOptions::new(Method::Rsq, bits, t), s);
+            o.strategy = *strat;
+            o
+        })?;
+        let expanded = sweep_ppl(&ctx, args, t, calib_n, |s| {
+            let mut o = seeded(QuantOptions::new(Method::Rsq, bits, t), s);
+            o.strategy = *strat;
+            o.expansion = m;
+            o
+        })?;
+        println!("{:<12} {:>16} {:>16}", name, cell(&base, 3), cell(&expanded, 3));
+        rows.push(
+            Json::obj()
+                .set("strategy", *name)
+                .set("base_ppl", base)
+                .set("expanded_ppl", expanded),
+        );
+    }
+    write_record("fig4", Json::obj().set("rows", Json::Arr(rows)))
+}
+
+/// Fig. 5/6: model-size ablation (three sizes of one family).
+pub fn fig5(args: &Args) -> Result<()> {
+    print_header(
+        "Figure 5/6 — model sizes",
+        "Fig. 5/6: RSQ beats QuaRot at every size",
+    );
+    let configs = args.list_or("configs", &["ms1", "ms2", "ms3"]);
+    let calib_n = args.usize_or("calib-n", 16);
+    let bits = args.usize_or("bits", 3) as u32;
+    println!("{:<8} {:<10} {:>16}", "size", "method", "Wiki PPL");
+    let mut rows = Vec::new();
+    for config in &configs {
+        let ctx = Ctx::prepare(config, args)?;
+        let t = *ctx.engine.config().seq_lens.iter().max().unwrap().min(&128);
+        for method in [Method::QuaRot, Method::Rsq] {
+            let ppls = sweep_ppl(&ctx, args, t, calib_n, |s| {
+                seeded(QuantOptions::new(method, bits, t), s)
+            })?;
+            println!("{:<8} {:<10} {:>16}", config, method.name(), cell(&ppls, 3));
+            rows.push(
+                Json::obj()
+                    .set("config", config.as_str())
+                    .set("params", ctx.engine.config().num_params())
+                    .set("method", method.name())
+                    .set("ppl", ppls),
+            );
+        }
+    }
+    write_record("fig5", Json::obj().set("rows", Json::Arr(rows)))
+}
+
+/// Fig. 7: RSQ applied to each module independently.
+pub fn fig7(args: &Args) -> Result<()> {
+    print_header(
+        "Figure 7 — per-module RSQ ablation",
+        "Fig. 7: most modules help; v_proj gains the most",
+    );
+    let ctx = Ctx::prepare(&args.str_or("config", "small"), args)?;
+    let t = args.usize_or("calib-t", 128);
+    let calib_n = args.usize_or("calib-n", 16);
+    let bits = args.usize_or("bits", 3) as u32;
+    println!("{:<10} {:>16}", "scaled", "Wiki PPL");
+    let mut rows = Vec::new();
+    // none (uniform everywhere) + each module alone + all
+    let mut variants: Vec<(String, Option<Vec<Module>>)> =
+        vec![("none".into(), Some(vec![]))];
+    for m in Module::ALL {
+        variants.push((m.name().to_string(), Some(vec![m])));
+    }
+    variants.push(("all".into(), None));
+    for (label, mask) in &variants {
+        let ppls = sweep_ppl(&ctx, args, t, calib_n, |s| {
+            let mut o = seeded(QuantOptions::new(Method::Rsq, bits, t), s);
+            o.module_mask = mask.as_ref().map(|v| v.iter().cloned().collect());
+            o
+        })?;
+        println!("{:<10} {:>16}", label, cell(&ppls, 3));
+        rows.push(Json::obj().set("module", label.as_str()).set("ppl", ppls));
+    }
+    write_record("fig7", Json::obj().set("rows", Json::Arr(rows)))
+}
+
+/// Fig. 8: Wiki PPL at several evaluation context lengths.
+pub fn fig8(args: &Args) -> Result<()> {
+    print_header(
+        "Figure 8 — evaluation context lengths",
+        "Fig. 8: method gaps stay consistent; longer ctx -> lower PPL",
+    );
+    let ctx = Ctx::prepare(&args.str_or("config", "small"), args)?;
+    let calib_t = args.usize_or("calib-t", 128);
+    let calib_n = args.usize_or("calib-n", 16);
+    let bits = args.usize_or("bits", 3) as u32;
+    let ctxs: Vec<usize> = ctx.engine.config().seq_lens.clone();
+    print!("{:<10}", "method");
+    for &c in &ctxs {
+        print!(" {:>16}", format!("ctx={c}"));
+    }
+    println!();
+    let mut rows = Vec::new();
+    // full model
+    print!("{:<10}", "full");
+    let mut full_cells = Vec::new();
+    for &c in &ctxs {
+        let ppl = super::full_model_ppl(&ctx, c)?;
+        print!(" {:>16.3}", ppl);
+        full_cells.push(Json::obj().set("ctx", c).set("ppl", ppl));
+    }
+    println!();
+    rows.push(Json::obj().set("method", "full").set("points", Json::Arr(full_cells)));
+    for method in [Method::Gptq, Method::QuaRot, Method::Rsq] {
+        // quantize once per seed at calib_t, evaluate at each context
+        let mut per_ctx: Vec<Vec<f64>> = vec![Vec::new(); ctxs.len()];
+        for s in run_seeds(args) {
+            let opts = seeded(QuantOptions::new(method, bits, calib_t), s);
+            let calib = ctx.calib(CorpusKind::Wiki, calib_n, calib_t, s);
+            let (q, _) = crate::quant::quantize(&ctx.engine, &ctx.params, &calib, &opts)?;
+            for (i, &c) in ctxs.iter().enumerate() {
+                per_ctx[i].push(crate::eval::perplexity(&ctx.engine, &q, &ctx.eval, c)?);
+            }
+        }
+        print!("{:<10}", method.name());
+        let mut cells = Vec::new();
+        for (i, &c) in ctxs.iter().enumerate() {
+            print!(" {:>16}", cell(&per_ctx[i], 3));
+            cells.push(Json::obj().set("ctx", c).set("ppl", per_ctx[i].clone()));
+        }
+        println!();
+        rows.push(Json::obj().set("method", method.name()).set("points", Json::Arr(cells)));
+    }
+    write_record("fig8", Json::obj().set("rows", Json::Arr(rows)))
+}
+
+/// Fig. 9: SQ (scale without rotation) across r_min, vs RSQ.
+pub fn fig9(args: &Args) -> Result<()> {
+    print_header(
+        "Figure 9 — AttnCon scaling without rotation (SQ)",
+        "Fig. 9: SQ's optimal r_min is much larger than RSQ's",
+    );
+    let ctx = Ctx::prepare(&args.str_or("config", "small"), args)?;
+    let t = args.usize_or("calib-t", 128);
+    let calib_n = args.usize_or("calib-n", 16);
+    let bits = args.usize_or("bits", 3) as u32;
+    let rmins = [0.005f32, 0.01, 0.05, 0.1, 0.3, 0.5];
+    println!("{:<8} {}", "method", rmins.map(|r| format!("{r:>14}")).join(""));
+    let mut rows = Vec::new();
+    for method in [Method::Sq, Method::Rsq] {
+        print!("{:<8}", method.name());
+        let mut pts = Vec::new();
+        for &r in &rmins {
+            let ppls = sweep_ppl(&ctx, args, t, calib_n, |s| {
+                let mut o = seeded(QuantOptions::new(method, bits, t), s);
+                o.strategy = Strategy::AttnCon { r_min: r };
+                o
+            })?;
+            print!("{:>14}", cell(&ppls, 3));
+            pts.push(Json::obj().set("r_min", r as f64).set("ppl", ppls));
+        }
+        println!();
+        rows.push(Json::obj().set("method", method.name()).set("points", Json::Arr(pts)));
+    }
+    write_record("fig9", Json::obj().set("rows", Json::Arr(rows)))
+}

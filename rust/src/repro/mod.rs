@@ -1,0 +1,164 @@
+//! Paper-reproduction drivers: one per table/figure of the RSQ evaluation.
+//!
+//! Every driver prints rows in the paper's layout (mean with std-dev
+//! subscripts across seeds) and writes a machine-readable JSON record to
+//! `results/`. Scales are CPU-budget defaults — override with
+//! `--config/--seeds/--steps/...` (see `rsq help`).
+//!
+//! Paper experiment -> driver map (DESIGN.md §4 has the full index):
+//!   Tab. 1  chunk ablation            -> tables::table1
+//!   Tab. 2  GPTQ/QuaRot/RSQ battery   -> tables::table2
+//!   Tab. 3  long-context benchmarks   -> tables::table3
+//!   Tab. 4  calibration datasets      -> tables::table4
+//!   Tab. 5  bit precisions            -> tables::table5
+//!   Tab. 6  RSQ + VQ                  -> tables::table6
+//!   Tab. 7  LongEval lengths          -> tables::table7
+//!   Fig. 2  First-N sweeps            -> figs::fig2
+//!   Fig. 3  dynamic-strategy sweeps   -> figs::fig3
+//!   Fig. 4  dataset expansion         -> figs::fig4
+//!   Fig. 5/6 model sizes              -> figs::fig5
+//!   Fig. 7  per-module ablation       -> figs::fig7
+//!   Fig. 8  eval context lengths      -> figs::fig8
+//!   Fig. 9  SQ (scale w/o rotate)     -> figs::fig9
+//!   Figs. 10-14 score visualizations  -> scores::dump_scores
+
+pub mod figs;
+pub mod perf;
+pub mod scores;
+pub mod tables;
+
+use anyhow::Result;
+
+use crate::corpus::{CalibSet, CorpusKind};
+use crate::eval::perplexity;
+use crate::model::outliers::{inject_outliers, OutlierSpec};
+use crate::model::ParamSet;
+use crate::quant::{quantize, QuantOptions};
+use crate::runtime::Engine;
+use crate::train::train_or_load;
+use crate::util::{json::Json, Args};
+
+/// Shared experiment context: engine + trained, outlier-injected model +
+/// a held-out eval set.
+pub struct Ctx {
+    pub engine: Engine,
+    pub params: ParamSet,
+    pub eval: CalibSet,
+    pub train_seed: u64,
+}
+
+impl Ctx {
+    /// Default preparation: train (or load the cached checkpoint), inject
+    /// outliers, build a held-out eval set at the largest context length.
+    pub fn prepare(config: &str, args: &Args) -> Result<Ctx> {
+        let engine = Engine::load(config)?;
+        let cfg = engine.config().clone();
+        let steps = args.usize_or("steps", default_steps(config));
+        let train_seed = args.u64_or("train-seed", 7);
+        let (mut params, rep) = train_or_load(&engine, train_seed, steps, args.flag("verbose"))?;
+        if let Some(r) = rep {
+            eprintln!(
+                "[prepare:{config}] trained {steps} steps in {:.1}s (final loss {:.3})",
+                r.wall_seconds, r.final_loss
+            );
+        }
+        inject_outliers(&mut params, outlier_spec(args), train_seed);
+        let tmax = *cfg.seq_lens.iter().max().unwrap();
+        let eval = CalibSet::generate(
+            cfg.vocab,
+            CorpusKind::Wiki,
+            args.usize_or("eval-n", 32),
+            tmax,
+            train_seed,
+            2,
+        );
+        Ok(Ctx { engine, params, eval, train_seed })
+    }
+
+    /// Fresh calibration set for one seeded run (stream decorrelated from
+    /// eval and across seeds — the paper's "three different seeds").
+    pub fn calib(&self, kind: CorpusKind, n: usize, t: usize, run_seed: u64) -> CalibSet {
+        let cfg = self.engine.config();
+        CalibSet::generate(cfg.vocab, kind, n, t, self.train_seed, 100 + run_seed)
+    }
+
+    /// Quantize + Wiki-PPL at context `eval_t` for one seeded run.
+    pub fn quant_ppl(
+        &self,
+        opts: &QuantOptions,
+        calib: &CalibSet,
+        eval_t: usize,
+    ) -> Result<(ParamSet, f64)> {
+        let (q, _) = quantize(&self.engine, &self.params, calib, opts)?;
+        let ppl = perplexity(&self.engine, &q, &self.eval, eval_t)?;
+        Ok((q, ppl))
+    }
+}
+
+pub fn default_steps(config: &str) -> usize {
+    match config {
+        "tiny" => 150,
+        "e2e" => 300,
+        _ => 400,
+    }
+}
+
+pub fn outlier_spec(args: &Args) -> OutlierSpec {
+    OutlierSpec {
+        fraction: args.f32_or("outlier-frac", 0.003),
+        magnitude: args.f32_or("outlier-mag", 6.0),
+    }
+}
+
+/// Per-run seeds for "--seeds N" (paper default: 3).
+pub fn run_seeds(args: &Args) -> Vec<u64> {
+    (0..args.usize_or("seeds", 3) as u64).collect()
+}
+
+/// paper-style cell: "9.046±0.01"
+pub fn cell(vals: &[f64], prec: usize) -> String {
+    crate::util::fmt_pm(vals, prec)
+}
+
+/// Write a driver's JSON record under results/.
+pub fn write_record(name: &str, record: Json) -> Result<()> {
+    std::fs::create_dir_all("results").ok();
+    let path = format!("results/{name}.json");
+    std::fs::write(&path, record.to_string())?;
+    eprintln!("[record] wrote {path}");
+    Ok(())
+}
+
+pub fn print_header(title: &str, paper_ref: &str) {
+    println!("\n=== {title} ===");
+    println!("    (paper: {paper_ref})");
+}
+
+/// seeded variant of QuantOptions: rotation seed varies per run.
+pub fn seeded(mut opts: QuantOptions, run_seed: u64) -> QuantOptions {
+    opts.rot_seed = 0x5157 + run_seed;
+    opts
+}
+
+/// Convenience used by several drivers: method run -> (ppl per seed).
+pub fn ppl_over_seeds(
+    ctx: &Ctx,
+    args: &Args,
+    opts_for_seed: impl Fn(u64) -> QuantOptions,
+    calib_for_seed: impl Fn(u64) -> CalibSet,
+    eval_t: usize,
+) -> Result<Vec<f64>> {
+    let mut ppls = Vec::new();
+    for s in run_seeds(args) {
+        let opts = opts_for_seed(s);
+        let calib = calib_for_seed(s);
+        let (_, ppl) = ctx.quant_ppl(&opts, &calib, eval_t)?;
+        ppls.push(ppl);
+    }
+    Ok(ppls)
+}
+
+/// Full-model rows used by several tables.
+pub fn full_model_ppl(ctx: &Ctx, eval_t: usize) -> Result<f64> {
+    perplexity(&ctx.engine, &ctx.params, &ctx.eval, eval_t)
+}

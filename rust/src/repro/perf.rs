@@ -1,0 +1,114 @@
+//! Performance profiling driver (`rsq perf`) — the L3 side of the perf
+//! deliverable. Times every stage of the RSQ pipeline, prints the engine's
+//! per-module breakdown, and reports end-to-end throughput. Results feed
+//! EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::corpus::CorpusKind;
+use crate::quant::{quantize, Method, QuantOptions};
+use crate::util::{json::Json, Args, Bench};
+
+use super::{print_header, write_record, Ctx};
+
+pub fn perf(args: &Args) -> Result<()> {
+    print_header("Performance profile", "EXPERIMENTS.md §Perf");
+    let config = args.str_or("config", "small");
+    let ctx = Ctx::prepare(&config, args)?;
+    let cfg = ctx.engine.config().clone();
+    let t = args.usize_or("calib-t", 128);
+    let calib_n = args.usize_or("calib-n", 16);
+    let calib = ctx.calib(CorpusKind::Wiki, calib_n, t, 0);
+    let tokens = calib.total_tokens();
+
+    // warm the compile cache so timings below are pure execution
+    let opts = QuantOptions::new(Method::Rsq, 3, t);
+    let (_, first) = quantize(&ctx.engine, &ctx.params, &calib, &opts)?;
+    println!(
+        "cold end-to-end RSQ quantization: {:.2}s ({} calib tokens, {} layers)",
+        first.wall_seconds, tokens, cfg.layers
+    );
+
+    let mut results = Vec::new();
+    for method in [Method::Rtn, Method::Gptq, Method::QuaRot, Method::Rsq, Method::RsqVq] {
+        let o = QuantOptions::new(method, if method.vector_quant() { 2 } else { 3 }, t);
+        let t0 = Instant::now();
+        let iters = args.usize_or("iters", 3);
+        for _ in 0..iters {
+            quantize(&ctx.engine, &ctx.params, &calib, &o)?;
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "{:<10} warm quantization: {:>8.3}s  ({:.1} ktok/s calibration throughput)",
+            method.name(),
+            per,
+            tokens as f64 / per / 1e3
+        );
+        results.push(
+            Json::obj()
+                .set("method", method.name())
+                .set("seconds", per)
+                .set("ktok_per_s", tokens as f64 / per / 1e3),
+        );
+    }
+
+    // per-stage micro benches through the engine
+    println!("\n--- per-module timings (engine) ---");
+    let p_lit: Vec<xla::Literal> = ctx
+        .params
+        .tensors
+        .iter()
+        .map(crate::runtime::tensor_literal)
+        .collect::<Result<_>>()?;
+    let batch: Vec<Vec<i32>> = calib.samples[..cfg.batch].to_vec();
+    let tl = crate::runtime::tokens_literal(&batch, t)?;
+    let z = ctx
+        .engine
+        .exec(&format!("embed_t{t}"), &[tl.clone(), p_lit[0].clone(), p_lit[1].clone()])?
+        .into_iter()
+        .next()
+        .unwrap();
+
+    let mut layer_ins = vec![z.clone()];
+    for k in 0..9 {
+        layer_ins.push(p_lit[2 + k].clone());
+    }
+    let flops_layer = 2.0 * (cfg.batch * t) as f64
+        * (4.0 * (cfg.d * cfg.d) as f64 + 3.0 * (cfg.d * cfg.ff) as f64);
+    let mean_s = Bench::new(&format!("layer_fwd_t{t} (B={} d={})", cfg.batch, cfg.d))
+        .samples(args.usize_or("bench-samples", 10))
+        .iter(|| ctx.engine.exec(&format!("layer_fwd_t{t}"), &layer_ins).unwrap())
+        .report();
+    println!("    layer_fwd ~ {:.2} GFLOP/s", flops_layer / mean_s / 1e9);
+
+    let outs = ctx.engine.exec(&format!("layer_fwd_t{t}"), &layer_ins)?;
+    let r = crate::runtime::tensor_literal(&crate::tensor::Tensor::ones(&[cfg.batch, t]))?;
+    let hess_ins = vec![outs[1].clone(), r];
+    let hbytes = (cfg.batch * t * cfg.d * 4 + cfg.d * cfg.d * 4) as u64;
+    Bench::new(&format!("hess_d_t{t} (pallas hessian)"))
+        .samples(args.usize_or("bench-samples", 10))
+        .throughput_bytes(hbytes)
+        .iter(|| ctx.engine.exec(&format!("hess_d_t{t}"), &hess_ins).unwrap())
+        .report();
+
+    let w = crate::tensor::Tensor::randn(
+        &[cfg.d, cfg.d], 0.1, &mut crate::util::Pcg::new(0));
+    let h = crate::runtime::literal_tensor(
+        &ctx.engine.exec(&format!("hess_d_t{t}"), &hess_ins)?[0])?;
+    let gptq_ins = vec![
+        crate::runtime::tensor_literal(&w)?,
+        crate::runtime::tensor_literal(&h)?,
+        crate::runtime::scalar_literal(7.0),
+        crate::runtime::scalar_literal(0.01),
+    ];
+    Bench::new(&format!("gptq_{0}x{0} (column solve)", cfg.d))
+        .samples(args.usize_or("bench-samples", 10))
+        .throughput_elements((cfg.d * cfg.d) as u64)
+        .iter(|| ctx.engine.exec(&format!("gptq_{0}x{0}", cfg.d), &gptq_ins).unwrap())
+        .report();
+
+    ctx.engine.print_stats();
+    write_record("perf", Json::obj().set("methods", Json::Arr(results)))
+}

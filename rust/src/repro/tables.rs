@@ -1,0 +1,371 @@
+//! Table drivers (paper Tabs. 1-7).
+
+use anyhow::Result;
+
+use crate::corpus::CorpusKind;
+use crate::eval::tasks::mean_accuracy;
+use crate::eval::{longctx_suite, probe_suite};
+use crate::quant::{Method, QuantOptions, Strategy};
+use crate::util::{json::Json, mean, Args};
+
+use super::{
+    cell, full_model_ppl, print_header, run_seeds, seeded, write_record, Ctx,
+};
+
+fn probe_avg(ctx: &Ctx, params: &crate::model::ParamSet, t: usize, n: usize) -> Result<f64> {
+    Ok(mean_accuracy(&probe_suite(&ctx.engine, params, t, 3, n)?))
+}
+
+/// Tab. 1: quantize with the reconstruction loss restricted to one quarter
+/// of the token positions at a time (the paper's motivating observation).
+pub fn table1(args: &Args) -> Result<()> {
+    print_header(
+        "Table 1 — token-subset ablation (all vs. chunks 1-4)",
+        "Tab. 1: 1st chunk beats all-tokens; later chunks are worse",
+    );
+    let config = args.str_or("config", "small");
+    let ctx = Ctx::prepare(&config, args)?;
+    let t = args.usize_or("calib-t", 128);
+    let calib_n = args.usize_or("calib-n", 16);
+    let probe_n = args.usize_or("probe-n", 32);
+    let bits = args.usize_or("bits", 3) as u32;
+
+    let full = full_model_ppl(&ctx, t)?;
+    println!("{:<14} {:>14} {:>14}", "Used tokens", "Wiki PPL", "Avg Acc (%)");
+    println!("{:<14} {:>14.3} {:>14}", "Full model", full, "-");
+
+    let mut rows = Vec::new();
+    let variants: Vec<(String, Strategy)> = std::iter::once(("All".to_string(), Strategy::Uniform))
+        .chain((1..=4).map(|k| (format!("chunk {k}/4"), Strategy::Chunk { index: k, of: 4 })))
+        .collect();
+    for (label, strat) in &variants {
+        let mut ppls = Vec::new();
+        let mut accs = Vec::new();
+        for s in run_seeds(args) {
+            let mut opts = seeded(QuantOptions::new(Method::Rsq, bits, t), s);
+            opts.strategy = *strat;
+            let calib = ctx.calib(CorpusKind::Wiki, calib_n, t, s);
+            let (q, ppl) = ctx.quant_ppl(&opts, &calib, t)?;
+            ppls.push(ppl);
+            accs.push(100.0 * probe_avg(&ctx, &q, t, probe_n)?);
+        }
+        println!("{:<14} {:>14} {:>14}", label, cell(&ppls, 3), cell(&accs, 1));
+        rows.push(
+            Json::obj()
+                .set("label", label.as_str())
+                .set("ppl", ppls.clone())
+                .set("acc", accs.clone()),
+        );
+    }
+    write_record(
+        "table1",
+        Json::obj().set("config", config).set("full_ppl", full).set("rows", rows),
+    )
+}
+
+/// Tab. 2: the main battery — GPTQ vs QuaRot vs RSQ on three model
+/// families, Wiki PPL + ten downstream probes.
+pub fn table2(args: &Args) -> Result<()> {
+    print_header(
+        "Table 2 — main comparison on three model families",
+        "Tab. 2: RSQ beats QuaRot beats GPTQ on PPL and avg accuracy",
+    );
+    let configs = args.list_or("configs", &["s1", "s2", "s3"]);
+    let bits = args.usize_or("bits", 3) as u32;
+    let probe_n = args.usize_or("probe-n", 32);
+    let calib_n = args.usize_or("calib-n", 16);
+    let mut records = Vec::new();
+    for config in &configs {
+        let ctx = Ctx::prepare(config, args)?;
+        let t = *ctx.engine.config().seq_lens.iter().max().unwrap().min(&128);
+        println!("\n--- model family {config} (d={}, L={}) ---",
+            ctx.engine.config().d, ctx.engine.config().layers);
+        // full model row
+        let full_ppl = full_model_ppl(&ctx, t)?;
+        let full_probes = probe_suite(&ctx.engine, &ctx.params, t, 3, probe_n)?;
+        let names: Vec<&str> = full_probes.iter().map(|p| p.name).collect();
+        println!("{:<8} {:>10} {}", "Method", "WikiPPL", names.join(" "));
+        let accs: Vec<String> =
+            full_probes.iter().map(|p| format!("{:.1}", 100.0 * p.accuracy)).collect();
+        println!(
+            "{:<8} {:>10.3} {}  | avg {:.1}",
+            "Full", full_ppl, accs.join("        "),
+            100.0 * mean_accuracy(&full_probes)
+        );
+        for method in [Method::Gptq, Method::QuaRot, Method::Rsq] {
+            let mut ppls = Vec::new();
+            let mut per_task: Vec<Vec<f64>> = vec![Vec::new(); 10];
+            let mut avgs = Vec::new();
+            for s in run_seeds(args) {
+                let opts = seeded(QuantOptions::new(method, bits, t), s);
+                let calib = ctx.calib(CorpusKind::Wiki, calib_n, t, s);
+                let (q, ppl) = ctx.quant_ppl(&opts, &calib, t)?;
+                ppls.push(ppl);
+                let probes = probe_suite(&ctx.engine, &q, t, 3, probe_n)?;
+                for (i, p) in probes.iter().enumerate() {
+                    per_task[i].push(100.0 * p.accuracy);
+                }
+                avgs.push(100.0 * mean_accuracy(&probes));
+            }
+            let task_cells: Vec<String> =
+                per_task.iter().map(|v| cell(v, 1)).collect();
+            println!(
+                "{:<8} {:>10} {}  | avg {}",
+                method.name(), cell(&ppls, 3), task_cells.join(" "), cell(&avgs, 1)
+            );
+            records.push(
+                Json::obj()
+                    .set("config", config.as_str())
+                    .set("method", method.name())
+                    .set("ppl", ppls)
+                    .set("avg_acc", avgs)
+                    .set("tasks", Json::Arr(names.iter().map(|&n| Json::from(n)).collect()))
+                    .set(
+                        "task_acc",
+                        Json::Arr(per_task.iter().map(|v| Json::from(v.clone())).collect()),
+                    ),
+            );
+        }
+    }
+    write_record("table2", Json::obj().set("rows", Json::Arr(records)))
+}
+
+/// Tab. 3: long-context probe battery under three calibration
+/// (samples x seq-len) configurations with a fixed token budget.
+pub fn table3(args: &Args) -> Result<()> {
+    print_header(
+        "Table 3 — long-context tasks, three calibration configurations",
+        "Tab. 3: RSQ beats QuaRot on nearly all long-context benchmarks",
+    );
+    let config = args.str_or("config", "small");
+    let ctx = Ctx::prepare(&config, args)?;
+    let eval_t = *ctx.engine.config().seq_lens.iter().max().unwrap();
+    let lc_n = args.usize_or("lc-n", 24);
+    let bits = args.usize_or("bits", 3) as u32;
+    // fixed token budget, like the paper's 256x4096 / 512x2048 / 1024x1024
+    let calib_cfgs = [(8usize, 256usize), (16, 128), (32, 64)];
+
+    // full model row
+    let full = longctx_suite(&ctx.engine, &ctx.params, eval_t, 3, lc_n)?;
+    let names: Vec<String> = full.iter().map(|r| r.name.clone()).collect();
+    println!("{:<10} {}", "Method", names.join(" "));
+    let f: Vec<String> = full.iter().map(|r| format!("{:.1}", 100.0 * r.score)).collect();
+    println!("{:<10} {}", "Full", f.join("  "));
+
+    let mut records = Vec::new();
+    for (n, t) in calib_cfgs {
+        if !ctx.engine.config().seq_lens.contains(&t) {
+            continue;
+        }
+        println!("--- calibration: {n} samples x {t} tokens ---");
+        for method in [Method::QuaRot, Method::Rsq] {
+            let mut per_task: Vec<Vec<f64>> = vec![Vec::new(); names.len()];
+            let mut avgs = Vec::new();
+            for s in run_seeds(args) {
+                let opts = seeded(QuantOptions::new(method, bits, t), s);
+                let calib = ctx.calib(CorpusKind::Wiki, n, t, s);
+                let (q, _) = crate::quant::quantize(&ctx.engine, &ctx.params, &calib, &opts)?;
+                let res = longctx_suite(&ctx.engine, &q, eval_t, 3, lc_n)?;
+                for (i, r) in res.iter().enumerate() {
+                    per_task[i].push(100.0 * r.score);
+                }
+                avgs.push(100.0 * mean(&res.iter().map(|r| r.score).collect::<Vec<_>>()));
+            }
+            let cells: Vec<String> = per_task.iter().map(|v| cell(v, 1)).collect();
+            println!("{:<10} {}  | avg {}", method.name(), cells.join("  "), cell(&avgs, 1));
+            records.push(
+                Json::obj()
+                    .set("calib_n", n)
+                    .set("calib_t", t)
+                    .set("method", method.name())
+                    .set("tasks", Json::Arr(names.iter().map(|n| Json::from(n.as_str())).collect()))
+                    .set("scores", Json::Arr(per_task.iter().map(|v| Json::from(v.clone())).collect()))
+                    .set("avg", avgs),
+            );
+        }
+    }
+    write_record("table3", Json::obj().set("rows", Json::Arr(records)))
+}
+
+/// Tab. 4: calibration-corpus ablation (Wiki / RedPajama / C4 / PTB).
+pub fn table4(args: &Args) -> Result<()> {
+    print_header(
+        "Table 4 — calibration dataset ablation",
+        "Tab. 4: RSQ beats QuaRot for every calibration corpus",
+    );
+    let config = args.str_or("config", "small");
+    let ctx = Ctx::prepare(&config, args)?;
+    let t = args.usize_or("calib-t", 128);
+    let calib_n = args.usize_or("calib-n", 16);
+    let probe_n = args.usize_or("probe-n", 32);
+    let bits = args.usize_or("bits", 3) as u32;
+    println!("{:<10} {:<10} {:>14} {:>14}", "Corpus", "Method", "Wiki PPL", "Avg Acc (%)");
+    let mut records = Vec::new();
+    for kind in CorpusKind::ALL {
+        for method in [Method::QuaRot, Method::Rsq] {
+            let mut ppls = Vec::new();
+            let mut accs = Vec::new();
+            for s in run_seeds(args) {
+                let opts = seeded(QuantOptions::new(method, bits, t), s);
+                let calib = ctx.calib(kind, calib_n, t, s);
+                let (q, ppl) = ctx.quant_ppl(&opts, &calib, t)?;
+                ppls.push(ppl);
+                accs.push(100.0 * probe_avg(&ctx, &q, t, probe_n)?);
+            }
+            println!(
+                "{:<10} {:<10} {:>14} {:>14}",
+                kind.name(), method.name(), cell(&ppls, 3), cell(&accs, 1)
+            );
+            records.push(
+                Json::obj()
+                    .set("corpus", kind.name())
+                    .set("method", method.name())
+                    .set("ppl", ppls)
+                    .set("acc", accs),
+            );
+        }
+    }
+    write_record("table4", Json::obj().set("rows", Json::Arr(records)))
+}
+
+/// Tab. 5: bit-precision ablation (4 / 3 / 2 bits).
+pub fn table5(args: &Args) -> Result<()> {
+    print_header(
+        "Table 5 — bit precision ablation",
+        "Tab. 5: RSQ's margin over QuaRot grows as bits shrink",
+    );
+    let config = args.str_or("config", "small");
+    let ctx = Ctx::prepare(&config, args)?;
+    let t = args.usize_or("calib-t", 128);
+    let calib_n = args.usize_or("calib-n", 16);
+    let probe_n = args.usize_or("probe-n", 32);
+    println!("{:<6} {:<10} {:>14} {:>14}", "Bits", "Method", "Wiki PPL", "Avg Acc (%)");
+    let mut records = Vec::new();
+    for bits in [4u32, 3, 2] {
+        for method in [Method::QuaRot, Method::Rsq] {
+            let mut ppls = Vec::new();
+            let mut accs = Vec::new();
+            for s in run_seeds(args) {
+                let opts = seeded(QuantOptions::new(method, bits, t), s);
+                let calib = ctx.calib(CorpusKind::Wiki, calib_n, t, s);
+                let (q, ppl) = ctx.quant_ppl(&opts, &calib, t)?;
+                ppls.push(ppl);
+                accs.push(100.0 * probe_avg(&ctx, &q, t, probe_n)?);
+            }
+            println!(
+                "{:<6} {:<10} {:>14} {:>14}",
+                bits, method.name(), cell(&ppls, 3), cell(&accs, 1)
+            );
+            records.push(
+                Json::obj()
+                    .set("bits", bits as usize)
+                    .set("method", method.name())
+                    .set("ppl", ppls)
+                    .set("acc", accs),
+            );
+        }
+    }
+    write_record("table5", Json::obj().set("rows", Json::Arr(records)))
+}
+
+/// Tab. 6: vector quantization (E8 codebook + LDLQ) for both methods.
+pub fn table6(args: &Args) -> Result<()> {
+    print_header(
+        "Table 6 — RSQ + vector quantization (E8/LDLQ)",
+        "Tab. 6: VQ improves both methods at 2-bit; RSQ+VQ is best overall",
+    );
+    let config = args.str_or("config", "small");
+    let ctx = Ctx::prepare(&config, args)?;
+    let t = args.usize_or("calib-t", 128);
+    let calib_n = args.usize_or("calib-n", 16);
+    let probe_n = args.usize_or("probe-n", 32);
+    println!("{:<12} {:>14} {:>14}", "Method", "Wiki PPL", "Avg Acc (%)");
+    let mut records = Vec::new();
+    for method in [Method::QuaRot, Method::Rsq, Method::QuaRotVq, Method::RsqVq] {
+        let bits = 2; // scalar baselines at 2-bit; VQ is 2-bit-comparable
+        let mut ppls = Vec::new();
+        let mut accs = Vec::new();
+        for s in run_seeds(args) {
+            let opts = seeded(QuantOptions::new(method, bits, t), s);
+            let calib = ctx.calib(CorpusKind::Wiki, calib_n, t, s);
+            let (q, ppl) = ctx.quant_ppl(&opts, &calib, t)?;
+            ppls.push(ppl);
+            accs.push(100.0 * probe_avg(&ctx, &q, t, probe_n)?);
+        }
+        println!("{:<12} {:>14} {:>14}", method.name(), cell(&ppls, 2), cell(&accs, 1));
+        records.push(
+            Json::obj()
+                .set("method", method.name())
+                .set("ppl", ppls)
+                .set("acc", accs),
+        );
+    }
+    write_record("table6", Json::obj().set("rows", Json::Arr(records)))
+}
+
+/// Tab. 7: LongEval (KV retrieval) at three lengths, three calib configs.
+pub fn table7(args: &Args) -> Result<()> {
+    print_header(
+        "Table 7 — LongEval (KV retrieval) lengths",
+        "Tab. 7: RSQ beats QuaRot; accuracy drops as length grows",
+    );
+    let config = args.str_or("config", "small");
+    let ctx = Ctx::prepare(&config, args)?;
+    let eval_t = *ctx.engine.config().seq_lens.iter().max().unwrap();
+    let lc_n = args.usize_or("lc-n", 24);
+    let bits = args.usize_or("bits", 3) as u32;
+    let levels = [eval_t / 8, eval_t / 4, (eval_t - 4) / 2]; // pairs per prompt
+    let calib_cfgs = [(8usize, 256usize), (16, 128), (32, 64)];
+
+    let mut full_cells = Vec::new();
+    for &l in &levels {
+        let r = crate::eval::longctx::kv_retrieval(
+            &ctx.engine, &ctx.params, eval_t, l, 3, lc_n)?;
+        full_cells.push(format!("{:.1}", 100.0 * r.score));
+    }
+    println!("{:<10} L={:?}", "Full", levels);
+    println!("{:<10} {}", "", full_cells.join("  "));
+
+    let mut records = Vec::new();
+    for (n, t) in calib_cfgs {
+        if !ctx.engine.config().seq_lens.contains(&t) {
+            continue;
+        }
+        println!("--- calibration: {n} x {t} ---");
+        for method in [Method::QuaRot, Method::Rsq] {
+            let mut per_level: Vec<Vec<f64>> = vec![Vec::new(); levels.len()];
+            for s in run_seeds(args) {
+                let opts = seeded(QuantOptions::new(method, bits, t), s);
+                let calib = ctx.calib(CorpusKind::Wiki, n, t, s);
+                let (q, _) = crate::quant::quantize(&ctx.engine, &ctx.params, &calib, &opts)?;
+                for (i, &l) in levels.iter().enumerate() {
+                    let r = crate::eval::longctx::kv_retrieval(
+                        &ctx.engine, &q, eval_t, l, 3, lc_n)?;
+                    per_level[i].push(100.0 * r.score);
+                }
+            }
+            let cells: Vec<String> = per_level.iter().map(|v| cell(v, 1)).collect();
+            let avg: Vec<f64> = (0..run_seeds(args).len())
+                .map(|si| {
+                    per_level.iter().map(|v| v[si]).sum::<f64>() / levels.len() as f64
+                })
+                .collect();
+            println!("{:<10} {}  | avg {}", method.name(), cells.join("  "), cell(&avg, 1));
+            records.push(
+                Json::obj()
+                    .set("calib_n", n)
+                    .set("calib_t", t)
+                    .set("method", method.name())
+                    .set(
+                        "levels",
+                        Json::Arr(levels.iter().map(|&l| Json::from(l)).collect()),
+                    )
+                    .set(
+                        "scores",
+                        Json::Arr(per_level.iter().map(|v| Json::from(v.clone())).collect()),
+                    ),
+            );
+        }
+    }
+    write_record("table7", Json::obj().set("rows", Json::Arr(records)))
+}

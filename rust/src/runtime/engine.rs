@@ -1,0 +1,136 @@
+//! The PJRT execution engine: compile-on-first-use cache over the AOT
+//! artifact set of one model config.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO text ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. Every module is compiled at most once per
+//! process; executions validate input arity/shape against the manifest
+//! before hitting PJRT so shape bugs fail with a readable error.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// cumulative (calls, seconds) per module — feeds the perf report
+    stats: RefCell<HashMap<String, (u64, f64)>>,
+}
+
+impl Engine {
+    /// Load the artifact set for `config` (e.g. "tiny") from
+    /// `artifacts/<config>/`, honoring RSQ_ARTIFACTS.
+    pub fn load(config: &str) -> Result<Engine> {
+        let dir = crate::artifacts_dir(config);
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn config(&self) -> &crate::model::ModelConfig {
+        &self.manifest.config
+    }
+
+    /// Compile (or fetch cached) one module.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.module(name)?;
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile module {name}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        let dt = t0.elapsed().as_secs_f64();
+        if std::env::var_os("RSQ_VERBOSE").is_some() {
+            eprintln!("[engine] compiled {name} in {dt:.2}s");
+        }
+        Ok(exe)
+    }
+
+    /// Execute a module with literal inputs; returns the decomposed output
+    /// tuple (modules are lowered with return_tuple=True).
+    pub fn exec(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.exec_ref(name, &refs)
+    }
+
+    /// Borrowed-input variant of [`Engine::exec`]: avoids the deep C-side
+    /// `Literal::clone` per argument that the owned API forces on callers
+    /// reusing inputs across calls (the pipeline's layer params and hidden
+    /// states). ~1.5-2x end-to-end quantization speedup — EXPERIMENTS §Perf.
+    pub fn exec_ref(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self.manifest.module(name)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "module {name}: got {} inputs, manifest expects {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        for (i, (lit, ispec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            if dims != ispec.shape {
+                bail!("module {name} input {i}: shape {dims:?}, expected {:?}", ispec.shape);
+            }
+        }
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let result = exe.execute::<&xla::Literal>(inputs)?;
+        let mut tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.decompose_tuple()?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut stats = self.stats.borrow_mut();
+            let e = stats.entry(name.to_string()).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += dt;
+        }
+        if outs.len() != spec.nout {
+            bail!("module {name}: {} outputs, manifest expects {}", outs.len(), spec.nout);
+        }
+        Ok(outs)
+    }
+
+    /// Per-module cumulative call counts/time (perf report; EXPERIMENTS §Perf).
+    pub fn stats(&self) -> Vec<(String, u64, f64)> {
+        let mut v: Vec<(String, u64, f64)> = self
+            .stats
+            .borrow()
+            .iter()
+            .map(|(k, &(n, s))| (k.clone(), n, s))
+            .collect();
+        v.sort_by(|a, b| b.2.total_cmp(&a.2));
+        v
+    }
+
+    pub fn print_stats(&self) {
+        println!("--- engine module stats (by total time) ---");
+        for (name, n, s) in self.stats() {
+            println!("{name:<24} calls={n:<6} total={s:>8.3}s mean={:>8.4}s", s / n as f64);
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Parser for the AOT manifest (written by python/compile/aot.py).
+//!
+//! Line-oriented `key=value` format:
+//!   config=tiny / d=64 / layers=2 / ... / seq_lens=32,64
+//!   param=<name>|shape=<d0>x<d1>
+//!   module=<name>|file=<f>|in=<dtype>:<shape>;...|nout=<n>|note=<text>
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ModelConfig;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InputSpec {
+    pub dtype: String, // "float32" | "int32"
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+    pub nout: usize,
+    pub note: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub params: Vec<(String, Vec<usize>)>,
+    pub modules: BTreeMap<String, ModuleSpec>,
+}
+
+fn parse_shape(s: &str) -> Vec<usize> {
+    if s == "scalar" {
+        return vec![];
+    }
+    s.split('x').map(|d| d.parse().expect("bad shape dim")).collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut kv = BTreeMap::new();
+        let mut params = Vec::new();
+        let mut modules = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("param=") {
+                let mut name = String::new();
+                let mut shape = Vec::new();
+                for part in rest.split('|') {
+                    if let Some(v) = part.strip_prefix("shape=") {
+                        shape = parse_shape(v);
+                    } else {
+                        name = part.to_string();
+                    }
+                }
+                params.push((name, shape));
+            } else if let Some(rest) = line.strip_prefix("module=") {
+                let mut parts = rest.split('|');
+                let name = parts.next().unwrap_or_default().to_string();
+                let mut spec = ModuleSpec {
+                    name: name.clone(),
+                    file: String::new(),
+                    inputs: Vec::new(),
+                    nout: 0,
+                    note: String::new(),
+                };
+                for part in parts {
+                    if let Some(v) = part.strip_prefix("file=") {
+                        spec.file = v.to_string();
+                    } else if let Some(v) = part.strip_prefix("in=") {
+                        spec.inputs = v
+                            .split(';')
+                            .map(|one| {
+                                let (dt, sh) = one.split_once(':').unwrap_or(("float32", one));
+                                InputSpec { dtype: dt.to_string(), shape: parse_shape(sh) }
+                            })
+                            .collect();
+                    } else if let Some(v) = part.strip_prefix("nout=") {
+                        spec.nout = v.parse().context("bad nout")?;
+                    } else if let Some(v) = part.strip_prefix("note=") {
+                        spec.note = v.to_string();
+                    }
+                }
+                modules.insert(name, spec);
+            } else if let Some((k, v)) = line.split_once('=') {
+                kv.insert(k.to_string(), v.to_string());
+            }
+        }
+
+        let get = |k: &str| -> Result<String> {
+            kv.get(k).cloned().with_context(|| format!("manifest missing key {k}"))
+        };
+        let geti = |k: &str| -> Result<usize> {
+            get(k)?.parse().with_context(|| format!("manifest key {k} not an int"))
+        };
+        let config = ModelConfig {
+            name: get("config")?,
+            d: geti("d")?,
+            layers: geti("layers")?,
+            heads: geti("heads")?,
+            ff: geti("ff")?,
+            vocab: geti("vocab")?,
+            max_seq: geti("max_seq")?,
+            batch: geti("batch")?,
+            seq_lens: get("seq_lens")?
+                .split(',')
+                .map(|t| t.parse().context("bad seq_len"))
+                .collect::<Result<_>>()?,
+            ldlq_k: geti("ldlq_k")?,
+            ldlq_g: geti("ldlq_g")?,
+        };
+        let m = Manifest { config, params, modules };
+        m.check_params()?;
+        Ok(m)
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    /// Cross-validate the python-side parameter list against the rust
+    /// ModelConfig contract — a drift here corrupts every execution.
+    pub fn check_params(&self) -> Result<()> {
+        let names = self.config.param_names();
+        if names.len() != self.params.len() {
+            bail!(
+                "param count mismatch: manifest {} vs config {}",
+                self.params.len(),
+                names.len()
+            );
+        }
+        for (want, (got, shape)) in names.iter().zip(&self.params) {
+            if want != got {
+                bail!("param order mismatch: expected {want}, manifest has {got}");
+            }
+            let want_shape = self.config.param_shape(want);
+            if &want_shape != shape {
+                bail!("param {want}: shape {shape:?} vs config {want_shape:?}");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn module(&self, name: &str) -> Result<&ModuleSpec> {
+        self.modules.get(name).with_context(|| {
+            format!(
+                "module {name:?} not in manifest for config {} (have: {:?})",
+                self.config.name,
+                self.modules.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+config=tiny
+d=64
+layers=1
+heads=2
+ff=128
+vocab=256
+max_seq=64
+batch=4
+seq_lens=32,64
+ldlq_k=1024
+ldlq_g=8
+param=emb|shape=256x64
+param=pos|shape=64x64
+param=l0.g1|shape=64
+param=l0.wq|shape=64x64
+param=l0.wk|shape=64x64
+param=l0.wv|shape=64x64
+param=l0.wo|shape=64x64
+param=l0.g2|shape=64
+param=l0.wup|shape=128x64
+param=l0.wgate|shape=128x64
+param=l0.wdown|shape=64x128
+param=gf|shape=64
+param=head|shape=256x64
+module=embed_t32|file=embed_t32.hlo.txt|in=int32:4x32;float32:256x64;float32:64x64|nout=1|note=tokens->Z0
+module=gptq_64x64|file=gptq_64x64.hlo.txt|in=float32:64x64;float32:64x64;float32:scalar;float32:scalar|nout=2|note=
+";
+
+    #[test]
+    fn parses_config_and_params() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config.d, 64);
+        assert_eq!(m.config.seq_lens, vec![32, 64]);
+        assert_eq!(m.params.len(), 13);
+        assert_eq!(m.params[0].0, "emb");
+    }
+
+    #[test]
+    fn parses_modules() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let e = m.module("embed_t32").unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[0].dtype, "int32");
+        assert_eq!(e.inputs[0].shape, vec![4, 32]);
+        let g = m.module("gptq_64x64").unwrap();
+        assert_eq!(g.nout, 2);
+        assert_eq!(g.inputs[2].shape, Vec::<usize>::new());
+        assert!(m.module("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_param_drift() {
+        let broken = SAMPLE.replace("param=l0.wq", "param=l0.xx");
+        assert!(Manifest::parse(&broken).is_err());
+        let broken2 = SAMPLE.replace("param=gf|shape=64\n", "");
+        assert!(Manifest::parse(&broken2).is_err());
+    }
+
+    #[test]
+    fn real_artifacts_parse_if_present() {
+        let dir = crate::artifacts_dir("tiny");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.config.name, "tiny");
+            assert!(m.modules.contains_key("train_step"));
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute many.
+//!
+//! This is the only boundary between the rust coordinator and the XLA
+//! compute stack. Python is never involved: `make artifacts` has already
+//! lowered every module; here we parse the manifest, compile each module on
+//! the PJRT CPU client (cached), and expose typed execute helpers.
+//!
+//! Threading note: the `xla` crate's `PjRtClient` is `Rc`-based (not Send),
+//! so all PJRT calls happen on the coordinator thread; pipeline worker
+//! threads (quant::pipeline) handle host-side stages only. On this 1-core
+//! box that costs nothing; DESIGN.md §Substitutions records it.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use manifest::{Manifest, ModuleSpec};
+
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// f32 tensor -> XLA literal with the same shape.
+pub fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+/// i32 token matrix [rows, cols] -> XLA literal.
+pub fn tokens_literal(tokens: &[Vec<i32>], cols: usize) -> Result<xla::Literal> {
+    let mut flat = Vec::with_capacity(tokens.len() * cols);
+    for row in tokens {
+        assert_eq!(row.len(), cols, "ragged token batch");
+        flat.extend_from_slice(row);
+    }
+    Ok(xla::Literal::vec1(&flat).reshape(&[tokens.len() as i64, cols as i64])?)
+}
+
+/// f32 scalar literal.
+pub fn scalar_literal(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// XLA literal -> f32 tensor (shape recovered from the literal).
+pub fn literal_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// XLA literal -> flat f32 vec.
+pub fn literal_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// XLA literal -> f32 scalar.
+pub fn literal_scalar(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

@@ -1,0 +1,114 @@
+//! Randomized Hadamard orthogonal matrices (paper Sec. 3.2 / 4.2 "Rotate").
+//!
+//! Q = (1/√d) · H_d · diag(s), with H_d the Sylvester-construction Hadamard
+//! matrix and s a random ±1 vector. QᵀQ = diag(s)·HᵀH·diag(s)/d = I because
+//! HᵀH = d·I. Multiplying weights by Q "gaussianizes" rows (QuIP's
+//! incoherence), which is what lets low-bit grids fit outlier-ridden
+//! weights. `d` must be a power of two (all configs guarantee this).
+
+use super::Tensor;
+use crate::util::Pcg;
+
+/// Plain (unnormalized) Sylvester Hadamard matrix of size d (power of 2).
+pub fn sylvester(d: usize) -> Tensor {
+    assert!(d.is_power_of_two(), "Hadamard size must be a power of two, got {d}");
+    let mut h = Tensor::from_vec(&[1, 1], vec![1.0]);
+    let mut n = 1;
+    while n < d {
+        let mut next = Tensor::zeros(&[2 * n, 2 * n]);
+        for i in 0..n {
+            for j in 0..n {
+                let v = h.at2(i, j);
+                next.set2(i, j, v);
+                next.set2(i, j + n, v);
+                next.set2(i + n, j, v);
+                next.set2(i + n, j + n, -v);
+            }
+        }
+        h = next;
+        n *= 2;
+    }
+    h
+}
+
+/// Randomized Hadamard rotation Q = H_d · diag(s) / √d (orthogonal).
+pub fn randomized_hadamard(d: usize, rng: &mut Pcg) -> Tensor {
+    let mut h = sylvester(d);
+    let signs: Vec<f32> = (0..d).map(|_| rng.sign()).collect();
+    let inv_sqrt = 1.0 / (d as f32).sqrt();
+    for i in 0..d {
+        for j in 0..d {
+            let v = h.at2(i, j) * signs[j] * inv_sqrt;
+            h.set2(i, j, v);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sylvester_entries_pm_one() {
+        let h = sylvester(8);
+        assert!(h.data.iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn sylvester_rows_orthogonal() {
+        let h = sylvester(16);
+        for i in 0..16 {
+            for j in 0..16 {
+                let dot: f32 = (0..16).map(|k| h.at2(i, k) * h.at2(j, k)).sum();
+                let want = if i == j { 16.0 } else { 0.0 };
+                assert_eq!(dot, want, "rows {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn randomized_is_orthogonal() {
+        let mut rng = Pcg::new(11);
+        let q = randomized_hadamard(64, &mut rng);
+        let qtq = q.transpose2().matmul(&q);
+        for i in 0..64 {
+            for j in 0..64 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq.at2(i, j) - want).abs() < 1e-4, "({i},{j})={}", qtq.at2(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_reduces_outlier_ratio() {
+        // the mechanism behind the paper's Rotate step: per-row max/rms drops
+        let mut rng = Pcg::new(5);
+        let d = 64;
+        let mut w = Tensor::randn(&[d, d], 1.0, &mut rng);
+        for _ in 0..20 {
+            let idx = rng.below(d * d);
+            w.data[idx] += 8.0 * rng.sign();
+        }
+        let q = randomized_hadamard(d, &mut rng);
+        let wr = w.matmul(&q);
+        let ratio = |m: &Tensor| -> f32 {
+            (0..d)
+                .map(|i| {
+                    let row = m.row(i);
+                    let mx = row.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+                    let rms = (row.iter().map(|v| v * v).sum::<f32>() / d as f32).sqrt();
+                    mx / rms
+                })
+                .sum::<f32>()
+                / d as f32
+        };
+        assert!(ratio(&wr) < ratio(&w), "{} !< {}", ratio(&wr), ratio(&w));
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_pow2_panics() {
+        sylvester(12);
+    }
+}

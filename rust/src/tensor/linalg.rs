@@ -1,0 +1,136 @@
+//! Host-side reference linear algebra (Cholesky, triangular inverse).
+//!
+//! Mirrors python/compile/quantizer.py — these back the pure-rust reference
+//! GPTQ in `quantref`, which property-tests the HLO solver. Cold path only.
+
+use super::Tensor;
+
+/// Lower Cholesky of an SPD matrix. Panics on non-square input; clamps tiny
+/// negative pivots (fp noise on near-singular H) to keep factors finite.
+pub fn cholesky_lower(a: &Tensor) -> Tensor {
+    let d = a.rows();
+    assert_eq!(d, a.cols(), "cholesky needs a square matrix");
+    let mut l = Tensor::zeros(&[d, d]);
+    for j in 0..d {
+        let mut diag = a.at2(j, j);
+        for k in 0..j {
+            diag -= l.at2(j, k) * l.at2(j, k);
+        }
+        let ljj = diag.max(1e-12).sqrt();
+        l.set2(j, j, ljj);
+        for i in (j + 1)..d {
+            let mut v = a.at2(i, j);
+            for k in 0..j {
+                v -= l.at2(i, k) * l.at2(j, k);
+            }
+            l.set2(i, j, v / ljj);
+        }
+    }
+    l
+}
+
+/// Inverse of a lower-triangular matrix by forward substitution.
+pub fn tri_inv_lower(l: &Tensor) -> Tensor {
+    let d = l.rows();
+    let mut x = Tensor::zeros(&[d, d]);
+    for i in 0..d {
+        let lii = l.at2(i, i);
+        for j in 0..=i {
+            let mut s = if i == j { 1.0 } else { 0.0 };
+            for k in j..i {
+                s -= l.at2(i, k) * x.at2(k, j);
+            }
+            x.set2(i, j, s / lii);
+        }
+    }
+    x
+}
+
+/// Upper-triangular U with UᵀU = (H + damp·mean(diag)·I)⁻¹ — the factor the
+/// GPTQ recurrence consumes (same contract as quantizer.hinv_cholesky_upper).
+pub fn hinv_cholesky_upper(h: &Tensor, damp: f32) -> Tensor {
+    let d = h.rows();
+    let dmean = (0..d).map(|i| h.at2(i, i)).sum::<f32>() / d as f32;
+    let dmean = dmean.max(1e-8);
+    let mut hd = h.clone();
+    for i in 0..d {
+        let v = hd.at2(i, i) + damp * dmean;
+        hd.set2(i, i, v);
+    }
+    let l = cholesky_lower(&hd);
+    let linv = tri_inv_lower(&l);
+    let hinv = linv.transpose2().matmul(&linv);
+    cholesky_lower(&hinv).transpose2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    fn spd(d: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg::new(seed);
+        let a = Tensor::randn(&[d, d], 1.0, &mut rng);
+        let mut h = a.matmul(&a.transpose2());
+        for i in 0..d {
+            let v = h.at2(i, i) + d as f32;
+            h.set2(i, i, v);
+        }
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd(16, 0);
+        let l = cholesky_lower(&a);
+        assert!(l.matmul(&l.transpose2()).allclose(&a, 1e-3));
+        // strictly lower
+        for i in 0..16 {
+            for j in (i + 1)..16 {
+                assert_eq!(l.at2(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn tri_inv_inverts() {
+        let a = spd(12, 1);
+        let l = cholesky_lower(&a);
+        let li = tri_inv_lower(&l);
+        let eye = li.matmul(&l);
+        for i in 0..12 {
+            for j in 0..12 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((eye.at2(i, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn hinv_factor_contract() {
+        let h = spd(10, 2);
+        let u = hinv_cholesky_upper(&h, 0.01);
+        // UᵀU (H + damp·mean·I) = I
+        let dmean = (0..10).map(|i| h.at2(i, i)).sum::<f32>() / 10.0;
+        let mut hd = h.clone();
+        for i in 0..10 {
+            let v = hd.at2(i, i) + 0.01 * dmean;
+            hd.set2(i, i, v);
+        }
+        let utu = u.transpose2().matmul(&u);
+        let prod = utu.matmul(&hd);
+        for i in 0..10 {
+            for j in 0..10 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at2(i, j) - want).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_hessian_finite() {
+        let h = Tensor::zeros(&[8, 8]);
+        let u = hinv_cholesky_upper(&h, 0.01);
+        assert!(u.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,213 @@
+//! Minimal row-major f32 tensor used host-side by the coordinator.
+//!
+//! All *hot* math runs in AOT HLO on the PJRT client; this type covers the
+//! cold paths: parameter init/fusion/rotation, Hessian assembly checks, the
+//! pure-rust reference quantizer, and test assertions. Keep it simple —
+//! no broadcasting, no views; shapes are explicit.
+
+pub mod hadamard;
+pub mod linalg;
+
+pub use hadamard::randomized_hadamard;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![1.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Gaussian init, scaled like the L2 initializer (0.4/sqrt(fan_in)).
+    pub fn randn(shape: &[usize], scale: f32, rng: &mut crate::util::Pcg) -> Self {
+        let n = shape.iter().product();
+        let data = (0..n).map(|_| scale * rng.normal()).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols() + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        let c = self.cols();
+        self.data[i * c + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// Blocked matmul: self [m,k] @ other [k,n]. Cold path only — the
+    /// biggest host-side matmul is the one-time rotation (V×d @ d×d).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (other.rows(), other.cols());
+        assert_eq!(k, k2, "matmul inner dim: {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        const BK: usize = 64;
+        for i in 0..m {
+            let a_row = self.row(i);
+            let o_row = &mut out.data[i * n..(i + 1) * n];
+            let mut k0 = 0;
+            while k0 < k {
+                let kend = (k0 + BK).min(k);
+                for kk in k0..kend {
+                    let a = a_row[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let b_row = &other.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        o_row[j] += a * b_row[j];
+                    }
+                }
+                k0 = kend;
+            }
+        }
+        out
+    }
+
+    pub fn scale_in_place(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_in_place(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg::new(0);
+        let a = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let mut eye = Tensor::zeros(&[7, 7]);
+        for i in 0..7 {
+            eye.set2(i, i, 1.0);
+        }
+        assert!(a.matmul(&eye).allclose(&a, 1e-6));
+    }
+
+    #[test]
+    fn matmul_hand_values() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Pcg::new(1);
+        let a = Tensor::randn(&[3, 9], 1.0, &mut rng);
+        assert!(a.transpose2().transpose2().allclose(&a, 0.0));
+    }
+
+    #[test]
+    fn matmul_matches_transposed_form() {
+        let mut rng = Pcg::new(2);
+        let a = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let b = Tensor::randn(&[6, 3], 1.0, &mut rng);
+        let c1 = a.matmul(&b);
+        let c2 = b.transpose2().matmul(&a.transpose2()).transpose2();
+        assert!(c1.allclose(&c2, 1e-4));
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul inner dim")]
+    fn matmul_dim_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        a.matmul(&b);
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::from_vec(&[1, 2], vec![3.0, -4.0]);
+        assert_eq!(t.frob_norm(), 5.0);
+        assert_eq!(t.abs_max(), 4.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Adam training loop over the `train_step` artifact.
+//!
+//! Used by the end-to-end example (train a small LM on SynthWiki, then
+//! quantize it) and by the table drivers to produce *trained* checkpoints —
+//! a randomly-initialized model has no attention structure for AttnCon to
+//! exploit, so all quantization experiments run on trained weights.
+//!
+//! Parameters, Adam moments and outputs stay as XLA literals between steps;
+//! tensors only materialize host-side at the end (or for checkpoints).
+
+pub mod trainer;
+
+pub use trainer::{train, train_or_load, TrainOptions, TrainReport};

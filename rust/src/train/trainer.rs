@@ -1,0 +1,116 @@
+//! The training driver: stream corpus batches through `train_step`.
+
+use anyhow::Result;
+
+use crate::corpus::{CorpusKind, Generator};
+use crate::model::ParamSet;
+use crate::runtime::{self, Engine};
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub corpus: CorpusKind,
+    pub seed: u64,
+    pub log_every: usize,
+    pub verbose: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            steps: 200,
+            corpus: CorpusKind::Wiki,
+            seed: 7,
+            log_every: 20,
+            verbose: false,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    /// (step, loss) samples at `log_every` cadence plus the final step
+    pub loss_curve: Vec<(usize, f32)>,
+    pub final_loss: f32,
+    pub wall_seconds: f64,
+}
+
+/// Train `params` in place for `opts.steps` Adam steps on fresh corpus
+/// batches (train stream). The train_step artifact bakes lr/betas (L2 side).
+pub fn train(
+    engine: &Engine,
+    params: &mut ParamSet,
+    opts: &TrainOptions,
+) -> Result<TrainReport> {
+    let t0 = std::time::Instant::now();
+    let cfg = engine.config().clone();
+    let t = *cfg.seq_lens.iter().max().unwrap();
+    let n = params.tensors.len();
+    let mut gen = Generator::new(cfg.vocab, opts.corpus, opts.seed, 1);
+
+    // device-side state: params + adam moments as literals
+    let mut state: Vec<xla::Literal> = Vec::with_capacity(3 * n);
+    for tns in &params.tensors {
+        state.push(runtime::tensor_literal(tns)?);
+    }
+    for tns in &params.tensors {
+        state.push(runtime::tensor_literal(&Tensor::zeros(&tns.shape))?);
+    }
+    for tns in &params.tensors {
+        state.push(runtime::tensor_literal(&Tensor::zeros(&tns.shape))?);
+    }
+
+    let mut report = TrainReport::default();
+    for step in 0..opts.steps {
+        let batch: Vec<Vec<i32>> = (0..cfg.batch).map(|_| gen.sample(t)).collect();
+        let tok_lit = runtime::tokens_literal(&batch, t)?;
+        let step_lit = runtime::scalar_literal(step as f32);
+        // borrowed inputs: no deep Literal clones of the full 3n state/step
+        let mut ins: Vec<&xla::Literal> = state.iter().collect();
+        ins.push(&tok_lit);
+        ins.push(&step_lit);
+        let outs = engine.exec_ref("train_step", &ins)?;
+        let loss = runtime::literal_scalar(&outs[3 * n])?;
+        state = outs.into_iter().take(3 * n).collect();
+        if step % opts.log_every == 0 || step + 1 == opts.steps {
+            report.loss_curve.push((step, loss));
+            if opts.verbose {
+                eprintln!("[train] step {step:>5}  loss {loss:.4}");
+            }
+        }
+        report.final_loss = loss;
+    }
+
+    // materialize trained params back into the ParamSet
+    for (i, tns) in params.tensors.iter_mut().enumerate() {
+        *tns = runtime::literal_tensor(&state[i])?;
+    }
+    report.wall_seconds = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Train-or-load helper: checkpoints trained weights under artifacts/ so
+/// repeated drivers skip retraining (delete the file to force a retrain).
+pub fn train_or_load(
+    engine: &Engine,
+    seed: u64,
+    steps: usize,
+    verbose: bool,
+) -> Result<(ParamSet, Option<TrainReport>)> {
+    let cfg = engine.config().clone();
+    let path = crate::artifacts_dir(&cfg.name).join(format!("trained_s{seed}_n{steps}.bin"));
+    if path.exists() {
+        if let Ok(p) = ParamSet::load(&cfg, &path) {
+            return Ok((p, None));
+        }
+    }
+    let mut p = ParamSet::init(&cfg, seed);
+    let report = train(
+        engine,
+        &mut p,
+        &TrainOptions { steps, seed, verbose, ..Default::default() },
+    )?;
+    let _ = p.save(&path);
+    Ok((p, Some(report)))
+}

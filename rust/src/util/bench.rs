@@ -1,0 +1,144 @@
+//! Criterion-style micro/macro benchmark harness (criterion itself is not
+//! in the offline vendor set).
+//!
+//! Usage (inside a `[[bench]] harness = false` target):
+//! ```ignore
+//! let mut b = Bench::new("hessian_accum/small");
+//! b.iter(|| engine.run("hess_d_t128", &inputs));
+//! b.report(); // "hessian_accum/small  time: [12.01 ms 12.34 ms 12.80 ms]"
+//! ```
+//! Warmup runs are discarded; the report prints min/mean/max plus stddev
+//! and throughput when `bytes`/`elements` are set, mirroring criterion's
+//! output shape so downstream tooling keeps working.
+
+use std::time::Instant;
+
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    samples: usize,
+    bytes: Option<u64>,
+    elements: Option<u64>,
+    times: Vec<f64>, // seconds
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            warmup: 2,
+            samples: 10,
+            bytes: None,
+            elements: None,
+            times: Vec::new(),
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    /// Declare bytes processed per iteration (enables GB/s in the report).
+    pub fn throughput_bytes(mut self, bytes: u64) -> Self {
+        self.bytes = Some(bytes);
+        self
+    }
+
+    /// Declare elements processed per iteration (enables Melem/s).
+    pub fn throughput_elements(mut self, elements: u64) -> Self {
+        self.elements = Some(elements);
+        self
+    }
+
+    /// Run the closure warmup+samples times, recording sample wall times.
+    pub fn iter<T>(&mut self, mut f: impl FnMut() -> T) -> &mut Self {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        self.times.clear();
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            self.times.push(t0.elapsed().as_secs_f64());
+        }
+        self
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        super::mean(&self.times)
+    }
+
+    pub fn min_s(&self) -> f64 {
+        self.times.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.times.iter().cloned().fold(0.0, f64::max)
+    }
+
+    fn fmt_time(s: f64) -> String {
+        if s < 1e-6 {
+            format!("{:.2} ns", s * 1e9)
+        } else if s < 1e-3 {
+            format!("{:.2} µs", s * 1e6)
+        } else if s < 1.0 {
+            format!("{:.2} ms", s * 1e3)
+        } else {
+            format!("{:.2} s", s)
+        }
+    }
+
+    /// Print a criterion-shaped report line; returns mean seconds.
+    pub fn report(&self) -> f64 {
+        let mean = self.mean_s();
+        let sd = super::stddev(&self.times);
+        let mut line = format!(
+            "{:<44} time: [{} {} {}]  σ={}",
+            self.name,
+            Self::fmt_time(self.min_s()),
+            Self::fmt_time(mean),
+            Self::fmt_time(self.max_s()),
+            Self::fmt_time(sd),
+        );
+        if let Some(b) = self.bytes {
+            line += &format!("  thrpt: {:.2} GiB/s", b as f64 / mean / (1u64 << 30) as f64);
+        }
+        if let Some(e) = self.elements {
+            line += &format!("  thrpt: {:.2} Melem/s", e as f64 / mean / 1e6);
+        }
+        println!("{line}");
+        mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_samples() {
+        let mut b = Bench::new("t").warmup(1).samples(5);
+        let mut n = 0u64;
+        b.iter(|| {
+            n += 1;
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        assert_eq!(b.times.len(), 5);
+        assert!(b.mean_s() >= 150e-6, "{}", b.mean_s());
+        assert!(b.min_s() <= b.mean_s() && b.mean_s() <= b.max_s());
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(Bench::fmt_time(2e-9).ends_with("ns"));
+        assert!(Bench::fmt_time(2e-6).ends_with("µs"));
+        assert!(Bench::fmt_time(2e-3).ends_with("ms"));
+        assert!(Bench::fmt_time(2.0).ends_with(" s"));
+    }
+}

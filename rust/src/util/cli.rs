@@ -1,0 +1,126 @@
+//! Tiny declarative CLI argument parser (clap is not in the vendor set).
+//!
+//! Supports `--key value`, `--key=value`, `--flag`, and positional args.
+//! Every driver in `repro/` and `main.rs` consumes this.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse("table2 --config small --seeds=3 --verbose --bits 3");
+        assert_eq!(a.positional, vec!["table2"]);
+        assert_eq!(a.str_or("config", "x"), "small");
+        assert_eq!(a.usize_or("seeds", 1), 3);
+        assert_eq!(a.usize_or("bits", 4), 3);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.f32_or("rmin", 0.01), 0.01);
+        assert_eq!(a.list_or("methods", &["rsq", "quarot"]), vec!["rsq", "quarot"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--dry-run");
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("--methods rsq,gptq , rtn");
+        assert_eq!(a.list_or("methods", &[]), vec!["rsq", "gptq"]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_int_panics() {
+        parse("--seeds abc").usize_or("seeds", 1);
+    }
+}

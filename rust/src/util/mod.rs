@@ -1,0 +1,58 @@
+//! Infrastructure substrates: RNG, bench harness, CLI parsing, JSON output,
+//! and the property-testing helper.
+//!
+//! These exist because the offline vendor set (see Cargo.toml) has no
+//! `rand`, `criterion`, `clap`, or `proptest`; each submodule is a small,
+//! tested, dependency-free substitute.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use bench::Bench;
+pub use cli::Args;
+pub use rng::Pcg;
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (0.0 for n < 2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Format `mean ± std` the way the paper subscripts its tables.
+pub fn fmt_pm(xs: &[f64], prec: usize) -> String {
+    format!("{:.p$}±{:.p$}", mean(xs), stddev(xs), p = prec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert_eq!(stddev(&[1.0]), 0.0);
+        let s = stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s - 2.138).abs() < 1e-2, "{s}");
+    }
+
+    #[test]
+    fn fmt_pm_formats() {
+        assert_eq!(fmt_pm(&[1.0, 2.0], 2), "1.50±0.71");
+    }
+}

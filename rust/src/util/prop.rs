@@ -1,0 +1,76 @@
+//! Hand-rolled property-testing helper (proptest is not in the vendor set).
+//!
+//! `check` runs a predicate over `cases` seeded random instances and, on
+//! failure, retries with a simple linear shrink of the size parameter to
+//! report the smallest failing size. Each case gets an independent PCG
+//! stream derived from the base seed, so failures are reproducible from
+//! the printed (seed, size).
+
+use super::rng::Pcg;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub min_size: usize,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 32, seed: 0x5eed, min_size: 1, max_size: 64 }
+    }
+}
+
+/// Run `prop(rng, size)` for `cases` random (seed, size) pairs; panic with
+/// a reproducible report on the first failure, after shrinking `size`.
+pub fn check(cfg: Config, name: &str, mut prop: impl FnMut(&mut Pcg, usize) -> bool) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Pcg::with_stream(case_seed, 17);
+        let span = cfg.max_size - cfg.min_size + 1;
+        let size = cfg.min_size + rng.below(span);
+        let mut fresh = Pcg::with_stream(case_seed, 99);
+        if prop(&mut fresh, size) {
+            continue;
+        }
+        // shrink: walk size down to find the smallest failing size
+        let mut smallest = size;
+        let mut s = size;
+        while s > cfg.min_size {
+            s -= 1;
+            let mut rng2 = Pcg::with_stream(case_seed, 99);
+            if !prop(&mut rng2, s) {
+                smallest = s;
+            }
+        }
+        panic!(
+            "property {name:?} failed: seed={case_seed:#x} size={size} \
+             (smallest failing size after shrink: {smallest})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(Config::default(), "sum_commutes", |rng, size| {
+            let xs: Vec<f64> = (0..size).map(|_| rng.f64()).collect();
+            let fwd: f64 = xs.iter().sum();
+            let rev: f64 = xs.iter().rev().sum();
+            (fwd - rev).abs() < 1e-9
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "smallest failing size")]
+    fn failing_property_shrinks() {
+        check(
+            Config { cases: 8, max_size: 32, ..Default::default() },
+            "always_small",
+            |_rng, size| size < 3,
+        );
+    }
+}

@@ -1,0 +1,167 @@
+//! PCG-XSH-RR 64/32: a small, fast, statistically solid PRNG.
+//!
+//! Offline substitute for the `rand` crate (not in the vendor set). Used
+//! for parameter init, corpus generation, probe-task construction, and the
+//! property-test harness — everything seeded, so every experiment in
+//! EXPERIMENTS.md is reproducible bit-for-bit.
+
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Independent stream for the same seed (distinct `inc` ⇒ distinct
+    /// sequence); used to decorrelate corpus vs. init vs. task RNGs.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). Lemire-style rejection-free for our use
+    /// (n ≪ 2^32, the tiny modulo bias is irrelevant for synthesis).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f32().max(1e-12);
+        let u2 = self.f32();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Random sign ±1.
+    pub fn sign(&mut self) -> f32 {
+        if self.next_u32() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted(&mut self, weights: &[f32]) -> usize {
+        let total: f32 = weights.iter().sum();
+        if total <= 0.0 {
+            return self.below(weights.len());
+        }
+        let mut x = self.f32() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg::new(42);
+        let mut b = Pcg::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg::with_stream(42, 1);
+        let mut b = Pcg::with_stream(42, 2);
+        assert!((0..10).any(|_| a.next_u32() != b.next_u32()));
+    }
+
+    #[test]
+    fn f32_in_range_and_uniformish() {
+        let mut rng = Pcg::new(7);
+        let xs: Vec<f32> = (0..10_000).map(|_| rng.f32()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let m = xs.iter().sum::<f32>() / xs.len() as f32;
+        assert!((m - 0.5).abs() < 0.02, "{m}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg::new(9);
+        let xs: Vec<f32> = (0..20_000).map(|_| rng.normal()).collect();
+        let m = xs.iter().sum::<f32>() / xs.len() as f32;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / xs.len() as f32;
+        assert!(m.abs() < 0.03, "{m}");
+        assert!((v - 1.0).abs() < 0.05, "{v}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut rng = Pcg::new(1);
+        for _ in 0..1000 {
+            assert!(rng.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut rng = Pcg::new(3);
+        let mut counts = [0usize; 3];
+        for _ in 0..3000 {
+            counts[rng.weighted(&[1.0, 0.0, 9.0])] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!(counts[2] > counts[0] * 5, "{counts:?}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg::new(5);
+        let mut xs: Vec<u32> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>());
+    }
+}

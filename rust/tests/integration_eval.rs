@@ -1,0 +1,86 @@
+//! Eval-harness integration: perplexity semantics, probe battery, and the
+//! long-context suite, all on the tiny config. Requires `make artifacts`.
+
+use rsq::corpus::{CalibSet, CorpusKind};
+use rsq::eval::{longctx_suite, perplexity, probe_suite, tasks::mean_accuracy};
+use rsq::model::ParamSet;
+use rsq::runtime::Engine;
+use rsq::train::train_or_load;
+
+fn engine() -> Engine {
+    Engine::load("tiny").expect("run `make artifacts` first")
+}
+
+#[test]
+fn training_lowers_perplexity() {
+    let eng = engine();
+    let cfg = eng.config().clone();
+    let eval = CalibSet::generate(cfg.vocab, CorpusKind::Wiki, 8, 64, 7, 2);
+    let random = ParamSet::init(&cfg, 7);
+    let ppl_random = perplexity(&eng, &random, &eval, 64).unwrap();
+    let (trained, _) = train_or_load(&eng, 7, 150, false).unwrap();
+    let ppl_trained = perplexity(&eng, &trained, &eval, 64).unwrap();
+    // random init ~ vocab size; trained far below
+    assert!(ppl_random > 150.0, "{ppl_random}");
+    assert!(ppl_trained < ppl_random * 0.5, "{ppl_trained} vs {ppl_random}");
+}
+
+#[test]
+fn perplexity_context_length_variants() {
+    let eng = engine();
+    let cfg = eng.config().clone();
+    let eval = CalibSet::generate(cfg.vocab, CorpusKind::Wiki, 8, 64, 7, 2);
+    let (p, _) = train_or_load(&eng, 7, 150, false).unwrap();
+    let p32 = perplexity(&eng, &p, &eval, 32).unwrap();
+    let p64 = perplexity(&eng, &p, &eval, 64).unwrap();
+    assert!(p32.is_finite() && p64.is_finite());
+    // both orders of magnitude sane
+    assert!(p32 > 1.0 && p32 < cfg.vocab as f64);
+    assert!(p64 > 1.0 && p64 < cfg.vocab as f64);
+}
+
+#[test]
+fn probe_suite_returns_ten_tasks_in_range() {
+    let eng = engine();
+    let (p, _) = train_or_load(&eng, 7, 150, false).unwrap();
+    let results = probe_suite(&eng, &p, 64, 3, 8).unwrap();
+    assert_eq!(results.len(), 10);
+    let mut names: Vec<&str> = results.iter().map(|r| r.name).collect();
+    names.dedup();
+    assert_eq!(names.len(), 10, "duplicate task names");
+    for r in &results {
+        assert!((0.0..=1.0).contains(&r.accuracy), "{r:?}");
+        assert_eq!(r.n, 8);
+    }
+    let avg = mean_accuracy(&results);
+    assert!((0.0..=1.0).contains(&avg));
+}
+
+#[test]
+fn probe_suite_deterministic_for_seed() {
+    let eng = engine();
+    let (p, _) = train_or_load(&eng, 7, 150, false).unwrap();
+    let a = probe_suite(&eng, &p, 64, 5, 8).unwrap();
+    let b = probe_suite(&eng, &p, 64, 5, 8).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.accuracy, y.accuracy, "{}", x.name);
+    }
+}
+
+#[test]
+fn longctx_suite_shapes() {
+    let eng = engine();
+    let (p, _) = train_or_load(&eng, 7, 150, false).unwrap();
+    let results = longctx_suite(&eng, &p, 64, 3, 8).unwrap();
+    assert_eq!(results.len(), 9); // 3 kv levels + 3 needle positions + 2 icl + code
+    for r in &results {
+        assert!((0.0..=1.0).contains(&r.score), "{r:?}");
+    }
+    // kv levels are distinct task names
+    let kv: Vec<&str> = results
+        .iter()
+        .filter(|r| r.name.starts_with("kv_retrieval"))
+        .map(|r| r.name.as_str())
+        .collect();
+    assert_eq!(kv.len(), 3);
+}

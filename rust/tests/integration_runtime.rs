@@ -1,0 +1,212 @@
+//! Runtime integration: the AOT artifacts must compute exactly what the
+//! pure-rust references compute. Requires `make artifacts` (tiny config).
+
+use rsq::model::{config::Module, ParamSet};
+use rsq::quantref;
+use rsq::runtime::{self, Engine};
+use rsq::tensor::Tensor;
+use rsq::util::Pcg;
+
+fn engine() -> Engine {
+    Engine::load("tiny").expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_cross_validates_config() {
+    let eng = engine();
+    let cfg = eng.config();
+    assert_eq!(cfg.name, "tiny");
+    assert_eq!(cfg.d, 64);
+    assert_eq!(cfg.param_names().len(), eng.manifest.params.len());
+}
+
+#[test]
+fn embed_matches_host_computation() {
+    let eng = engine();
+    let cfg = eng.config().clone();
+    let p = ParamSet::init(&cfg, 0);
+    let tokens: Vec<Vec<i32>> = (0..cfg.batch)
+        .map(|b| (0..32).map(|t| ((b * 31 + t * 7) % cfg.vocab) as i32).collect())
+        .collect();
+    let outs = eng
+        .exec(
+            "embed_t32",
+            &[
+                runtime::tokens_literal(&tokens, 32).unwrap(),
+                runtime::tensor_literal(&p.tensors[0]).unwrap(),
+                runtime::tensor_literal(&p.tensors[1]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let z = runtime::literal_tensor(&outs[0]).unwrap();
+    assert_eq!(z.shape, vec![cfg.batch, 32, cfg.d]);
+    // host check: z[b,t,:] = emb[tok] + pos[t]
+    let (emb, pos) = (&p.tensors[0], &p.tensors[1]);
+    for b in 0..cfg.batch {
+        for t in 0..32 {
+            let tok = tokens[b][t] as usize;
+            for k in 0..cfg.d {
+                let want = emb.at2(tok, k) + pos.at2(t, k);
+                let got = z.data[(b * 32 + t) * cfg.d + k];
+                assert!((want - got).abs() < 1e-5, "b{b} t{t} k{k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn hessian_module_matches_reference() {
+    let eng = engine();
+    let cfg = eng.config().clone();
+    let mut rng = Pcg::new(1);
+    let x = Tensor::randn(&[cfg.batch, 32, cfg.d], 1.0, &mut rng);
+    let r_rows: Vec<Vec<f32>> = (0..cfg.batch)
+        .map(|_| (0..32).map(|_| rng.f32()).collect())
+        .collect();
+    let r = Tensor::from_vec(&[cfg.batch, 32], r_rows.iter().flatten().cloned().collect());
+    let outs = eng
+        .exec(
+            "hess_d_t32",
+            &[runtime::tensor_literal(&x).unwrap(), runtime::tensor_literal(&r).unwrap()],
+        )
+        .unwrap();
+    let h = runtime::literal_tensor(&outs[0]).unwrap();
+    // reference
+    let mut rows = Vec::new();
+    let mut rflat = Vec::new();
+    for b in 0..cfg.batch {
+        for t in 0..32 {
+            rows.push(x.data[(b * 32 + t) * cfg.d..(b * 32 + t + 1) * cfg.d].to_vec());
+            rflat.push(r_rows[b][t]);
+        }
+    }
+    let href = quantref::hessian_scaled(&rows, &rflat);
+    let scale = href.abs_max().max(1.0);
+    assert!(
+        h.sub(&href).abs_max() / scale < 1e-4,
+        "hessian mismatch {}",
+        h.sub(&href).abs_max()
+    );
+}
+
+#[test]
+fn gptq_module_matches_rust_reference() {
+    let eng = engine();
+    let cfg = eng.config().clone();
+    let mut rng = Pcg::new(2);
+    let w = Tensor::randn(&[cfg.d, cfg.d], 0.2, &mut rng);
+    // realistic PSD Hessian
+    let x: Vec<Vec<f32>> = (0..256)
+        .map(|_| (0..cfg.d).map(|_| rng.normal()).collect())
+        .collect();
+    let h = quantref::hessian_scaled(&x, &vec![1.0; 256]);
+    for maxq in [3.0f32, 7.0, 15.0] {
+        let outs = eng
+            .exec(
+                "gptq_64x64",
+                &[
+                    runtime::tensor_literal(&w).unwrap(),
+                    runtime::tensor_literal(&h).unwrap(),
+                    runtime::scalar_literal(maxq),
+                    runtime::scalar_literal(0.01),
+                ],
+            )
+            .unwrap();
+        let q_hlo = runtime::literal_tensor(&outs[0]).unwrap();
+        let err_hlo = runtime::literal_scalar(&outs[1]).unwrap();
+        let (q_ref, err_ref) = quantref::gptq(&w, &h, maxq, 0.01);
+        assert!(
+            q_hlo.sub(&q_ref).abs_max() < 1e-4,
+            "maxq {maxq}: weight mismatch {}",
+            q_hlo.sub(&q_ref).abs_max()
+        );
+        assert!((err_hlo - err_ref).abs() / err_ref.max(1.0) < 1e-3);
+    }
+}
+
+#[test]
+fn rtn_module_matches_rust_reference() {
+    let eng = engine();
+    let mut rng = Pcg::new(3);
+    let w = Tensor::randn(&[128, 64], 0.3, &mut rng);
+    let outs = eng
+        .exec(
+            "rtn_128x64",
+            &[runtime::tensor_literal(&w).unwrap(), runtime::scalar_literal(7.0)],
+        )
+        .unwrap();
+    let q = runtime::literal_tensor(&outs[0]).unwrap();
+    let q_ref = quantref::rtn(&w, 7.0);
+    assert!(q.sub(&q_ref).abs_max() < 1e-5);
+}
+
+#[test]
+fn ldlq_module_outputs_codewords() {
+    let eng = engine();
+    let cfg = eng.config().clone();
+    let mut rng = Pcg::new(4);
+    let w = Tensor::randn(&[cfg.d, cfg.d], 0.3, &mut rng);
+    let x: Vec<Vec<f32>> = (0..256)
+        .map(|_| (0..cfg.d).map(|_| rng.normal()).collect())
+        .collect();
+    let h = quantref::hessian_scaled(&x, &vec![1.0; 256]);
+    let cb = rsq::quant::vq::e8_codebook(cfg.ldlq_k, 0);
+    let outs = eng
+        .exec(
+            "ldlq_64x64",
+            &[
+                runtime::tensor_literal(&w).unwrap(),
+                runtime::tensor_literal(&h).unwrap(),
+                runtime::tensor_literal(&cb).unwrap(),
+                runtime::scalar_literal(0.01),
+            ],
+        )
+        .unwrap();
+    let q = runtime::literal_tensor(&outs[0]).unwrap();
+    assert_eq!(q.shape, vec![cfg.d, cfg.d]);
+    assert!(q.data.iter().all(|v| v.is_finite()));
+    // every 8-block of every row must be s * codeword for the row's scale
+    for r in 0..4 {
+        let wrow = w.row(r);
+        let s = (wrow.iter().map(|v| v * v).sum::<f32>() / wrow.len() as f32).sqrt() + 1e-8;
+        for b in 0..2 {
+            let blk: Vec<f32> = q.row(r)[b * 8..(b + 1) * 8].iter().map(|v| v / s).collect();
+            let mut best = f32::INFINITY;
+            for ci in 0..cfg.ldlq_k {
+                let c = cb.row(ci);
+                let d2: f32 = blk.iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum();
+                best = best.min(d2);
+            }
+            assert!(best < 1e-6, "row {r} block {b}: nearest codeword d2={best}");
+        }
+    }
+}
+
+#[test]
+fn engine_rejects_bad_inputs() {
+    let eng = engine();
+    // wrong arity
+    assert!(eng.exec("rtn_64x64", &[runtime::scalar_literal(7.0)]).is_err());
+    // wrong shape
+    let w = Tensor::zeros(&[2, 2]);
+    assert!(eng
+        .exec(
+            "rtn_64x64",
+            &[runtime::tensor_literal(&w).unwrap(), runtime::scalar_literal(7.0)]
+        )
+        .is_err());
+    // unknown module
+    assert!(eng.exec("nope", &[]).is_err());
+}
+
+#[test]
+fn weight_shape_artifacts_exist_for_all_modules() {
+    let eng = engine();
+    let cfg = eng.config().clone();
+    for m in Module::ALL {
+        let (o, i) = cfg.weight_shape(m);
+        assert!(eng.manifest.module(&format!("gptq_{o}x{i}")).is_ok());
+        assert!(eng.manifest.module(&format!("rtn_{o}x{i}")).is_ok());
+        assert!(eng.manifest.module(&format!("ldlq_{o}x{i}")).is_ok());
+    }
+}

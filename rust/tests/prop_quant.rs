@@ -1,0 +1,150 @@
+//! Property tests (hand-rolled harness, util::prop) over the quantization
+//! stack: HLO-vs-rust agreement on random instances, grid invariants,
+//! Eq. 4 bounds, and scheduler/dataset invariants.
+
+use rsq::corpus::{expand_dataset, CalibSet, CorpusKind};
+use rsq::quant::strategy::normalize_eq4;
+use rsq::quantref;
+use rsq::runtime::{self, Engine};
+use rsq::tensor::{linalg, Tensor};
+use rsq::util::prop::{check, Config};
+use rsq::util::Pcg;
+
+fn rand_hessian(din: usize, rng: &mut Pcg) -> Tensor {
+    let n = din * 3;
+    let x: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..din).map(|_| rng.normal()).collect())
+        .collect();
+    let r: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+    quantref::hessian_scaled(&x, &r)
+}
+
+#[test]
+fn prop_rtn_idempotent() {
+    check(Config { cases: 16, max_size: 48, ..Default::default() }, "rtn_idempotent", |rng, size| {
+        let w = Tensor::randn(&[8, size.max(2)], 1.0, rng);
+        let q1 = quantref::rtn(&w, 7.0);
+        let q2 = quantref::rtn(&q1, 7.0);
+        q1.allclose(&q2, 1e-5)
+    });
+}
+
+#[test]
+fn prop_gptq_beats_rtn_in_aggregate() {
+    // GPTQ's greedy feedback with a grid fixed from the original W is not
+    // pointwise-dominant over RTN (feedback can push values off-grid), but
+    // it must win in aggregate and never lose catastrophically.
+    let mut wins = 0usize;
+    let cases = 24usize;
+    check(Config { cases, min_size: 4, max_size: 24, ..Default::default() }, "gptq_vs_rtn", |rng, size| {
+        let din = size.max(4);
+        let w = Tensor::randn(&[6, din], 1.0, rng);
+        let h = rand_hessian(din, rng);
+        let (_, egptq) = quantref::gptq(&w, &h, 7.0, 0.01);
+        let qrtn = quantref::rtn(&w, 7.0);
+        let ertn = quantref::hessian_weighted_err(&w, &qrtn, &h);
+        if egptq <= ertn * 1.001 + 1e-4 {
+            wins += 1;
+        }
+        egptq <= ertn * 2.0 + 1e-3 // never catastrophically worse
+    });
+    assert!(wins * 4 >= cases * 3, "GPTQ won only {wins}/{cases} instances");
+}
+
+#[test]
+fn prop_cholesky_factor_reconstructs() {
+    check(Config { cases: 16, min_size: 2, max_size: 32, ..Default::default() }, "chol", |rng, size| {
+        let d = size.max(2);
+        let a = Tensor::randn(&[d, d], 1.0, rng);
+        let mut h = a.matmul(&a.transpose2());
+        for i in 0..d {
+            let v = h.at2(i, i) + d as f32;
+            h.set2(i, i, v);
+        }
+        let l = linalg::cholesky_lower(&h);
+        l.matmul(&l.transpose2()).allclose(&h, 1e-2 * d as f32)
+    });
+}
+
+#[test]
+fn prop_eq4_bounds_and_monotonicity() {
+    check(Config { cases: 24, min_size: 2, max_size: 64, ..Default::default() }, "eq4", |rng, size| {
+        let raw: Vec<f32> = (0..size.max(2)).map(|_| rng.normal() * 10.0).collect();
+        let r = normalize_eq4(&raw, 0.01);
+        let bounds = r.iter().all(|&v| (0.0099..=1.0001).contains(&v));
+        // order-preserving
+        let mono = raw
+            .iter()
+            .zip(raw.iter().skip(1))
+            .zip(r.iter().zip(r.iter().skip(1)))
+            .all(|((a, b), (ra, rb))| (a <= b) == (ra <= rb) || (a - b).abs() < 1e-9);
+        bounds && mono
+    });
+}
+
+#[test]
+fn prop_expansion_preserves_token_multiset() {
+    check(Config { cases: 12, min_size: 2, max_size: 8, ..Default::default() }, "expansion", |rng, size| {
+        let m = size.max(2);
+        let set = CalibSet::generate(256, CorpusKind::Wiki, 2, 64, rng.next_u64(), 1);
+        let e = expand_dataset(&set, m);
+        if e.samples.len() != set.samples.len() * m {
+            return false;
+        }
+        let hist = |samples: &[Vec<i32>]| {
+            let mut h = vec![0u32; 256];
+            for s in samples {
+                for &t in s {
+                    h[t as usize] += 1;
+                }
+            }
+            h
+        };
+        let h0 = hist(&set.samples);
+        let he = hist(&e.samples);
+        h0.iter().zip(&he).all(|(a, b)| *b == a * m as u32)
+    });
+}
+
+#[test]
+fn prop_hlo_gptq_matches_rust_reference() {
+    // the big one: the AOT solver and the independent rust solver agree on
+    // random (W, H, bits) instances — shapes fixed by the tiny artifacts
+    let eng = Engine::load("tiny").expect("run `make artifacts` first");
+    check(Config { cases: 6, max_size: 1000, ..Default::default() }, "hlo_gptq", |rng, _| {
+        let w = Tensor::randn(&[64, 64], 0.5, rng);
+        let h = rand_hessian(64, rng);
+        let bits = [3.0f32, 7.0, 15.0][rng.below(3)];
+        let outs = eng
+            .exec(
+                "gptq_64x64",
+                &[
+                    runtime::tensor_literal(&w).unwrap(),
+                    runtime::tensor_literal(&h).unwrap(),
+                    runtime::scalar_literal(bits),
+                    runtime::scalar_literal(0.01),
+                ],
+            )
+            .unwrap();
+        let q_hlo = runtime::literal_tensor(&outs[0]).unwrap();
+        let (q_ref, _) = quantref::gptq(&w, &h, bits, 0.01);
+        q_hlo.sub(&q_ref).abs_max() < 1e-3
+    });
+}
+
+#[test]
+fn prop_hlo_rtn_matches_rust_reference() {
+    let eng = Engine::load("tiny").expect("run `make artifacts` first");
+    check(Config { cases: 8, max_size: 1000, ..Default::default() }, "hlo_rtn", |rng, _| {
+        let w = Tensor::randn(&[128, 64], 1.0, rng);
+        let maxq = [3.0f32, 7.0, 15.0, 255.0][rng.below(4)];
+        let outs = eng
+            .exec(
+                "rtn_128x64",
+                &[runtime::tensor_literal(&w).unwrap(), runtime::scalar_literal(maxq)],
+            )
+            .unwrap();
+        let q = runtime::literal_tensor(&outs[0]).unwrap();
+        q.sub(&quantref::rtn(&w, maxq)).abs_max() < 1e-5
+    });
+}

@@ -1,4 +1,4 @@
-//! End-to-end driver (the EXPERIMENTS.md headline run): train a ~4M-param
+//! End-to-end driver (the repo's headline run; DESIGN.md §Perf): train a ~4M-param
 //! transformer from scratch on the synthetic corpus for a few hundred steps
 //! (loss curve logged), inject outliers, quantize it to 3-bit with every
 //! method, and report perplexity + downstream accuracy — proving all three

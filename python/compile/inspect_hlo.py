@@ -1,4 +1,4 @@
-"""HLO artifact inspector — the L2 profiling tool behind EXPERIMENTS §Perf.
+"""HLO artifact inspector — the L2 profiling tool behind DESIGN.md §Perf.
 
 Usage:  cd python && python -m compile.inspect_hlo ../artifacts/small
 

@@ -1,5 +1,5 @@
 //! Micro-benchmarks for every AOT compute module (tiny + small configs) —
-//! the L1/L2 side of EXPERIMENTS.md §Perf. Criterion-style output via the
+//! the L1/L2 side of DESIGN.md §Perf. Criterion-style output via the
 //! hand-rolled harness (criterion is not in the offline vendor set).
 //!
 //!     cargo bench --bench bench_kernels

@@ -1,6 +1,7 @@
 //! End-to-end pipeline benchmarks: full quantization wall time per method,
-//! plus the host-side stages (corpus generation, rotation, checkpoint IO).
-//! The L3 side of EXPERIMENTS.md §Perf.
+//! the parallel scheduler's jobs=1 vs jobs=N scaling, plus the host-side
+//! stages (corpus generation, rotation, checkpoint IO). The L3 side of
+//! DESIGN.md §Perf.
 //!
 //!     cargo bench --bench bench_pipeline
 
@@ -43,6 +44,29 @@ fn main() -> anyhow::Result<()> {
         .throughput_elements(tokens * 8)
         .iter(|| quantize(&eng, &params, &calib, &opts).unwrap())
         .report();
+
+    // parallel scheduler scaling: identical work, jobs=1 vs jobs=4
+    println!("\n--- scheduler scaling (rsq, jobs=1 vs jobs=4) ---");
+    let max_jobs = 4usize;
+    let mut per_jobs = Vec::new();
+    for jobs in [1usize, max_jobs] {
+        let mut o = QuantOptions::new(Method::Rsq, 3, t);
+        o.jobs = jobs;
+        let mean_s = Bench::new(&format!("quantize/rsq_jobs{jobs}"))
+            .samples(5)
+            .throughput_elements(tokens)
+            .iter(|| quantize(&eng, &params, &calib, &o).unwrap())
+            .report();
+        per_jobs.push(mean_s);
+    }
+    println!(
+        "scheduler speedup jobs={max_jobs} vs jobs=1: {:.2}x ({} hardware threads)",
+        per_jobs[0] / per_jobs[1],
+        rsq::util::pool::max_parallelism()
+    );
+    // the determinism contract the speedup rests on (jobs=N bit-identical
+    // to jobs=1, DESIGN.md §5) is asserted by tests/integration_pipeline.rs
+    // ::parallel_scheduler_is_bit_identical_to_serial
 
     println!("\n--- host-side stages ---");
     Bench::new("host/corpus_generate_64x64")

@@ -1,7 +1,7 @@
 //! One timed end-to-end bench per paper table/figure driver, at minimal
 //! scale (tiny config, 1 seed, few probe instances). These verify every
 //! driver stays runnable and track their wall-time regressions; the
-//! full-scale numbers live in EXPERIMENTS.md (produced by `rsq all`).
+//! full-scale numbers live in the results/ JSON records (`rsq all`).
 //!
 //!     cargo bench --bench bench_tables
 

@@ -6,8 +6,11 @@
 //!   rsq scores              dump Figs. 10-14 score series
 //!   rsq quantize            one-off quantization run
 //!   rsq train               train a checkpoint
-//!   rsq perf                performance profile (EXPERIMENTS.md §Perf)
+//!   rsq perf                performance profile (DESIGN.md §Perf)
 //!   rsq all                 every table + figure at default scale
+//!
+//! `--jobs N|auto` selects the quantization scheduler's worker count
+//! (DESIGN.md §Threading); output is bit-identical for every value.
 
 use anyhow::{bail, Result};
 
@@ -60,6 +63,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     let mut opts = QuantOptions::new(method, args.usize_or("bits", 3) as u32, t);
     opts.strategy = strategy;
     opts.expansion = args.usize_or("expansion", 1);
+    opts.jobs = args.jobs();
     opts.verbose = args.flag("verbose");
     let corpus = CorpusKind::parse(&args.str_or("corpus", "wiki"))
         .ok_or_else(|| anyhow::anyhow!("bad --corpus"))?;
@@ -76,7 +80,15 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     println!("avg accuracy : {:.1}%", 100.0 * mean_accuracy(&probes));
     println!("kurtosis     : {:.2} -> {:.2}", report.kurtosis_before, report.kurtosis_after);
     println!("layer errs   : {:?}", report.layer_err);
-    println!("wall         : {:.2}s over {} batches", report.wall_seconds, report.batches);
+    println!(
+        "wall         : {:.2}s over {} batches (jobs={}; pass A {:.2}s, solve {:.2}s, pass B {:.2}s)",
+        report.wall_seconds,
+        report.batches,
+        report.jobs,
+        report.pass_a_seconds,
+        report.solve_seconds,
+        report.pass_b_seconds
+    );
     if let Some(out) = args.get("save") {
         q.save(std::path::Path::new(out))?;
         println!("saved quantized checkpoint to {out}");
@@ -112,7 +124,7 @@ fn cmd_all(_args: &Args) -> Result<()> {
     // 0.5.1 leaks ~output-size heap per PJRT execute (upstream C bug — the
     // rust wrappers free everything they own), so a single long-lived
     // process accumulates GBs across tens of thousands of executions.
-    // Process isolation bounds it per driver. See EXPERIMENTS.md §Perf.
+    // Process isolation bounds it per driver. See DESIGN.md §Perf.
     let exe = std::env::current_exe()?;
     let fwd: Vec<String> = std::env::args().skip(2).collect();
     for cmd in [
@@ -155,6 +167,8 @@ fn print_help() {
            --expansion M    dataset expansion factor (paper M=8)\n\
            --corpus C       wiki|c4|ptb|redpajama\n\
            --probe-n N      instances per downstream probe task\n\
+           --jobs N|auto    scheduler worker threads (default 1; output is\n\
+                            bit-identical for every value)\n\
            --verbose        chatty pipeline logging"
     );
 }

@@ -5,7 +5,10 @@
 //!   TokenSim, AttnCon) plus the Eq. 4 normalization.
 //! - [`pipeline`] — the layer-by-layer coordinator implementing RTN, GPTQ,
 //!   QuaRot, SQ (scale w/o rotate), RSQ (rotate+scale) and the VQ variants,
-//!   with streaming Hessian accumulation and dataset expansion.
+//!   with streaming Hessian accumulation and dataset expansion. Work fans
+//!   out over a `util::Pool` of worker threads (`--jobs`), with a
+//!   fixed-order reduction that keeps output bit-identical to the serial
+//!   path (DESIGN.md §Threading).
 //! - [`vq`] — E8-derived codebook construction for Tab. 6.
 
 pub mod pipeline;

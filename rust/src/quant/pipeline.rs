@@ -1,16 +1,25 @@
-//! The RSQ layer-by-layer quantization coordinator (paper Sec. 4.2).
+//! The RSQ layer-by-layer quantization coordinator (paper Sec. 4.2),
+//! parallelized over a [`Pool`] of worker threads (DESIGN.md §5).
 //!
 //! For each transformer layer:
 //!   pass A  — stream every calibration batch through the (not yet
 //!             quantized) layer, capture the four weight-input streams and
 //!             the dynamic token scores, turn scores into the importance
 //!             matrix R (Sec. 4.3 + Eq. 4), and accumulate the scaled
-//!             Hessians H = 2·X·R²·Xᵀ via the L1 Pallas kernel;
+//!             Hessians H = 2·X·R²·Xᵀ via the L1 Pallas kernel. Batches
+//!             are sharded across the workers in bounded windows (peak
+//!             memory stays O(jobs) partial Hessians); each worker returns
+//!             its per-batch partial Hessians and the coordinator reduces
+//!             them **in batch order**, so the sum is bit-identical to the
+//!             serial path no matter how many workers ran;
 //!   solve   — quantize the seven weights against their stream's Hessian
-//!             (GPTQ / LDLQ-VQ HLO modules, or RTN which needs no data);
+//!             (GPTQ / LDLQ-VQ HLO modules, or RTN which needs no data).
+//!             The seven solves are independent and dispatch to the pool
+//!             concurrently; results are applied in `Module::ALL` order;
 //!   pass B  — recompute the layer outputs with the *quantized* weights so
 //!             the next layer calibrates on what it will actually see at
-//!             inference (standard GPTQ practice).
+//!             inference (standard GPTQ practice). Each batch's hidden
+//!             state updates independently, so this also fans out.
 //!
 //! Modes: RTN, GPTQ (no rotate, uniform), QuaRot (rotate, uniform), SQ
 //! (scale only), RSQ (rotate + scale), and the VQ variants of
@@ -27,12 +36,14 @@ use crate::model::fuse::fuse_gains;
 use crate::model::outliers::kurtosis_ratio;
 use crate::model::rotate::{rotate_params, rotation_matrix};
 use crate::model::ParamSet;
-use crate::runtime::{self, Engine};
+use crate::runtime::{self, Engine, SharedLiteral};
 use crate::tensor::Tensor;
+use crate::util::Pool;
 
 use super::strategy::{LayerScores, Strategy};
 use super::vq::e8_codebook;
 
+/// Which quantizer family to run (the paper's baselines + RSQ + VQ rows).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
     /// Round-to-nearest (data-free baseline).
@@ -52,6 +63,8 @@ pub enum Method {
 }
 
 impl Method {
+    /// Parse a CLI spelling (`rsq`, `quarot-vq`, …); case-insensitive.
+    /// Inverse of [`Method::name`].
     pub fn parse(s: &str) -> Option<Method> {
         match s.to_ascii_lowercase().as_str() {
             "rtn" => Some(Method::Rtn),
@@ -65,6 +78,7 @@ impl Method {
         }
     }
 
+    /// Canonical CLI spelling; `Method::parse(m.name()) == Some(m)`.
     pub fn name(&self) -> &'static str {
         match self {
             Method::Rtn => "rtn",
@@ -77,25 +91,32 @@ impl Method {
         }
     }
 
+    /// Does this method apply the randomized-Hadamard rotation first?
     pub fn rotates(&self) -> bool {
         matches!(self, Method::QuaRot | Method::Rsq | Method::QuaRotVq | Method::RsqVq)
     }
 
+    /// Does this method weight tokens by importance (scaled Hessians)?
     pub fn scales(&self) -> bool {
         matches!(self, Method::Sq | Method::Rsq | Method::RsqVq)
     }
 
+    /// Does this method use the E8 codebook + LDLQ instead of GPTQ's grid?
     pub fn vector_quant(&self) -> bool {
         matches!(self, Method::QuaRotVq | Method::RsqVq)
     }
 }
 
+/// Everything one `quantize` run needs beyond the model + data.
 #[derive(Clone, Debug)]
 pub struct QuantOptions {
+    /// quantizer family (see [`Method`])
     pub method: Method,
     /// importance strategy used when `method.scales()`
     pub strategy: Strategy,
+    /// quantization bit width (paper Tab. 5 sweeps 2-4)
     pub bits: u32,
+    /// Hessian dampening fraction added to the diagonal (GPTQ's λ)
     pub damp: f32,
     /// calibration sequence length (must be one of cfg.seq_lens)
     pub seq_len: usize,
@@ -103,11 +124,18 @@ pub struct QuantOptions {
     pub expansion: usize,
     /// Fig. 7: scale only these modules (None = all seven)
     pub module_mask: Option<HashSet<Module>>,
+    /// seed for the randomized-Hadamard rotation (varied across runs)
     pub rot_seed: u64,
+    /// scheduler worker threads (`--jobs`): 1 = serial, 0 = one per
+    /// hardware thread. Any value produces bit-identical output.
+    pub jobs: usize,
+    /// log per-layer reconstruction error to stderr
     pub verbose: bool,
 }
 
 impl QuantOptions {
+    /// Defaults matching the paper's main configuration (AttnCon r_min
+    /// 0.05, damp 0.01, no expansion, serial scheduler).
     pub fn new(method: Method, bits: u32, seq_len: usize) -> Self {
         QuantOptions {
             method,
@@ -118,27 +146,56 @@ impl QuantOptions {
             expansion: 1,
             module_mask: None,
             rot_seed: 0x5157, // "QW"
+            jobs: 1,
             verbose: false,
         }
     }
 
+    /// Largest quantization level for the configured bit width.
     pub fn maxq(&self) -> f32 {
         ((1u64 << self.bits) - 1) as f32
     }
 }
 
+/// Per-run accounting returned next to the quantized parameters.
 #[derive(Clone, Debug, Default)]
 pub struct QuantReport {
     /// Σ over weights of tr((W-Q)H(W-Q)ᵀ), per layer
     pub layer_err: Vec<f32>,
+    /// weight kurtosis ratio before the rotate step
     pub kurtosis_before: f32,
+    /// weight kurtosis ratio after the rotate step (lower ⇒ fewer outliers)
     pub kurtosis_after: f32,
+    /// end-to-end wall time of the whole `quantize` call
     pub wall_seconds: f64,
+    /// calibration batches consumed (after padding/expansion)
     pub batches: usize,
+    /// worker threads the scheduler actually used
+    pub jobs: usize,
+    /// total seconds in pass A (capture + Hessian accumulation), all layers
+    pub pass_a_seconds: f64,
+    /// total seconds in the solve phase (GPTQ/LDLQ/RTN), all layers
+    pub solve_seconds: f64,
+    /// total seconds in pass B (quantized re-forward), all layers
+    pub pass_b_seconds: f64,
+}
+
+/// Per-batch pass-A output: one partial Hessian per input stream, in
+/// [`InputStream`] order, plus the uniform-weighted set when a partial
+/// module mask needs both (Fig. 7).
+struct BatchHessians {
+    scaled: Vec<Tensor>,
+    uniform: Option<Vec<Tensor>>,
 }
 
 /// Quantize `params` with the given options; returns the quantized set and
 /// a report. `params` is cloned — the caller keeps the full-precision model.
+///
+/// Work is dispatched over `opts.jobs` worker threads sharing `engine`.
+/// The output is **bit-identical for every jobs value**: workers only
+/// compute independent per-batch / per-module values, and every
+/// floating-point reduction (Hessian sums, layer error sums) happens on
+/// the coordinator thread in the serial path's order (DESIGN.md §5).
 pub fn quantize(
     engine: &Engine,
     params: &ParamSet,
@@ -150,9 +207,11 @@ pub fn quantize(
     if !cfg.seq_lens.contains(&opts.seq_len) {
         bail!("seq_len {} not in artifact set {:?}", opts.seq_len, cfg.seq_lens);
     }
+    let pool = Pool::new(opts.jobs);
     let mut p = params.clone();
     let mut report = QuantReport {
         kurtosis_before: kurtosis_ratio(&p),
+        jobs: pool.jobs(),
         ..Default::default()
     };
 
@@ -164,23 +223,43 @@ pub fn quantize(
     }
     report.kurtosis_after = kurtosis_ratio(&p);
 
-    // --- RTN short-circuit: data-free ---
+    // --- RTN short-circuit: data-free, so every (layer, module) solve is
+    // independent; the layers×7 grid fans out in windows so peak memory
+    // stays O(jobs) quantized tensors, applied in grid order ---
     if opts.method == Method::Rtn {
-        for l in 0..cfg.layers {
-            let mut errsum = 0.0;
-            for m in Module::ALL {
+        let ts = Instant::now();
+        let nmod = Module::ALL.len();
+        let total = cfg.layers * nmod;
+        let window = pool.jobs() * 2;
+        let mut errsum = 0.0f32;
+        for start in (0..total).step_by(window) {
+            let n = window.min(total - start);
+            let solved = pool.run(n, |off| -> Result<(Tensor, f32)> {
+                let k = start + off;
+                let (l, m) = (k / nmod, Module::ALL[k % nmod]);
                 let (o, i) = cfg.weight_shape(m);
-                let w = p.weight(l, m).clone();
-                let outs = engine.exec(
+                let w = p.weight(l, m);
+                let outs = engine.exec_ref(
                     &format!("rtn_{o}x{i}"),
-                    &[runtime::tensor_literal(&w)?, runtime::scalar_literal(opts.maxq())],
+                    &[&runtime::tensor_literal(w)?, &runtime::scalar_literal(opts.maxq())],
                 )?;
                 let q = runtime::literal_tensor(&outs[0])?;
-                errsum += q.sub(&w).frob_norm().powi(2);
+                let err = q.sub(w).frob_norm().powi(2);
+                Ok((q, err))
+            });
+            for (off, solved) in solved.into_iter().enumerate() {
+                let k = start + off;
+                let (l, m) = (k / nmod, Module::ALL[k % nmod]);
+                let (q, err) = solved?;
+                errsum += err;
                 p.set_weight(l, m, q);
+                if k % nmod == nmod - 1 {
+                    report.layer_err.push(errsum);
+                    errsum = 0.0;
+                }
             }
-            report.layer_err.push(errsum);
         }
+        report.solve_seconds = ts.elapsed().as_secs_f64();
         report.wall_seconds = t0.elapsed().as_secs_f64();
         return Ok((p, report));
     }
@@ -200,23 +279,23 @@ pub fn quantize(
     let lname = format!("layer_fwd_t{t}");
     let hess_d = format!("hess_d_t{t}");
     let hess_ff = format!("hess_ff_t{t}");
-    let codebook_lit = if opts.method.vector_quant() {
-        Some(runtime::tensor_literal(&e8_codebook(cfg.ldlq_k, opts.rot_seed))?)
+    let codebook_lit: Option<SharedLiteral> = if opts.method.vector_quant() {
+        Some(runtime::shared_literal(&e8_codebook(cfg.ldlq_k, opts.rot_seed))?)
     } else {
         None
     };
 
-    // initial hidden states: embed every batch once
-    let emb_lit = runtime::tensor_literal(&p.tensors[0])?;
-    let pos_lit = runtime::tensor_literal(&p.tensors[1])?;
-    let mut z_lits = Vec::with_capacity(batches.len());
-    let mut tok_lits = Vec::with_capacity(batches.len());
-    for b in &batches {
-        let tl = runtime::tokens_literal(b, t)?;
-        let z = engine.exec_ref(&format!("embed_t{t}"), &[&tl, &emb_lit, &pos_lit])?;
-        tok_lits.push(tl);
-        z_lits.push(z.into_iter().next().unwrap());
-    }
+    // initial hidden states: embed every batch once (fans out per batch)
+    let emb_lit = runtime::shared_literal(&p.tensors[0])?;
+    let pos_lit = runtime::shared_literal(&p.tensors[1])?;
+    let mut z_lits: Vec<SharedLiteral> = pool
+        .run(batches.len(), |bi| -> Result<SharedLiteral> {
+            let tl = runtime::tokens_literal(batches[bi], t)?;
+            let z = engine.exec_ref(&format!("embed_t{t}"), &[&tl, emb_lit.get(), pos_lit.get()])?;
+            Ok(z.into_iter().next().unwrap().into())
+        })
+        .into_iter()
+        .collect::<Result<_>>()?;
 
     // A partial module mask (Fig. 7) needs BOTH Hessians per stream: the
     // masked modules use the scaled one, the rest the uniform one. When the
@@ -229,49 +308,85 @@ pub fn quantize(
             .map(|m| m.len() < Module::ALL.len())
             .unwrap_or(false);
 
+    // Fan-out window for the per-batch phases: a few tasks per worker keeps
+    // the pool busy while bounding in-flight results to O(jobs), not
+    // O(batches); windows are processed in order, so reductions and
+    // in-place updates keep the serial path's exact order.
+    let window = pool.jobs() * 2;
+
     for l in 0..cfg.layers {
         // layer params as literals, once per layer
         let base = 2 + l * 9;
-        let lp: Vec<xla::Literal> = (0..9)
-            .map(|k| runtime::tensor_literal(&p.tensors[base + k]))
+        let lp: Vec<SharedLiteral> = (0..9)
+            .map(|k| runtime::shared_literal(&p.tensors[base + k]))
             .collect::<Result<_>>()?;
 
-        // --- pass A: captures + scores -> scaled Hessians ---
+        // --- pass A: captures + scores -> per-batch partial Hessians,
+        // computed across the pool in windows, reduced here in batch
+        // order ---
+        let ta = Instant::now();
         let mut h_scaled: [Option<Tensor>; 4] = [None, None, None, None];
         let mut h_uniform: [Option<Tensor>; 4] = [None, None, None, None];
-        for (bi, batch) in batches.iter().enumerate() {
-            let mut ins: Vec<&xla::Literal> = vec![&z_lits[bi]];
-            ins.extend(lp.iter());
-            let outs = engine.exec_ref(&lname, &ins)?;
-            // outs: z2, xa, xo, xf, xd, attn_con, act_norm, act_diff, token_sim
-            let scores = LayerScores {
-                attn_con: rows_of(&runtime::literal_tensor(&outs[5])?),
-                act_norm: rows_of(&runtime::literal_tensor(&outs[6])?),
-                act_diff: rows_of(&runtime::literal_tensor(&outs[7])?),
-                token_sim: rows_of(&runtime::literal_tensor(&outs[8])?),
-            };
-            let strategy = if opts.method.scales() { opts.strategy } else { Strategy::Uniform };
-            let r = strategy.importance(
-                &cfg, t, batch.len(), Some(&scores), Some(batch), Some(&freq));
-            let r_lit = runtime::tensor_literal(&Tensor::from_vec(
-                &[batch.len(), t],
-                r.iter().flatten().cloned().collect(),
-            ))?;
-            let uni_lit = runtime::tensor_literal(&Tensor::ones(&[batch.len(), t]))?;
-            for (si, xout) in [(0usize, 1usize), (1, 2), (2, 3), (3, 4)] {
-                let hess_mod = if si == 3 { &hess_ff } else { &hess_d };
-                let h = engine.exec_ref(hess_mod, &[&outs[xout], &r_lit])?;
-                accumulate(&mut h_scaled[si], runtime::literal_tensor(&h[0])?);
-                if needs_uniform {
-                    let hu = engine.exec_ref(hess_mod, &[&outs[xout], &uni_lit])?;
-                    accumulate(&mut h_uniform[si], runtime::literal_tensor(&hu[0])?);
+        for start in (0..batches.len()).step_by(window) {
+            let n = window.min(batches.len() - start);
+            let partials = pool.run(n, |off| -> Result<BatchHessians> {
+                let bi = start + off;
+                let mut ins: Vec<&xla::Literal> = Vec::with_capacity(10);
+                ins.push(z_lits[bi].get());
+                ins.extend(lp.iter().map(SharedLiteral::get));
+                // outs: z2, xa, xo, xf, xd, attn_con, act_norm, act_diff, token_sim
+                let outs = engine.exec_ref(&lname, &ins)?;
+                let scores = LayerScores {
+                    attn_con: rows_of(&runtime::literal_tensor(&outs[5])?),
+                    act_norm: rows_of(&runtime::literal_tensor(&outs[6])?),
+                    act_diff: rows_of(&runtime::literal_tensor(&outs[7])?),
+                    token_sim: rows_of(&runtime::literal_tensor(&outs[8])?),
+                };
+                let strategy = if opts.method.scales() { opts.strategy } else { Strategy::Uniform };
+                let batch = batches[bi];
+                let r = strategy.importance(
+                    &cfg, t, batch.len(), Some(&scores), Some(batch), Some(&freq));
+                let r_lit = runtime::tensor_literal(&Tensor::from_vec(
+                    &[batch.len(), t],
+                    r.iter().flatten().cloned().collect(),
+                ))?;
+                let uni_lit = if needs_uniform {
+                    Some(runtime::tensor_literal(&Tensor::ones(&[batch.len(), t]))?)
+                } else {
+                    None
+                };
+                let mut scaled = Vec::with_capacity(4);
+                let mut uniform = uni_lit.as_ref().map(|_| Vec::with_capacity(4));
+                for (si, xout) in [(0usize, 1usize), (1, 2), (2, 3), (3, 4)] {
+                    let hess_mod = if si == 3 { &hess_ff } else { &hess_d };
+                    let h = engine.exec_ref(hess_mod, &[&outs[xout], &r_lit])?;
+                    scaled.push(runtime::literal_tensor(&h[0])?);
+                    if let (Some(u), Some(ul)) = (uniform.as_mut(), uni_lit.as_ref()) {
+                        let hu = engine.exec_ref(hess_mod, &[&outs[xout], ul])?;
+                        u.push(runtime::literal_tensor(&hu[0])?);
+                    }
+                }
+                Ok(BatchHessians { scaled, uniform })
+            });
+            for part in partials {
+                let part = part?;
+                for (si, h) in part.scaled.into_iter().enumerate() {
+                    accumulate(&mut h_scaled[si], h);
+                }
+                if let Some(us) = part.uniform {
+                    for (si, h) in us.into_iter().enumerate() {
+                        accumulate(&mut h_uniform[si], h);
+                    }
                 }
             }
         }
+        report.pass_a_seconds += ta.elapsed().as_secs_f64();
 
-        // --- solve: quantize the seven weights ---
-        let mut errsum = 0.0f32;
-        for m in Module::ALL {
+        // --- solve: the seven per-module quantizations fan out; results
+        // are applied (and errors summed) in Module::ALL order ---
+        let ts = Instant::now();
+        let solved = pool.run(Module::ALL.len(), |mi| -> Result<(Tensor, f32)> {
+            let m = Module::ALL[mi];
             let scaled = match &opts.module_mask {
                 Some(mask) => opts.method.scales() && mask.contains(&m),
                 None => opts.method.scales(),
@@ -292,7 +407,7 @@ pub fn quantize(
             let outs = if opts.method.vector_quant() {
                 engine.exec_ref(
                     &format!("ldlq_{o}x{i}"),
-                    &[&w_lit, &h_lit, codebook_lit.as_ref().unwrap(), &damp_lit],
+                    &[&w_lit, &h_lit, codebook_lit.as_ref().unwrap().get(), &damp_lit],
                 )?
             } else {
                 engine.exec_ref(
@@ -300,27 +415,46 @@ pub fn quantize(
                     &[&w_lit, &h_lit, &maxq_lit, &damp_lit],
                 )?
             };
-            errsum += runtime::literal_scalar(&outs[1])?;
-            p.set_weight(l, m, runtime::literal_tensor(&outs[0])?);
+            Ok((runtime::literal_tensor(&outs[0])?, runtime::literal_scalar(&outs[1])?))
+        });
+        let mut errsum = 0.0f32;
+        for (m, solved) in Module::ALL.into_iter().zip(solved) {
+            let (q, err) = solved?;
+            errsum += err;
+            p.set_weight(l, m, q);
         }
+        report.solve_seconds += ts.elapsed().as_secs_f64();
         report.layer_err.push(errsum);
         if opts.verbose {
             eprintln!("[quant:{}] layer {l}: hessian-weighted err {errsum:.3}", opts.method.name());
         }
 
-        // --- pass B: propagate through the quantized layer ---
+        // --- pass B: propagate through the quantized layer; every batch's
+        // hidden state updates independently, so this fans out too.
         // (skipped for the last layer: its outputs feed nothing — saves
-        //  1/L of the pass-B forward cost; EXPERIMENTS.md §Perf)
+        //  1/L of the pass-B forward cost; DESIGN.md §7)
         if l + 1 < cfg.layers {
-            let lp_q: Vec<xla::Literal> = (0..9)
-                .map(|k| runtime::tensor_literal(&p.tensors[base + k]))
+            let tb = Instant::now();
+            let lp_q: Vec<SharedLiteral> = (0..9)
+                .map(|k| runtime::shared_literal(&p.tensors[base + k]))
                 .collect::<Result<_>>()?;
-            for z in z_lits.iter_mut() {
-                let mut ins: Vec<&xla::Literal> = vec![z];
-                ins.extend(lp_q.iter());
-                let outs = engine.exec_ref(&lname, &ins)?;
-                *z = outs.into_iter().next().unwrap();
+            // windowed like pass A: old hidden states are replaced in
+            // place per window, so peak memory is batches + O(jobs)
+            // literals, not 2x batches
+            for start in (0..batches.len()).step_by(window) {
+                let n = window.min(batches.len() - start);
+                let next_z = pool.run(n, |off| -> Result<SharedLiteral> {
+                    let mut ins: Vec<&xla::Literal> = Vec::with_capacity(10);
+                    ins.push(z_lits[start + off].get());
+                    ins.extend(lp_q.iter().map(SharedLiteral::get));
+                    let outs = engine.exec_ref(&lname, &ins)?;
+                    Ok(outs.into_iter().next().unwrap().into())
+                });
+                for (off, z) in next_z.into_iter().enumerate() {
+                    z_lits[start + off] = z?;
+                }
             }
+            report.pass_b_seconds += tb.elapsed().as_secs_f64();
         }
     }
 
@@ -328,6 +462,7 @@ pub fn quantize(
     Ok((p, report))
 }
 
+/// Index of an input stream inside the pass-A Hessian accumulators.
 fn stream_index(s: InputStream) -> usize {
     match s {
         InputStream::Xa => 0,
@@ -365,6 +500,17 @@ mod tests {
     }
 
     #[test]
+    fn method_parse_aliases_and_case() {
+        assert_eq!(Method::parse("RSQ"), Some(Method::Rsq));
+        assert_eq!(Method::parse("QuaRot"), Some(Method::QuaRot));
+        assert_eq!(Method::parse("rsqvq"), Some(Method::RsqVq));
+        assert_eq!(Method::parse("quarotvq"), Some(Method::QuaRotVq));
+        assert_eq!(Method::parse("rsq-vq"), Some(Method::RsqVq));
+        assert_eq!(Method::parse(""), None);
+        assert_eq!(Method::parse("rsq "), None, "no trimming — CLI passes exact tokens");
+    }
+
+    #[test]
     fn method_semantics() {
         assert!(Method::Rsq.rotates() && Method::Rsq.scales());
         assert!(Method::QuaRot.rotates() && !Method::QuaRot.scales());
@@ -378,5 +524,13 @@ mod tests {
         assert_eq!(QuantOptions::new(Method::Rsq, 2, 64).maxq(), 3.0);
         assert_eq!(QuantOptions::new(Method::Rsq, 3, 64).maxq(), 7.0);
         assert_eq!(QuantOptions::new(Method::Rsq, 4, 64).maxq(), 15.0);
+    }
+
+    #[test]
+    fn default_options_are_serial() {
+        let o = QuantOptions::new(Method::Rsq, 3, 64);
+        assert_eq!(o.jobs, 1, "parallelism is opt-in via --jobs");
+        assert_eq!(o.expansion, 1);
+        assert!(o.module_mask.is_none());
     }
 }

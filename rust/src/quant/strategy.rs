@@ -14,9 +14,13 @@ use crate::model::ModelConfig;
 /// ([B, T] row-major, one row per sample in the batch).
 #[derive(Clone, Debug)]
 pub struct LayerScores {
+    /// attention each token receives, summed over queries and heads
     pub attn_con: Vec<Vec<f32>>,
+    /// L2 norm of each token's activation
     pub act_norm: Vec<Vec<f32>>,
+    /// negated ‖Layer(z) − z‖ (steadier tokens score higher)
     pub act_diff: Vec<Vec<f32>>,
+    /// negated mean cosine similarity to the other tokens
     pub token_sim: Vec<Vec<f32>>,
 }
 
@@ -67,6 +71,7 @@ impl Strategy {
         }
     }
 
+    /// Canonical CLI spelling; `Strategy::parse(&s.name()) == Some(s)`.
     pub fn name(&self) -> String {
         match self {
             Strategy::Uniform => "uniform".into(),
@@ -81,6 +86,8 @@ impl Strategy {
         }
     }
 
+    /// True for strategies that need per-layer score streams or the corpus
+    /// frequency table; heuristic masks (First-N, Chunk, …) are static.
     pub fn is_dynamic(&self) -> bool {
         matches!(
             self,
@@ -189,6 +196,33 @@ mod tests {
             assert_eq!(Strategy::parse(&st.name()), Some(st), "{s}");
         }
         assert_eq!(Strategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn parse_defaults_and_malformed_args() {
+        // dynamic strategies default r_min to 0.01 when the arg is omitted
+        // or unparsable; their name() then round-trips through parse()
+        for s in ["attncon", "actnorm:xyz", "tokenfreq"] {
+            let st = Strategy::parse(s).unwrap();
+            match st {
+                Strategy::AttnCon { r_min }
+                | Strategy::ActNorm { r_min }
+                | Strategy::TokenFreq { r_min } => assert_eq!(r_min, 0.01, "{s}"),
+                other => panic!("{s} parsed to {other:?}"),
+            }
+            assert_eq!(Strategy::parse(&st.name()), Some(st), "{s}");
+        }
+        // heuristic strategies require a well-formed arg
+        assert_eq!(Strategy::parse("firstn"), None);
+        assert_eq!(Strategy::parse("firstn:abc"), None);
+        assert_eq!(Strategy::parse("chunk:3"), None, "chunk needs k/m");
+        assert_eq!(Strategy::parse("chunk:a/b"), None);
+        // case-insensitive names
+        assert_eq!(Strategy::parse("UNIFORM"), Some(Strategy::Uniform));
+        assert_eq!(
+            Strategy::parse("AttnCon:0.05"),
+            Some(Strategy::AttnCon { r_min: 0.05 })
+        );
     }
 
     #[test]

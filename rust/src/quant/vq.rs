@@ -16,7 +16,7 @@ use crate::util::Pcg;
 /// Build a [k, 8] codebook of E8 lattice points scaled so typical
 /// unit-RMS weight groups are covered. Memoized per (k, seed): the shell
 /// enumeration costs ~150 ms and every VQ quantization run needs the same
-/// book (EXPERIMENTS.md §Perf).
+/// book (DESIGN.md §Perf).
 pub fn e8_codebook(k: usize, seed: u64) -> Tensor {
     use std::sync::Mutex;
     static CACHE: Mutex<Vec<((usize, u64), Tensor)>> = Mutex::new(Vec::new());

@@ -247,7 +247,8 @@ pub fn fig8(args: &Args) -> Result<()> {
         for s in run_seeds(args) {
             let opts = seeded(QuantOptions::new(method, bits, calib_t), s);
             let calib = ctx.calib(CorpusKind::Wiki, calib_n, calib_t, s);
-            let (q, _) = crate::quant::quantize(&ctx.engine, &ctx.params, &calib, &opts)?;
+            let (q, _) =
+                crate::quant::quantize(&ctx.engine, &ctx.params, &calib, &ctx.with_jobs(opts))?;
             for (i, &c) in ctxs.iter().enumerate() {
                 per_ctx[i].push(crate::eval::perplexity(&ctx.engine, &q, &ctx.eval, c)?);
             }

@@ -45,6 +45,9 @@ pub struct Ctx {
     pub params: ParamSet,
     pub eval: CalibSet,
     pub train_seed: u64,
+    /// scheduler worker count from `--jobs`, applied to every
+    /// quantization this context runs (output is jobs-invariant)
+    pub jobs: usize,
 }
 
 impl Ctx {
@@ -72,7 +75,7 @@ impl Ctx {
             train_seed,
             2,
         );
-        Ok(Ctx { engine, params, eval, train_seed })
+        Ok(Ctx { engine, params, eval, train_seed, jobs: args.jobs() })
     }
 
     /// Fresh calibration set for one seeded run (stream decorrelated from
@@ -82,16 +85,28 @@ impl Ctx {
         CalibSet::generate(cfg.vocab, kind, n, t, self.train_seed, 100 + run_seed)
     }
 
-    /// Quantize + Wiki-PPL at context `eval_t` for one seeded run.
+    /// Quantize + Wiki-PPL at context `eval_t` for one seeded run. The
+    /// context's `--jobs` setting is applied unless the caller already
+    /// raised `opts.jobs` above the serial default.
     pub fn quant_ppl(
         &self,
         opts: &QuantOptions,
         calib: &CalibSet,
         eval_t: usize,
     ) -> Result<(ParamSet, f64)> {
-        let (q, _) = quantize(&self.engine, &self.params, calib, opts)?;
+        let opts = self.with_jobs(opts.clone());
+        let (q, _) = quantize(&self.engine, &self.params, calib, &opts)?;
         let ppl = perplexity(&self.engine, &q, &self.eval, eval_t)?;
         Ok((q, ppl))
+    }
+
+    /// Stamp this context's `--jobs` worker count onto `opts` (no-op when
+    /// the caller already set a non-default value).
+    pub fn with_jobs(&self, mut opts: QuantOptions) -> QuantOptions {
+        if opts.jobs == 1 {
+            opts.jobs = self.jobs;
+        }
+        opts
     }
 }
 

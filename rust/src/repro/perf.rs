@@ -1,7 +1,7 @@
 //! Performance profiling driver (`rsq perf`) — the L3 side of the perf
-//! deliverable. Times every stage of the RSQ pipeline, prints the engine's
-//! per-module breakdown, and reports end-to-end throughput. Results feed
-//! EXPERIMENTS.md §Perf.
+//! deliverable. Times every stage of the RSQ pipeline, sweeps the parallel
+//! scheduler's `--jobs` values, prints the engine's per-module breakdown,
+//! and reports end-to-end throughput. Results feed DESIGN.md §Perf.
 
 use std::time::Instant;
 
@@ -14,7 +14,7 @@ use crate::util::{json::Json, Args, Bench};
 use super::{print_header, write_record, Ctx};
 
 pub fn perf(args: &Args) -> Result<()> {
-    print_header("Performance profile", "EXPERIMENTS.md §Perf");
+    print_header("Performance profile", "DESIGN.md §Perf");
     let config = args.str_or("config", "small");
     let ctx = Ctx::prepare(&config, args)?;
     let cfg = ctx.engine.config().clone();
@@ -51,6 +51,41 @@ pub fn perf(args: &Args) -> Result<()> {
                 .set("method", method.name())
                 .set("seconds", per)
                 .set("ktok_per_s", tokens as f64 / per / 1e3),
+        );
+    }
+
+    // scheduler scaling: same RSQ run at increasing worker counts. The
+    // outputs are bit-identical (tested in integration_pipeline); only the
+    // wall clock moves.
+    println!("\n--- scheduler scaling (rsq, --jobs sweep) ---");
+    let mut sweep = vec![1usize, 2, 4];
+    sweep.push(args.jobs());
+    sweep.sort_unstable();
+    sweep.dedup();
+    let mut jobs_results = Vec::new();
+    let mut serial_s = 0.0f64;
+    for jobs in sweep {
+        let mut o = QuantOptions::new(Method::Rsq, 3, t);
+        o.jobs = jobs;
+        let t0 = Instant::now();
+        let (_, rep) = quantize(&ctx.engine, &ctx.params, &calib, &o)?;
+        let secs = t0.elapsed().as_secs_f64();
+        if jobs == 1 {
+            serial_s = secs;
+        }
+        let speedup = if secs > 0.0 && serial_s > 0.0 { serial_s / secs } else { 1.0 };
+        println!(
+            "jobs={:<3} {:>8.3}s  speedup {:>5.2}x  [pass A {:.3}s | solve {:.3}s | pass B {:.3}s]",
+            rep.jobs, secs, speedup, rep.pass_a_seconds, rep.solve_seconds, rep.pass_b_seconds
+        );
+        jobs_results.push(
+            Json::obj()
+                .set("jobs", rep.jobs)
+                .set("seconds", secs)
+                .set("speedup", speedup)
+                .set("pass_a_s", rep.pass_a_seconds)
+                .set("solve_s", rep.solve_seconds)
+                .set("pass_b_s", rep.pass_b_seconds),
         );
     }
 
@@ -110,5 +145,10 @@ pub fn perf(args: &Args) -> Result<()> {
         .report();
 
     ctx.engine.print_stats();
-    write_record("perf", Json::obj().set("methods", Json::Arr(results)))
+    write_record(
+        "perf",
+        Json::obj()
+            .set("methods", Json::Arr(results))
+            .set("jobs_sweep", Json::Arr(jobs_results)),
+    )
 }

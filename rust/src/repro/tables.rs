@@ -164,7 +164,8 @@ pub fn table3(args: &Args) -> Result<()> {
             for s in run_seeds(args) {
                 let opts = seeded(QuantOptions::new(method, bits, t), s);
                 let calib = ctx.calib(CorpusKind::Wiki, n, t, s);
-                let (q, _) = crate::quant::quantize(&ctx.engine, &ctx.params, &calib, &opts)?;
+                let (q, _) =
+                    crate::quant::quantize(&ctx.engine, &ctx.params, &calib, &ctx.with_jobs(opts))?;
                 let res = longctx_suite(&ctx.engine, &q, eval_t, 3, lc_n)?;
                 for (i, r) in res.iter().enumerate() {
                     per_task[i].push(100.0 * r.score);
@@ -337,7 +338,8 @@ pub fn table7(args: &Args) -> Result<()> {
             for s in run_seeds(args) {
                 let opts = seeded(QuantOptions::new(method, bits, t), s);
                 let calib = ctx.calib(CorpusKind::Wiki, n, t, s);
-                let (q, _) = crate::quant::quantize(&ctx.engine, &ctx.params, &calib, &opts)?;
+                let (q, _) =
+                    crate::quant::quantize(&ctx.engine, &ctx.params, &calib, &ctx.with_jobs(opts))?;
                 for (i, &l) in levels.iter().enumerate() {
                     let r = crate::eval::longctx::kv_retrieval(
                         &ctx.engine, &q, eval_t, l, 3, lc_n)?;

@@ -6,29 +6,70 @@
 //! `client.compile` -> `execute`. Every module is compiled at most once per
 //! process; executions validate input arity/shape against the manifest
 //! before hitting PJRT so shape bugs fail with a readable error.
+//!
+//! The engine is **shared across the scheduler's worker threads** (see
+//! DESIGN.md §5): the compile cache and the per-module stats live behind
+//! `Mutex`es, compiled executables are handed out as `Arc` clones, and
+//! `exec_ref` holds no lock while PJRT executes — concurrent executions of
+//! the same (or different) modules proceed in parallel.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use super::manifest::Manifest;
 
+/// Compile cache + execute front-end for one artifact directory.
+///
+/// One `Engine` is created per model config and shared by reference across
+/// the whole process, including `quant::pipeline`'s worker threads.
+/// One compile-cache entry: a per-module lock so a slow first-use compile
+/// only blocks callers of the *same* module, never unrelated cache hits.
+type CacheSlot = Arc<Mutex<Option<Arc<xla::PjRtLoadedExecutable>>>>;
+
 pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
+    /// Parsed `manifest.txt` of the artifact set (module + param specs).
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    cache: Mutex<HashMap<String, CacheSlot>>,
+    /// serializes `client.compile` calls: compilation is the one path that
+    /// hands out new wrappers around the client handle, so it must not
+    /// race itself (see the thread-safety contract below)
+    compile_lock: Mutex<()>,
     /// cumulative (calls, seconds) per module — feeds the perf report
-    stats: RefCell<HashMap<String, (u64, f64)>>,
+    stats: Mutex<HashMap<String, (u64, f64)>>,
 }
+
+// SAFETY — the thread-safety contract (DESIGN.md §5). Sharing the engine
+// across threads rests on:
+//
+// 1. The PJRT C API requires implementations to support concurrent calls
+//    (the CPU plugin is internally synchronized), so `compile` and
+//    `execute` may run from any thread; the `xla` crate merely does not
+//    declare this.
+// 2. All rust-side mutable state (`cache`, `stats`) is behind `Mutex`es.
+// 3. The client handle is never cloned by this module, and `compile` —
+//    the one crate API that mints new wrappers around the client handle —
+//    is serialized by `compile_lock`, so a rust-side non-atomic refcount
+//    inside the client wrapper is never mutated concurrently by us.
+// 4. Cached executables are retained by the cache for the engine's whole
+//    lifetime, so worker threads only ever drop `Arc` clones (atomic),
+//    never the underlying executable.
+//
+// AUDIT REQUIREMENT on the vendored `xla` crate: `execute` and the
+// literal/buffer paths used in `exec_ref` must not clone/drop a
+// non-atomic shared handle internally. If a vendored crate bump violates
+// this, run with `--jobs 1` (the default) until it is fixed.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
 
 impl Engine {
     /// Load the artifact set for `config` (e.g. "tiny") from
-    /// `artifacts/<config>/`, honoring RSQ_ARTIFACTS.
+    /// `artifacts/<config>/`, honoring `RSQ_ARTIFACTS`.
     pub fn load(config: &str) -> Result<Engine> {
         let dir = crate::artifacts_dir(config);
         let manifest = Manifest::load(&dir)?;
@@ -37,18 +78,32 @@ impl Engine {
             client,
             dir,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(HashMap::new()),
+            cache: Mutex::new(HashMap::new()),
+            compile_lock: Mutex::new(()),
+            stats: Mutex::new(HashMap::new()),
         })
     }
 
+    /// The model config baked into this artifact set.
     pub fn config(&self) -> &crate::model::ModelConfig {
         &self.manifest.config
     }
 
     /// Compile (or fetch cached) one module.
-    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
+    ///
+    /// The global map lock is held only to fetch the module's cache slot;
+    /// the compile itself runs under that slot's own lock. A module is
+    /// still compiled at most once (concurrent first-use requests queue on
+    /// the slot), but a slow compile never blocks cache hits — or first
+    /// compiles — of other modules. A failed compile leaves the slot
+    /// empty, so a later call retries.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let slot: CacheSlot = {
+            let mut cache = self.cache.lock().unwrap();
+            cache.entry(name.to_string()).or_default().clone()
+        };
+        let mut slot = slot.lock().unwrap();
+        if let Some(e) = slot.as_ref() {
             return Ok(e.clone());
         }
         let spec = self.manifest.module(name)?;
@@ -57,12 +112,14 @@ impl Engine {
         let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
             .with_context(|| format!("parse HLO text {path:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile module {name}"))?;
-        let exe = Rc::new(exe);
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        let exe = {
+            let _serialize = self.compile_lock.lock().unwrap();
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compile module {name}"))?
+        };
+        let exe = Arc::new(exe);
+        *slot = Some(exe.clone());
         let dt = t0.elapsed().as_secs_f64();
         if std::env::var_os("RSQ_VERBOSE").is_some() {
             eprintln!("[engine] compiled {name} in {dt:.2}s");
@@ -80,7 +137,7 @@ impl Engine {
     /// Borrowed-input variant of [`Engine::exec`]: avoids the deep C-side
     /// `Literal::clone` per argument that the owned API forces on callers
     /// reusing inputs across calls (the pipeline's layer params and hidden
-    /// states). ~1.5-2x end-to-end quantization speedup — EXPERIMENTS §Perf.
+    /// states). ~1.5-2x end-to-end quantization speedup — DESIGN.md §7.
     pub fn exec_ref(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
         let spec = self.manifest.module(name)?;
         if inputs.len() != spec.inputs.len() {
@@ -104,7 +161,7 @@ impl Engine {
         let outs = tuple.decompose_tuple()?;
         let dt = t0.elapsed().as_secs_f64();
         {
-            let mut stats = self.stats.borrow_mut();
+            let mut stats = self.stats.lock().unwrap();
             let e = stats.entry(name.to_string()).or_insert((0, 0.0));
             e.0 += 1;
             e.1 += dt;
@@ -115,11 +172,14 @@ impl Engine {
         Ok(outs)
     }
 
-    /// Per-module cumulative call counts/time (perf report; EXPERIMENTS §Perf).
+    /// Per-module cumulative (calls, total seconds), sorted by total time,
+    /// aggregated across every thread that executed through this engine
+    /// (the perf report; DESIGN.md §7).
     pub fn stats(&self) -> Vec<(String, u64, f64)> {
         let mut v: Vec<(String, u64, f64)> = self
             .stats
-            .borrow()
+            .lock()
+            .unwrap()
             .iter()
             .map(|(k, &(n, s))| (k.clone(), n, s))
             .collect();
@@ -127,6 +187,7 @@ impl Engine {
         v
     }
 
+    /// Print [`Engine::stats`] as the human-readable perf table.
     pub fn print_stats(&self) {
         println!("--- engine module stats (by total time) ---");
         for (name, n, s) in self.stats() {

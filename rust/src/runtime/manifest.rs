@@ -12,25 +12,39 @@ use anyhow::{bail, Context, Result};
 
 use crate::model::ModelConfig;
 
+/// Declared dtype + shape of one module input (execute-time validation).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct InputSpec {
-    pub dtype: String, // "float32" | "int32"
+    /// "float32" | "int32"
+    pub dtype: String,
+    /// dims; empty = scalar
     pub shape: Vec<usize>,
 }
 
+/// One AOT-compiled module as recorded by python/compile/aot.py.
 #[derive(Clone, Debug)]
 pub struct ModuleSpec {
+    /// manifest key, e.g. `layer_fwd_t64`
     pub name: String,
+    /// HLO text file, relative to the artifact directory
     pub file: String,
+    /// input specs in call order
     pub inputs: Vec<InputSpec>,
+    /// outputs in the module's return tuple
     pub nout: usize,
+    /// free-form note from the lowering side (DESIGN.md §Hardware-Adaptation)
     pub note: String,
 }
 
+/// Parsed `manifest.txt`: the contract between the L2 compiler and the
+/// L3 coordinator for one model config.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// model hyper-parameters baked into the artifact set
     pub config: ModelConfig,
+    /// (name, shape) of every parameter, in python's flat order
     pub params: Vec<(String, Vec<usize>)>,
+    /// module name -> spec
     pub modules: BTreeMap<String, ModuleSpec>,
 }
 
@@ -42,6 +56,8 @@ fn parse_shape(s: &str) -> Vec<usize> {
 }
 
 impl Manifest {
+    /// Parse manifest text (see the module docs for the line format) and
+    /// cross-validate the parameter contract.
     pub fn parse(text: &str) -> Result<Manifest> {
         let mut kv = BTreeMap::new();
         let mut params = Vec::new();
@@ -122,6 +138,7 @@ impl Manifest {
         Ok(m)
     }
 
+    /// Read + parse `<dir>/manifest.txt`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.txt");
         let text = std::fs::read_to_string(&path)
@@ -152,6 +169,7 @@ impl Manifest {
         Ok(())
     }
 
+    /// Spec for one module, with a listing of known names on miss.
     pub fn module(&self, name: &str) -> Result<&ModuleSpec> {
         self.modules.get(name).with_context(|| {
             format!(

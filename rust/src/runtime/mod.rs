@@ -5,10 +5,12 @@
 //! lowered every module; here we parse the manifest, compile each module on
 //! the PJRT CPU client (cached), and expose typed execute helpers.
 //!
-//! Threading note: the `xla` crate's `PjRtClient` is `Rc`-based (not Send),
-//! so all PJRT calls happen on the coordinator thread; pipeline worker
-//! threads (quant::pipeline) handle host-side stages only. On this 1-core
-//! box that costs nothing; DESIGN.md §Substitutions records it.
+//! Threading (DESIGN.md §5): [`Engine`] is `Sync` — its compile cache and
+//! stats are mutex-guarded and the PJRT C API is thread-safe — so the
+//! quantization scheduler's worker threads (`util::Pool`) all execute
+//! through one shared engine. Literals that workers must *share* (hidden
+//! states, layer params) travel as [`SharedLiteral`]; literals a worker
+//! creates and consumes itself stay plain `xla::Literal`.
 
 pub mod engine;
 pub mod manifest;
@@ -19,10 +21,56 @@ pub use manifest::{Manifest, ModuleSpec};
 use crate::tensor::Tensor;
 use anyhow::Result;
 
+/// An [`xla::Literal`] wrapped for sharing across the scheduler's worker
+/// threads.
+///
+/// The `xla` crate declares no `Send`/`Sync` on `Literal`, but a literal is
+/// an owned, immutable host buffer: nothing in this crate mutates one after
+/// construction, and PJRT only *reads* argument literals during execute.
+/// This wrapper scopes that assertion to the places that actually share
+/// literals, instead of blanket-unsafe-impl'ing the foreign type.
+pub struct SharedLiteral(xla::Literal);
+
+// SAFETY: see the type-level comment — the wrapped literal is treated as
+// immutable for the wrapper's whole lifetime, and the underlying buffer is
+// a plain host allocation with no thread affinity.
+unsafe impl Send for SharedLiteral {}
+unsafe impl Sync for SharedLiteral {}
+
+impl SharedLiteral {
+    /// Borrow the underlying literal for an engine call.
+    pub fn get(&self) -> &xla::Literal {
+        &self.0
+    }
+
+    /// Unwrap back into the owned literal.
+    pub fn into_inner(self) -> xla::Literal {
+        self.0
+    }
+}
+
+impl From<xla::Literal> for SharedLiteral {
+    fn from(lit: xla::Literal) -> Self {
+        SharedLiteral(lit)
+    }
+}
+
+impl std::ops::Deref for SharedLiteral {
+    type Target = xla::Literal;
+    fn deref(&self) -> &xla::Literal {
+        &self.0
+    }
+}
+
 /// f32 tensor -> XLA literal with the same shape.
 pub fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
     let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
     Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+/// f32 tensor -> literal already wrapped for cross-thread sharing.
+pub fn shared_literal(t: &Tensor) -> Result<SharedLiteral> {
+    Ok(tensor_literal(t)?.into())
 }
 
 /// i32 token matrix [rows, cols] -> XLA literal.

@@ -71,6 +71,19 @@ impl Args {
         self.flags.iter().any(|f| f == key) || self.get(key).map(|v| v == "true").unwrap_or(false)
     }
 
+    /// Scheduler worker count: `--jobs N`, or `--jobs auto` / `--jobs 0`
+    /// for one worker per hardware thread. Defaults to 1 (serial) — the
+    /// parallel scheduler is bit-identical but opt-in.
+    pub fn jobs(&self) -> usize {
+        match self.get("jobs") {
+            None => 1,
+            Some("auto") | Some("0") => crate::util::pool::max_parallelism(),
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--jobs expects an integer or 'auto', got {v:?}")),
+        }
+    }
+
     /// Comma-separated list option.
     pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
         match self.get(key) {
@@ -122,5 +135,20 @@ mod tests {
     #[should_panic]
     fn bad_int_panics() {
         parse("--seeds abc").usize_or("seeds", 1);
+    }
+
+    #[test]
+    fn jobs_parsing() {
+        assert_eq!(parse("quantize").jobs(), 1, "serial by default");
+        assert_eq!(parse("--jobs 4").jobs(), 4);
+        assert_eq!(parse("--jobs=2").jobs(), 2);
+        assert!(parse("--jobs auto").jobs() >= 1);
+        assert!(parse("--jobs 0").jobs() >= 1, "0 = one per hardware thread");
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_jobs_panics() {
+        parse("--jobs many").jobs();
     }
 }

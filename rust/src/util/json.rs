@@ -1,7 +1,7 @@
 //! Minimal JSON *writer* (serde is not in the vendor set).
 //!
-//! Experiment drivers dump machine-readable run records (EXPERIMENTS.md
-//! links them) and the score-visualization driver (paper Figs. 10-14)
+//! Experiment drivers dump machine-readable run records under results/
+//! (DESIGN.md §Perf) and the score-visualization driver (paper Figs. 10-14)
 //! writes per-layer score series. Only construction + serialization —
 //! nothing in this repo parses JSON.
 

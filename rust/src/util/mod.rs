@@ -1,18 +1,20 @@
 //! Infrastructure substrates: RNG, bench harness, CLI parsing, JSON output,
-//! and the property-testing helper.
+//! the worker pool, and the property-testing helper.
 //!
 //! These exist because the offline vendor set (see Cargo.toml) has no
-//! `rand`, `criterion`, `clap`, or `proptest`; each submodule is a small,
-//! tested, dependency-free substitute.
+//! `rand`, `criterion`, `clap`, `proptest`, or `rayon`; each submodule is a
+//! small, tested, dependency-free substitute.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 
 pub use bench::Bench;
 pub use cli::Args;
+pub use pool::Pool;
 pub use rng::Pcg;
 
 /// Mean of a slice (0.0 for empty input).

@@ -1,0 +1,130 @@
+//! Fixed-size `std::thread` worker pool for the layer-quantization
+//! scheduler (no rayon/crossbeam in the vendor set).
+//!
+//! [`Pool::run`] fans an indexed task list out over scoped OS threads and
+//! returns the results **in task order**, whatever order the workers finish
+//! in. That ordering contract is what lets the quantization pipeline keep
+//! its bit-determinism guarantee (DESIGN.md §5): workers only compute
+//! independent per-task values, and every floating-point *reduction* over
+//! those values happens on the calling thread in a fixed order.
+//!
+//! Tasks are claimed from a shared atomic counter (work stealing in its
+//! simplest form), so an uneven task list — e.g. the ff×ff Hessian next to
+//! three d×d ones — still load-balances.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker-pool handle. Cheap to construct; threads are scoped to each
+/// [`Pool::run`] call, so an idle `Pool` holds no OS resources.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    jobs: usize,
+}
+
+/// Number of hardware threads, as reported by the OS (>= 1).
+pub fn max_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl Pool {
+    /// Pool with `jobs` workers; `jobs == 0` means "one per hardware
+    /// thread" (the `--jobs auto` spelling).
+    pub fn new(jobs: usize) -> Pool {
+        Pool { jobs: if jobs == 0 { max_parallelism() } else { jobs } }
+    }
+
+    /// Worker count this pool dispatches with.
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Run `f(0), f(1), …, f(n-1)` across the workers and return the
+    /// results in index order.
+    ///
+    /// With `jobs == 1` (or fewer than two tasks) this degenerates to a
+    /// plain serial loop on the calling thread — the serial and parallel
+    /// paths are the same code executing the same per-task closures, which
+    /// is what makes `--jobs N` bit-identical to `--jobs 1` for pure `f`.
+    ///
+    /// A panic in any task propagates to the caller after all workers
+    /// have been joined.
+    pub fn run<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.jobs <= 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let done = Mutex::new(Vec::with_capacity(n));
+        std::thread::scope(|s| {
+            for _ in 0..self.jobs.min(n) {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i);
+                    done.lock().unwrap().push((i, v));
+                });
+            }
+        });
+        let mut out = done.into_inner().unwrap();
+        out.sort_by_key(|&(i, _)| i);
+        out.into_iter().map(|(_, v)| v).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_task_order() {
+        for jobs in [1, 2, 4, 9] {
+            let got = Pool::new(jobs).run(17, |i| i * i);
+            let want: Vec<usize> = (0..17).map(|i| i * i).collect();
+            assert_eq!(got, want, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_task_lists() {
+        let p = Pool::new(4);
+        assert_eq!(p.run(0, |i| i), Vec::<usize>::new());
+        assert_eq!(p.run(1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn more_workers_than_tasks() {
+        assert_eq!(Pool::new(64).run(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn zero_means_auto() {
+        assert!(Pool::new(0).jobs() >= 1);
+        assert_eq!(Pool::new(3).jobs(), 3);
+    }
+
+    #[test]
+    fn parallel_matches_serial_reduction() {
+        // the pipeline's usage pattern: compute in parallel, reduce in order
+        let serial: f32 = (0..100).map(|i| (i as f32).sin()).sum();
+        let parts = Pool::new(4).run(100, |i| (i as f32).sin());
+        let parallel: f32 = parts.into_iter().sum();
+        assert_eq!(serial.to_bits(), parallel.to_bits());
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        Pool::new(4).run(8, |i| {
+            if i == 5 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

@@ -2,8 +2,8 @@
 //!
 //! Offline substitute for the `rand` crate (not in the vendor set). Used
 //! for parameter init, corpus generation, probe-task construction, and the
-//! property-test harness — everything seeded, so every experiment in
-//! EXPERIMENTS.md is reproducible bit-for-bit.
+//! property-test harness — everything seeded, so every experiment
+//! record under results/ is reproducible bit-for-bit (DESIGN.md §Perf).
 
 #[derive(Clone, Debug)]
 pub struct Pcg {

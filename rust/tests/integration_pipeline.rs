@@ -162,6 +162,64 @@ fn vq_methods_produce_finite_weights() {
 }
 
 #[test]
+fn parallel_scheduler_is_bit_identical_to_serial() {
+    // the tentpole contract (DESIGN.md §Threading): any --jobs value
+    // produces exactly the serial result, bit for bit
+    let (eng, p, calib) = setup();
+    for method in [Method::Rtn, Method::Rsq, Method::RsqVq] {
+        let bits = if method.vector_quant() { 2 } else { 3 };
+        let mut o1 = QuantOptions::new(method, bits, 64);
+        o1.jobs = 1;
+        let mut o4 = o1.clone();
+        o4.jobs = 4;
+        let (q1, r1) = quantize(&eng, &p, &calib, &o1).unwrap();
+        let (q4, r4) = quantize(&eng, &p, &calib, &o4).unwrap();
+        assert_eq!(r4.jobs, 4);
+        assert_eq!(r1.layer_err, r4.layer_err, "{method:?} layer errors diverged");
+        assert_eq!(q1.tensors.len(), q4.tensors.len());
+        for (i, (a, b)) in q1.tensors.iter().zip(&q4.tensors).enumerate() {
+            assert_eq!(
+                a.data, b.data,
+                "{method:?} tensor {i}: jobs=4 diverged from jobs=1"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_scheduler_bit_identical_under_partial_module_mask() {
+    // the partial-mask path keeps two Hessian accumulators per stream —
+    // exercise it too (Fig. 7 ablation + needs_uniform reduction)
+    let (eng, p, calib) = setup();
+    let mut o1 = QuantOptions {
+        module_mask: Some(HashSet::from([Module::Wv, Module::Wdown])),
+        ..QuantOptions::new(Method::Rsq, 3, 64)
+    };
+    o1.jobs = 1;
+    let mut o4 = o1.clone();
+    o4.jobs = 4;
+    let (q1, _) = quantize(&eng, &p, &calib, &o1).unwrap();
+    let (q4, _) = quantize(&eng, &p, &calib, &o4).unwrap();
+    for (i, (a, b)) in q1.tensors.iter().zip(&q4.tensors).enumerate() {
+        assert_eq!(a.data, b.data, "masked tensor {i} diverged");
+    }
+}
+
+#[test]
+fn report_phase_timings_cover_the_run() {
+    let (eng, p, calib) = setup();
+    let (_, r) = quantize(&eng, &p, &calib, &QuantOptions::new(Method::Rsq, 3, 64)).unwrap();
+    assert_eq!(r.jobs, 1);
+    assert!(r.pass_a_seconds > 0.0 && r.solve_seconds > 0.0);
+    let phases = r.pass_a_seconds + r.solve_seconds + r.pass_b_seconds;
+    assert!(
+        phases <= r.wall_seconds,
+        "phase timings {phases} exceed wall {}",
+        r.wall_seconds
+    );
+}
+
+#[test]
 fn bad_seq_len_is_rejected() {
     let (eng, p, calib) = setup();
     let opts = QuantOptions::new(Method::Rsq, 3, 48); // not an artifact length

@@ -1,0 +1,62 @@
+#!/usr/bin/env bash
+# Docs gate, wired into the verify flow next to tier-1
+# (`cargo build --release && cargo test -q`):
+#
+#   1. every "DESIGN.md §<section>" reference in the sources resolves to a
+#      real DESIGN.md heading (no toolchain needed);
+#   2. rustdoc builds clean with warnings denied;
+#   3. the tree is rustfmt-clean.
+#
+# Steps 2-3 are skipped with a notice when no rust toolchain is on PATH
+# (the toolchain lives in the build image, not every checkout).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fail=0
+
+# --- 1. DESIGN.md existence + section references ---------------------------
+if [ ! -f DESIGN.md ]; then
+    echo "check-docs: FAIL — sources reference DESIGN.md but it does not exist" >&2
+    exit 1
+fi
+
+# Collect §Name / §N tokens that appear next to a DESIGN.md mention.
+refs=$(grep -rhoE 'DESIGN\.md[^a-zA-Z0-9§]*§[A-Za-z0-9-]+' \
+        rust/src rust/benches rust/tests python examples 2>/dev/null \
+        | grep -oE '§[A-Za-z0-9-]+' | sort -u || true)
+for ref in $refs; do
+    sec="${ref#§}"
+    if ! grep -qiE "^## .*${sec}" DESIGN.md; then
+        echo "check-docs: FAIL — source reference \"DESIGN.md ${ref}\" has no matching '## … ${sec}' heading" >&2
+        fail=1
+    fi
+done
+
+# Quoted-section spelling: see DESIGN.md "Substitutions"
+quoted=$(grep -rhoE 'DESIGN\.md "[A-Za-z-]+"' \
+        rust/src rust/benches rust/tests python examples 2>/dev/null \
+        | grep -oE '"[A-Za-z-]+"' | tr -d '"' | sort -u || true)
+for sec in $quoted; do
+    if ! grep -qiE "^## .*${sec}" DESIGN.md; then
+        echo "check-docs: FAIL — source reference 'DESIGN.md \"${sec}\"' has no matching heading" >&2
+        fail=1
+    fi
+done
+
+[ "$fail" -eq 0 ] && echo "check-docs: DESIGN.md section references OK"
+
+# --- 2+3. rustdoc + rustfmt ------------------------------------------------
+if command -v cargo >/dev/null 2>&1; then
+    echo "check-docs: cargo doc --no-deps (warnings denied)"
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet || fail=1
+    echo "check-docs: cargo fmt --check"
+    cargo fmt --check || fail=1
+else
+    echo "check-docs: NOTE — cargo not on PATH, skipping rustdoc/fmt checks" >&2
+fi
+
+if [ "$fail" -ne 0 ]; then
+    echo "check-docs: FAILED" >&2
+    exit 1
+fi
+echo "check-docs: OK"

@@ -10,7 +10,7 @@ use rsq::model::fuse::fuse_gains;
 use rsq::model::outliers::{inject_outliers, OutlierSpec};
 use rsq::model::rotate::{rotate_params, rotation_matrix};
 use rsq::model::ParamSet;
-use rsq::quant::{quantize, Method, QuantOptions};
+use rsq::quant::{quantize, Method, QuantOptions, SchedMode};
 use rsq::runtime::Engine;
 use rsq::train::train_or_load;
 use rsq::util::Bench;
@@ -45,28 +45,39 @@ fn main() -> anyhow::Result<()> {
         .iter(|| quantize(&eng, &params, &calib, &opts).unwrap())
         .report();
 
-    // parallel scheduler scaling: identical work, jobs=1 vs jobs=4
-    println!("\n--- scheduler scaling (rsq, jobs=1 vs jobs=4) ---");
+    // scheduler scaling: identical work across jobs=1 vs jobs=4 and the
+    // staged vs cross-layer-pipelined executors
+    println!("\n--- scheduler scaling (rsq, jobs x sched) ---");
     let max_jobs = 4usize;
-    let mut per_jobs = Vec::new();
-    for jobs in [1usize, max_jobs] {
-        let mut o = QuantOptions::new(Method::Rsq, 3, t);
-        o.jobs = jobs;
-        let mean_s = Bench::new(&format!("quantize/rsq_jobs{jobs}"))
-            .samples(5)
-            .throughput_elements(tokens)
-            .iter(|| quantize(&eng, &params, &calib, &o).unwrap())
-            .report();
-        per_jobs.push(mean_s);
+    let mut grid = Vec::new(); // [staged j1, staged j4, pipelined j1, pipelined j4]
+    for mode in [SchedMode::Staged, SchedMode::Pipelined] {
+        for jobs in [1usize, max_jobs] {
+            let mut o = QuantOptions::new(Method::Rsq, 3, t);
+            o.jobs = jobs;
+            o.sched = mode;
+            let mean_s = Bench::new(&format!("quantize/rsq_{}_jobs{jobs}", mode.name()))
+                .samples(5)
+                .throughput_elements(tokens)
+                .iter(|| quantize(&eng, &params, &calib, &o).unwrap())
+                .report();
+            grid.push(mean_s);
+        }
     }
     println!(
-        "scheduler speedup jobs={max_jobs} vs jobs=1: {:.2}x ({} hardware threads)",
-        per_jobs[0] / per_jobs[1],
+        "scheduler speedup jobs={max_jobs} vs jobs=1 (staged): {:.2}x ({} hardware threads)",
+        grid[0] / grid[1],
         rsq::util::pool::max_parallelism()
     );
-    // the determinism contract the speedup rests on (jobs=N bit-identical
-    // to jobs=1, DESIGN.md §5) is asserted by tests/integration_pipeline.rs
-    // ::parallel_scheduler_is_bit_identical_to_serial
+    println!(
+        "barrier elimination (pipelined vs staged): {:.2}x at jobs=1, {:.2}x at jobs={max_jobs}",
+        grid[0] / grid[2],
+        grid[1] / grid[3]
+    );
+    // the determinism contract the speedups rest on (any jobs/sched
+    // combination bit-identical to serial staged, DESIGN.md §5) is
+    // asserted by tests/integration_pipeline.rs
+    // ::parallel_scheduler_is_bit_identical_to_serial and
+    // ::pipelined_executor_bit_identical_to_staged
 
     println!("\n--- host-side stages ---");
     Bench::new("host/corpus_generate_64x64")

@@ -9,15 +9,16 @@
 //!   rsq perf                performance profile (DESIGN.md §Perf)
 //!   rsq all                 every table + figure at default scale
 //!
-//! `--jobs N|auto` selects the quantization scheduler's worker count
-//! (DESIGN.md §Threading); output is bit-identical for every value.
+//! `--jobs N|auto` selects the quantization scheduler's worker count and
+//! `--sched staged|pipelined` its cross-layer phase ordering (DESIGN.md
+//! §Threading); output is bit-identical for every combination.
 
 use anyhow::{bail, Result};
 
 use rsq::corpus::CorpusKind;
 use rsq::eval::tasks::mean_accuracy;
 use rsq::eval::{perplexity, probe_suite};
-use rsq::quant::{quantize, Method, QuantOptions, Strategy};
+use rsq::quant::{quantize, Method, QuantOptions, SchedMode, Strategy};
 use rsq::repro::{self, Ctx};
 use rsq::train::{train, TrainOptions};
 use rsq::util::Args;
@@ -63,7 +64,11 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     let mut opts = QuantOptions::new(method, args.usize_or("bits", 3) as u32, t);
     opts.strategy = strategy;
     opts.expansion = args.usize_or("expansion", 1);
+    opts.damp = args.f32_or("damp", opts.damp);
+    opts.rot_seed = args.u64_or("rot-seed", opts.rot_seed);
     opts.jobs = args.jobs();
+    opts.sched = SchedMode::parse(&args.sched())
+        .ok_or_else(|| anyhow::anyhow!("bad --sched (staged|pipelined)"))?;
     opts.verbose = args.flag("verbose");
     let corpus = CorpusKind::parse(&args.str_or("corpus", "wiki"))
         .ok_or_else(|| anyhow::anyhow!("bad --corpus"))?;
@@ -81,13 +86,15 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     println!("kurtosis     : {:.2} -> {:.2}", report.kurtosis_before, report.kurtosis_after);
     println!("layer errs   : {:?}", report.layer_err);
     println!(
-        "wall         : {:.2}s over {} batches (jobs={}; pass A {:.2}s, solve {:.2}s, pass B {:.2}s)",
+        "wall         : {:.2}s over {} batches (jobs={} sched={}; pass A {:.2}s, solve {:.2}s, pass B {:.2}s, fused {:.2}s)",
         report.wall_seconds,
         report.batches,
         report.jobs,
+        report.sched,
         report.pass_a_seconds,
         report.solve_seconds,
-        report.pass_b_seconds
+        report.pass_b_seconds,
+        report.fused_seconds
     );
     if let Some(out) = args.get("save") {
         q.save(std::path::Path::new(out))?;
@@ -165,10 +172,16 @@ fn print_help() {
                             tokenfreq:R|actnorm:R|actdiff:R|tokensim:R|attncon:R\n\
            --calib-n/-t     calibration samples / sequence length\n\
            --expansion M    dataset expansion factor (paper M=8)\n\
+           --damp F         Hessian dampening fraction (GPTQ's lambda, default 0.01)\n\
+           --rot-seed N     randomized-Hadamard rotation seed (decimal;\n\
+                            default 20823)\n\
            --corpus C       wiki|c4|ptb|redpajama\n\
            --probe-n N      instances per downstream probe task\n\
            --jobs N|auto    scheduler worker threads (default 1; output is\n\
                             bit-identical for every value)\n\
+           --sched M        staged|pipelined cross-layer executor (default\n\
+                            pipelined; both modes bit-identical)\n\
+           --save PATH      write the quantized (or trained) checkpoint\n\
            --verbose        chatty pipeline logging"
     );
 }

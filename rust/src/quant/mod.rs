@@ -3,17 +3,21 @@
 //! - [`strategy`] — the importance strategies of Sec. 4.3 (heuristic:
 //!   First-N, First&Last-N, Chunk; dynamic: TokenFreq, ActNorm, ActDiff,
 //!   TokenSim, AttnCon) plus the Eq. 4 normalization.
-//! - [`pipeline`] — the layer-by-layer coordinator implementing RTN, GPTQ,
-//!   QuaRot, SQ (scale w/o rotate), RSQ (rotate+scale) and the VQ variants,
-//!   with streaming Hessian accumulation and dataset expansion. Work fans
-//!   out over a `util::Pool` of worker threads (`--jobs`), with a
-//!   fixed-order reduction that keeps output bit-identical to the serial
-//!   path (DESIGN.md §Threading).
+//! - [`pipeline`] — the thin coordinator implementing RTN, GPTQ, QuaRot,
+//!   SQ (scale w/o rotate), RSQ (rotate+scale) and the VQ variants, with
+//!   streaming Hessian accumulation and dataset expansion.
+//! - [`sched`] — the staged scheduler the coordinator delegates to: pass
+//!   A / solve / pass B stages dispatched over a `util::Pool` (`--jobs`)
+//!   in staged or cross-layer-pipelined order (`--sched`), with
+//!   fixed-order reductions that keep every combination bit-identical to
+//!   the serial path (DESIGN.md §Threading).
 //! - [`vq`] — E8-derived codebook construction for Tab. 6.
 
 pub mod pipeline;
+pub mod sched;
 pub mod strategy;
 pub mod vq;
 
-pub use pipeline::{quantize, Method, QuantOptions, QuantReport};
+pub use pipeline::{quantize, LayerTiming, Method, QuantOptions, QuantReport};
+pub use sched::SchedMode;
 pub use strategy::Strategy;

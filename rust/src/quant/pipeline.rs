@@ -1,29 +1,21 @@
-//! The RSQ layer-by-layer quantization coordinator (paper Sec. 4.2),
-//! parallelized over a [`Pool`] of worker threads (DESIGN.md §5).
+//! The RSQ layer-by-layer quantization coordinator (paper Sec. 4.2).
 //!
-//! For each transformer layer:
-//!   pass A  — stream every calibration batch through the (not yet
-//!             quantized) layer, capture the four weight-input streams and
-//!             the dynamic token scores, turn scores into the importance
-//!             matrix R (Sec. 4.3 + Eq. 4), and accumulate the scaled
-//!             Hessians H = 2·X·R²·Xᵀ via the L1 Pallas kernel. Batches
-//!             are sharded across the workers in bounded windows (peak
-//!             memory stays O(jobs) partial Hessians); each worker returns
-//!             its per-batch partial Hessians and the coordinator reduces
-//!             them **in batch order**, so the sum is bit-identical to the
-//!             serial path no matter how many workers ran;
-//!   solve   — quantize the seven weights against their stream's Hessian
-//!             (GPTQ / LDLQ-VQ HLO modules, or RTN which needs no data).
-//!             The seven solves are independent and dispatch to the pool
-//!             concurrently; results are applied in `Module::ALL` order;
-//!   pass B  — recompute the layer outputs with the *quantized* weights so
-//!             the next layer calibrates on what it will actually see at
-//!             inference (standard GPTQ practice). Each batch's hidden
-//!             state updates independently, so this also fans out.
+//! This module owns the *what* of a quantization run — [`Method`],
+//! [`QuantOptions`], [`QuantReport`], the rotate step, calibration-data
+//! preparation — and hands the *how* to the staged scheduler in
+//! [`super::sched`]: pass A (capture + scaled Hessians), the per-module
+//! solve, and pass B (quantized re-forward) dispatch over a [`Pool`] of
+//! worker threads, in staged or cross-layer-pipelined order
+//! ([`SchedMode`]), with every floating-point reduction kept in the
+//! serial path's order so any `--jobs`/`--sched` combination is
+//! bit-identical to `--jobs 1` (DESIGN.md §5).
 //!
 //! Modes: RTN, GPTQ (no rotate, uniform), QuaRot (rotate, uniform), SQ
 //! (scale only), RSQ (rotate + scale), and the VQ variants of
 //! QuaRot/RSQ (Tab. 6). Fig. 7's per-module ablation is `module_mask`.
+//!
+//! [`Pool`]: crate::util::Pool
+//! [`SchedMode`]: super::sched::SchedMode
 
 use std::collections::HashSet;
 use std::time::Instant;
@@ -31,16 +23,16 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::corpus::{expand_dataset, CalibSet};
-use crate::model::config::{InputStream, Module};
+use crate::model::config::Module;
 use crate::model::fuse::fuse_gains;
 use crate::model::outliers::kurtosis_ratio;
 use crate::model::rotate::{rotate_params, rotation_matrix};
 use crate::model::ParamSet;
-use crate::runtime::{self, Engine, SharedLiteral};
-use crate::tensor::Tensor;
+use crate::runtime::{self, Engine};
 use crate::util::Pool;
 
-use super::strategy::{LayerScores, Strategy};
+use super::sched::{self, SchedMode};
+use super::strategy::Strategy;
 use super::vq::e8_codebook;
 
 /// Which quantizer family to run (the paper's baselines + RSQ + VQ rows).
@@ -129,13 +121,16 @@ pub struct QuantOptions {
     /// scheduler worker threads (`--jobs`): 1 = serial, 0 = one per
     /// hardware thread. Any value produces bit-identical output.
     pub jobs: usize,
+    /// cross-layer phase ordering (`--sched`); both modes are
+    /// bit-identical, pipelined saves one barrier per layer (DESIGN.md §5)
+    pub sched: SchedMode,
     /// log per-layer reconstruction error to stderr
     pub verbose: bool,
 }
 
 impl QuantOptions {
     /// Defaults matching the paper's main configuration (AttnCon r_min
-    /// 0.05, damp 0.01, no expansion, serial scheduler).
+    /// 0.05, damp 0.01, no expansion, serial pipelined scheduler).
     pub fn new(method: Method, bits: u32, seq_len: usize) -> Self {
         QuantOptions {
             method,
@@ -147,6 +142,7 @@ impl QuantOptions {
             module_mask: None,
             rot_seed: 0x5157, // "QW"
             jobs: 1,
+            sched: SchedMode::Pipelined,
             verbose: false,
         }
     }
@@ -155,6 +151,22 @@ impl QuantOptions {
     pub fn maxq(&self) -> f32 {
         ((1u64 << self.bits) - 1) as f32
     }
+}
+
+/// Wall-clock seconds one layer spent in each scheduler phase. In
+/// pipelined mode, pass B of this layer and pass A of the next run as one
+/// fused sweep recorded in `fused_seconds` (attributed to this layer);
+/// only layer 0 then has a standalone `pass_a_seconds`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayerTiming {
+    /// standalone pass A (capture + Hessian accumulation)
+    pub pass_a_seconds: f64,
+    /// the seven-module solve phase (GPTQ/LDLQ)
+    pub solve_seconds: f64,
+    /// standalone pass B (quantized re-forward; staged mode only)
+    pub pass_b_seconds: f64,
+    /// fused pass B + next layer's pass A (pipelined mode only)
+    pub fused_seconds: f64,
 }
 
 /// Per-run accounting returned next to the quantized parameters.
@@ -172,30 +184,32 @@ pub struct QuantReport {
     pub batches: usize,
     /// worker threads the scheduler actually used
     pub jobs: usize,
-    /// total seconds in pass A (capture + Hessian accumulation), all layers
+    /// scheduler mode the run executed with (`SchedMode::name`)
+    pub sched: String,
+    /// per-layer phase timings (empty for RTN: its windowed grid crosses
+    /// layer boundaries, so only `solve_seconds` is meaningful there)
+    pub layer_timings: Vec<LayerTiming>,
+    /// total seconds in standalone pass A, all layers
     pub pass_a_seconds: f64,
     /// total seconds in the solve phase (GPTQ/LDLQ/RTN), all layers
     pub solve_seconds: f64,
-    /// total seconds in pass B (quantized re-forward), all layers
+    /// total seconds in standalone pass B, all layers (staged mode)
     pub pass_b_seconds: f64,
-}
-
-/// Per-batch pass-A output: one partial Hessian per input stream, in
-/// [`InputStream`] order, plus the uniform-weighted set when a partial
-/// module mask needs both (Fig. 7).
-struct BatchHessians {
-    scaled: Vec<Tensor>,
-    uniform: Option<Vec<Tensor>>,
+    /// total seconds in fused pass-B/pass-A sweeps (pipelined mode)
+    pub fused_seconds: f64,
 }
 
 /// Quantize `params` with the given options; returns the quantized set and
 /// a report. `params` is cloned — the caller keeps the full-precision model.
 ///
-/// Work is dispatched over `opts.jobs` worker threads sharing `engine`.
-/// The output is **bit-identical for every jobs value**: workers only
-/// compute independent per-batch / per-module values, and every
-/// floating-point reduction (Hessian sums, layer error sums) happens on
-/// the coordinator thread in the serial path's order (DESIGN.md §5).
+/// This is a thin coordinator: it validates options, applies the rotate
+/// step, prepares calibration data, then delegates the per-layer phases to
+/// the `quant::sched` executors. Work is dispatched over `opts.jobs`
+/// worker threads sharing `engine`, and the output is **bit-identical for
+/// every jobs value and scheduler mode**: workers only compute independent
+/// per-batch / per-module values, and every floating-point reduction
+/// (Hessian sums, layer error sums) happens on the coordinator thread in
+/// the serial path's order (DESIGN.md §5).
 pub fn quantize(
     engine: &Engine,
     params: &ParamSet,
@@ -212,6 +226,7 @@ pub fn quantize(
     let mut report = QuantReport {
         kurtosis_before: kurtosis_ratio(&p),
         jobs: pool.jobs(),
+        sched: opts.sched.name().to_string(),
         ..Default::default()
     };
 
@@ -223,42 +238,10 @@ pub fn quantize(
     }
     report.kurtosis_after = kurtosis_ratio(&p);
 
-    // --- RTN short-circuit: data-free, so every (layer, module) solve is
-    // independent; the layers×7 grid fans out in windows so peak memory
-    // stays O(jobs) quantized tensors, applied in grid order ---
+    // --- RTN short-circuit: data-free, no calibration pass needed ---
     if opts.method == Method::Rtn {
         let ts = Instant::now();
-        let nmod = Module::ALL.len();
-        let total = cfg.layers * nmod;
-        let window = pool.jobs() * 2;
-        let mut errsum = 0.0f32;
-        for start in (0..total).step_by(window) {
-            let n = window.min(total - start);
-            let solved = pool.run(n, |off| -> Result<(Tensor, f32)> {
-                let k = start + off;
-                let (l, m) = (k / nmod, Module::ALL[k % nmod]);
-                let (o, i) = cfg.weight_shape(m);
-                let w = p.weight(l, m);
-                let outs = engine.exec_ref(
-                    &format!("rtn_{o}x{i}"),
-                    &[&runtime::tensor_literal(w)?, &runtime::scalar_literal(opts.maxq())],
-                )?;
-                let q = runtime::literal_tensor(&outs[0])?;
-                let err = q.sub(w).frob_norm().powi(2);
-                Ok((q, err))
-            });
-            for (off, solved) in solved.into_iter().enumerate() {
-                let k = start + off;
-                let (l, m) = (k / nmod, Module::ALL[k % nmod]);
-                let (q, err) = solved?;
-                errsum += err;
-                p.set_weight(l, m, q);
-                if k % nmod == nmod - 1 {
-                    report.layer_err.push(errsum);
-                    errsum = 0.0;
-                }
-            }
-        }
+        report.layer_err = sched::solve::rtn_grid(engine, &cfg, opts, &pool, &mut p)?;
         report.solve_seconds = ts.elapsed().as_secs_f64();
         report.wall_seconds = t0.elapsed().as_secs_f64();
         return Ok((p, report));
@@ -276,27 +259,6 @@ pub fn quantize(
     report.batches = batches.len();
     let freq = calib.token_frequencies(cfg.vocab);
 
-    let lname = format!("layer_fwd_t{t}");
-    let hess_d = format!("hess_d_t{t}");
-    let hess_ff = format!("hess_ff_t{t}");
-    let codebook_lit: Option<SharedLiteral> = if opts.method.vector_quant() {
-        Some(runtime::shared_literal(&e8_codebook(cfg.ldlq_k, opts.rot_seed))?)
-    } else {
-        None
-    };
-
-    // initial hidden states: embed every batch once (fans out per batch)
-    let emb_lit = runtime::shared_literal(&p.tensors[0])?;
-    let pos_lit = runtime::shared_literal(&p.tensors[1])?;
-    let mut z_lits: Vec<SharedLiteral> = pool
-        .run(batches.len(), |bi| -> Result<SharedLiteral> {
-            let tl = runtime::tokens_literal(batches[bi], t)?;
-            let z = engine.exec_ref(&format!("embed_t{t}"), &[&tl, emb_lit.get(), pos_lit.get()])?;
-            Ok(z.into_iter().next().unwrap().into())
-        })
-        .into_iter()
-        .collect::<Result<_>>()?;
-
     // A partial module mask (Fig. 7) needs BOTH Hessians per stream: the
     // masked modules use the scaled one, the rest the uniform one. When the
     // method doesn't scale at all, the "scaled" accumulator already holds
@@ -308,180 +270,33 @@ pub fn quantize(
             .map(|m| m.len() < Module::ALL.len())
             .unwrap_or(false);
 
-    // Fan-out window for the per-batch phases: a few tasks per worker keeps
-    // the pool busy while bounding in-flight results to O(jobs), not
-    // O(batches); windows are processed in order, so reductions and
-    // in-place updates keep the serial path's exact order.
-    let window = pool.jobs() * 2;
+    let ctx = sched::SchedCtx {
+        engine,
+        cfg: &cfg,
+        opts,
+        pool: &pool,
+        batches: &batches,
+        freq: &freq,
+        lname: format!("layer_fwd_t{t}"),
+        hess_d: format!("hess_d_t{t}"),
+        hess_ff: format!("hess_ff_t{t}"),
+        codebook: if opts.method.vector_quant() {
+            Some(runtime::shared_literal(&e8_codebook(cfg.ldlq_k, opts.rot_seed))?)
+        } else {
+            None
+        },
+        needs_uniform,
+    };
+    sched::run_layers(&ctx, &mut p, &mut report)?;
 
-    for l in 0..cfg.layers {
-        // layer params as literals, once per layer
-        let base = 2 + l * 9;
-        let lp: Vec<SharedLiteral> = (0..9)
-            .map(|k| runtime::shared_literal(&p.tensors[base + k]))
-            .collect::<Result<_>>()?;
-
-        // --- pass A: captures + scores -> per-batch partial Hessians,
-        // computed across the pool in windows, reduced here in batch
-        // order ---
-        let ta = Instant::now();
-        let mut h_scaled: [Option<Tensor>; 4] = [None, None, None, None];
-        let mut h_uniform: [Option<Tensor>; 4] = [None, None, None, None];
-        for start in (0..batches.len()).step_by(window) {
-            let n = window.min(batches.len() - start);
-            let partials = pool.run(n, |off| -> Result<BatchHessians> {
-                let bi = start + off;
-                let mut ins: Vec<&xla::Literal> = Vec::with_capacity(10);
-                ins.push(z_lits[bi].get());
-                ins.extend(lp.iter().map(SharedLiteral::get));
-                // outs: z2, xa, xo, xf, xd, attn_con, act_norm, act_diff, token_sim
-                let outs = engine.exec_ref(&lname, &ins)?;
-                let scores = LayerScores {
-                    attn_con: rows_of(&runtime::literal_tensor(&outs[5])?),
-                    act_norm: rows_of(&runtime::literal_tensor(&outs[6])?),
-                    act_diff: rows_of(&runtime::literal_tensor(&outs[7])?),
-                    token_sim: rows_of(&runtime::literal_tensor(&outs[8])?),
-                };
-                let strategy = if opts.method.scales() { opts.strategy } else { Strategy::Uniform };
-                let batch = batches[bi];
-                let r = strategy.importance(
-                    &cfg, t, batch.len(), Some(&scores), Some(batch), Some(&freq));
-                let r_lit = runtime::tensor_literal(&Tensor::from_vec(
-                    &[batch.len(), t],
-                    r.iter().flatten().cloned().collect(),
-                ))?;
-                let uni_lit = if needs_uniform {
-                    Some(runtime::tensor_literal(&Tensor::ones(&[batch.len(), t]))?)
-                } else {
-                    None
-                };
-                let mut scaled = Vec::with_capacity(4);
-                let mut uniform = uni_lit.as_ref().map(|_| Vec::with_capacity(4));
-                for (si, xout) in [(0usize, 1usize), (1, 2), (2, 3), (3, 4)] {
-                    let hess_mod = if si == 3 { &hess_ff } else { &hess_d };
-                    let h = engine.exec_ref(hess_mod, &[&outs[xout], &r_lit])?;
-                    scaled.push(runtime::literal_tensor(&h[0])?);
-                    if let (Some(u), Some(ul)) = (uniform.as_mut(), uni_lit.as_ref()) {
-                        let hu = engine.exec_ref(hess_mod, &[&outs[xout], ul])?;
-                        u.push(runtime::literal_tensor(&hu[0])?);
-                    }
-                }
-                Ok(BatchHessians { scaled, uniform })
-            });
-            for part in partials {
-                let part = part?;
-                for (si, h) in part.scaled.into_iter().enumerate() {
-                    accumulate(&mut h_scaled[si], h);
-                }
-                if let Some(us) = part.uniform {
-                    for (si, h) in us.into_iter().enumerate() {
-                        accumulate(&mut h_uniform[si], h);
-                    }
-                }
-            }
-        }
-        report.pass_a_seconds += ta.elapsed().as_secs_f64();
-
-        // --- solve: the seven per-module quantizations fan out; results
-        // are applied (and errors summed) in Module::ALL order ---
-        let ts = Instant::now();
-        let solved = pool.run(Module::ALL.len(), |mi| -> Result<(Tensor, f32)> {
-            let m = Module::ALL[mi];
-            let scaled = match &opts.module_mask {
-                Some(mask) => opts.method.scales() && mask.contains(&m),
-                None => opts.method.scales(),
-            };
-            let stream = stream_index(m.input_stream());
-            let h = if scaled {
-                h_scaled[stream].as_ref().unwrap()
-            } else if needs_uniform {
-                h_uniform[stream].as_ref().unwrap()
-            } else {
-                h_scaled[stream].as_ref().unwrap() // uniform strategy ⇒ same
-            };
-            let (o, i) = cfg.weight_shape(m);
-            let w_lit = runtime::tensor_literal(p.weight(l, m))?;
-            let h_lit = runtime::tensor_literal(h)?;
-            let damp_lit = runtime::scalar_literal(opts.damp);
-            let maxq_lit = runtime::scalar_literal(opts.maxq());
-            let outs = if opts.method.vector_quant() {
-                engine.exec_ref(
-                    &format!("ldlq_{o}x{i}"),
-                    &[&w_lit, &h_lit, codebook_lit.as_ref().unwrap().get(), &damp_lit],
-                )?
-            } else {
-                engine.exec_ref(
-                    &format!("gptq_{o}x{i}"),
-                    &[&w_lit, &h_lit, &maxq_lit, &damp_lit],
-                )?
-            };
-            Ok((runtime::literal_tensor(&outs[0])?, runtime::literal_scalar(&outs[1])?))
-        });
-        let mut errsum = 0.0f32;
-        for (m, solved) in Module::ALL.into_iter().zip(solved) {
-            let (q, err) = solved?;
-            errsum += err;
-            p.set_weight(l, m, q);
-        }
-        report.solve_seconds += ts.elapsed().as_secs_f64();
-        report.layer_err.push(errsum);
-        if opts.verbose {
-            eprintln!("[quant:{}] layer {l}: hessian-weighted err {errsum:.3}", opts.method.name());
-        }
-
-        // --- pass B: propagate through the quantized layer; every batch's
-        // hidden state updates independently, so this fans out too.
-        // (skipped for the last layer: its outputs feed nothing — saves
-        //  1/L of the pass-B forward cost; DESIGN.md §7)
-        if l + 1 < cfg.layers {
-            let tb = Instant::now();
-            let lp_q: Vec<SharedLiteral> = (0..9)
-                .map(|k| runtime::shared_literal(&p.tensors[base + k]))
-                .collect::<Result<_>>()?;
-            // windowed like pass A: old hidden states are replaced in
-            // place per window, so peak memory is batches + O(jobs)
-            // literals, not 2x batches
-            for start in (0..batches.len()).step_by(window) {
-                let n = window.min(batches.len() - start);
-                let next_z = pool.run(n, |off| -> Result<SharedLiteral> {
-                    let mut ins: Vec<&xla::Literal> = Vec::with_capacity(10);
-                    ins.push(z_lits[start + off].get());
-                    ins.extend(lp_q.iter().map(SharedLiteral::get));
-                    let outs = engine.exec_ref(&lname, &ins)?;
-                    Ok(outs.into_iter().next().unwrap().into())
-                });
-                for (off, z) in next_z.into_iter().enumerate() {
-                    z_lits[start + off] = z?;
-                }
-            }
-            report.pass_b_seconds += tb.elapsed().as_secs_f64();
-        }
+    for lt in &report.layer_timings {
+        report.pass_a_seconds += lt.pass_a_seconds;
+        report.solve_seconds += lt.solve_seconds;
+        report.pass_b_seconds += lt.pass_b_seconds;
+        report.fused_seconds += lt.fused_seconds;
     }
-
     report.wall_seconds = t0.elapsed().as_secs_f64();
     Ok((p, report))
-}
-
-/// Index of an input stream inside the pass-A Hessian accumulators.
-fn stream_index(s: InputStream) -> usize {
-    match s {
-        InputStream::Xa => 0,
-        InputStream::Xo => 1,
-        InputStream::Xf => 2,
-        InputStream::Xd => 3,
-    }
-}
-
-fn accumulate(acc: &mut Option<Tensor>, h: Tensor) {
-    match acc {
-        Some(a) => a.add_in_place(&h),
-        None => *acc = Some(h),
-    }
-}
-
-fn rows_of(t: &Tensor) -> Vec<Vec<f32>> {
-    let (r, c) = (t.shape[0], t.shape[1]);
-    (0..r).map(|i| t.data[i * c..(i + 1) * c].to_vec()).collect()
 }
 
 #[cfg(test)]
@@ -527,9 +342,10 @@ mod tests {
     }
 
     #[test]
-    fn default_options_are_serial() {
+    fn default_options_are_serial_pipelined() {
         let o = QuantOptions::new(Method::Rsq, 3, 64);
         assert_eq!(o.jobs, 1, "parallelism is opt-in via --jobs");
+        assert_eq!(o.sched, SchedMode::Pipelined, "barrier elimination is on by default");
         assert_eq!(o.expansion, 1);
         assert!(o.module_mask.is_none());
     }

@@ -1,0 +1,212 @@
+//! The staged quantization scheduler: how the per-layer phases of
+//! DESIGN.md §2 are ordered and dispatched over the [`Pool`].
+//!
+//! `pipeline::quantize` owns *what* each phase computes (method, strategy,
+//! options); this module owns *when and where* it runs. The stages are:
+//!
+//! - `passes` — the per-batch work: embedding, pass-A capture + partial
+//!   Hessians, pass-B re-forwarding, and the fused pass-B/pass-A step;
+//! - `solve` — the per-weight work: the seven-module solve fan-out and
+//!   the data-free RTN grid.
+//!
+//! Every stage dispatches through [`Pool::run`], [`Pool::run_windowed`]
+//! or [`Pool::update_windowed`], with all floating-point reductions in the
+//! ordered consumer callbacks — the determinism contract of DESIGN.md §5
+//! lives in those three call sites, not in per-stage loops.
+//!
+//! Two executors order the stages across layers ([`SchedMode`]):
+//!
+//! ```text
+//! staged:     A₀ ‖ S₀ ‖ B₀ ‖ A₁ ‖ S₁ ‖ B₁ ‖ A₂ ‖ …      (‖ = pool barrier)
+//! pipelined:  A₀ ‖ S₀ ‖ (B₀+A₁) ‖ S₁ ‖ (B₁+A₂) ‖ …
+//! ```
+//!
+//! The pipelined executor fuses pass B of layer *l* with pass A of layer
+//! *l+1* into one per-batch task: the re-forwarded hidden state feeds the
+//! next layer's capture inside the task, eliminating one barrier and one
+//! coordinator round-trip per batch per layer. Only the solve needs the
+//! fully-reduced Hessians, so this is the only barrier the dataflow
+//! actually requires — and because the fused task computes the *same*
+//! per-batch values in the *same* reduction order, both modes (at any
+//! `--jobs`) are bit-identical to the serial staged path.
+
+pub(crate) mod passes;
+pub(crate) mod solve;
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::model::config::ModelConfig;
+use crate::model::ParamSet;
+use crate::runtime::{Engine, SharedLiteral};
+use crate::util::Pool;
+
+use super::pipeline::{LayerTiming, QuantOptions, QuantReport};
+
+/// How the per-layer phases are ordered across layers (`--sched`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Pass A, solve, pass B each run to completion per layer, with a
+    /// full pool barrier at every phase edge.
+    Staged,
+    /// Pass B of layer *l* and pass A of layer *l+1* fuse into one
+    /// per-batch task — one barrier and one hidden-state round-trip fewer
+    /// per layer. Bit-identical to [`SchedMode::Staged`] (DESIGN.md §5).
+    Pipelined,
+}
+
+impl SchedMode {
+    /// Parse a CLI spelling; case-insensitive. Inverse of [`SchedMode::name`].
+    pub fn parse(s: &str) -> Option<SchedMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "staged" => Some(SchedMode::Staged),
+            "pipelined" | "pipeline" => Some(SchedMode::Pipelined),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling; `SchedMode::parse(m.name()) == Some(m)`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedMode::Staged => "staged",
+            SchedMode::Pipelined => "pipelined",
+        }
+    }
+}
+
+/// Borrowed per-run state every stage of one `quantize` call shares.
+pub(crate) struct SchedCtx<'a> {
+    pub engine: &'a Engine,
+    pub cfg: &'a ModelConfig,
+    pub opts: &'a QuantOptions,
+    pub pool: &'a Pool,
+    /// calibration batches (post expansion + padding); their index order
+    /// is the reduction order of every per-batch phase
+    pub batches: &'a [&'a [Vec<i32>]],
+    /// corpus token-frequency table (TokenFreq strategy)
+    pub freq: &'a [u32],
+    /// `layer_fwd_t{t}` module name
+    pub lname: String,
+    /// `hess_d_t{t}` / `hess_ff_t{t}` module names
+    pub hess_d: String,
+    pub hess_ff: String,
+    /// shared E8 codebook literal (VQ methods only)
+    pub codebook: Option<SharedLiteral>,
+    /// a partial module mask (Fig. 7) needs a second, uniform-weighted
+    /// Hessian accumulator next to the scaled one
+    pub needs_uniform: bool,
+}
+
+/// Drive every layer through pass A → solve → pass B in the configured
+/// [`SchedMode`], recording per-layer phase timings into the report.
+/// Entered with the (possibly rotated) full-precision params; returns
+/// with `p` fully quantized.
+pub(crate) fn run_layers(ctx: &SchedCtx, p: &mut ParamSet, report: &mut QuantReport) -> Result<()> {
+    // initial hidden states: embed every batch once (fans out per batch)
+    let mut z = passes::embed(ctx, p)?;
+    match ctx.opts.sched {
+        SchedMode::Staged => staged(ctx, p, &mut z, report),
+        SchedMode::Pipelined => pipelined(ctx, p, &mut z, report),
+    }
+}
+
+/// The barrier-per-phase executor (PR 1 behavior, kept as the reference
+/// ordering the pipelined mode is tested against).
+fn staged(
+    ctx: &SchedCtx,
+    p: &mut ParamSet,
+    z: &mut [SharedLiteral],
+    report: &mut QuantReport,
+) -> Result<()> {
+    for l in 0..ctx.cfg.layers {
+        let mut lt = LayerTiming::default();
+
+        let ta = Instant::now();
+        let lp = passes::layer_literals(p, l)?;
+        let acc = passes::pass_a(ctx, z, &lp)?;
+        lt.pass_a_seconds = ta.elapsed().as_secs_f64();
+        drop(lp);
+
+        let ts = Instant::now();
+        let errsum = solve::solve_layer(ctx, p, l, &acc)?;
+        lt.solve_seconds = ts.elapsed().as_secs_f64();
+        finish_layer(ctx, report, l, errsum);
+
+        // pass B is skipped for the last layer: its outputs feed nothing
+        // (saves 1/L of the re-forward cost; DESIGN.md §7)
+        if l + 1 < ctx.cfg.layers {
+            let tb = Instant::now();
+            let lp_q = passes::layer_literals(p, l)?;
+            passes::pass_b(ctx, z, &lp_q)?;
+            lt.pass_b_seconds = tb.elapsed().as_secs_f64();
+        }
+        report.layer_timings.push(lt);
+    }
+    Ok(())
+}
+
+/// The cross-layer pipelined executor: after each solve, pass B of the
+/// just-quantized layer and pass A of the next run as one fused per-batch
+/// sweep. Layer 0's pass A has no preceding pass B and runs standalone.
+fn pipelined(
+    ctx: &SchedCtx,
+    p: &mut ParamSet,
+    z: &mut [SharedLiteral],
+    report: &mut QuantReport,
+) -> Result<()> {
+    let layers = ctx.cfg.layers;
+    let mut timings = vec![LayerTiming::default(); layers];
+
+    let ta = Instant::now();
+    let lp0 = passes::layer_literals(p, 0)?;
+    let mut acc = passes::pass_a(ctx, z, &lp0)?;
+    drop(lp0);
+    timings[0].pass_a_seconds = ta.elapsed().as_secs_f64();
+
+    for l in 0..layers {
+        let ts = Instant::now();
+        let errsum = solve::solve_layer(ctx, p, l, &acc)?;
+        timings[l].solve_seconds = ts.elapsed().as_secs_f64();
+        finish_layer(ctx, report, l, errsum);
+
+        if l + 1 < layers {
+            let tf = Instant::now();
+            let lp_q = passes::layer_literals(p, l)?;
+            let lp_next = passes::layer_literals(p, l + 1)?;
+            acc = passes::fused_b_a(ctx, z, &lp_q, &lp_next)?;
+            timings[l].fused_seconds = tf.elapsed().as_secs_f64();
+        }
+    }
+    report.layer_timings.extend(timings);
+    Ok(())
+}
+
+/// Record one layer's solve result (shared by both executors so the
+/// report and the verbose trace are mode-independent).
+fn finish_layer(ctx: &SchedCtx, report: &mut QuantReport, l: usize, errsum: f32) {
+    report.layer_err.push(errsum);
+    if ctx.opts.verbose {
+        eprintln!(
+            "[quant:{}] layer {l}: hessian-weighted err {errsum:.3}",
+            ctx.opts.method.name()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sched_mode_parse_round_trip() {
+        for m in [SchedMode::Staged, SchedMode::Pipelined] {
+            assert_eq!(SchedMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(SchedMode::parse("PIPELINED"), Some(SchedMode::Pipelined));
+        assert_eq!(SchedMode::parse("pipeline"), Some(SchedMode::Pipelined), "alias");
+        assert_eq!(SchedMode::parse("Staged"), Some(SchedMode::Staged));
+        assert_eq!(SchedMode::parse(""), None);
+        assert_eq!(SchedMode::parse("fused"), None);
+    }
+}

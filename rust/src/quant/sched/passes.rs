@@ -1,0 +1,225 @@
+//! Per-batch stages of the scheduler: embedding, pass-A capture, pass-B
+//! re-forwarding, and the fused pass-B/pass-A step of the pipelined
+//! executor (DESIGN.md §2, §5).
+//!
+//! Every function here follows the same shape: workers compute
+//! *independent* per-batch values through [`Pool::run`]-family dispatch,
+//! and the coordinator folds them in batch order via [`HessAccum`] — the
+//! fixed association order that makes every `--jobs` and [`SchedMode`]
+//! combination bit-identical to the serial staged path.
+//!
+//! [`Pool::run`]: crate::util::Pool::run
+//! [`SchedMode`]: super::SchedMode
+
+use anyhow::Result;
+
+use crate::model::config::InputStream;
+use crate::model::ParamSet;
+use crate::runtime::{self, SharedLiteral};
+use crate::tensor::Tensor;
+
+use crate::quant::strategy::{LayerScores, Strategy};
+
+use super::SchedCtx;
+
+/// Per-batch pass-A output: one partial Hessian per input stream, in
+/// [`InputStream`] order, plus the uniform-weighted set when a partial
+/// module mask needs both (Fig. 7).
+pub(crate) struct BatchHessians {
+    scaled: Vec<Tensor>,
+    uniform: Option<Vec<Tensor>>,
+}
+
+/// Coordinator-side Hessian accumulator for one layer: the reduction of
+/// every batch's [`BatchHessians`], folded strictly in batch order.
+#[derive(Default)]
+pub(crate) struct HessAccum {
+    scaled: [Option<Tensor>; 4],
+    uniform: [Option<Tensor>; 4],
+}
+
+impl HessAccum {
+    /// Fold one batch's partial Hessians in. Callers must invoke this in
+    /// batch order — the ordered consumer of a windowed dispatch — so the
+    /// floating-point sum associates exactly like the serial loop.
+    fn absorb(&mut self, bh: BatchHessians) {
+        for (si, h) in bh.scaled.into_iter().enumerate() {
+            accumulate(&mut self.scaled[si], h);
+        }
+        if let Some(us) = bh.uniform {
+            for (si, h) in us.into_iter().enumerate() {
+                accumulate(&mut self.uniform[si], h);
+            }
+        }
+    }
+
+    /// The Hessian a module's solve should quantize against: the scaled
+    /// accumulator when the module is importance-weighted, the uniform
+    /// one when a partial mask left it unscaled (Fig. 7). When the method
+    /// doesn't scale at all the "scaled" accumulator already holds the
+    /// uniform sum (`Strategy::Uniform`), so it serves both.
+    pub fn hessian(&self, stream: InputStream, scaled: bool, needs_uniform: bool) -> &Tensor {
+        let si = stream_index(stream);
+        let slot = if !scaled && needs_uniform { &self.uniform[si] } else { &self.scaled[si] };
+        slot.as_ref().expect("pass A accumulated no Hessian for this stream")
+    }
+}
+
+/// Index of an input stream inside the pass-A Hessian accumulators.
+fn stream_index(s: InputStream) -> usize {
+    match s {
+        InputStream::Xa => 0,
+        InputStream::Xo => 1,
+        InputStream::Xf => 2,
+        InputStream::Xd => 3,
+    }
+}
+
+fn accumulate(acc: &mut Option<Tensor>, h: Tensor) {
+    match acc {
+        Some(a) => a.add_in_place(&h),
+        None => *acc = Some(h),
+    }
+}
+
+fn rows_of(t: &Tensor) -> Vec<Vec<f32>> {
+    let (r, c) = (t.shape[0], t.shape[1]);
+    (0..r).map(|i| t.data[i * c..(i + 1) * c].to_vec()).collect()
+}
+
+/// The nine tensors of layer `l` as shareable literals, in parameter
+/// order (g1, wq, wk, wv, wo, g2, wup, wgate, wdown).
+pub(crate) fn layer_literals(p: &ParamSet, l: usize) -> Result<Vec<SharedLiteral>> {
+    let base = 2 + l * 9;
+    (0..9).map(|k| runtime::shared_literal(&p.tensors[base + k])).collect()
+}
+
+/// One batch through `layer_fwd` with the given layer params; returns all
+/// nine outputs (z2, the four capture streams, the four score streams).
+fn layer_fwd(ctx: &SchedCtx, z: &xla::Literal, lp: &[SharedLiteral]) -> Result<Vec<xla::Literal>> {
+    let mut ins: Vec<&xla::Literal> = Vec::with_capacity(10);
+    ins.push(z);
+    ins.extend(lp.iter().map(SharedLiteral::get));
+    ctx.engine.exec_ref(&ctx.lname, &ins)
+}
+
+/// Turn one batch's `layer_fwd` outputs into its partial Hessians: score
+/// streams → importance R (Sec. 4.3 + Eq. 4) → `H = 2·X·R²·Xᵀ` per
+/// capture stream via the L1 Pallas kernel. Runs inside a worker task.
+fn batch_hessians(ctx: &SchedCtx, bi: usize, outs: &[xla::Literal]) -> Result<BatchHessians> {
+    let t = ctx.opts.seq_len;
+    // outs: z2, xa, xo, xf, xd, attn_con, act_norm, act_diff, token_sim
+    let scores = LayerScores {
+        attn_con: rows_of(&runtime::literal_tensor(&outs[5])?),
+        act_norm: rows_of(&runtime::literal_tensor(&outs[6])?),
+        act_diff: rows_of(&runtime::literal_tensor(&outs[7])?),
+        token_sim: rows_of(&runtime::literal_tensor(&outs[8])?),
+    };
+    let strategy = if ctx.opts.method.scales() { ctx.opts.strategy } else { Strategy::Uniform };
+    let batch = ctx.batches[bi];
+    let r = strategy.importance(
+        ctx.cfg, t, batch.len(), Some(&scores), Some(batch), Some(ctx.freq));
+    let r_lit = runtime::tensor_literal(&Tensor::from_vec(
+        &[batch.len(), t],
+        r.iter().flatten().cloned().collect(),
+    ))?;
+    let uni_lit = if ctx.needs_uniform {
+        Some(runtime::tensor_literal(&Tensor::ones(&[batch.len(), t]))?)
+    } else {
+        None
+    };
+    let mut scaled = Vec::with_capacity(4);
+    let mut uniform = uni_lit.as_ref().map(|_| Vec::with_capacity(4));
+    for (si, xout) in [(0usize, 1usize), (1, 2), (2, 3), (3, 4)] {
+        let hess_mod = if si == 3 { &ctx.hess_ff } else { &ctx.hess_d };
+        let h = ctx.engine.exec_ref(hess_mod, &[&outs[xout], &r_lit])?;
+        scaled.push(runtime::literal_tensor(&h[0])?);
+        if let (Some(u), Some(ul)) = (uniform.as_mut(), uni_lit.as_ref()) {
+            let hu = ctx.engine.exec_ref(hess_mod, &[&outs[xout], ul])?;
+            u.push(runtime::literal_tensor(&hu[0])?);
+        }
+    }
+    Ok(BatchHessians { scaled, uniform })
+}
+
+/// Initial hidden states: embed every calibration batch (one task per
+/// batch; the results are the scheduler's per-batch state from here on).
+pub(crate) fn embed(ctx: &SchedCtx, p: &ParamSet) -> Result<Vec<SharedLiteral>> {
+    let t = ctx.opts.seq_len;
+    let ename = format!("embed_t{t}");
+    let emb_lit = runtime::shared_literal(&p.tensors[0])?;
+    let pos_lit = runtime::shared_literal(&p.tensors[1])?;
+    ctx.pool
+        .run(ctx.batches.len(), |bi| -> Result<SharedLiteral> {
+            let tl = runtime::tokens_literal(ctx.batches[bi], t)?;
+            let z = ctx.engine.exec_ref(&ename, &[&tl, emb_lit.get(), pos_lit.get()])?;
+            Ok(z.into_iter().next().unwrap().into())
+        })
+        .into_iter()
+        .collect()
+}
+
+/// Pass A for one layer: capture + per-batch partial Hessians fan out in
+/// windows; the coordinator folds them in batch order.
+pub(crate) fn pass_a(
+    ctx: &SchedCtx,
+    z: &[SharedLiteral],
+    lp: &[SharedLiteral],
+) -> Result<HessAccum> {
+    let mut acc = HessAccum::default();
+    ctx.pool.run_windowed(
+        z.len(),
+        |bi| -> Result<BatchHessians> {
+            let outs = layer_fwd(ctx, z[bi].get(), lp)?;
+            batch_hessians(ctx, bi, &outs)
+        },
+        |_, bh: Result<BatchHessians>| -> Result<()> {
+            acc.absorb(bh?);
+            Ok(())
+        },
+    )?;
+    Ok(acc)
+}
+
+/// Pass B for one layer: re-forward every batch's hidden state through
+/// the now-quantized layer, replacing each slot in place per window.
+pub(crate) fn pass_b(ctx: &SchedCtx, z: &mut [SharedLiteral], lp_q: &[SharedLiteral]) -> Result<()> {
+    ctx.pool.update_windowed(
+        z,
+        |_, zi| -> Result<(SharedLiteral, ())> {
+            let outs = layer_fwd(ctx, zi.get(), lp_q)?;
+            Ok((outs.into_iter().next().unwrap().into(), ()))
+        },
+        |_, ()| Ok(()),
+    )
+}
+
+/// The pipelined executor's fused step: pass B of layer *l* and pass A of
+/// layer *l+1* as **one** per-batch task. The freshly re-forwarded hidden
+/// state feeds the next layer's capture inside the task — no coordinator
+/// round-trip, no barrier between the two phases. Arithmetic and
+/// reduction order are exactly those of `pass_b` followed by `pass_a`,
+/// so the fusion is invisible in the output bits (DESIGN.md §5).
+pub(crate) fn fused_b_a(
+    ctx: &SchedCtx,
+    z: &mut [SharedLiteral],
+    lp_q: &[SharedLiteral],
+    lp_next: &[SharedLiteral],
+) -> Result<HessAccum> {
+    let mut acc = HessAccum::default();
+    ctx.pool.update_windowed(
+        z,
+        |bi, zi| -> Result<(SharedLiteral, BatchHessians)> {
+            let z2: SharedLiteral =
+                layer_fwd(ctx, zi.get(), lp_q)?.into_iter().next().unwrap().into();
+            let outs = layer_fwd(ctx, z2.get(), lp_next)?;
+            let bh = batch_hessians(ctx, bi, &outs)?;
+            Ok((z2, bh))
+        },
+        |_, bh| {
+            acc.absorb(bh);
+            Ok(())
+        },
+    )?;
+    Ok(acc)
+}

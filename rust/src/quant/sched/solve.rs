@@ -1,0 +1,123 @@
+//! Per-weight stages of the scheduler: the seven-module solve fan-out
+//! (GPTQ / LDLQ-VQ) and the data-free RTN grid (DESIGN.md §2, §5).
+
+use anyhow::Result;
+
+use crate::model::config::{ModelConfig, Module};
+use crate::model::ParamSet;
+use crate::runtime::{self, Engine};
+use crate::tensor::Tensor;
+use crate::util::Pool;
+
+use crate::quant::pipeline::QuantOptions;
+
+use super::passes::HessAccum;
+use super::SchedCtx;
+
+/// Solve one layer: the seven per-module quantizations fan out across the
+/// pool; results are applied to `p` (and errors summed) in `Module::ALL`
+/// order on the coordinator. Returns the layer's Hessian-weighted
+/// reconstruction error Σ tr((W−Q)H(W−Q)ᵀ).
+pub(crate) fn solve_layer(
+    ctx: &SchedCtx,
+    p: &mut ParamSet,
+    l: usize,
+    acc: &HessAccum,
+) -> Result<f32> {
+    let opts = ctx.opts;
+    let solved = ctx.pool.run(Module::ALL.len(), |mi| -> Result<(Tensor, f32)> {
+        let m = Module::ALL[mi];
+        let scaled = match &opts.module_mask {
+            Some(mask) => opts.method.scales() && mask.contains(&m),
+            None => opts.method.scales(),
+        };
+        let h = acc.hessian(m.input_stream(), scaled, ctx.needs_uniform);
+        let (o, i) = ctx.cfg.weight_shape(m);
+        let w_lit = runtime::tensor_literal(p.weight(l, m))?;
+        let h_lit = runtime::tensor_literal(h)?;
+        let damp_lit = runtime::scalar_literal(opts.damp);
+        let maxq_lit = runtime::scalar_literal(opts.maxq());
+        let outs = if opts.method.vector_quant() {
+            ctx.engine.exec_ref(
+                &format!("ldlq_{o}x{i}"),
+                &[&w_lit, &h_lit, ctx.codebook.as_ref().unwrap().get(), &damp_lit],
+            )?
+        } else {
+            ctx.engine.exec_ref(
+                &format!("gptq_{o}x{i}"),
+                &[&w_lit, &h_lit, &maxq_lit, &damp_lit],
+            )?
+        };
+        Ok((runtime::literal_tensor(&outs[0])?, runtime::literal_scalar(&outs[1])?))
+    });
+    let mut errsum = 0.0f32;
+    for (m, s) in Module::ALL.into_iter().zip(solved) {
+        let (q, err) = s?;
+        errsum += err;
+        p.set_weight(l, m, q);
+    }
+    Ok(errsum)
+}
+
+/// The RTN short-circuit: data-free, so every (layer, module) solve is
+/// independent and the `layers × 7` weight grid sweeps through
+/// `Pool::update_windowed` in one windowed dispatch — peak memory stays
+/// O(jobs) quantized tensors. The weights are *moved* out of the
+/// ParamSet for the sweep (gains/embeddings are untouched by RTN, and a
+/// move avoids cloning anything) and spliced back quantized. Returns the
+/// per-layer error sums, accumulated in `Module::ALL` order within each
+/// layer exactly like the solve phase.
+pub(crate) fn rtn_grid(
+    engine: &Engine,
+    cfg: &ModelConfig,
+    opts: &QuantOptions,
+    pool: &Pool,
+    p: &mut ParamSet,
+) -> Result<Vec<f32>> {
+    let nmod = Module::ALL.len();
+    let idxs: Vec<usize> = (0..cfg.layers)
+        .flat_map(|l| Module::ALL.into_iter().map(move |m| cfg.param_index(l, m)))
+        .collect();
+    let mut weights: Vec<Tensor> = idxs
+        .iter()
+        .map(|&i| std::mem::replace(&mut p.tensors[i], Tensor::zeros(&[0])))
+        .collect();
+    let mut layer_err = Vec::with_capacity(cfg.layers);
+    let mut errsum = 0.0f32;
+    pool.update_windowed(
+        &mut weights,
+        |k, w: &Tensor| -> Result<(Tensor, f32)> {
+            let m = Module::ALL[k % nmod];
+            let (o, i) = cfg.weight_shape(m);
+            let outs = engine.exec_ref(
+                &format!("rtn_{o}x{i}"),
+                &[&runtime::tensor_literal(w)?, &runtime::scalar_literal(opts.maxq())],
+            )?;
+            let q = runtime::literal_tensor(&outs[0])?;
+            let err = q.sub(w).frob_norm().powi(2);
+            Ok((q, err))
+        },
+        |k, err| {
+            errsum += err;
+            if k % nmod == nmod - 1 {
+                layer_err.push(errsum);
+                errsum = 0.0;
+            }
+            Ok(())
+        },
+    )?;
+    // on success every slot holds its quantized weight; on error the run
+    // aborts and the gutted ParamSet is dropped with it. The slots hold
+    // empty placeholders here (so set_weight's slot-shape assertion can't
+    // apply) — check each spliced-back tensor against the config instead.
+    let mut quantized = weights.into_iter();
+    for l in 0..cfg.layers {
+        for m in Module::ALL {
+            let q = quantized.next().unwrap();
+            let (o, i) = cfg.weight_shape(m);
+            assert_eq!(q.shape, [o, i], "rtn output shape mismatch at layer {l} {m:?}");
+            p.tensors[cfg.param_index(l, m)] = q;
+        }
+    }
+    Ok(layer_err)
+}

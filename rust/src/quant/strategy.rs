@@ -60,7 +60,14 @@ impl Strategy {
             "firstlastn" => Some(Strategy::FirstLastN(arg?.parse().ok()?)),
             "chunk" => {
                 let (i, of) = arg?.split_once('/')?;
-                Some(Strategy::Chunk { index: i.parse().ok()?, of: of.parse().ok()? })
+                let (index, of): (usize, usize) = (i.parse().ok()?, of.parse().ok()?);
+                // chunks are 1-based: `chunk:0/4` would underflow the
+                // `(index - 1) * chunk` offset and `chunk:1/0` divide by
+                // zero in `importance()`
+                if index == 0 || of == 0 || index > of {
+                    return None;
+                }
+                Some(Strategy::Chunk { index, of })
             }
             "tokenfreq" => Some(Strategy::TokenFreq { r_min: rmin() }),
             "actnorm" => Some(Strategy::ActNorm { r_min: rmin() }),
@@ -160,15 +167,25 @@ fn dyn_scores(raw: &[Vec<f32>], r_min: f32) -> Vec<Vec<f32>> {
 }
 
 /// Eq. 4: linearly map scores into [r_min, r_max=1]. Constant rows map to 1
-/// (no preference expressible -> uniform).
+/// (no preference expressible -> uniform). Non-finite entries (a NaN/inf
+/// leaking out of a score stream) are excluded from the min/max and map to
+/// `r_min`, so they can never poison the importance weights — and through
+/// them the Hessians — with NaN.
 pub fn normalize_eq4(raw: &[f32], r_min: f32) -> Vec<f32> {
-    let lo = raw.iter().cloned().fold(f32::INFINITY, f32::min);
-    let hi = raw.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let finite = || raw.iter().cloned().filter(|v| v.is_finite());
+    let lo = finite().fold(f32::INFINITY, f32::min);
+    let hi = finite().fold(f32::NEG_INFINITY, f32::max);
     if !(hi - lo).is_finite() || hi - lo <= 1e-12 {
-        return vec![1.0; raw.len()];
+        return raw.iter().map(|&r| if r.is_finite() { 1.0 } else { r_min }).collect();
     }
     raw.iter()
-        .map(|&r| r_min + (r - lo) / (hi - lo) * (1.0 - r_min))
+        .map(|&r| {
+            if r.is_finite() {
+                r_min + (r - lo) / (hi - lo) * (1.0 - r_min)
+            } else {
+                r_min
+            }
+        })
         .collect()
 }
 
@@ -226,6 +243,20 @@ mod tests {
     }
 
     #[test]
+    fn parse_rejects_degenerate_chunk_specs() {
+        // chunk:0/4 would underflow `(index - 1) * chunk` in importance()
+        assert_eq!(Strategy::parse("chunk:0/4"), None, "chunks are 1-based");
+        // chunk:1/0 would divide by zero in `t / of`
+        assert_eq!(Strategy::parse("chunk:1/0"), None, "zero chunk count");
+        assert_eq!(Strategy::parse("chunk:0/0"), None);
+        // an index past the last chunk selects nothing meaningful
+        assert_eq!(Strategy::parse("chunk:5/4"), None, "index out of range");
+        // the boundary cases stay valid
+        assert_eq!(Strategy::parse("chunk:1/1"), Some(Strategy::Chunk { index: 1, of: 1 }));
+        assert_eq!(Strategy::parse("chunk:4/4"), Some(Strategy::Chunk { index: 4, of: 4 }));
+    }
+
+    #[test]
     fn eq4_normalization() {
         let r = normalize_eq4(&[0.0, 5.0, 10.0], 0.01);
         assert!((r[0] - 0.01).abs() < 1e-6);
@@ -233,6 +264,30 @@ mod tests {
         assert!((r[2] - 1.0).abs() < 1e-6);
         // constant input -> all ones
         assert_eq!(normalize_eq4(&[3.0, 3.0], 0.01), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn eq4_guards_non_finite_scores() {
+        // a NaN in a score stream must not poison the importance weights
+        // (they feed straight into the Hessian scaling): it maps to r_min
+        // and is excluded from the min/max of the finite entries
+        let r = normalize_eq4(&[0.0, f32::NAN, 10.0], 0.1);
+        assert!(r.iter().all(|v| v.is_finite()), "{r:?}");
+        assert!((r[0] - 0.1).abs() < 1e-6);
+        assert!((r[1] - 0.1).abs() < 1e-6, "NaN maps to r_min");
+        assert!((r[2] - 1.0).abs() < 1e-6);
+        // infinities are non-finite too and must not stretch the range
+        let r = normalize_eq4(&[0.0, f32::INFINITY, 10.0, f32::NEG_INFINITY], 0.1);
+        assert!(r.iter().all(|v| v.is_finite()), "{r:?}");
+        assert!((r[1] - 0.1).abs() < 1e-6);
+        assert!((r[3] - 0.1).abs() < 1e-6);
+        assert!((r[2] - 1.0).abs() < 1e-6, "finite max still maps to 1");
+        // an all-NaN row expresses no preference beyond "untrustworthy"
+        let r = normalize_eq4(&[f32::NAN, f32::NAN], 0.1);
+        assert_eq!(r, vec![0.1, 0.1]);
+        // constant-finite rows with a NaN: finite entries stay uniform
+        let r = normalize_eq4(&[3.0, f32::NAN, 3.0], 0.1);
+        assert_eq!(r, vec![1.0, 0.1, 1.0]);
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::corpus::{CalibSet, CorpusKind};
 use crate::eval::perplexity;
 use crate::model::outliers::{inject_outliers, OutlierSpec};
 use crate::model::ParamSet;
-use crate::quant::{quantize, QuantOptions};
+use crate::quant::{quantize, QuantOptions, SchedMode};
 use crate::runtime::Engine;
 use crate::train::train_or_load;
 use crate::util::{json::Json, Args};
@@ -48,6 +48,9 @@ pub struct Ctx {
     /// scheduler worker count from `--jobs`, applied to every
     /// quantization this context runs (output is jobs-invariant)
     pub jobs: usize,
+    /// scheduler mode from `--sched`, likewise stamped onto every run
+    /// (output is mode-invariant — DESIGN.md §5)
+    pub sched: SchedMode,
 }
 
 impl Ctx {
@@ -75,7 +78,9 @@ impl Ctx {
             train_seed,
             2,
         );
-        Ok(Ctx { engine, params, eval, train_seed, jobs: args.jobs() })
+        let sched = SchedMode::parse(&args.sched())
+            .ok_or_else(|| anyhow::anyhow!("bad --sched (staged|pipelined)"))?;
+        Ok(Ctx { engine, params, eval, train_seed, jobs: args.jobs(), sched })
     }
 
     /// Fresh calibration set for one seeded run (stream decorrelated from
@@ -100,11 +105,15 @@ impl Ctx {
         Ok((q, ppl))
     }
 
-    /// Stamp this context's `--jobs` worker count onto `opts` (no-op when
-    /// the caller already set a non-default value).
+    /// Stamp this context's `--jobs` worker count and `--sched` mode onto
+    /// `opts` — each a no-op when the caller already moved that knob off
+    /// its default (serial / pipelined), so explicit per-run choices win.
     pub fn with_jobs(&self, mut opts: QuantOptions) -> QuantOptions {
         if opts.jobs == 1 {
             opts.jobs = self.jobs;
+        }
+        if opts.sched == SchedMode::Pipelined {
+            opts.sched = self.sched;
         }
         opts
     }

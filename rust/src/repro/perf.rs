@@ -8,7 +8,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::corpus::CorpusKind;
-use crate::quant::{quantize, Method, QuantOptions};
+use crate::quant::{quantize, Method, QuantOptions, SchedMode};
 use crate::util::{json::Json, Args, Bench};
 
 use super::{print_header, write_record, Ctx};
@@ -54,10 +54,12 @@ pub fn perf(args: &Args) -> Result<()> {
         );
     }
 
-    // scheduler scaling: same RSQ run at increasing worker counts. The
-    // outputs are bit-identical (tested in integration_pipeline); only the
-    // wall clock moves.
-    println!("\n--- scheduler scaling (rsq, --jobs sweep) ---");
+    // scheduler scaling: the same RSQ run across worker counts AND the
+    // two cross-layer executors. Every combination is bit-identical
+    // (tested in integration_pipeline); only the wall clock moves. The
+    // staged/pipelined ratio at equal jobs is the per-layer barrier +
+    // round-trip cost the fused executor eliminates (DESIGN.md §5).
+    println!("\n--- scheduler scaling (rsq, --jobs x --sched sweep) ---");
     let mut sweep = vec![1usize, 2, 4];
     sweep.push(args.jobs());
     sweep.sort_unstable();
@@ -65,28 +67,49 @@ pub fn perf(args: &Args) -> Result<()> {
     let mut jobs_results = Vec::new();
     let mut serial_s = 0.0f64;
     for jobs in sweep {
-        let mut o = QuantOptions::new(Method::Rsq, 3, t);
-        o.jobs = jobs;
-        let t0 = Instant::now();
-        let (_, rep) = quantize(&ctx.engine, &ctx.params, &calib, &o)?;
-        let secs = t0.elapsed().as_secs_f64();
-        if jobs == 1 {
-            serial_s = secs;
+        let mut secs_by_mode = [0.0f64; 2];
+        for (k, mode) in [SchedMode::Staged, SchedMode::Pipelined].into_iter().enumerate() {
+            let mut o = QuantOptions::new(Method::Rsq, 3, t);
+            o.jobs = jobs;
+            o.sched = mode;
+            let t0 = Instant::now();
+            let (_, rep) = quantize(&ctx.engine, &ctx.params, &calib, &o)?;
+            let secs = t0.elapsed().as_secs_f64();
+            if jobs == 1 && mode == SchedMode::Staged {
+                serial_s = secs;
+            }
+            secs_by_mode[k] = secs;
+            let speedup = if secs > 0.0 && serial_s > 0.0 { serial_s / secs } else { 1.0 };
+            println!(
+                "sched={:<9} jobs={:<3} {:>8.3}s  speedup {:>5.2}x  \
+                 [pass A {:.3}s | solve {:.3}s | pass B {:.3}s | fused {:.3}s]",
+                rep.sched,
+                rep.jobs,
+                secs,
+                speedup,
+                rep.pass_a_seconds,
+                rep.solve_seconds,
+                rep.pass_b_seconds,
+                rep.fused_seconds
+            );
+            jobs_results.push(
+                Json::obj()
+                    .set("sched", rep.sched.as_str())
+                    .set("jobs", rep.jobs)
+                    .set("seconds", secs)
+                    .set("speedup", speedup)
+                    .set("pass_a_s", rep.pass_a_seconds)
+                    .set("solve_s", rep.solve_seconds)
+                    .set("pass_b_s", rep.pass_b_seconds)
+                    .set("fused_s", rep.fused_seconds),
+            );
         }
-        let speedup = if secs > 0.0 && serial_s > 0.0 { serial_s / secs } else { 1.0 };
-        println!(
-            "jobs={:<3} {:>8.3}s  speedup {:>5.2}x  [pass A {:.3}s | solve {:.3}s | pass B {:.3}s]",
-            rep.jobs, secs, speedup, rep.pass_a_seconds, rep.solve_seconds, rep.pass_b_seconds
-        );
-        jobs_results.push(
-            Json::obj()
-                .set("jobs", rep.jobs)
-                .set("seconds", secs)
-                .set("speedup", speedup)
-                .set("pass_a_s", rep.pass_a_seconds)
-                .set("solve_s", rep.solve_seconds)
-                .set("pass_b_s", rep.pass_b_seconds),
-        );
+        if secs_by_mode[1] > 0.0 {
+            println!(
+                "  barrier elimination at jobs={jobs}: pipelined {:.2}x vs staged",
+                secs_by_mode[0] / secs_by_mode[1]
+            );
+        }
     }
 
     // per-stage micro benches through the engine

@@ -84,6 +84,14 @@ impl Args {
         }
     }
 
+    /// Scheduler phase ordering: `--sched staged|pipelined`. Defaults to
+    /// the cross-layer pipelined executor (bit-identical to staged, one
+    /// barrier fewer per layer — DESIGN.md §5). Returned as the raw
+    /// spelling; `quant::SchedMode::parse` validates it.
+    pub fn sched(&self) -> String {
+        self.str_or("sched", "pipelined")
+    }
+
     /// Comma-separated list option.
     pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
         match self.get(key) {
@@ -150,5 +158,12 @@ mod tests {
     #[should_panic]
     fn bad_jobs_panics() {
         parse("--jobs many").jobs();
+    }
+
+    #[test]
+    fn sched_parsing() {
+        assert_eq!(parse("quantize").sched(), "pipelined", "pipelined by default");
+        assert_eq!(parse("--sched staged").sched(), "staged");
+        assert_eq!(parse("--sched=pipelined").sched(), "pipelined");
     }
 }

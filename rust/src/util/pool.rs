@@ -8,6 +8,13 @@
 //! independent per-task values, and every floating-point *reduction* over
 //! those values happens on the calling thread in a fixed order.
 //!
+//! [`Pool::run_windowed`] and [`Pool::update_windowed`] layer a bounded
+//! dispatch window on top of `run`: tasks are released in windows of
+//! [`Pool::window`] and their results streamed to an ordered consumer
+//! callback between windows, so peak in-flight memory stays O(jobs)
+//! instead of O(tasks). The `quant::sched` stages are built on these two
+//! primitives and never hand-roll window loops.
+//!
 //! Tasks are claimed from a shared atomic counter (work stealing in its
 //! simplest form), so an uneven task list — e.g. the ff×ff Hessian next to
 //! three d×d ones — still load-balances.
@@ -75,6 +82,79 @@ impl Pool {
         out.sort_by_key(|&(i, _)| i);
         out.into_iter().map(|(_, v)| v).collect()
     }
+
+    /// Tasks dispatched per window: a couple per worker keeps the pool
+    /// busy across task-length variance while bounding in-flight results
+    /// to O(jobs), not O(tasks).
+    pub fn window(&self) -> usize {
+        self.jobs * 2
+    }
+
+    /// Run `f(0), …, f(n-1)` in windows of [`Pool::window`], streaming
+    /// each result to `consume` **in index order** on the calling thread.
+    ///
+    /// This is `run` plus the windowed "fan out, reduce in order" idiom
+    /// the quantization stages share: `consume` is where every ordered
+    /// floating-point reduction lives, so the determinism contract of
+    /// [`Pool::run`] carries over unchanged (DESIGN.md §5). A `consume`
+    /// error stops the dispatch after the current window; later tasks of
+    /// that window are discarded unconsumed. Task panics propagate as in
+    /// `run`.
+    pub fn run_windowed<T, E, F, C>(&self, n: usize, f: F, mut consume: C) -> Result<(), E>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+        C: FnMut(usize, T) -> Result<(), E>,
+    {
+        let window = self.window();
+        for start in (0..n).step_by(window) {
+            let w = window.min(n - start);
+            for (off, v) in self.run(w, |off| f(start + off)).into_iter().enumerate() {
+                consume(start + off, v)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Windowed **in-place transform**: `slots[i]` is replaced by the
+    /// first half of `f(i, &slots[i])` while the second half streams to
+    /// `consume`, both in index order between windows.
+    ///
+    /// Built for stages that carry state across a sweep (the scheduler's
+    /// hidden-state literals: pass B replaces each batch's state, the
+    /// fused pipelined step replaces it *and* emits the next layer's
+    /// partial Hessians). Writes happen strictly in index order and stop
+    /// at the first error: on a *task* error that slot and everything
+    /// after keep their old values; on a *consumer* error the failing
+    /// index's slot has already been replaced (write-then-consume), only
+    /// its aux value goes unabsorbed. Peak memory is the live slots plus
+    /// O(jobs) in-flight replacements.
+    pub fn update_windowed<Z, A, E, F, C>(
+        &self,
+        slots: &mut [Z],
+        f: F,
+        mut consume: C,
+    ) -> Result<(), E>
+    where
+        Z: Send + Sync,
+        A: Send,
+        E: Send,
+        F: Fn(usize, &Z) -> Result<(Z, A), E> + Sync,
+        C: FnMut(usize, A) -> Result<(), E>,
+    {
+        let window = self.window();
+        let n = slots.len();
+        for start in (0..n).step_by(window) {
+            let w = window.min(n - start);
+            let results = self.run(w, |off| f(start + off, &slots[start + off]));
+            for (off, r) in results.into_iter().enumerate() {
+                let (z, a) = r?;
+                slots[start + off] = z;
+                consume(start + off, a)?;
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -126,5 +206,126 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn run_windowed_streams_in_index_order() {
+        // more tasks than any window so several windows run, for every
+        // pool size incl. serial and more-workers-than-tasks
+        for jobs in [1, 2, 3, 8] {
+            let mut seen = Vec::new();
+            let r: Result<(), ()> = Pool::new(jobs).run_windowed(
+                23,
+                |i| i * 2,
+                |i, v| {
+                    seen.push((i, v));
+                    Ok(())
+                },
+            );
+            assert_eq!(r, Ok(()));
+            let want: Vec<(usize, usize)> = (0..23).map(|i| (i, i * 2)).collect();
+            assert_eq!(seen, want, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn run_windowed_empty() {
+        let r: Result<(), ()> = Pool::new(4).run_windowed(0, |i| i, |_, _| Ok(()));
+        assert_eq!(r, Ok(()));
+    }
+
+    #[test]
+    fn run_windowed_consumer_error_stops_in_order() {
+        // consume sees 0..=5 in order, errors at 5, and nothing after
+        let mut consumed = Vec::new();
+        let r: Result<(), &str> = Pool::new(2).run_windowed(
+            100,
+            |i| i,
+            |i, v| {
+                consumed.push(v);
+                if i == 5 {
+                    Err("stop")
+                } else {
+                    Ok(())
+                }
+            },
+        );
+        assert_eq!(r, Err("stop"));
+        assert_eq!(consumed, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn run_windowed_panic_propagates() {
+        let _: Result<(), ()> = Pool::new(4).run_windowed(
+            32,
+            |i| {
+                if i == 9 {
+                    panic!("boom");
+                }
+                i
+            },
+            |_, _| Ok(()),
+        );
+    }
+
+    #[test]
+    fn update_windowed_replaces_slots_and_streams_aux() {
+        for jobs in [1, 4] {
+            let mut slots: Vec<usize> = (0..17).collect();
+            let mut aux = Vec::new();
+            let r: Result<(), ()> = Pool::new(jobs).update_windowed(
+                &mut slots,
+                |i, &v| Ok((v + 100, i)),
+                |i, a| {
+                    aux.push((i, a));
+                    Ok(())
+                },
+            );
+            assert_eq!(r, Ok(()));
+            let want: Vec<usize> = (100..117).collect();
+            assert_eq!(slots, want, "jobs={jobs}");
+            let want_aux: Vec<(usize, usize)> = (0..17).map(|i| (i, i)).collect();
+            assert_eq!(aux, want_aux, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn update_windowed_error_keeps_writes_strictly_before_failure() {
+        // ordered-consume semantics: every slot before the failing index
+        // holds its new value, the failing slot and everything after keep
+        // their old ones — regardless of where window boundaries fall
+        let mut slots = vec![0usize; 10];
+        let r: Result<(), &str> = Pool::new(2).update_windowed(
+            &mut slots,
+            |i, _| if i == 7 { Err("x") } else { Ok((i + 1, ())) },
+            |_, _| Ok(()),
+        );
+        assert_eq!(r, Err("x"));
+        for (i, &v) in slots.iter().enumerate() {
+            assert_eq!(v, if i < 7 { i + 1 } else { 0 }, "slot {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn update_windowed_panic_propagates() {
+        let mut slots = vec![0usize; 16];
+        let _: Result<(), ()> = Pool::new(4).update_windowed(
+            &mut slots,
+            |i, &v| {
+                if i == 11 {
+                    panic!("boom");
+                }
+                Ok((v, ()))
+            },
+            |_, _| Ok(()),
+        );
+    }
+
+    #[test]
+    fn window_scales_with_jobs() {
+        assert_eq!(Pool::new(1).window(), 2);
+        assert_eq!(Pool::new(4).window(), 8);
     }
 }

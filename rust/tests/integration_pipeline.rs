@@ -7,7 +7,7 @@ use rsq::corpus::{CalibSet, CorpusKind};
 use rsq::model::config::Module;
 use rsq::model::outliers::{inject_outliers, OutlierSpec};
 use rsq::model::ParamSet;
-use rsq::quant::{quantize, Method, QuantOptions, Strategy};
+use rsq::quant::{quantize, Method, QuantOptions, SchedMode, Strategy};
 use rsq::runtime::Engine;
 use rsq::train::train_or_load;
 
@@ -211,12 +211,107 @@ fn report_phase_timings_cover_the_run() {
     let (_, r) = quantize(&eng, &p, &calib, &QuantOptions::new(Method::Rsq, 3, 64)).unwrap();
     assert_eq!(r.jobs, 1);
     assert!(r.pass_a_seconds > 0.0 && r.solve_seconds > 0.0);
-    let phases = r.pass_a_seconds + r.solve_seconds + r.pass_b_seconds;
+    let phases = r.pass_a_seconds + r.solve_seconds + r.pass_b_seconds + r.fused_seconds;
     assert!(
         phases <= r.wall_seconds,
         "phase timings {phases} exceed wall {}",
         r.wall_seconds
     );
+    // per-layer timings cover every layer and sum to the process totals
+    assert_eq!(r.layer_timings.len(), p.cfg.layers);
+    let lsum: f64 = r
+        .layer_timings
+        .iter()
+        .map(|lt| lt.pass_a_seconds + lt.solve_seconds + lt.pass_b_seconds + lt.fused_seconds)
+        .sum();
+    assert!((lsum - phases).abs() < 1e-9, "layer timings {lsum} != totals {phases}");
+    assert!(r.layer_timings.iter().all(|lt| lt.solve_seconds > 0.0));
+}
+
+#[test]
+fn phase_timing_shape_matches_mode() {
+    let (eng, p, calib) = setup();
+    let mut staged = QuantOptions::new(Method::Rsq, 3, 64);
+    staged.sched = SchedMode::Staged;
+    let (_, rs) = quantize(&eng, &p, &calib, &staged).unwrap();
+    assert_eq!(rs.sched, "staged");
+    assert_eq!(rs.fused_seconds, 0.0, "staged mode never runs fused sweeps");
+    assert!(rs.pass_b_seconds > 0.0);
+    assert!(rs.layer_timings.iter().all(|lt| lt.pass_a_seconds > 0.0));
+
+    let mut piped = QuantOptions::new(Method::Rsq, 3, 64);
+    piped.sched = SchedMode::Pipelined;
+    let (_, rp) = quantize(&eng, &p, &calib, &piped).unwrap();
+    assert_eq!(rp.sched, "pipelined");
+    assert_eq!(rp.pass_b_seconds, 0.0, "pipelined mode fuses every pass B");
+    assert!(rp.fused_seconds > 0.0, "needs >= 2 layers on the tiny config");
+    // only layer 0 runs a standalone pass A; every non-final layer a fused sweep
+    assert!(rp.layer_timings[0].pass_a_seconds > 0.0);
+    for (l, lt) in rp.layer_timings.iter().enumerate() {
+        if l > 0 {
+            assert_eq!(lt.pass_a_seconds, 0.0, "layer {l}");
+        }
+        if l + 1 < rp.layer_timings.len() {
+            assert!(lt.fused_seconds > 0.0, "layer {l}");
+        } else {
+            assert_eq!(lt.fused_seconds, 0.0, "last layer has no next pass A");
+        }
+    }
+}
+
+#[test]
+fn pipelined_executor_bit_identical_to_staged() {
+    // the tentpole contract: fusing pass B of layer l with pass A of
+    // layer l+1 changes scheduling only — for any jobs value, weights and
+    // layer_err match the serial staged path bit for bit
+    let (eng, p, calib) = setup();
+    for method in [Method::Rsq, Method::Gptq, Method::RsqVq] {
+        let bits = if method.vector_quant() { 2 } else { 3 };
+        let mut serial = QuantOptions::new(method, bits, 64);
+        serial.jobs = 1;
+        serial.sched = SchedMode::Staged;
+        let (q_ref, r_ref) = quantize(&eng, &p, &calib, &serial).unwrap();
+        for jobs in [1usize, 4] {
+            let mut o = serial.clone();
+            o.jobs = jobs;
+            o.sched = SchedMode::Pipelined;
+            let (q, r) = quantize(&eng, &p, &calib, &o).unwrap();
+            assert_eq!(r.jobs, jobs);
+            assert_eq!(
+                r_ref.layer_err, r.layer_err,
+                "{method:?} jobs={jobs}: layer errors diverged from staged serial"
+            );
+            for (i, (a, b)) in q_ref.tensors.iter().zip(&q.tensors).enumerate() {
+                assert_eq!(
+                    a.data, b.data,
+                    "{method:?} tensor {i}: pipelined jobs={jobs} diverged from staged jobs=1"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_executor_bit_identical_under_partial_module_mask() {
+    // the partial-mask path carries TWO Hessian accumulators per stream
+    // through the fused sweep (Fig. 7) — pin it to the staged serial path
+    let (eng, p, calib) = setup();
+    let mut serial = QuantOptions {
+        module_mask: Some(HashSet::from([Module::Wv, Module::Wdown])),
+        ..QuantOptions::new(Method::Rsq, 3, 64)
+    };
+    serial.jobs = 1;
+    serial.sched = SchedMode::Staged;
+    let (q_ref, _) = quantize(&eng, &p, &calib, &serial).unwrap();
+    for jobs in [1usize, 4] {
+        let mut o = serial.clone();
+        o.jobs = jobs;
+        o.sched = SchedMode::Pipelined;
+        let (q, _) = quantize(&eng, &p, &calib, &o).unwrap();
+        for (i, (a, b)) in q_ref.tensors.iter().zip(&q.tensors).enumerate() {
+            assert_eq!(a.data, b.data, "masked tensor {i} diverged at jobs={jobs}");
+        }
+    }
 }
 
 #[test]

@@ -4,11 +4,16 @@
 #
 #   1. every "DESIGN.md §<section>" reference in the sources resolves to a
 #      real DESIGN.md heading (no toolchain needed);
-#   2. rustdoc builds clean with warnings denied;
-#   3. the tree is rustfmt-clean.
+#   2. the numbered DESIGN.md sections the sources lean on exist, and the
+#      scheduler-refactor docs track the code (quant/sched + the windowed
+#      Pool primitives must be documented in §5);
+#   3. rustdoc builds clean with warnings denied;
+#   4. the tree is rustfmt-clean.
 #
-# Steps 2-3 are skipped with a notice when no rust toolchain is on PATH
-# (the toolchain lives in the build image, not every checkout).
+# Steps 3-4 are skipped with a notice when no rust toolchain is on PATH
+# (the toolchain lives in the build image, not every checkout), or when
+# CHECK_DOCS_SKIP_CARGO=1 — hosted CI runners ship a toolchain but not the
+# vendored xla crate set, so only the toolchain-free checks can run there.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -45,8 +50,33 @@ done
 
 [ "$fail" -eq 0 ] && echo "check-docs: DESIGN.md section references OK"
 
-# --- 2+3. rustdoc + rustfmt ------------------------------------------------
-if command -v cargo >/dev/null 2>&1; then
+# --- 2. required sections + scheduler-doc consistency ----------------------
+# The stable section numbers the source tree points at (1-8). A renumbering
+# that orphans one of these breaks every "DESIGN.md §N" comment at once.
+for sec in 1 2 3 4 5 6 7 8; do
+    if ! grep -qE "^## ${sec}\." DESIGN.md; then
+        echo "check-docs: FAIL — DESIGN.md is missing required section '## ${sec}.'" >&2
+        fail=1
+    fi
+done
+
+# The staged-scheduler refactor: if the quant/sched subsystem exists, §5
+# must document it and the Pool windowed-dispatch primitives it rests on.
+if [ -d rust/src/quant/sched ]; then
+    for needle in "quant/sched" "run_windowed" "update_windowed" "pipelined"; do
+        if ! grep -q "${needle}" DESIGN.md; then
+            echo "check-docs: FAIL — rust/src/quant/sched exists but DESIGN.md never mentions \"${needle}\"" >&2
+            fail=1
+        fi
+    done
+fi
+
+[ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler docs OK"
+
+# --- 3+4. rustdoc + rustfmt ------------------------------------------------
+if [ "${CHECK_DOCS_SKIP_CARGO:-0}" = "1" ]; then
+    echo "check-docs: NOTE — CHECK_DOCS_SKIP_CARGO=1, skipping rustdoc/fmt checks" >&2
+elif command -v cargo >/dev/null 2>&1; then
     echo "check-docs: cargo doc --no-deps (warnings denied)"
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet || fail=1
     echo "check-docs: cargo fmt --check"

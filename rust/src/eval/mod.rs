@@ -11,9 +11,37 @@ pub use longctx::{longctx_suite, LongCtxResult};
 pub use ppl::perplexity;
 pub use tasks::{probe_suite, ProbeResult};
 
+use crate::corpus::CalibSet;
 use crate::model::ParamSet;
 use crate::runtime::{self, Engine};
 use anyhow::Result;
+
+/// The shared scoring block of `rsq quantize` and `rsq eval`: perplexity
+/// plus the downstream probe battery at one context length. Works the
+/// same whether `params` came from the in-memory pipeline, a checkpoint,
+/// or a packed artifact — which is exactly what makes `rsq eval
+/// --artifact` comparable bit-for-bit with the pipeline that saved it.
+#[derive(Clone, Debug)]
+pub struct ScoreCard {
+    pub ppl: f64,
+    pub probes: Vec<ProbeResult>,
+    pub mean_acc: f64,
+}
+
+/// Score `params` on `eval_set` at context `t` with `probe_n` instances
+/// per probe task.
+pub fn score_model(
+    engine: &Engine,
+    params: &ParamSet,
+    eval_set: &CalibSet,
+    t: usize,
+    probe_n: usize,
+) -> Result<ScoreCard> {
+    let ppl = perplexity(engine, params, eval_set, t)?;
+    let probes = probe_suite(engine, params, t, 3, probe_n)?;
+    let mean_acc = tasks::mean_accuracy(&probes);
+    Ok(ScoreCard { ppl, probes, mean_acc })
+}
 
 /// Batched last-position log-probs for a set of equal-length prompts.
 /// Pads the final batch by repeating the last prompt; callers slice.

@@ -22,7 +22,8 @@
 //! - [`quant`]    — the paper's contribution: importance strategies
 //!                  (Sec. 4.3), the scaled-Hessian GPTQ driver (Sec. 4.2),
 //!                  the layer-by-layer pipeline, RTN / GPTQ / QuaRot / SQ /
-//!                  RSQ / VQ modes.
+//!                  RSQ / VQ modes, plus the quantized-artifact subsystem
+//!                  (packed save/load + content-addressed Hessian cache).
 //! - [`quantref`] — pure-rust RTN + GPTQ oracle for property tests against
 //!                  the HLO path.
 //! - [`eval`]     — perplexity + 10 downstream probe tasks + long-context

@@ -13,12 +13,13 @@
 //! `--sched staged|pipelined` its cross-layer phase ordering (DESIGN.md
 //! §Threading); output is bit-identical for every combination.
 
+use std::path::Path;
+
 use anyhow::{bail, Result};
 
 use rsq::corpus::CorpusKind;
-use rsq::eval::tasks::mean_accuracy;
-use rsq::eval::{perplexity, probe_suite};
-use rsq::quant::{quantize, Method, QuantOptions, SchedMode, Strategy};
+use rsq::eval::{perplexity, score_model};
+use rsq::quant::{artifact, quantize, Method, QuantOptions, SchedMode, Strategy};
 use rsq::repro::{self, Ctx};
 use rsq::train::{train, TrainOptions};
 use rsq::util::Args;
@@ -44,6 +45,7 @@ fn main() -> Result<()> {
         "scores" => repro::scores::dump_scores(&args)?,
         "perf" => repro::perf::perf(&args)?,
         "quantize" => cmd_quantize(&args)?,
+        "eval" => cmd_eval(&args)?,
         "train" => cmd_train(&args)?,
         "all" => cmd_all(&args)?,
         "help" | "--help" | "-h" => print_help(),
@@ -53,10 +55,15 @@ fn main() -> Result<()> {
 }
 
 fn cmd_quantize(args: &Args) -> Result<()> {
+    // fail fast on a bad --save target BEFORE training/calibration start:
+    // a typo'd path must not cost a full quantization run to discover
+    if let Some(out) = args.get("save") {
+        artifact::validate_save_dir(Path::new(out))?;
+    }
     let config = args.str_or("config", "small");
     let ctx = Ctx::prepare(&config, args)?;
     let cfg = ctx.engine.config().clone();
-    let t = args.usize_or("calib-t", *cfg.seq_lens.iter().max().unwrap().min(&128));
+    let t = args.usize_or("calib-t", repro::default_context(&cfg));
     let method = Method::parse(&args.str_or("method", "rsq"))
         .ok_or_else(|| anyhow::anyhow!("bad --method"))?;
     let strategy = Strategy::parse(&args.str_or("strategy", "attncon:0.01"))
@@ -69,6 +76,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     opts.jobs = args.jobs();
     opts.sched = SchedMode::parse(&args.sched())
         .ok_or_else(|| anyhow::anyhow!("bad --sched (staged|pipelined)"))?;
+    opts.hess_cache = args.hess_cache();
     opts.verbose = args.flag("verbose");
     let corpus = CorpusKind::parse(&args.str_or("corpus", "wiki"))
         .ok_or_else(|| anyhow::anyhow!("bad --corpus"))?;
@@ -76,13 +84,12 @@ fn cmd_quantize(args: &Args) -> Result<()> {
 
     let full_ppl = perplexity(&ctx.engine, &ctx.params, &ctx.eval, t)?;
     let (q, report) = quantize(&ctx.engine, &ctx.params, &calib, &opts)?;
-    let ppl = perplexity(&ctx.engine, &q, &ctx.eval, t)?;
-    let probes = probe_suite(&ctx.engine, &q, t, 3, args.usize_or("probe-n", 32))?;
+    let score = score_model(&ctx.engine, &q, &ctx.eval, t, args.usize_or("probe-n", 32))?;
     println!("config       : {config} ({} params)", cfg.num_params());
     println!("method       : {} / {} / {}bit", method.name(), opts.strategy.name(), opts.bits);
     println!("full  PPL    : {full_ppl:.3}");
-    println!("quant PPL    : {ppl:.3}");
-    println!("avg accuracy : {:.1}%", 100.0 * mean_accuracy(&probes));
+    println!("quant PPL    : {:.3}", score.ppl);
+    println!("avg accuracy : {:.1}%", 100.0 * score.mean_acc);
     println!("kurtosis     : {:.2} -> {:.2}", report.kurtosis_before, report.kurtosis_after);
     println!("layer errs   : {:?}", report.layer_err);
     println!(
@@ -96,9 +103,84 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         report.pass_b_seconds,
         report.fused_seconds
     );
+    if !report.hess_key.is_empty() {
+        println!(
+            "hess cache   : {} (layers hit {} / miss {} / skip {}; key {})",
+            if report.hess_cache_hits > 0 { "HIT — pass A skipped" } else { "cold" },
+            report.hess_cache_hits,
+            report.hess_cache_misses,
+            report.hess_cache_skips,
+            report.hess_key,
+        );
+    }
     if let Some(out) = args.get("save") {
-        q.save(std::path::Path::new(out))?;
-        println!("saved quantized checkpoint to {out}");
+        let manifest = artifact::save(Path::new(out), &q, &report, &opts)?;
+        let packed = manifest
+            .tensors
+            .iter()
+            .filter(|t| !matches!(t.codec, artifact::Codec::Raw))
+            .count();
+        println!(
+            "saved artifact to {out} ({} tensors, {packed} bit-packed, {} blob bytes) — \
+             score it with `rsq eval --artifact {out}`",
+            manifest.tensors.len(),
+            manifest.total_len,
+        );
+    }
+    Ok(())
+}
+
+/// `rsq eval` — score a saved quantized artifact (`--artifact DIR`) or a
+/// raw checkpoint (`--model PATH`) without re-running quantization. The
+/// artifact path reproduces the in-memory pipeline's numbers bit-for-bit
+/// (rust/tests/integration_artifact.rs pins this).
+fn cmd_eval(args: &Args) -> Result<()> {
+    if let Err(e) = args.conflict("artifact", "model") {
+        bail!("{e}");
+    }
+    // default_t mirrors the context the quantize-time printout scored at:
+    // the artifact's recorded seq_len when loading an artifact, else
+    // cmd_quantize's own default
+    let (params, engine, default_t) = if let Some(dir) = args.get("artifact") {
+        let (p, manifest) = artifact::load(Path::new(dir))?;
+        let engine = rsq::runtime::Engine::load(&manifest.config.name)?;
+        if engine.config() != &manifest.config {
+            bail!(
+                "artifact {dir} was saved for config {:?} but the compiled artifacts for \
+                 {:?} differ — re-run `make artifacts` or re-save the artifact",
+                manifest.config.name,
+                engine.config().name,
+            );
+        }
+        println!(
+            "artifact     : {dir} ({} / {} / {}bit, hess key {})",
+            manifest.method, manifest.strategy, manifest.bits, manifest.hess_key
+        );
+        let t = manifest.seq_len;
+        (p, engine, t)
+    } else if let Some(path) = args.get("model") {
+        let config = args.str_or("config", "small");
+        let engine = rsq::runtime::Engine::load(&config)?;
+        let p = rsq::model::ParamSet::load(engine.config(), Path::new(path))?;
+        println!("checkpoint   : {path} (config {config})");
+        let t = repro::default_context(engine.config());
+        (p, engine, t)
+    } else {
+        bail!("rsq eval needs --artifact DIR (packed artifact) or --model PATH (checkpoint)");
+    };
+    let cfg = engine.config().clone();
+    let t = args.usize_or("eval-t", default_t);
+    if !cfg.seq_lens.contains(&t) {
+        bail!("--eval-t {t} not in artifact set {:?}", cfg.seq_lens);
+    }
+    // the one shared held-out recipe, so scores line up with the
+    // quantize-time printout
+    let eval = repro::heldout_eval_set(&cfg, args);
+    let score = score_model(&engine, &params, &eval, t, args.usize_or("probe-n", 32))?;
+    println!("PPL          : {:.3} (context {t})", score.ppl);
+    println!("avg accuracy : {:.1}%", 100.0 * score.mean_acc);
+    for p in &score.probes {
+        println!("  {:<18} {:>5.1}%", p.name, 100.0 * p.accuracy);
     }
     Ok(())
 }
@@ -158,6 +240,9 @@ fn print_help() {
            fig2..fig9       regenerate the paper's figures\n\
            scores           dump Figs. 10-14 token-importance series\n\
            quantize         one-off quantization (see flags below)\n\
+           eval             score a saved artifact or checkpoint\n\
+                            (--artifact DIR | --model PATH; bit-identical\n\
+                            to the pipeline that saved it)\n\
            train            train a checkpoint on the synthetic corpus\n\
            perf             performance profile\n\
            all              run every table + figure\n\
@@ -181,7 +266,12 @@ fn print_help() {
                             bit-identical for every value)\n\
            --sched M        staged|pipelined cross-layer executor (default\n\
                             pipelined; both modes bit-identical)\n\
-           --save PATH      write the quantized (or trained) checkpoint\n\
+           --hess-cache C   auto|off|DIR content-addressed Hessian cache\n\
+                            (default auto = cache/hessians; a key hit\n\
+                            skips pass A, output stays byte-identical)\n\
+           --save DIR       quantize: write a packed artifact directory\n\
+                            (load with `rsq eval --artifact DIR`);\n\
+                            train: write the checkpoint file\n\
            --verbose        chatty pipeline logging"
     );
 }

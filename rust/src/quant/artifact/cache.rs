@@ -1,0 +1,419 @@
+//! Content-addressed Hessian cache (DESIGN.md §9).
+//!
+//! Pass A — calibration capture + scaled Hessian accumulation — is the
+//! dominant cost of every non-RTN quantization run, and it is a pure
+//! function of inputs the sweep drivers repeat constantly: the model
+//! parameters, the calibration set, the rotation seed, the importance
+//! strategy, and (because pass B re-forwards through the *quantized*
+//! layer, propagating solve error into the next layer's statistics) the
+//! solve configuration itself. [`cache_key`] hashes exactly that
+//! determining set; `--jobs` and `--sched` are deliberately **excluded**
+//! because the scheduler's fixed-order reductions make the accumulated
+//! Hessians bit-identical across every jobs/sched combination (DESIGN.md
+//! §5) — a cache entry written at `--jobs 1 --sched staged` is byte-valid
+//! for `--jobs 8 --sched pipelined`.
+//!
+//! Content addressing means there is no invalidation protocol: any change
+//! to a key field produces a different key, and an entry is immutable once
+//! written. A corrupt or truncated entry is detected by its CRC and
+//! treated as a miss (recompute + rewrite), never an error.
+//!
+//! On a key hit the scheduler skips pass A, pass B, and the embedding
+//! sweep entirely and runs solve-only (`sched::run_layers_cached`) —
+//! `QuantReport::hess_cache_hits` and `rsq perf` surface the elimination.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::corpus::CalibSet;
+use crate::model::config::ModelConfig;
+use crate::model::ParamSet;
+use crate::runtime::manifest::config_to_kv;
+use crate::tensor::Tensor;
+use crate::util::hash::{crc32, Fnv1a64, FNV_BASIS};
+
+use crate::quant::pipeline::QuantOptions;
+
+/// Bump when the key derivation or the entry format changes — old entries
+/// simply stop being addressed.
+const CACHE_VERSION: u32 = 1;
+
+const MAGIC: &[u8; 8] = b"RSQHESC1";
+
+/// One layer's fully-reduced pass-A output: the four per-stream scaled
+/// Hessians (Xa/Xo/Xf/Xd order), plus the uniform-weighted set when a
+/// partial module mask needs both (Fig. 7).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerHessians {
+    pub scaled: Vec<Tensor>,
+    pub uniform: Option<Vec<Tensor>>,
+}
+
+/// 128-bit content address (two independent FNV-1a 64 streams).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheKey(pub [u8; 16]);
+
+impl CacheKey {
+    pub fn hex(&self) -> String {
+        self.0.iter().map(|b| format!("{b:02x}")).collect()
+    }
+}
+
+/// Two independent FNV streams fed in one traversal (model tensors can be
+/// megabytes — walking them once, not twice, matters now that caching is
+/// the driver default).
+struct KeyHasher {
+    a: Fnv1a64,
+    b: Fnv1a64,
+}
+
+impl KeyHasher {
+    fn new() -> Self {
+        KeyHasher {
+            a: Fnv1a64::new(),
+            b: Fnv1a64::with_basis(FNV_BASIS ^ 0x9E37_79B9_7F4A_7C15),
+        }
+    }
+
+    fn str(&mut self, s: &str) {
+        self.a.write_str(s);
+        self.b.write_str(s);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.a.write_u32(v);
+        self.b.write_u32(v);
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.a.write_u64(v);
+        self.b.write_u64(v);
+    }
+
+    fn usize(&mut self, v: usize) {
+        self.a.write_usize(v);
+        self.b.write_usize(v);
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.a.write_f32(v);
+        self.b.write_f32(v);
+    }
+
+    fn f32s(&mut self, vs: &[f32]) {
+        self.a.write_f32s(vs);
+        self.b.write_f32s(vs);
+    }
+
+    fn i32s(&mut self, vs: &[i32]) {
+        self.a.write_i32s(vs);
+        self.b.write_i32s(vs);
+    }
+
+    fn finish(self) -> CacheKey {
+        let mut out = [0u8; 16];
+        out[..8].copy_from_slice(&self.a.finish().to_le_bytes());
+        out[8..].copy_from_slice(&self.b.finish().to_le_bytes());
+        CacheKey(out)
+    }
+}
+
+/// Derive the content address of one run's Hessians. The field list below
+/// IS the cache contract — everything that can change a Hessian bit must
+/// be hashed, and nothing that cannot (jobs, sched, verbose) may be.
+pub fn cache_key(
+    cfg: &ModelConfig,
+    params: &ParamSet,
+    calib: &CalibSet,
+    opts: &QuantOptions,
+) -> CacheKey {
+    let mut h = KeyHasher::new();
+    h.u32(CACHE_VERSION);
+    // model: config + every parameter bit (pre-rotation; the rotation
+    // is determined by rot_seed + method below)
+    h.str(&config_to_kv(cfg));
+    h.usize(params.tensors.len());
+    for t in &params.tensors {
+        h.usize(t.shape.len());
+        for &d in &t.shape {
+            h.usize(d);
+        }
+        h.f32s(&t.data);
+    }
+    // corpus spec: kind + the pre-expansion token content itself
+    h.str(calib.kind.name());
+    h.usize(calib.seq_len);
+    h.usize(calib.samples.len());
+    for s in &calib.samples {
+        h.i32s(s);
+    }
+    // run options that reach the Hessians (directly, or through the
+    // quantized pass-B propagation)
+    h.str(opts.method.name());
+    h.str(&opts.strategy.name());
+    h.u32(opts.bits);
+    h.f32(opts.damp);
+    h.usize(opts.seq_len);
+    h.usize(opts.expansion);
+    h.u64(opts.rot_seed);
+    match &opts.module_mask {
+        None => h.str("mask=all"),
+        Some(mask) => {
+            let mut names: Vec<&str> = mask.iter().map(|m| m.name()).collect();
+            names.sort_unstable();
+            h.str(&format!("mask={}", names.join(",")));
+        }
+    }
+    h.finish()
+}
+
+/// On-disk store: one immutable `<key>.hess` file per content address.
+pub struct HessCache {
+    dir: PathBuf,
+}
+
+impl HessCache {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        HessCache { dir: dir.into() }
+    }
+
+    pub fn entry_path(&self, key: &CacheKey) -> PathBuf {
+        self.dir.join(format!("{}.hess", key.hex()))
+    }
+
+    /// Fetch an entry. `None` on absent, corrupt, or shape-incompatible
+    /// entries (the caller recomputes); corruption warns on stderr.
+    pub fn load(
+        &self,
+        key: &CacheKey,
+        layers: usize,
+        needs_uniform: bool,
+    ) -> Option<Vec<LayerHessians>> {
+        let path = self.entry_path(key);
+        let bytes = std::fs::read(&path).ok()?;
+        match decode_entry(&bytes, key, layers, needs_uniform) {
+            Ok(hs) => Some(hs),
+            Err(e) => {
+                eprintln!("[hess-cache] ignoring corrupt entry {path:?}: {e}");
+                None
+            }
+        }
+    }
+
+    /// Write an entry atomically (tmp + rename) so a concurrent reader —
+    /// `rsq all` runs drivers as subprocesses over one cache dir — never
+    /// observes a half-written file.
+    pub fn store(&self, key: &CacheKey, layers: &[LayerHessians]) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("create hessian cache dir {:?}", self.dir))?;
+        let bytes = encode_entry(key, layers);
+        let path = self.entry_path(key);
+        let tmp = self.dir.join(format!("{}.tmp.{}", key.hex(), std::process::id()));
+        std::fs::write(&tmp, &bytes).with_context(|| format!("write {tmp:?}"))?;
+        std::fs::rename(&tmp, &path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+        Ok(())
+    }
+}
+
+fn encode_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+    for &d in &t.shape {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    for v in &t.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn encode_entry(key: &CacheKey, layers: &[LayerHessians]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&CACHE_VERSION.to_le_bytes());
+    out.extend_from_slice(&key.0);
+    out.extend_from_slice(&(layers.len() as u32).to_le_bytes());
+    for lh in layers {
+        out.push(lh.uniform.is_some() as u8);
+        out.extend_from_slice(&(lh.scaled.len() as u32).to_le_bytes());
+        for t in &lh.scaled {
+            encode_tensor(&mut out, t);
+        }
+        if let Some(us) = &lh.uniform {
+            for t in us {
+                encode_tensor(&mut out, t);
+            }
+        }
+    }
+    let crc = crc32(&out[MAGIC.len()..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Bounds-checked little-endian reader over an entry's payload.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.bytes.len().saturating_sub(self.pos) {
+            anyhow::bail!("truncated at byte {}", self.pos);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn tensor(&mut self) -> Result<Tensor> {
+        let ndim = self.u32()? as usize;
+        if ndim > 4 {
+            anyhow::bail!("implausible tensor rank {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(self.u32()? as usize);
+        }
+        let n = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .and_then(|n| n.checked_mul(4))
+            .with_context(|| format!("implausible tensor shape {shape:?}"))?;
+        let bytes = self.take(n)?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Tensor::from_vec(&shape, data))
+    }
+}
+
+fn decode_entry(
+    bytes: &[u8],
+    key: &CacheKey,
+    layers: usize,
+    needs_uniform: bool,
+) -> Result<Vec<LayerHessians>> {
+    if bytes.len() < MAGIC.len() + 4 || &bytes[..MAGIC.len()] != MAGIC {
+        anyhow::bail!("bad magic");
+    }
+    let payload = &bytes[MAGIC.len()..bytes.len() - 4];
+    let stored_crc = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    if crc32(payload) != stored_crc {
+        anyhow::bail!("checksum mismatch");
+    }
+    let mut r = Reader { bytes: payload, pos: 0 };
+    let version = r.u32()?;
+    if version != CACHE_VERSION {
+        anyhow::bail!("entry version {version}, this build writes {CACHE_VERSION}");
+    }
+    if r.take(16)? != key.0 {
+        anyhow::bail!("key echo mismatch (hash collision or misplaced file)");
+    }
+    let nlayers = r.u32()? as usize;
+    if nlayers != layers {
+        anyhow::bail!("entry has {nlayers} layers, run expects {layers}");
+    }
+    let mut out = Vec::with_capacity(nlayers);
+    for _ in 0..nlayers {
+        let has_uniform = r.u8()? != 0;
+        if has_uniform != needs_uniform {
+            anyhow::bail!(
+                "entry uniform-hessian presence ({has_uniform}) does not match run ({needs_uniform})"
+            );
+        }
+        let nscaled = r.u32()? as usize;
+        if nscaled != 4 {
+            anyhow::bail!("entry has {nscaled} streams per layer, expected 4");
+        }
+        let scaled: Vec<Tensor> =
+            (0..nscaled).map(|_| r.tensor()).collect::<Result<_>>()?;
+        let uniform = if has_uniform {
+            Some((0..nscaled).map(|_| r.tensor()).collect::<Result<_>>()?)
+        } else {
+            None
+        };
+        out.push(LayerHessians { scaled, uniform });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lh(seed: f32, uniform: bool) -> LayerHessians {
+        let t = |k: f32| Tensor::from_vec(&[2, 2], vec![k, k + 1.0, k + 2.0, k + 3.0]);
+        LayerHessians {
+            scaled: (0..4).map(|i| t(seed + i as f32)).collect(),
+            uniform: uniform.then(|| (0..4).map(|i| t(seed + 10.0 + i as f32)).collect()),
+        }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("rsq_hesscache_{name}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn store_load_round_trip() {
+        let dir = tmpdir("rt");
+        let cache = HessCache::new(&dir);
+        let key = CacheKey([7u8; 16]);
+        let layers = vec![lh(0.0, false), lh(100.0, false)];
+        cache.store(&key, &layers).unwrap();
+        let got = cache.load(&key, 2, false).unwrap();
+        assert_eq!(got, layers);
+        // wrong expectations -> miss, not garbage
+        assert!(cache.load(&key, 3, false).is_none(), "layer-count mismatch");
+        assert!(cache.load(&key, 2, true).is_none(), "uniform mismatch");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn uniform_round_trip() {
+        let dir = tmpdir("uni");
+        let cache = HessCache::new(&dir);
+        let key = CacheKey([9u8; 16]);
+        let layers = vec![lh(0.5, true)];
+        cache.store(&key, &layers).unwrap();
+        assert_eq!(cache.load(&key, 1, true).unwrap(), layers);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_entry_is_a_miss() {
+        let dir = tmpdir("corrupt");
+        let cache = HessCache::new(&dir);
+        let key = CacheKey([3u8; 16]);
+        cache.store(&key, &[lh(1.0, false)]).unwrap();
+        let path = cache.entry_path(&key);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(cache.load(&key, 1, false).is_none(), "flipped byte must fail CRC");
+        // truncation likewise
+        cache.store(&key, &[lh(1.0, false)]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(cache.load(&key, 1, false).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn absent_entry_is_a_quiet_miss() {
+        let cache = HessCache::new(tmpdir("absent"));
+        assert!(cache.load(&CacheKey([1u8; 16]), 2, false).is_none());
+    }
+}

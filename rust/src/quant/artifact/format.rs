@@ -1,0 +1,541 @@
+//! On-disk format of a quantized artifact (DESIGN.md §9).
+//!
+//! A saved artifact is a directory of exactly two files:
+//!
+//! ```text
+//! DIR/
+//!   artifact.txt   line-oriented manifest: format tag, version, the full
+//!                  ModelConfig block (runtime::manifest key=value style),
+//!                  run provenance (method/strategy/bits/damp/rot_seed/
+//!                  seq_len/expansion/module_mask/hess_key), then one
+//!                  tensor= line per parameter with codec, shape, byte
+//!                  span into weights.bin, and a CRC-32
+//!   weights.bin    the blobs, concatenated in parameter order:
+//!                    raw    — f32 little-endian, numel*4 bytes
+//!                    packed — scale f32[rows] ++ zero f32[rows] ++
+//!                             bit-packed codes (tensor::pack layout)
+//! ```
+//!
+//! Every parse error is actionable and total: truncated blobs, checksum
+//! mismatches, and unknown versions are rejected with messages that say
+//! what to do — malformed input can never panic or decode to garbage.
+//! rust/tests/golden_artifact.rs pins this behavior against committed
+//! fixture files under rust/tests/data/.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::config::ModelConfig;
+use crate::runtime::manifest::{config_from_kv, config_to_kv, parse_shape};
+use crate::tensor::pack::{PackedRows, RowGrid, PACK_BITS};
+use crate::tensor::Tensor;
+
+/// Bump on any incompatible layout change; readers reject other versions.
+pub const ARTIFACT_VERSION: u32 = 1;
+pub const MANIFEST_FILE: &str = "artifact.txt";
+pub const BLOBS_FILE: &str = "weights.bin";
+const FORMAT_TAG: &str = "rsq-artifact";
+
+/// How one tensor is encoded in `weights.bin`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// plain f32 little-endian
+    Raw,
+    /// per-row grid + bit-packed codes (`tensor::pack`)
+    Packed { bits: u32 },
+}
+
+impl Codec {
+    fn render(&self) -> String {
+        match self {
+            Codec::Raw => "raw".to_string(),
+            Codec::Packed { bits } => format!("packed{bits}"),
+        }
+    }
+
+    fn parse(s: &str) -> Result<Codec> {
+        if s == "raw" {
+            return Ok(Codec::Raw);
+        }
+        if let Some(b) = s.strip_prefix("packed") {
+            let bits: u32 = b.parse().with_context(|| format!("bad codec {s:?}"))?;
+            if !PACK_BITS.contains(&bits) {
+                bail!("codec {s:?}: unsupported pack width");
+            }
+            return Ok(Codec::Packed { bits });
+        }
+        bail!("unknown codec {s:?} (expected raw or packed<bits>)")
+    }
+}
+
+/// One `tensor=` manifest line: where a parameter lives in `weights.bin`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorEntry {
+    pub name: String,
+    pub codec: Codec,
+    pub shape: Vec<usize>,
+    pub offset: u64,
+    pub len: u64,
+    pub crc: u32,
+}
+
+impl TensorEntry {
+    /// Expected blob length for this entry's codec + shape. `None` when
+    /// the dims are implausible enough to overflow — the manifest is
+    /// untrusted input, so size arithmetic must be checked, not panicking
+    /// (the module contract: malformed input never panics).
+    pub fn expected_len(&self) -> Option<u64> {
+        let numel = self.shape.iter().try_fold(1u64, |a, &d| a.checked_mul(d as u64))?;
+        match self.codec {
+            Codec::Raw => numel.checked_mul(4),
+            Codec::Packed { bits } => {
+                let (rows, cols) = (self.shape[0] as u64, self.shape[1] as u64);
+                let row_bits = cols.checked_mul(bits as u64)?;
+                let rb = row_bits.checked_add(7)? / 8;
+                rows.checked_mul(8)?.checked_add(rows.checked_mul(rb)?)
+            }
+        }
+    }
+}
+
+/// Parsed `artifact.txt`.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub version: u32,
+    pub config: ModelConfig,
+    pub method: String,
+    pub strategy: String,
+    pub bits: u32,
+    pub damp: f32,
+    pub rot_seed: u64,
+    pub seq_len: usize,
+    pub expansion: usize,
+    /// sorted module names, or None for "all"
+    pub module_mask: Option<Vec<String>>,
+    /// content address of the Hessians the solve consumed (hex), "-" for
+    /// data-free RTN provenance
+    pub hess_key: String,
+    pub tensors: Vec<TensorEntry>,
+    /// exact size of weights.bin — read back first, so truncation is
+    /// caught before any blob is touched
+    pub total_len: u64,
+}
+
+impl ArtifactManifest {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("format={FORMAT_TAG}\n"));
+        out.push_str(&format!("version={}\n", self.version));
+        out.push_str(&config_to_kv(&self.config));
+        out.push_str(&format!("method={}\n", self.method));
+        out.push_str(&format!("strategy={}\n", self.strategy));
+        out.push_str(&format!("bits={}\n", self.bits));
+        out.push_str(&format!("damp={}\n", self.damp));
+        out.push_str(&format!("rot_seed={}\n", self.rot_seed));
+        out.push_str(&format!("seq_len={}\n", self.seq_len));
+        out.push_str(&format!("expansion={}\n", self.expansion));
+        match &self.module_mask {
+            None => out.push_str("module_mask=all\n"),
+            Some(names) => out.push_str(&format!("module_mask={}\n", names.join(","))),
+        }
+        out.push_str(&format!("hess_key={}\n", self.hess_key));
+        for t in &self.tensors {
+            let shape: Vec<String> = t.shape.iter().map(|d| d.to_string()).collect();
+            out.push_str(&format!(
+                "tensor={}|codec={}|shape={}|offset={}|len={}|crc={:08x}\n",
+                t.name,
+                t.codec.render(),
+                if shape.is_empty() { "scalar".to_string() } else { shape.join("x") },
+                t.offset,
+                t.len,
+                t.crc,
+            ));
+        }
+        out.push_str(&format!("total_len={}\n", self.total_len));
+        out
+    }
+
+    pub fn parse(text: &str) -> Result<ArtifactManifest> {
+        let mut kv = BTreeMap::new();
+        let mut tensors: Vec<TensorEntry> = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("tensor=") {
+                tensors.push(parse_tensor_line(rest)?);
+            } else if let Some((k, v)) = line.split_once('=') {
+                kv.insert(k.to_string(), v.to_string());
+            } else {
+                bail!("unparseable manifest line {line:?}");
+            }
+        }
+        let get = |k: &str| -> Result<String> {
+            kv.get(k).cloned().with_context(|| format!("artifact manifest missing key {k}"))
+        };
+        if kv.get("format").map(String::as_str) != Some(FORMAT_TAG) {
+            bail!(
+                "not a quantized-artifact manifest (format={:?}, expected {FORMAT_TAG:?}) — \
+                 point --artifact at a directory written by `rsq quantize --save`",
+                kv.get("format")
+            );
+        }
+        let version: u32 = get("version")?.parse().context("bad version")?;
+        if version != ARTIFACT_VERSION {
+            bail!(
+                "unsupported artifact version {version} (this build reads version \
+                 {ARTIFACT_VERSION}) — re-save with this build's `rsq quantize --save`"
+            );
+        }
+        let config = config_from_kv(&kv)?;
+        let module_mask = match get("module_mask")?.as_str() {
+            "all" => None,
+            names => Some(names.split(',').map(str::to_string).collect()),
+        };
+        let m = ArtifactManifest {
+            version,
+            config,
+            method: get("method")?,
+            strategy: get("strategy")?,
+            bits: get("bits")?.parse().context("bad bits")?,
+            damp: get("damp")?.parse().context("bad damp")?,
+            rot_seed: get("rot_seed")?.parse().context("bad rot_seed")?,
+            seq_len: get("seq_len")?.parse().context("bad seq_len")?,
+            expansion: get("expansion")?.parse().context("bad expansion")?,
+            module_mask,
+            hess_key: get("hess_key")?,
+            tensors,
+            total_len: get("total_len")?.parse().context("bad total_len")?,
+        };
+        m.check()?;
+        Ok(m)
+    }
+
+    /// Cross-validate entries against the embedded config: names and
+    /// order must equal `param_names()`, shapes must match, byte spans
+    /// must be contiguous from 0 to `total_len` with codec-consistent
+    /// lengths. Any drift means the artifact cannot be trusted.
+    pub fn check(&self) -> Result<()> {
+        let names = self.config.param_names();
+        if names.len() != self.tensors.len() {
+            bail!(
+                "artifact has {} tensors but config {} expects {} — artifact corrupt \
+                 or from an incompatible build",
+                self.tensors.len(),
+                self.config.name,
+                names.len()
+            );
+        }
+        let mut cursor = 0u64;
+        for (want, t) in names.iter().zip(&self.tensors) {
+            if want != &t.name {
+                bail!("tensor order mismatch: expected {want}, manifest has {}", t.name);
+            }
+            let want_shape = self.config.param_shape(want);
+            if want_shape != t.shape {
+                bail!("tensor {want}: shape {:?} vs config {want_shape:?}", t.shape);
+            }
+            if t.offset != cursor {
+                bail!("tensor {want}: offset {} but previous blob ends at {cursor}", t.offset);
+            }
+            // before expected_len(), which indexes shape[0]/shape[1] for
+            // the packed codec
+            if matches!(t.codec, Codec::Packed { .. }) && t.shape.len() != 2 {
+                bail!("tensor {want}: packed codec on non-matrix shape {:?}", t.shape);
+            }
+            let want_len = t
+                .expected_len()
+                .with_context(|| format!("tensor {want}: implausible shape {:?}", t.shape))?;
+            if t.len != want_len {
+                bail!(
+                    "tensor {want}: blob length {} does not match codec {} for shape {:?} \
+                     (expected {want_len})",
+                    t.len,
+                    t.codec.render(),
+                    t.shape,
+                );
+            }
+            cursor = cursor.checked_add(t.len).with_context(|| {
+                format!("tensor {want}: blob spans overflow the address space")
+            })?;
+        }
+        if cursor != self.total_len {
+            bail!(
+                "manifest total_len {} does not equal the sum of blob lengths {cursor}",
+                self.total_len
+            );
+        }
+        Ok(())
+    }
+}
+
+fn parse_tensor_line(rest: &str) -> Result<TensorEntry> {
+    let mut parts = rest.split('|');
+    let name = parts.next().unwrap_or_default().to_string();
+    if name.is_empty() {
+        bail!("tensor line with empty name");
+    }
+    let (mut codec, mut shape, mut offset, mut len, mut crc) = (None, None, None, None, None);
+    for part in parts {
+        if let Some(v) = part.strip_prefix("codec=") {
+            codec = Some(Codec::parse(v)?);
+        } else if let Some(v) = part.strip_prefix("shape=") {
+            shape = Some(parse_shape(v)?);
+        } else if let Some(v) = part.strip_prefix("offset=") {
+            offset = Some(v.parse::<u64>().with_context(|| format!("bad offset in {rest:?}"))?);
+        } else if let Some(v) = part.strip_prefix("len=") {
+            len = Some(v.parse::<u64>().with_context(|| format!("bad len in {rest:?}"))?);
+        } else if let Some(v) = part.strip_prefix("crc=") {
+            crc = Some(
+                u32::from_str_radix(v, 16).with_context(|| format!("bad crc in {rest:?}"))?,
+            );
+        } else {
+            bail!("unknown field {part:?} in tensor line {rest:?}");
+        }
+    }
+    let missing = |f: &str| format!("tensor {name}: missing {f}");
+    Ok(TensorEntry {
+        codec: codec.with_context(|| missing("codec"))?,
+        shape: shape.with_context(|| missing("shape"))?,
+        offset: offset.with_context(|| missing("offset"))?,
+        len: len.with_context(|| missing("len"))?,
+        crc: crc.with_context(|| missing("crc"))?,
+        name,
+    })
+}
+
+/// Encode one tensor blob. Packed layout: scale row f32s, zero row f32s,
+/// then the code bitstream.
+pub fn encode_blob(t: &Tensor, packed: Option<&PackedRows>) -> Vec<u8> {
+    match packed {
+        None => t.data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        Some(p) => {
+            let mut out = Vec::with_capacity(p.rows * 8 + p.data.len());
+            for &s in &p.grid.scale {
+                out.extend_from_slice(&s.to_le_bytes());
+            }
+            for &z in &p.grid.zero {
+                out.extend_from_slice(&z.to_le_bytes());
+            }
+            out.extend_from_slice(&p.data);
+            out
+        }
+    }
+}
+
+/// Decode one blob back to its tensor. `entry.check()`-validated lengths
+/// are re-checked here so a decoder on untrusted bytes stays total.
+pub fn decode_blob(entry: &TensorEntry, bytes: &[u8]) -> Result<Tensor> {
+    let want = entry
+        .expected_len()
+        .with_context(|| format!("tensor {}: implausible shape {:?}", entry.name, entry.shape))?;
+    if bytes.len() as u64 != want {
+        bail!(
+            "tensor {}: blob is {} bytes, expected {want} — weights.bin truncated or corrupt",
+            entry.name,
+            bytes.len(),
+        );
+    }
+    let f32s = |b: &[u8]| -> Vec<f32> {
+        b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+    };
+    match entry.codec {
+        Codec::Raw => Ok(Tensor::from_vec(&entry.shape, f32s(bytes))),
+        Codec::Packed { bits } => {
+            let (rows, cols) = (entry.shape[0], entry.shape[1]);
+            let scale = f32s(&bytes[..rows * 4]);
+            let zero = f32s(&bytes[rows * 4..rows * 8]);
+            if let Some(r) = (0..rows)
+                .find(|&r| !scale[r].is_finite() || scale[r] <= 0.0 || !zero[r].is_finite())
+            {
+                bail!(
+                    "tensor {}: row {r} has a non-finite or non-positive grid — artifact \
+                     corrupt; re-run `rsq quantize --save`",
+                    entry.name
+                );
+            }
+            let p = PackedRows {
+                bits,
+                rows,
+                cols,
+                grid: RowGrid { scale, zero },
+                data: bytes[rows * 8..].to_vec(),
+            };
+            Ok(p.unpack())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "golden".into(),
+            d: 4,
+            layers: 1,
+            heads: 1,
+            ff: 8,
+            vocab: 16,
+            max_seq: 8,
+            batch: 2,
+            seq_lens: vec![8],
+            ldlq_k: 16,
+            ldlq_g: 2,
+        }
+    }
+
+    fn sample_manifest() -> ArtifactManifest {
+        let c = cfg();
+        let mut tensors = Vec::new();
+        let mut cursor = 0u64;
+        for name in c.param_names() {
+            let shape = c.param_shape(&name);
+            let mut e = TensorEntry {
+                name,
+                codec: Codec::Raw,
+                shape,
+                offset: cursor,
+                len: 0,
+                crc: 0xDEADBEEF,
+            };
+            e.len = e.expected_len().unwrap();
+            cursor += e.len;
+            tensors.push(e);
+        }
+        ArtifactManifest {
+            version: ARTIFACT_VERSION,
+            config: c,
+            method: "rsq".into(),
+            strategy: "attncon:0.05".into(),
+            bits: 3,
+            damp: 0.01,
+            rot_seed: 20823,
+            seq_len: 8,
+            expansion: 1,
+            module_mask: None,
+            hess_key: "00".repeat(16),
+            tensors,
+            total_len: cursor,
+        }
+    }
+
+    #[test]
+    fn render_parse_round_trip() {
+        let m = sample_manifest();
+        let m2 = ArtifactManifest::parse(&m.render()).unwrap();
+        assert_eq!(m2.config, m.config);
+        assert_eq!(m2.tensors, m.tensors);
+        assert_eq!(m2.total_len, m.total_len);
+        assert_eq!(m2.strategy, m.strategy);
+        assert_eq!(m2.hess_key, m.hess_key);
+    }
+
+    #[test]
+    fn rejects_unknown_version() {
+        let text = sample_manifest().render().replace("version=1", "version=99");
+        let err = ArtifactManifest::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("unsupported artifact version 99"), "{err}");
+        assert!(err.contains("re-save"), "error must be actionable: {err}");
+    }
+
+    #[test]
+    fn rejects_wrong_format_tag() {
+        let text = sample_manifest().render().replace("format=rsq-artifact", "format=tarball");
+        let err = ArtifactManifest::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("not a quantized-artifact manifest"), "{err}");
+    }
+
+    #[test]
+    fn rejects_tensor_drift() {
+        let m = sample_manifest();
+        let text = m.render().replace("tensor=l0.wq", "tensor=l0.xx");
+        assert!(ArtifactManifest::parse(&text).is_err());
+        // gap in the byte spans
+        let mut m2 = m.clone();
+        m2.tensors[3].offset += 4;
+        assert!(m2.check().is_err());
+        // total_len drift
+        let mut m3 = m;
+        m3.total_len += 1;
+        assert!(m3.check().is_err());
+    }
+
+    #[test]
+    fn implausible_dims_error_instead_of_overflowing() {
+        // corrupt manifests are untrusted: 2^33-sized dims must produce a
+        // parse error, not a multiply-with-overflow panic
+        let text = sample_manifest().render().replace("\nd=4\n", "\nd=8589934592\n");
+        let err = ArtifactManifest::parse(&text).unwrap_err().to_string();
+        assert!(!err.is_empty());
+        let huge = TensorEntry {
+            name: "x".into(),
+            codec: Codec::Raw,
+            shape: vec![usize::MAX, usize::MAX],
+            offset: 0,
+            len: 0,
+            crc: 0,
+        };
+        assert_eq!(huge.expected_len(), None);
+    }
+
+    #[test]
+    fn module_mask_round_trip() {
+        let mut m = sample_manifest();
+        m.module_mask = Some(vec!["wq".into(), "wv".into()]);
+        let m2 = ArtifactManifest::parse(&m.render()).unwrap();
+        assert_eq!(m2.module_mask, m.module_mask);
+    }
+
+    #[test]
+    fn blob_round_trip_raw_and_packed() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, -2.5, 0.0, 3.25, -0.75, 8.0]);
+        let entry = TensorEntry {
+            name: "x".into(),
+            codec: Codec::Raw,
+            shape: vec![2, 3],
+            offset: 0,
+            len: 24,
+            crc: 0,
+        };
+        let bytes = encode_blob(&t, None);
+        assert_eq!(decode_blob(&entry, &bytes).unwrap().data, t.data);
+
+        let grid = RowGrid { scale: vec![0.5, 0.25], zero: vec![2.0, 0.0] };
+        let q = Tensor::from_vec(&[2, 3], vec![0.5, -1.0, 0.0, 0.25, 0.0, 0.75]);
+        let p = PackedRows::pack(&q, 2, &grid).unwrap();
+        let entry = TensorEntry {
+            name: "q".into(),
+            codec: Codec::Packed { bits: 2 },
+            shape: vec![2, 3],
+            offset: 0,
+            len: 18,
+            crc: 0,
+        };
+        assert_eq!(entry.expected_len(), Some(18)); // 2 rows * (8 grid + 1 data)
+        let bytes = encode_blob(&q, Some(&p));
+        let back = decode_blob(&entry, &bytes).unwrap();
+        for (a, b) in back.data.iter().zip(&q.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_truncated_blob() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0; 4]);
+        let entry = TensorEntry {
+            name: "x".into(),
+            codec: Codec::Raw,
+            shape: vec![2, 2],
+            offset: 0,
+            len: 16,
+            crc: 0,
+        };
+        let bytes = encode_blob(&t, None);
+        let err = decode_blob(&entry, &bytes[..10]).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+}

@@ -1,0 +1,351 @@
+//! The quantized-artifact subsystem (DESIGN.md §9): quantization output as
+//! a shippable, loadable deployment artifact instead of a transient.
+//!
+//! - [`format`] — the versioned on-disk layout (`artifact.txt` manifest +
+//!   `weights.bin` blobs) with per-blob CRCs and total-length checking.
+//! - [`cache`] — the content-addressed Hessian cache that lets a repeat
+//!   run skip pass A entirely (`sched::run_layers_cached`).
+//! - [`save`] / [`load`] here — the directory-level API `rsq quantize
+//!   --save DIR` and `rsq eval --artifact DIR` speak.
+//!
+//! Saving is **bit-faithful**: layer weights whose solve produced an
+//! affine grid are stored bit-packed (2/3/4/8-bit codes + per-row f32
+//! grid, `tensor::pack`), and the packer verifies exact reconstruction of
+//! every element at pack time — any tensor that is not exactly
+//! representable (the VQ codebook methods, or any grid drift) falls back
+//! to raw f32 storage. Loading therefore always reproduces the in-memory
+//! `ParamSet` bit-for-bit, so `rsq eval --artifact` scores are
+//! bit-identical to the pipeline that produced the artifact.
+//!
+//! The writer is deterministic — same quantized weights in, same bytes
+//! out — which is what makes "warm Hessian-cache runs produce
+//! byte-identical artifacts" testable (rust/tests/integration_artifact.rs).
+
+pub mod cache;
+pub mod format;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::config::Module;
+use crate::model::ParamSet;
+use crate::tensor::pack::{PackedRows, RowGrid};
+use crate::util::hash::crc32;
+
+use super::pipeline::{QuantOptions, QuantReport};
+
+pub use format::{ArtifactManifest, Codec, TensorEntry, ARTIFACT_VERSION, BLOBS_FILE, MANIFEST_FILE};
+
+/// Write the quantized `ParamSet` as an artifact directory. `report`
+/// supplies the per-weight grids captured by the solve phase (and the
+/// Hessian content-address for provenance); weights without a grid are
+/// stored raw.
+pub fn save(
+    dir: &Path,
+    q: &ParamSet,
+    report: &QuantReport,
+    opts: &QuantOptions,
+) -> Result<ArtifactManifest> {
+    // same contract as the CLI's pre-run check: the leaf directory is
+    // created, a missing parent is the caller's typo (never silently
+    // mkdir -p an arbitrary tree)
+    validate_save_dir(dir)?;
+    let cfg = &q.cfg;
+    // tensor index -> solve grid, from the report's (layer, module) order
+    let mut grid_of: Vec<Option<&RowGrid>> = vec![None; q.tensors.len()];
+    if report.grids.len() == cfg.layers * Module::ALL.len() {
+        for l in 0..cfg.layers {
+            for (mi, m) in Module::ALL.into_iter().enumerate() {
+                grid_of[cfg.param_index(l, m)] =
+                    report.grids[l * Module::ALL.len() + mi].as_ref();
+            }
+        }
+    }
+
+    let names = cfg.param_names();
+    let mut blobs: Vec<u8> = Vec::new();
+    let mut tensors = Vec::with_capacity(q.tensors.len());
+    for (i, t) in q.tensors.iter().enumerate() {
+        let packed = grid_of[i].and_then(|g| match PackedRows::pack(t, opts.bits, g) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                if opts.verbose {
+                    eprintln!("[artifact] {}: storing raw ({e})", names[i]);
+                }
+                None
+            }
+        });
+        let codec = match &packed {
+            Some(p) => Codec::Packed { bits: p.bits },
+            None => Codec::Raw,
+        };
+        let bytes = format::encode_blob(t, packed.as_ref());
+        tensors.push(TensorEntry {
+            name: names[i].clone(),
+            codec,
+            shape: t.shape.clone(),
+            offset: blobs.len() as u64,
+            len: bytes.len() as u64,
+            crc: crc32(&bytes),
+        });
+        blobs.extend_from_slice(&bytes);
+    }
+
+    let module_mask = opts.module_mask.as_ref().map(|mask| {
+        let mut names: Vec<String> = mask.iter().map(|m| m.name().to_string()).collect();
+        names.sort_unstable();
+        names
+    });
+    let manifest = ArtifactManifest {
+        version: ARTIFACT_VERSION,
+        config: cfg.clone(),
+        method: opts.method.name().to_string(),
+        strategy: opts.strategy.name(),
+        bits: opts.bits,
+        damp: opts.damp,
+        rot_seed: opts.rot_seed,
+        seq_len: opts.seq_len,
+        expansion: opts.expansion,
+        module_mask,
+        hess_key: if report.hess_key.is_empty() {
+            "-".to_string()
+        } else {
+            report.hess_key.clone()
+        },
+        total_len: blobs.len() as u64,
+        tensors,
+    };
+    manifest.check()?;
+
+    if !dir.exists() {
+        std::fs::create_dir(dir).with_context(|| format!("create artifact dir {dir:?}"))?;
+    }
+    let blob_path = dir.join(BLOBS_FILE);
+    std::fs::write(&blob_path, &blobs).with_context(|| format!("write {blob_path:?}"))?;
+    let man_path = dir.join(MANIFEST_FILE);
+    std::fs::write(&man_path, manifest.render()).with_context(|| format!("write {man_path:?}"))?;
+    Ok(manifest)
+}
+
+/// Load an artifact directory back into a `ParamSet`, verifying total
+/// length and every per-blob CRC. Errors are actionable; corrupt input
+/// can never produce a silently-wrong model.
+pub fn load(dir: &Path) -> Result<(ParamSet, ArtifactManifest)> {
+    let man_path = dir.join(MANIFEST_FILE);
+    let text = std::fs::read_to_string(&man_path).with_context(|| {
+        format!(
+            "no artifact manifest at {man_path:?} — expected a directory written by \
+             `rsq quantize --save DIR`"
+        )
+    })?;
+    let manifest = ArtifactManifest::parse(&text)
+        .with_context(|| format!("parse {man_path:?}"))?;
+    let blob_path = dir.join(BLOBS_FILE);
+    let blobs = std::fs::read(&blob_path).with_context(|| format!("read {blob_path:?}"))?;
+    if blobs.len() as u64 != manifest.total_len {
+        bail!(
+            "{blob_path:?} is {} bytes but the manifest records {} — artifact truncated or \
+             corrupt; re-run `rsq quantize --save`",
+            blobs.len(),
+            manifest.total_len
+        );
+    }
+    let mut tensors = Vec::with_capacity(manifest.tensors.len());
+    for entry in &manifest.tensors {
+        let span = &blobs[entry.offset as usize..(entry.offset + entry.len) as usize];
+        if crc32(span) != entry.crc {
+            bail!(
+                "checksum mismatch in tensor {} — artifact corrupt; re-run \
+                 `rsq quantize --save`",
+                entry.name
+            );
+        }
+        tensors.push(format::decode_blob(entry, span)?);
+    }
+    Ok((ParamSet { cfg: manifest.config.clone(), tensors }, manifest))
+}
+
+/// Fail-fast check for `rsq quantize --save DIR`, run **before** training
+/// and calibration start: an unwritable or orphaned save target must not
+/// cost the user a full quantization run to discover.
+pub fn validate_save_dir(dir: &Path) -> Result<()> {
+    let probe_in = |d: &Path| -> Result<()> {
+        let probe = d.join(format!(".rsq-write-probe-{}", std::process::id()));
+        std::fs::write(&probe, b"probe")
+            .with_context(|| format!("cannot write artifact to {dir:?}: {d:?} is not writable"))?;
+        std::fs::remove_file(&probe).ok();
+        Ok(())
+    };
+    if dir.exists() {
+        if !dir.is_dir() {
+            bail!("cannot write artifact to {dir:?}: path exists and is not a directory");
+        }
+        return probe_in(dir);
+    }
+    let parent = match dir.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    if !parent.exists() {
+        bail!(
+            "cannot write artifact to {dir:?}: parent directory {parent:?} does not exist — \
+             create it first"
+        );
+    }
+    if !parent.is_dir() {
+        bail!("cannot write artifact to {dir:?}: parent {parent:?} is not a directory");
+    }
+    probe_in(&parent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::quant::pipeline::{Method, QuantOptions};
+    use crate::quantref;
+    use crate::tensor::pack::RowGrid;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            d: 64,
+            layers: 2,
+            heads: 2,
+            ff: 128,
+            vocab: 256,
+            max_seq: 64,
+            batch: 4,
+            seq_lens: vec![32, 64],
+            ldlq_k: 1024,
+            ldlq_g: 8,
+        }
+    }
+
+    /// RTN-quantize every layer weight host-side, producing a ParamSet +
+    /// report grids exactly like a real run would.
+    fn quantized_fixture(bits: u32) -> (ParamSet, QuantReport, QuantOptions) {
+        let c = cfg();
+        let mut p = ParamSet::init(&c, 3);
+        let mut report = QuantReport::default();
+        report.hess_key = "ab".repeat(16);
+        let maxq = ((1u64 << bits) - 1) as f32;
+        for l in 0..c.layers {
+            for m in Module::ALL {
+                let w = p.weight(l, m).clone();
+                let q = quantref::rtn(&w, maxq);
+                let (scale, zero) = quantref::row_grid(&w, maxq);
+                report.grids.push(Some(RowGrid { scale, zero }));
+                p.set_weight(l, m, q);
+            }
+        }
+        let mut opts = QuantOptions::new(Method::Rtn, bits, 64);
+        opts.strategy = crate::quant::Strategy::Uniform;
+        (p, report, opts)
+    }
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("rsq_artifact_{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn save_load_bit_identical() {
+        for bits in [2u32, 3, 4, 8] {
+            let (p, report, opts) = quantized_fixture(bits);
+            let dir = tmpdir(&format!("rt{bits}"));
+            let manifest = save(&dir, &p, &report, &opts).unwrap();
+            // all 14 layer weights packed, the rest raw
+            let packed = manifest
+                .tensors
+                .iter()
+                .filter(|t| matches!(t.codec, Codec::Packed { .. }))
+                .count();
+            assert_eq!(packed, 14, "bits={bits}");
+            let (q, m2) = load(&dir).unwrap();
+            assert_eq!(m2.bits, bits);
+            assert_eq!(q.tensors.len(), p.tensors.len());
+            for (a, b) in q.tensors.iter().zip(&p.tensors) {
+                assert_eq!(a.shape, b.shape);
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "bits={bits}");
+                }
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn save_is_deterministic() {
+        let (p, report, opts) = quantized_fixture(3);
+        let (d1, d2) = (tmpdir("det1"), tmpdir("det2"));
+        save(&d1, &p, &report, &opts).unwrap();
+        save(&d2, &p, &report, &opts).unwrap();
+        for f in [MANIFEST_FILE, BLOBS_FILE] {
+            assert_eq!(
+                std::fs::read(d1.join(f)).unwrap(),
+                std::fs::read(d2.join(f)).unwrap(),
+                "{f} must be byte-identical across saves"
+            );
+        }
+        std::fs::remove_dir_all(&d1).ok();
+        std::fs::remove_dir_all(&d2).ok();
+    }
+
+    #[test]
+    fn missing_grids_fall_back_to_raw() {
+        let (p, mut report, opts) = quantized_fixture(3);
+        report.grids.clear();
+        let dir = tmpdir("rawfb");
+        let manifest = save(&dir, &p, &report, &opts).unwrap();
+        assert!(manifest.tensors.iter().all(|t| t.codec == Codec::Raw));
+        let (q, _) = load(&dir).unwrap();
+        for (a, b) in q.tensors.iter().zip(&p.tensors) {
+            assert_eq!(a.data, b.data);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_truncation_and_corruption() {
+        let (p, report, opts) = quantized_fixture(3);
+        let dir = tmpdir("corrupt");
+        save(&dir, &p, &report, &opts).unwrap();
+        let blob_path = dir.join(BLOBS_FILE);
+        let good = std::fs::read(&blob_path).unwrap();
+
+        std::fs::write(&blob_path, &good[..good.len() - 7]).unwrap();
+        let err = load(&dir).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+
+        let mut bad = good.clone();
+        bad[good.len() / 3] ^= 0x40;
+        std::fs::write(&blob_path, &bad).unwrap();
+        let err = load(&dir).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validate_save_dir_fails_fast() {
+        // nonexistent parent
+        let orphan = std::env::temp_dir().join("rsq_no_such_parent_xyz/child");
+        let err = validate_save_dir(&orphan).unwrap_err().to_string();
+        assert!(err.contains("does not exist"), "{err}");
+
+        // parent exists but is a file
+        let file = std::env::temp_dir().join(format!("rsq_probe_file_{}", std::process::id()));
+        std::fs::write(&file, b"x").unwrap();
+        let err = validate_save_dir(&file.join("sub")).unwrap_err().to_string();
+        assert!(err.contains("not a directory"), "{err}");
+        let err = validate_save_dir(&file).unwrap_err().to_string();
+        assert!(err.contains("not a directory"), "{err}");
+        std::fs::remove_file(&file).ok();
+
+        // happy paths: existing dir, and a fresh child of an existing dir
+        validate_save_dir(&std::env::temp_dir()).unwrap();
+        validate_save_dir(&std::env::temp_dir().join("rsq_fresh_child")).unwrap();
+    }
+}

@@ -11,8 +11,13 @@
 //!   in staged or cross-layer-pipelined order (`--sched`), with
 //!   fixed-order reductions that keep every combination bit-identical to
 //!   the serial path (DESIGN.md §Threading).
+//! - [`artifact`] — quantization output as a deployment artifact: the
+//!   packed on-disk format behind `rsq quantize --save` / `rsq eval
+//!   --artifact`, and the content-addressed Hessian cache that lets
+//!   repeat runs skip pass A entirely (DESIGN.md §9).
 //! - [`vq`] — E8-derived codebook construction for Tab. 6.
 
+pub mod artifact;
 pub mod pipeline;
 pub mod sched;
 pub mod strategy;

@@ -18,6 +18,7 @@
 //! [`SchedMode`]: super::sched::SchedMode
 
 use std::collections::HashSet;
+use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -29,8 +30,10 @@ use crate::model::outliers::kurtosis_ratio;
 use crate::model::rotate::{rotate_params, rotation_matrix};
 use crate::model::ParamSet;
 use crate::runtime::{self, Engine};
+use crate::tensor::pack::RowGrid;
 use crate::util::Pool;
 
+use super::artifact::cache::{cache_key, HessCache};
 use super::sched::{self, SchedMode};
 use super::strategy::Strategy;
 use super::vq::e8_codebook;
@@ -124,6 +127,10 @@ pub struct QuantOptions {
     /// cross-layer phase ordering (`--sched`); both modes are
     /// bit-identical, pipelined saves one barrier per layer (DESIGN.md §5)
     pub sched: SchedMode,
+    /// content-addressed Hessian cache directory (`--hess-cache`); None
+    /// disables caching. A key hit skips pass A entirely while keeping the
+    /// output byte-identical (DESIGN.md §9).
+    pub hess_cache: Option<PathBuf>,
     /// log per-layer reconstruction error to stderr
     pub verbose: bool,
 }
@@ -143,6 +150,7 @@ impl QuantOptions {
             rot_seed: 0x5157, // "QW"
             jobs: 1,
             sched: SchedMode::Pipelined,
+            hess_cache: None,
             verbose: false,
         }
     }
@@ -197,6 +205,19 @@ pub struct QuantReport {
     pub pass_b_seconds: f64,
     /// total seconds in fused pass-B/pass-A sweeps (pipelined mode)
     pub fused_seconds: f64,
+    /// per-(layer, module) solve grids in (layer, `Module::ALL`) order;
+    /// None per VQ solve (codebook output has no affine grid). What lets
+    /// `quant::artifact::save` bit-pack the weights (DESIGN.md §9).
+    pub grids: Vec<Option<RowGrid>>,
+    /// content address of this run's Hessians (hex; empty for data-free
+    /// RTN, which accumulates none)
+    pub hess_key: String,
+    /// layers whose Hessians were served from the cache (pass A skipped)
+    pub hess_cache_hits: usize,
+    /// layers whose Hessians were computed, then stored in the cache
+    pub hess_cache_misses: usize,
+    /// layers whose Hessians were computed with caching disabled
+    pub hess_cache_skips: usize,
 }
 
 /// Quantize `params` with the given options; returns the quantized set and
@@ -210,6 +231,12 @@ pub struct QuantReport {
 /// per-batch / per-module values, and every floating-point reduction
 /// (Hessian sums, layer error sums) happens on the coordinator thread in
 /// the serial path's order (DESIGN.md §5).
+///
+/// With `opts.hess_cache` set, the run's Hessians are content-addressed
+/// (`artifact::cache`): a key hit replaces pass A / pass B / embed with a
+/// solve-only sweep over the cached Hessians, byte-identical to the cold
+/// run — `QuantReport`'s `hess_cache_{hits,misses,skips}` record which
+/// path ran (DESIGN.md §9).
 pub fn quantize(
     engine: &Engine,
     params: &ParamSet,
@@ -241,23 +268,20 @@ pub fn quantize(
     // --- RTN short-circuit: data-free, no calibration pass needed ---
     if opts.method == Method::Rtn {
         let ts = Instant::now();
-        report.layer_err = sched::solve::rtn_grid(engine, &cfg, opts, &pool, &mut p)?;
+        let (layer_err, grids) = sched::solve::rtn_grid(engine, &cfg, opts, &pool, &mut p)?;
+        report.layer_err = layer_err;
+        report.grids = grids;
         report.solve_seconds = ts.elapsed().as_secs_f64();
         report.wall_seconds = t0.elapsed().as_secs_f64();
         return Ok((p, report));
     }
 
-    // --- calibration data (Sec. 4.4 expansion) ---
-    let mut calib = if opts.expansion > 1 {
-        expand_dataset(calib, opts.expansion)
-    } else {
-        calib.clone()
-    };
-    calib.pad_to_batch(cfg.batch);
-    let t = opts.seq_len;
-    let batches: Vec<&[Vec<i32>]> = calib.samples.chunks(cfg.batch).collect();
-    report.batches = batches.len();
-    let freq = calib.token_frequencies(cfg.vocab);
+    // Content-address of this run's Hessians, over the *pre-expansion*
+    // calibration set and pre-rotation params (jobs/sched excluded — the
+    // fixed-order reductions make them bit-invariant; DESIGN.md §9).
+    let key = cache_key(&cfg, params, calib, opts);
+    report.hess_key = key.hex();
+    let cache = opts.hess_cache.as_ref().map(HessCache::new);
 
     // A partial module mask (Fig. 7) needs BOTH Hessians per stream: the
     // masked modules use the scaled one, the rest the uniform one. When the
@@ -269,6 +293,27 @@ pub fn quantize(
             .as_ref()
             .map(|m| m.len() < Module::ALL.len())
             .unwrap_or(false);
+
+    // a warm cache entry must match this run's layer count and uniform-
+    // accumulator needs, or it is treated as a miss
+    let cached = cache.as_ref().and_then(|c| c.load(&key, cfg.layers, needs_uniform));
+
+    // --- calibration data (Sec. 4.4 expansion) --- skipped on a warm hit:
+    // the solve-only path never reads batches or token frequencies, so
+    // `report.batches` is honestly 0 there (no batch was consumed)
+    let t = opts.seq_len;
+    let mut prepared = CalibSet { samples: Vec::new(), seq_len: t, kind: calib.kind };
+    if cached.is_none() {
+        prepared = if opts.expansion > 1 {
+            expand_dataset(calib, opts.expansion)
+        } else {
+            calib.clone()
+        };
+        prepared.pad_to_batch(cfg.batch);
+    }
+    let batches: Vec<&[Vec<i32>]> = prepared.samples.chunks(cfg.batch).collect();
+    report.batches = batches.len();
+    let freq = prepared.token_frequencies(cfg.vocab);
 
     let ctx = sched::SchedCtx {
         engine,
@@ -286,8 +331,27 @@ pub fn quantize(
             None
         },
         needs_uniform,
+        collect_hessians: cache.is_some() && cached.is_none(),
     };
-    sched::run_layers(&ctx, &mut p, &mut report)?;
+    match cached {
+        Some(hessians) => {
+            // warm: pass A, pass B, and the embed sweep are all skipped
+            report.hess_cache_hits = cfg.layers;
+            sched::run_layers_cached(&ctx, &mut p, &mut report, hessians)?;
+        }
+        None => {
+            let computed = sched::run_layers(&ctx, &mut p, &mut report)?;
+            match &cache {
+                Some(c) => {
+                    report.hess_cache_misses = cfg.layers;
+                    if let Err(e) = c.store(&key, &computed) {
+                        eprintln!("[hess-cache] store failed (run unaffected): {e:#}");
+                    }
+                }
+                None => report.hess_cache_skips = cfg.layers,
+            }
+        }
+    }
 
     for lt in &report.layer_timings {
         report.pass_a_seconds += lt.pass_a_seconds;
@@ -348,5 +412,6 @@ mod tests {
         assert_eq!(o.sched, SchedMode::Pipelined, "barrier elimination is on by default");
         assert_eq!(o.expansion, 1);
         assert!(o.module_mask.is_none());
+        assert!(o.hess_cache.is_none(), "hessian caching is opt-in via --hess-cache");
     }
 }

@@ -40,8 +40,10 @@ use anyhow::Result;
 use crate::model::config::ModelConfig;
 use crate::model::ParamSet;
 use crate::runtime::{Engine, SharedLiteral};
+use crate::tensor::pack::RowGrid;
 use crate::util::Pool;
 
+use super::artifact::cache::LayerHessians;
 use super::pipeline::{LayerTiming, QuantOptions, QuantReport};
 
 /// How the per-layer phases are ordered across layers (`--sched`).
@@ -96,19 +98,53 @@ pub(crate) struct SchedCtx<'a> {
     /// a partial module mask (Fig. 7) needs a second, uniform-weighted
     /// Hessian accumulator next to the scaled one
     pub needs_uniform: bool,
+    /// keep each layer's reduced Hessians after its solve so the run can
+    /// populate the content-addressed cache (DESIGN.md §9); off when the
+    /// cache is disabled to avoid holding every layer's Hessians at once
+    pub collect_hessians: bool,
 }
 
 /// Drive every layer through pass A → solve → pass B in the configured
 /// [`SchedMode`], recording per-layer phase timings into the report.
 /// Entered with the (possibly rotated) full-precision params; returns
-/// with `p` fully quantized.
-pub(crate) fn run_layers(ctx: &SchedCtx, p: &mut ParamSet, report: &mut QuantReport) -> Result<()> {
+/// with `p` fully quantized, plus the per-layer reduced Hessians when
+/// `ctx.collect_hessians` asked for them (empty otherwise).
+pub(crate) fn run_layers(
+    ctx: &SchedCtx,
+    p: &mut ParamSet,
+    report: &mut QuantReport,
+) -> Result<Vec<LayerHessians>> {
     // initial hidden states: embed every batch once (fans out per batch)
     let mut z = passes::embed(ctx, p)?;
     match ctx.opts.sched {
         SchedMode::Staged => staged(ctx, p, &mut z, report),
         SchedMode::Pipelined => pipelined(ctx, p, &mut z, report),
     }
+}
+
+/// The warm path: every layer's Hessians came from the content-addressed
+/// cache, so pass A, pass B, and the embedding sweep are skipped entirely
+/// and the run is solve-only. The solve consumes bit-identical Hessians
+/// in the same order, so the quantized output is byte-identical to the
+/// cold run that populated the cache.
+pub(crate) fn run_layers_cached(
+    ctx: &SchedCtx,
+    p: &mut ParamSet,
+    report: &mut QuantReport,
+    hessians: Vec<LayerHessians>,
+) -> Result<()> {
+    assert_eq!(hessians.len(), ctx.cfg.layers, "cache entry layer count");
+    for (l, lh) in hessians.into_iter().enumerate() {
+        let acc = passes::HessAccum::from_layer_hessians(lh);
+        let ts = Instant::now();
+        let (errsum, grids) = solve::solve_layer(ctx, p, l, &acc)?;
+        report.layer_timings.push(LayerTiming {
+            solve_seconds: ts.elapsed().as_secs_f64(),
+            ..Default::default()
+        });
+        finish_layer(ctx, report, l, errsum, grids);
+    }
+    Ok(())
 }
 
 /// The barrier-per-phase executor (PR 1 behavior, kept as the reference
@@ -118,7 +154,8 @@ fn staged(
     p: &mut ParamSet,
     z: &mut [SharedLiteral],
     report: &mut QuantReport,
-) -> Result<()> {
+) -> Result<Vec<LayerHessians>> {
+    let mut saved = Vec::new();
     for l in 0..ctx.cfg.layers {
         let mut lt = LayerTiming::default();
 
@@ -129,9 +166,12 @@ fn staged(
         drop(lp);
 
         let ts = Instant::now();
-        let errsum = solve::solve_layer(ctx, p, l, &acc)?;
+        let (errsum, grids) = solve::solve_layer(ctx, p, l, &acc)?;
         lt.solve_seconds = ts.elapsed().as_secs_f64();
-        finish_layer(ctx, report, l, errsum);
+        finish_layer(ctx, report, l, errsum, grids);
+        if ctx.collect_hessians {
+            saved.push(acc.into_layer_hessians());
+        }
 
         // pass B is skipped for the last layer: its outputs feed nothing
         // (saves 1/L of the re-forward cost; DESIGN.md §7)
@@ -143,7 +183,7 @@ fn staged(
         }
         report.layer_timings.push(lt);
     }
-    Ok(())
+    Ok(saved)
 }
 
 /// The cross-layer pipelined executor: after each solve, pass B of the
@@ -154,9 +194,10 @@ fn pipelined(
     p: &mut ParamSet,
     z: &mut [SharedLiteral],
     report: &mut QuantReport,
-) -> Result<()> {
+) -> Result<Vec<LayerHessians>> {
     let layers = ctx.cfg.layers;
     let mut timings = vec![LayerTiming::default(); layers];
+    let mut saved = Vec::new();
 
     let ta = Instant::now();
     let lp0 = passes::layer_literals(p, 0)?;
@@ -166,26 +207,40 @@ fn pipelined(
 
     for l in 0..layers {
         let ts = Instant::now();
-        let errsum = solve::solve_layer(ctx, p, l, &acc)?;
+        let (errsum, grids) = solve::solve_layer(ctx, p, l, &acc)?;
         timings[l].solve_seconds = ts.elapsed().as_secs_f64();
-        finish_layer(ctx, report, l, errsum);
+        finish_layer(ctx, report, l, errsum, grids);
 
         if l + 1 < layers {
             let tf = Instant::now();
             let lp_q = passes::layer_literals(p, l)?;
             let lp_next = passes::layer_literals(p, l + 1)?;
-            acc = passes::fused_b_a(ctx, z, &lp_q, &lp_next)?;
+            let next = passes::fused_b_a(ctx, z, &lp_q, &lp_next)?;
             timings[l].fused_seconds = tf.elapsed().as_secs_f64();
+            let prev = std::mem::replace(&mut acc, next);
+            if ctx.collect_hessians {
+                saved.push(prev.into_layer_hessians());
+            }
+        } else if ctx.collect_hessians {
+            saved.push(std::mem::take(&mut acc).into_layer_hessians());
         }
     }
     report.layer_timings.extend(timings);
-    Ok(())
+    Ok(saved)
 }
 
-/// Record one layer's solve result (shared by both executors so the
-/// report and the verbose trace are mode-independent).
-fn finish_layer(ctx: &SchedCtx, report: &mut QuantReport, l: usize, errsum: f32) {
+/// Record one layer's solve result (shared by every executor — staged,
+/// pipelined, and the cached solve-only path — so the report and the
+/// verbose trace are mode-independent).
+fn finish_layer(
+    ctx: &SchedCtx,
+    report: &mut QuantReport,
+    l: usize,
+    errsum: f32,
+    grids: Vec<Option<RowGrid>>,
+) {
     report.layer_err.push(errsum);
+    report.grids.extend(grids);
     if ctx.opts.verbose {
         eprintln!(
             "[quant:{}] layer {l}: hessian-weighted err {errsum:.3}",

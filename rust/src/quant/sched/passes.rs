@@ -18,6 +18,7 @@ use crate::model::ParamSet;
 use crate::runtime::{self, SharedLiteral};
 use crate::tensor::Tensor;
 
+use crate::quant::artifact::cache::LayerHessians;
 use crate::quant::strategy::{LayerScores, Strategy};
 
 use super::SchedCtx;
@@ -51,6 +52,40 @@ impl HessAccum {
                 accumulate(&mut self.uniform[si], h);
             }
         }
+    }
+
+    /// Freeze the fully-reduced accumulators into the cacheable form
+    /// (`quant::artifact::cache`). Call only after pass A ran over at
+    /// least one batch.
+    pub fn into_layer_hessians(self) -> LayerHessians {
+        let take = |slots: [Option<Tensor>; 4]| -> Vec<Tensor> {
+            slots
+                .into_iter()
+                .map(|s| s.expect("pass A accumulated no Hessian for this stream"))
+                .collect()
+        };
+        let uniform = self.uniform.iter().all(Option::is_some);
+        LayerHessians {
+            scaled: take(self.scaled),
+            uniform: if uniform { Some(take(self.uniform)) } else { None },
+        }
+    }
+
+    /// Rehydrate from a cache entry — the warm path's stand-in for pass A
+    /// (`sched::run_layers_cached`).
+    pub fn from_layer_hessians(lh: LayerHessians) -> HessAccum {
+        assert_eq!(lh.scaled.len(), 4, "cache entry stream count");
+        let mut acc = HessAccum::default();
+        for (si, t) in lh.scaled.into_iter().enumerate() {
+            acc.scaled[si] = Some(t);
+        }
+        if let Some(us) = lh.uniform {
+            assert_eq!(us.len(), 4, "cache entry uniform stream count");
+            for (si, t) in us.into_iter().enumerate() {
+                acc.uniform[si] = Some(t);
+            }
+        }
+        acc
     }
 
     /// The Hessian a module's solve should quantize against: the scaled

@@ -5,7 +5,9 @@ use anyhow::Result;
 
 use crate::model::config::{ModelConfig, Module};
 use crate::model::ParamSet;
+use crate::quantref;
 use crate::runtime::{self, Engine};
+use crate::tensor::pack::RowGrid;
 use crate::tensor::Tensor;
 use crate::util::Pool;
 
@@ -17,15 +19,17 @@ use super::SchedCtx;
 /// Solve one layer: the seven per-module quantizations fan out across the
 /// pool; results are applied to `p` (and errors summed) in `Module::ALL`
 /// order on the coordinator. Returns the layer's Hessian-weighted
-/// reconstruction error Σ tr((W−Q)H(W−Q)ᵀ).
+/// reconstruction error Σ tr((W−Q)H(W−Q)ᵀ) plus each module's
+/// quantization grid (None for the gridless VQ solve) — the grids are
+/// what lets `quant::artifact` bit-pack the output (DESIGN.md §9).
 pub(crate) fn solve_layer(
     ctx: &SchedCtx,
     p: &mut ParamSet,
     l: usize,
     acc: &HessAccum,
-) -> Result<f32> {
+) -> Result<(f32, Vec<Option<RowGrid>>)> {
     let opts = ctx.opts;
-    let solved = ctx.pool.run(Module::ALL.len(), |mi| -> Result<(Tensor, f32)> {
+    let solved = ctx.pool.run(Module::ALL.len(), |mi| -> Result<(Tensor, f32, Option<RowGrid>)> {
         let m = Module::ALL[mi];
         let scaled = match &opts.module_mask {
             Some(mask) => opts.method.scales() && mask.contains(&m),
@@ -33,7 +37,16 @@ pub(crate) fn solve_layer(
         };
         let h = acc.hessian(m.input_stream(), scaled, ctx.needs_uniform);
         let (o, i) = ctx.cfg.weight_shape(m);
-        let w_lit = runtime::tensor_literal(p.weight(l, m))?;
+        let w = p.weight(l, m);
+        // the HLO solver fixes its grid from the pre-quant weight — mirror
+        // it host-side so the artifact writer can recover exact codes
+        let grid = if opts.method.vector_quant() {
+            None
+        } else {
+            let (scale, zero) = quantref::row_grid(w, opts.maxq());
+            Some(RowGrid { scale, zero })
+        };
+        let w_lit = runtime::tensor_literal(w)?;
         let h_lit = runtime::tensor_literal(h)?;
         let damp_lit = runtime::scalar_literal(opts.damp);
         let maxq_lit = runtime::scalar_literal(opts.maxq());
@@ -48,15 +61,17 @@ pub(crate) fn solve_layer(
                 &[&w_lit, &h_lit, &maxq_lit, &damp_lit],
             )?
         };
-        Ok((runtime::literal_tensor(&outs[0])?, runtime::literal_scalar(&outs[1])?))
+        Ok((runtime::literal_tensor(&outs[0])?, runtime::literal_scalar(&outs[1])?, grid))
     });
     let mut errsum = 0.0f32;
+    let mut grids = Vec::with_capacity(Module::ALL.len());
     for (m, s) in Module::ALL.into_iter().zip(solved) {
-        let (q, err) = s?;
+        let (q, err, grid) = s?;
         errsum += err;
+        grids.push(grid);
         p.set_weight(l, m, q);
     }
-    Ok(errsum)
+    Ok((errsum, grids))
 }
 
 /// The RTN short-circuit: data-free, so every (layer, module) solve is
@@ -65,15 +80,16 @@ pub(crate) fn solve_layer(
 /// O(jobs) quantized tensors. The weights are *moved* out of the
 /// ParamSet for the sweep (gains/embeddings are untouched by RTN, and a
 /// move avoids cloning anything) and spliced back quantized. Returns the
-/// per-layer error sums, accumulated in `Module::ALL` order within each
-/// layer exactly like the solve phase.
+/// per-layer error sums (accumulated in `Module::ALL` order within each
+/// layer exactly like the solve phase) and the per-weight grids for the
+/// artifact writer.
 pub(crate) fn rtn_grid(
     engine: &Engine,
     cfg: &ModelConfig,
     opts: &QuantOptions,
     pool: &Pool,
     p: &mut ParamSet,
-) -> Result<Vec<f32>> {
+) -> Result<(Vec<f32>, Vec<Option<RowGrid>>)> {
     let nmod = Module::ALL.len();
     let idxs: Vec<usize> = (0..cfg.layers)
         .flat_map(|l| Module::ALL.into_iter().map(move |m| cfg.param_index(l, m)))
@@ -83,22 +99,25 @@ pub(crate) fn rtn_grid(
         .map(|&i| std::mem::replace(&mut p.tensors[i], Tensor::zeros(&[0])))
         .collect();
     let mut layer_err = Vec::with_capacity(cfg.layers);
+    let mut grids = Vec::with_capacity(idxs.len());
     let mut errsum = 0.0f32;
     pool.update_windowed(
         &mut weights,
-        |k, w: &Tensor| -> Result<(Tensor, f32)> {
+        |k, w: &Tensor| -> Result<(Tensor, (f32, Option<RowGrid>))> {
             let m = Module::ALL[k % nmod];
             let (o, i) = cfg.weight_shape(m);
+            let (scale, zero) = quantref::row_grid(w, opts.maxq());
             let outs = engine.exec_ref(
                 &format!("rtn_{o}x{i}"),
                 &[&runtime::tensor_literal(w)?, &runtime::scalar_literal(opts.maxq())],
             )?;
             let q = runtime::literal_tensor(&outs[0])?;
             let err = q.sub(w).frob_norm().powi(2);
-            Ok((q, err))
+            Ok((q, (err, Some(RowGrid { scale, zero }))))
         },
-        |k, err| {
+        |k, (err, grid)| {
             errsum += err;
+            grids.push(grid);
             if k % nmod == nmod - 1 {
                 layer_err.push(errsum);
                 errsum = 0.0;
@@ -119,5 +138,5 @@ pub(crate) fn rtn_grid(
             p.tensors[cfg.param_index(l, m)] = q;
         }
     }
-    Ok(layer_err)
+    Ok((layer_err, grids))
 }

@@ -8,6 +8,20 @@
 use crate::tensor::linalg::hinv_cholesky_upper;
 use crate::tensor::Tensor;
 
+/// Round half-to-even, matching `jnp.round` in quantizer.py — rust's
+/// `f32::round` rounds halves away from zero, which would diverge from
+/// the HLO solver on exact `.5` ties (and a diverged `zero` shifts every
+/// recovered pack code; see `tensor::pack`). The `(x/2).round()*2` trick
+/// is exact: halving turns every half-integer tie into a quarter, which
+/// `round` resolves toward the even neighbor's half.
+pub fn round_ties_even(x: f32) -> f32 {
+    if (x - x.trunc()).abs() == 0.5 {
+        (x / 2.0).round() * 2.0
+    } else {
+        x.round()
+    }
+}
+
 /// Per-row asymmetric min-max grid: returns (scale, zero) per row.
 pub fn row_grid(w: &Tensor, maxq: f32) -> (Vec<f32>, Vec<f32>) {
     let rows = w.rows();
@@ -19,13 +33,13 @@ pub fn row_grid(w: &Tensor, maxq: f32) -> (Vec<f32>, Vec<f32>) {
         let hi = row.iter().cloned().fold(0.0f32, f32::max);
         let s = ((hi - lo) / maxq).max(1e-8);
         scale.push(s);
-        zero.push((-lo / s).round());
+        zero.push(round_ties_even(-lo / s));
     }
     (scale, zero)
 }
 
 fn quant_one(v: f32, s: f32, z: f32, maxq: f32) -> f32 {
-    let q = ((v / s).round() + z).clamp(0.0, maxq);
+    let q = (round_ties_even(v / s) + z).clamp(0.0, maxq);
     s * (q - z)
 }
 
@@ -110,6 +124,27 @@ mod tests {
             .collect();
         let r = vec![1.0f32; n];
         hessian_scaled(&x, &r)
+    }
+
+    #[test]
+    fn rounding_matches_jnp_round() {
+        // jnp.round is half-to-even; f32::round is half-away — the exact
+        // tie cases are where they differ
+        for (x, want) in [
+            (0.5f32, 0.0f32),
+            (1.5, 2.0),
+            (2.5, 2.0),
+            (3.5, 4.0),
+            (-0.5, -0.0),
+            (-1.5, -2.0),
+            (-2.5, -2.0),
+            (1.3, 1.0),
+            (1.7, 2.0),
+            (-1.7, -2.0),
+            (7.0, 7.0),
+        ] {
+            assert_eq!(round_ties_even(x), want, "x={x}");
+        }
     }
 
     #[test]

@@ -31,6 +31,7 @@ use anyhow::Result;
 
 use crate::corpus::{CalibSet, CorpusKind};
 use crate::eval::perplexity;
+use crate::model::config::ModelConfig;
 use crate::model::outliers::{inject_outliers, OutlierSpec};
 use crate::model::ParamSet;
 use crate::quant::{quantize, QuantOptions, SchedMode};
@@ -51,6 +52,12 @@ pub struct Ctx {
     /// scheduler mode from `--sched`, likewise stamped onto every run
     /// (output is mode-invariant — DESIGN.md §5)
     pub sched: SchedMode,
+    /// content-addressed Hessian cache dir from `--hess-cache`
+    /// (default auto): sweep drivers re-run identical pass-A
+    /// accumulations constantly — tables repeating a (method, bits,
+    /// strategy, seed) cell, `rsq all` re-running drivers — and a key hit
+    /// skips pass A with byte-identical output (DESIGN.md §9)
+    pub hess_cache: Option<std::path::PathBuf>,
 }
 
 impl Ctx {
@@ -69,18 +76,18 @@ impl Ctx {
             );
         }
         inject_outliers(&mut params, outlier_spec(args), train_seed);
-        let tmax = *cfg.seq_lens.iter().max().unwrap();
-        let eval = CalibSet::generate(
-            cfg.vocab,
-            CorpusKind::Wiki,
-            args.usize_or("eval-n", 32),
-            tmax,
-            train_seed,
-            2,
-        );
+        let eval = heldout_eval_set(&cfg, args);
         let sched = SchedMode::parse(&args.sched())
             .ok_or_else(|| anyhow::anyhow!("bad --sched (staged|pipelined)"))?;
-        Ok(Ctx { engine, params, eval, train_seed, jobs: args.jobs(), sched })
+        Ok(Ctx {
+            engine,
+            params,
+            eval,
+            train_seed,
+            jobs: args.jobs(),
+            sched,
+            hess_cache: args.hess_cache(),
+        })
     }
 
     /// Fresh calibration set for one seeded run (stream decorrelated from
@@ -105,9 +112,10 @@ impl Ctx {
         Ok((q, ppl))
     }
 
-    /// Stamp this context's `--jobs` worker count and `--sched` mode onto
-    /// `opts` — each a no-op when the caller already moved that knob off
-    /// its default (serial / pipelined), so explicit per-run choices win.
+    /// Stamp this context's `--jobs` worker count, `--sched` mode, and
+    /// `--hess-cache` dir onto `opts` — each a no-op when the caller
+    /// already moved that knob off its default (serial / pipelined /
+    /// uncached), so explicit per-run choices win.
     pub fn with_jobs(&self, mut opts: QuantOptions) -> QuantOptions {
         if opts.jobs == 1 {
             opts.jobs = self.jobs;
@@ -115,8 +123,35 @@ impl Ctx {
         if opts.sched == SchedMode::Pipelined {
             opts.sched = self.sched;
         }
+        if opts.hess_cache.is_none() {
+            opts.hess_cache = self.hess_cache.clone();
+        }
         opts
     }
+}
+
+/// Default calibration/scoring context length shared by `rsq quantize`
+/// (`--calib-t` default) and `rsq eval`'s checkpoint path: the largest
+/// compiled context, capped at 128 for CPU-budget runs. One definition so
+/// the two printouts can't silently drift apart.
+pub fn default_context(cfg: &ModelConfig) -> usize {
+    *cfg.seq_lens.iter().max().unwrap().min(&128)
+}
+
+/// The held-out eval set every scoring path shares — `Ctx::prepare` and
+/// `rsq eval` MUST draw the same samples, or artifact-backed scores stop
+/// lining up with the quantize-time printout: Wiki at the largest context
+/// length, stream 2 (decorrelated from calibration's 100+).
+pub fn heldout_eval_set(cfg: &ModelConfig, args: &Args) -> CalibSet {
+    let tmax = *cfg.seq_lens.iter().max().unwrap();
+    CalibSet::generate(
+        cfg.vocab,
+        CorpusKind::Wiki,
+        args.usize_or("eval-n", 32),
+        tmax,
+        args.u64_or("train-seed", 7),
+        2,
+    )
 }
 
 pub fn default_steps(config: &str) -> usize {

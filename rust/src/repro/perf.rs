@@ -112,6 +112,63 @@ pub fn perf(args: &Args) -> Result<()> {
         }
     }
 
+    // Hessian-cache pass-A elimination (DESIGN.md §9): the same RSQ run
+    // cold (cache miss: full pass A/B + store) then warm (key hit: solve
+    // only) at IDENTICAL jobs/sched, so the printed speedup measures the
+    // cache alone, not worker-count scaling. A third run at different
+    // jobs + sched then shows the key ignores both knobs (the counters
+    // prove the hit; byte-identity is pinned by integration_artifact).
+    println!("\n--- hessian cache (content-addressed pass-A elimination) ---");
+    let cache_dir = std::path::Path::new("cache/perf-hessians");
+    std::fs::remove_dir_all(cache_dir).ok(); // guarantee a cold first run
+    let mut cache_opts = QuantOptions::new(Method::Rsq, 3, t);
+    cache_opts.hess_cache = Some(cache_dir.to_path_buf());
+    let t0 = Instant::now();
+    let (_, cold) = quantize(&ctx.engine, &ctx.params, &calib, &cache_opts)?;
+    let cold_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let (_, warm) = quantize(&ctx.engine, &ctx.params, &calib, &cache_opts)?;
+    let warm_s = t0.elapsed().as_secs_f64();
+    println!(
+        "cold (miss): {cold_s:>8.3}s  [pass A {:.3}s | fused {:.3}s | solve {:.3}s]  \
+         layers hit {} / miss {} / skip {}",
+        cold.pass_a_seconds,
+        cold.fused_seconds,
+        cold.solve_seconds,
+        cold.hess_cache_hits,
+        cold.hess_cache_misses,
+        cold.hess_cache_skips,
+    );
+    println!(
+        "warm (hit):  {warm_s:>8.3}s  [solve {:.3}s; pass A+B+embed skipped]  \
+         layers hit {} / miss {} / skip {}",
+        warm.solve_seconds, warm.hess_cache_hits, warm.hess_cache_misses, warm.hess_cache_skips,
+    );
+    println!(
+        "pass-A elimination speedup (equal jobs/sched): {:.2}x (key {})",
+        cold_s / warm_s.max(1e-9),
+        warm.hess_key,
+    );
+    cache_opts.jobs = args.jobs().max(2); // hit must survive a jobs change
+    cache_opts.sched = SchedMode::Staged; // ... and a sched change
+    let (_, cross) = quantize(&ctx.engine, &ctx.params, &calib, &cache_opts)?;
+    println!(
+        "cross-scheduler reuse at jobs={} sched={}: layers hit {} / miss {} (key unchanged: {})",
+        cross.jobs,
+        cross.sched,
+        cross.hess_cache_hits,
+        cross.hess_cache_misses,
+        cross.hess_key == warm.hess_key,
+    );
+    let cache_record = Json::obj()
+        .set("cold_s", cold_s)
+        .set("warm_s", warm_s)
+        .set("speedup", cold_s / warm_s.max(1e-9))
+        .set("hits", warm.hess_cache_hits)
+        .set("misses", cold.hess_cache_misses)
+        .set("cross_sched_hits", cross.hess_cache_hits)
+        .set("key", warm.hess_key.as_str());
+
     // per-stage micro benches through the engine
     println!("\n--- per-module timings (engine) ---");
     let p_lit: Vec<xla::Literal> = ctx
@@ -172,6 +229,7 @@ pub fn perf(args: &Args) -> Result<()> {
         "perf",
         Json::obj()
             .set("methods", Json::Arr(results))
-            .set("jobs_sweep", Json::Arr(jobs_results)),
+            .set("jobs_sweep", Json::Arr(jobs_results))
+            .set("hess_cache", cache_record),
     )
 }

@@ -48,11 +48,54 @@ pub struct Manifest {
     pub modules: BTreeMap<String, ModuleSpec>,
 }
 
-fn parse_shape(s: &str) -> Vec<usize> {
+/// Parse a `d0xd1x…` (or `scalar`) shape spec. Shared with the
+/// quantized-artifact manifest (`quant::artifact::format`), and fallible:
+/// a malformed dim is a parse error, never a panic.
+pub fn parse_shape(s: &str) -> Result<Vec<usize>> {
     if s == "scalar" {
-        return vec![];
+        return Ok(vec![]);
     }
-    s.split('x').map(|d| d.parse().expect("bad shape dim")).collect()
+    s.split('x')
+        .map(|d| d.parse().with_context(|| format!("bad shape dim {d:?} in {s:?}")))
+        .collect()
+}
+
+/// Build a [`ModelConfig`] from `key=value` pairs — the config block shared
+/// by the AOT manifest and the quantized-artifact manifest (DESIGN.md §9).
+pub fn config_from_kv(kv: &BTreeMap<String, String>) -> Result<ModelConfig> {
+    let get = |k: &str| -> Result<String> {
+        kv.get(k).cloned().with_context(|| format!("manifest missing key {k}"))
+    };
+    let geti = |k: &str| -> Result<usize> {
+        get(k)?.parse().with_context(|| format!("manifest key {k} not an int"))
+    };
+    Ok(ModelConfig {
+        name: get("config")?,
+        d: geti("d")?,
+        layers: geti("layers")?,
+        heads: geti("heads")?,
+        ff: geti("ff")?,
+        vocab: geti("vocab")?,
+        max_seq: geti("max_seq")?,
+        batch: geti("batch")?,
+        seq_lens: get("seq_lens")?
+            .split(',')
+            .map(|t| t.parse().context("bad seq_len"))
+            .collect::<Result<_>>()?,
+        ldlq_k: geti("ldlq_k")?,
+        ldlq_g: geti("ldlq_g")?,
+    })
+}
+
+/// Render a [`ModelConfig`] back to the `key=value` block `config_from_kv`
+/// parses (the artifact writer uses this; round-trip tested below).
+pub fn config_to_kv(cfg: &ModelConfig) -> String {
+    let seq: Vec<String> = cfg.seq_lens.iter().map(|t| t.to_string()).collect();
+    format!(
+        "config={}\nd={}\nlayers={}\nheads={}\nff={}\nvocab={}\nmax_seq={}\nbatch={}\nseq_lens={}\nldlq_k={}\nldlq_g={}\n",
+        cfg.name, cfg.d, cfg.layers, cfg.heads, cfg.ff, cfg.vocab,
+        cfg.max_seq, cfg.batch, seq.join(","), cfg.ldlq_k, cfg.ldlq_g,
+    )
 }
 
 impl Manifest {
@@ -72,7 +115,7 @@ impl Manifest {
                 let mut shape = Vec::new();
                 for part in rest.split('|') {
                     if let Some(v) = part.strip_prefix("shape=") {
-                        shape = parse_shape(v);
+                        shape = parse_shape(v)?;
                     } else {
                         name = part.to_string();
                     }
@@ -96,9 +139,9 @@ impl Manifest {
                             .split(';')
                             .map(|one| {
                                 let (dt, sh) = one.split_once(':').unwrap_or(("float32", one));
-                                InputSpec { dtype: dt.to_string(), shape: parse_shape(sh) }
+                                Ok(InputSpec { dtype: dt.to_string(), shape: parse_shape(sh)? })
                             })
-                            .collect();
+                            .collect::<Result<_>>()?;
                     } else if let Some(v) = part.strip_prefix("nout=") {
                         spec.nout = v.parse().context("bad nout")?;
                     } else if let Some(v) = part.strip_prefix("note=") {
@@ -111,28 +154,7 @@ impl Manifest {
             }
         }
 
-        let get = |k: &str| -> Result<String> {
-            kv.get(k).cloned().with_context(|| format!("manifest missing key {k}"))
-        };
-        let geti = |k: &str| -> Result<usize> {
-            get(k)?.parse().with_context(|| format!("manifest key {k} not an int"))
-        };
-        let config = ModelConfig {
-            name: get("config")?,
-            d: geti("d")?,
-            layers: geti("layers")?,
-            heads: geti("heads")?,
-            ff: geti("ff")?,
-            vocab: geti("vocab")?,
-            max_seq: geti("max_seq")?,
-            batch: geti("batch")?,
-            seq_lens: get("seq_lens")?
-                .split(',')
-                .map(|t| t.parse().context("bad seq_len"))
-                .collect::<Result<_>>()?,
-            ldlq_k: geti("ldlq_k")?,
-            ldlq_g: geti("ldlq_g")?,
-        };
+        let config = config_from_kv(&kv)?;
         let m = Manifest { config, params, modules };
         m.check_params()?;
         Ok(m)
@@ -234,6 +256,27 @@ module=gptq_64x64|file=gptq_64x64.hlo.txt|in=float32:64x64;float32:64x64;float32
         assert_eq!(g.nout, 2);
         assert_eq!(g.inputs[2].shape, Vec::<usize>::new());
         assert!(m.module("nope").is_err());
+    }
+
+    #[test]
+    fn config_kv_round_trip() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let rendered = config_to_kv(&m.config);
+        let mut kv = BTreeMap::new();
+        for line in rendered.lines() {
+            let (k, v) = line.split_once('=').unwrap();
+            kv.insert(k.to_string(), v.to_string());
+        }
+        assert_eq!(config_from_kv(&kv).unwrap(), m.config);
+    }
+
+    #[test]
+    fn malformed_shape_is_an_error_not_a_panic() {
+        let broken = SAMPLE.replace("shape=256x64", "shape=256xcat");
+        assert!(Manifest::parse(&broken).is_err());
+        assert!(parse_shape("4xx8").is_err());
+        assert_eq!(parse_shape("scalar").unwrap(), Vec::<usize>::new());
+        assert_eq!(parse_shape("3x5").unwrap(), vec![3, 5]);
     }
 
     #[test]

@@ -7,8 +7,10 @@
 
 pub mod hadamard;
 pub mod linalg;
+pub mod pack;
 
 pub use hadamard::randomized_hadamard;
+pub use pack::{PackedRows, RowGrid};
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {

@@ -1,0 +1,274 @@
+//! Bit-packing codec for quantized weight rows (DESIGN.md §9).
+//!
+//! A GPTQ/RTN-quantized weight holds at most `2^bits` distinct values per
+//! row, all on the row's affine grid `v = scale · (code − zero)` with
+//! integer codes in `[0, 2^bits − 1]`. This module stores the codes at
+//! `bits` bits each plus the per-row grid (`scale`, `zero` as f32), cutting
+//! a 3-bit weight to ~3/32 of its f32 size on disk.
+//!
+//! The contract is **exactness, verified at pack time**: [`PackedRows::pack`]
+//! recovers every element's code from the dequantized tensor and checks
+//! that `scale * (code as f32 - zero)` reproduces the input *bit-for-bit*
+//! (`f32::to_bits`, so even `-0.0` vs `0.0` drift is caught). Any element
+//! that is not exactly representable fails the pack — callers fall back to
+//! raw f32 storage (the VQ codebook methods always do). [`PackedRows::unpack`]
+//! evaluates the identical expression, so `unpack(pack(t)) == t` bitwise
+//! whenever `pack` succeeds; rust/tests/prop_artifact.rs property-tests
+//! this across bit widths, ragged row widths, and degenerate rows.
+//!
+//! Bitstream layout: codes are packed LSB-first within each byte, and every
+//! row starts on a fresh byte boundary (`row_bytes` bytes per row), so rows
+//! are independently addressable and ragged widths need no global padding
+//! logic.
+
+use super::Tensor;
+
+/// Bit widths the codec supports (the paper's sweep range plus 8-bit).
+pub const PACK_BITS: [u32; 4] = [2, 3, 4, 8];
+
+/// Per-row affine quantization grid: `v = scale[r] * (code - zero[r])`.
+/// `zero` is integer-valued but stored as f32 because the dequantization
+/// arithmetic is f32 (see `quantref::row_grid`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowGrid {
+    pub scale: Vec<f32>,
+    pub zero: Vec<f32>,
+}
+
+/// Why a tensor could not be packed. Callers treat any of these as "store
+/// raw f32 instead" except where a test asserts the specific cause.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PackError {
+    /// bits not one of [`PACK_BITS`]
+    UnsupportedBits(u32),
+    /// tensor is not a 2-D matrix
+    NotMatrix,
+    /// scale/zero length differs from the row count
+    GridLenMismatch,
+    /// NaN/inf scale or zero, or scale ≤ 0 — such a grid cannot be
+    /// inverted, and silently packing it would decode to garbage
+    NonFiniteGrid { row: usize },
+    /// element not exactly representable as `scale*(code-zero)`
+    OffGrid { row: usize, col: usize },
+}
+
+impl std::fmt::Display for PackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PackError::UnsupportedBits(b) => {
+                write!(f, "unsupported pack width {b} bits (supported: {PACK_BITS:?})")
+            }
+            PackError::NotMatrix => write!(f, "only 2-D tensors can be bit-packed"),
+            PackError::GridLenMismatch => write!(f, "grid scale/zero length != row count"),
+            PackError::NonFiniteGrid { row } => {
+                write!(f, "row {row}: non-finite or non-positive grid scale/zero")
+            }
+            PackError::OffGrid { row, col } => {
+                write!(f, "element ({row},{col}) is not exactly on its row grid")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PackError {}
+
+/// Bytes one packed row of `cols` codes occupies (rows are byte-aligned).
+pub fn row_bytes(cols: usize, bits: u32) -> usize {
+    (cols * bits as usize + 7) / 8
+}
+
+/// A bit-packed 2-D tensor: integer codes + per-row grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedRows {
+    pub bits: u32,
+    pub rows: usize,
+    pub cols: usize,
+    pub grid: RowGrid,
+    /// `rows * row_bytes(cols, bits)` bytes, codes LSB-first per byte
+    pub data: Vec<u8>,
+}
+
+impl PackedRows {
+    /// Pack `t` against the given per-row grid, verifying that every
+    /// element decodes back bit-identically. O(rows·cols).
+    pub fn pack(t: &Tensor, bits: u32, grid: &RowGrid) -> Result<PackedRows, PackError> {
+        if !PACK_BITS.contains(&bits) {
+            return Err(PackError::UnsupportedBits(bits));
+        }
+        if t.shape.len() != 2 {
+            return Err(PackError::NotMatrix);
+        }
+        let (rows, cols) = (t.shape[0], t.shape[1]);
+        if grid.scale.len() != rows || grid.zero.len() != rows {
+            return Err(PackError::GridLenMismatch);
+        }
+        let maxq = ((1u64 << bits) - 1) as f32;
+        let rb = row_bytes(cols, bits);
+        let mut data = vec![0u8; rows * rb];
+        for r in 0..rows {
+            let (s, z) = (grid.scale[r], grid.zero[r]);
+            if !s.is_finite() || !z.is_finite() || s <= 0.0 {
+                return Err(PackError::NonFiniteGrid { row: r });
+            }
+            for (c, &v) in t.row(r).iter().enumerate() {
+                let code = (v / s + z).round();
+                if !(code >= 0.0 && code <= maxq) {
+                    return Err(PackError::OffGrid { row: r, col: c });
+                }
+                let code = code as u32;
+                // the decoder's exact expression — bit-compare against v
+                if (s * (code as f32 - z)).to_bits() != v.to_bits() {
+                    return Err(PackError::OffGrid { row: r, col: c });
+                }
+                write_code(&mut data[r * rb..(r + 1) * rb], c, bits, code);
+            }
+        }
+        Ok(PackedRows { bits, rows, cols, grid: grid.clone(), data })
+    }
+
+    /// Decode back to the exact tensor `pack` consumed.
+    pub fn unpack(&self) -> Tensor {
+        let rb = row_bytes(self.cols, self.bits);
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        for r in 0..self.rows {
+            let (s, z) = (self.grid.scale[r], self.grid.zero[r]);
+            let row_data = &self.data[r * rb..(r + 1) * rb];
+            for c in 0..self.cols {
+                let code = read_code(row_data, c, self.bits);
+                out.set2(r, c, s * (code as f32 - z));
+            }
+        }
+        out
+    }
+
+    /// Integer code of one element (tests + debugging).
+    pub fn code(&self, r: usize, c: usize) -> u32 {
+        let rb = row_bytes(self.cols, self.bits);
+        read_code(&self.data[r * rb..(r + 1) * rb], c, self.bits)
+    }
+}
+
+fn write_code(row: &mut [u8], col: usize, bits: u32, code: u32) {
+    let start = col * bits as usize;
+    for k in 0..bits as usize {
+        let bit = start + k;
+        if (code >> k) & 1 == 1 {
+            row[bit / 8] |= 1 << (bit % 8);
+        }
+    }
+}
+
+fn read_code(row: &[u8], col: usize, bits: u32) -> u32 {
+    let start = col * bits as usize;
+    let mut code = 0u32;
+    for k in 0..bits as usize {
+        let bit = start + k;
+        code |= (((row[bit / 8] >> (bit % 8)) & 1) as u32) << k;
+    }
+    code
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build an exactly-representable tensor from explicit codes.
+    fn from_codes(codes: &[&[u32]], s: f32, z: f32) -> (Tensor, RowGrid) {
+        let rows = codes.len();
+        let cols = codes[0].len();
+        let data = codes
+            .iter()
+            .flat_map(|row| row.iter().map(|&c| s * (c as f32 - z)))
+            .collect();
+        let grid = RowGrid { scale: vec![s; rows], zero: vec![z; rows] };
+        (Tensor::from_vec(&[rows, cols], data), grid)
+    }
+
+    #[test]
+    fn roundtrip_hand_values() {
+        let (t, grid) = from_codes(&[&[0, 1, 2, 3, 7], &[7, 6, 5, 0, 1]], 0.5, 2.0);
+        let p = PackedRows::pack(&t, 3, &grid).unwrap();
+        assert_eq!(p.code(0, 4), 7);
+        assert_eq!(p.code(1, 3), 0);
+        let u = p.unpack();
+        assert_eq!(u.data, t.data);
+        // bit-exactness, not just value equality
+        for (a, b) in u.data.iter().zip(&t.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn row_bytes_ragged() {
+        assert_eq!(row_bytes(5, 3), 2); // 15 bits
+        assert_eq!(row_bytes(8, 3), 3); // 24 bits
+        assert_eq!(row_bytes(1, 2), 1);
+        assert_eq!(row_bytes(7, 8), 7);
+    }
+
+    #[test]
+    fn rejects_unsupported_bits() {
+        let (t, grid) = from_codes(&[&[0, 1]], 1.0, 0.0);
+        assert_eq!(PackedRows::pack(&t, 5, &grid), Err(PackError::UnsupportedBits(5)));
+        assert_eq!(PackedRows::pack(&t, 0, &grid), Err(PackError::UnsupportedBits(0)));
+    }
+
+    #[test]
+    fn rejects_non_finite_grid() {
+        let (t, mut grid) = from_codes(&[&[0, 1], &[2, 3]], 1.0, 0.0);
+        grid.scale[1] = f32::NAN;
+        assert_eq!(PackedRows::pack(&t, 2, &grid), Err(PackError::NonFiniteGrid { row: 1 }));
+        grid.scale[1] = f32::INFINITY;
+        assert_eq!(PackedRows::pack(&t, 2, &grid), Err(PackError::NonFiniteGrid { row: 1 }));
+        grid.scale[1] = 0.0;
+        assert_eq!(PackedRows::pack(&t, 2, &grid), Err(PackError::NonFiniteGrid { row: 1 }));
+    }
+
+    #[test]
+    fn rejects_off_grid_values() {
+        let (mut t, grid) = from_codes(&[&[0, 1, 2]], 0.25, 1.0);
+        t.data[1] += 0.01;
+        assert_eq!(PackedRows::pack(&t, 2, &grid), Err(PackError::OffGrid { row: 0, col: 1 }));
+    }
+
+    #[test]
+    fn rejects_out_of_range_codes() {
+        // value corresponds to code 9 on a 3-bit (maxq=7) grid
+        let t = Tensor::from_vec(&[1, 1], vec![9.0]);
+        let grid = RowGrid { scale: vec![1.0], zero: vec![0.0] };
+        assert!(matches!(PackedRows::pack(&t, 3, &grid), Err(PackError::OffGrid { .. })));
+    }
+
+    #[test]
+    fn all_zero_and_all_max_rows() {
+        for bits in PACK_BITS {
+            let maxq = (1u32 << bits) - 1;
+            let zeros: Vec<u32> = vec![0; 11];
+            let maxs: Vec<u32> = vec![maxq; 11];
+            let (t, grid) = from_codes(&[&zeros, &maxs], 0.125, 3.0);
+            let p = PackedRows::pack(&t, bits, &grid).unwrap();
+            assert_eq!(p.unpack().data, t.data, "bits={bits}");
+            assert_eq!(p.code(1, 10), maxq);
+        }
+    }
+
+    #[test]
+    fn rtn_output_packs_exactly() {
+        use crate::quantref;
+        use crate::util::Pcg;
+        let mut rng = Pcg::new(11);
+        let w = Tensor::randn(&[6, 37], 1.0, &mut rng);
+        for bits in PACK_BITS {
+            let maxq = ((1u64 << bits) - 1) as f32;
+            let q = quantref::rtn(&w, maxq);
+            let (scale, zero) = quantref::row_grid(&w, maxq);
+            let grid = RowGrid { scale, zero };
+            let p = PackedRows::pack(&q, bits, &grid)
+                .unwrap_or_else(|e| panic!("bits={bits}: {e}"));
+            let u = p.unpack();
+            for (a, b) in u.data.iter().zip(&q.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bits={bits}");
+            }
+        }
+    }
+}

@@ -92,6 +92,29 @@ impl Args {
         self.str_or("sched", "pipelined")
     }
 
+    /// Hessian-cache location: `--hess-cache DIR|auto|off`. Defaults to
+    /// `auto` (= `cache/hessians` under the working directory, next to the
+    /// drivers' `results/`), so sweep drivers pay for each distinct pass-A
+    /// accumulation once. `off` disables caching (DESIGN.md §9).
+    pub fn hess_cache(&self) -> Option<std::path::PathBuf> {
+        match self.get("hess-cache").unwrap_or("auto") {
+            "off" | "none" | "0" => None,
+            "auto" => Some(std::path::PathBuf::from("cache/hessians")),
+            dir => Some(std::path::PathBuf::from(dir)),
+        }
+    }
+
+    /// Reject mutually-exclusive options. Returns the offending pair's
+    /// message so callers surface it however they report errors (the util
+    /// layer stays anyhow-free).
+    pub fn conflict(&self, a: &str, b: &str) -> Result<(), String> {
+        if self.get(a).is_some() && self.get(b).is_some() {
+            Err(format!("--{a} and --{b} are mutually exclusive — pass exactly one"))
+        } else {
+            Ok(())
+        }
+    }
+
     /// Comma-separated list option.
     pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
         match self.get(key) {
@@ -165,5 +188,32 @@ mod tests {
         assert_eq!(parse("quantize").sched(), "pipelined", "pipelined by default");
         assert_eq!(parse("--sched staged").sched(), "staged");
         assert_eq!(parse("--sched=pipelined").sched(), "pipelined");
+    }
+
+    #[test]
+    fn hess_cache_parsing() {
+        assert_eq!(
+            parse("quantize").hess_cache(),
+            Some(std::path::PathBuf::from("cache/hessians")),
+            "caching defaults to auto for CLI runs"
+        );
+        assert_eq!(parse("--hess-cache off").hess_cache(), None);
+        assert_eq!(parse("--hess-cache none").hess_cache(), None);
+        assert_eq!(
+            parse("--hess-cache /tmp/h").hess_cache(),
+            Some(std::path::PathBuf::from("/tmp/h"))
+        );
+    }
+
+    #[test]
+    fn conflicting_options_rejected() {
+        let a = parse("eval --artifact out --model ckpt.bin");
+        let err = a.conflict("artifact", "model").unwrap_err();
+        assert!(err.contains("--artifact"), "{err}");
+        assert!(err.contains("mutually exclusive"), "{err}");
+        // either alone is fine, and so is neither
+        assert!(parse("eval --artifact out").conflict("artifact", "model").is_ok());
+        assert!(parse("eval --model ckpt.bin").conflict("artifact", "model").is_ok());
+        assert!(parse("eval").conflict("artifact", "model").is_ok());
     }
 }

@@ -1,0 +1,163 @@
+//! Checksums and content-addressing hashes (no `crc`/`sha2` crates in the
+//! vendor set).
+//!
+//! - [`crc32`] — CRC-32 (IEEE 802.3, reflected 0xEDB88320) for per-blob
+//!   integrity in the quantized-artifact format and the Hessian cache
+//!   (DESIGN.md §9). Bitwise, table-free: these run over megabytes once
+//!   per save/load, not in any hot loop.
+//! - [`Fnv1a64`] — streaming FNV-1a 64 for content-addressed cache keys.
+//!   Two independent streams (distinct bases) give a 128-bit key, which is
+//!   collision-safe at the scale of "every sweep cell ever run on one
+//!   machine".
+
+/// CRC-32 (IEEE) of `bytes`. `crc32(b"123456789") == 0xCBF4_3926`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// FNV-1a 64 offset basis (the standard one).
+pub const FNV_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Streaming FNV-1a 64 hasher with typed little-endian write helpers so
+/// key derivation reads as a field list (see `quant::artifact::cache`).
+#[derive(Clone, Debug)]
+pub struct Fnv1a64 {
+    state: u64,
+}
+
+impl Fnv1a64 {
+    pub fn new() -> Self {
+        Self::with_basis(FNV_BASIS)
+    }
+
+    /// Start from a non-standard basis — used to derive a second,
+    /// independent 64-bit stream over the same input.
+    pub fn with_basis(basis: u64) -> Self {
+        Fnv1a64 { state: basis }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    /// Length-prefixed string write, so `("ab","c")` and `("a","bc")`
+    /// hash differently.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write(s.as_bytes());
+    }
+
+    pub fn write_u32(&mut self, v: u32) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    /// Hash the *bits* of an f32 (NaN payloads and -0.0 vs 0.0 included —
+    /// cache keys must distinguish everything the pipeline could).
+    pub fn write_f32(&mut self, v: f32) {
+        self.write_u32(v.to_bits());
+    }
+
+    pub fn write_f32s(&mut self, vs: &[f32]) {
+        self.write_usize(vs.len());
+        for &v in vs {
+            self.write_f32(v);
+        }
+    }
+
+    pub fn write_i32s(&mut self, vs: &[i32]) {
+        self.write_usize(vs.len());
+        for &v in vs {
+            self.write(&v.to_le_bytes());
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+impl Default for Fnv1a64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn crc32_detects_single_bit_flip() {
+        let mut data = vec![0xA5u8; 256];
+        let base = crc32(&data);
+        data[100] ^= 0x10;
+        assert_ne!(crc32(&data), base);
+    }
+
+    #[test]
+    fn fnv_known_vectors() {
+        assert_eq!(Fnv1a64::new().finish(), FNV_BASIS);
+        let mut h = Fnv1a64::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut h = Fnv1a64::new();
+        h.write(b"foobar");
+        assert_eq!(h.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn length_prefix_disambiguates() {
+        let key = |a: &str, b: &str| {
+            let mut h = Fnv1a64::new();
+            h.write_str(a);
+            h.write_str(b);
+            h.finish()
+        };
+        assert_ne!(key("ab", "c"), key("a", "bc"));
+    }
+
+    #[test]
+    fn distinct_bases_give_independent_streams() {
+        let mut a = Fnv1a64::new();
+        let mut b = Fnv1a64::with_basis(FNV_BASIS ^ 0x9E37_79B9_7F4A_7C15);
+        a.write(b"same input");
+        b.write(b"same input");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn f32_bits_distinguish_negative_zero() {
+        let mut a = Fnv1a64::new();
+        let mut b = Fnv1a64::new();
+        a.write_f32(0.0);
+        b.write_f32(-0.0);
+        assert_ne!(a.finish(), b.finish());
+    }
+}

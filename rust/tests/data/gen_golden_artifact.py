@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Regenerate the golden quantized-artifact fixtures under rust/tests/data/.
+
+Mirrors the v1 on-disk format of rust/src/quant/artifact/format.rs
+(DESIGN.md §9) for a tiny standalone "golden" config, so the rust loader
+can be pinned against bytes produced by an independent implementation:
+
+  artifact_ok/          valid artifact: 12 raw tensors + l0.wq bit-packed
+  artifact_truncated/   weights.bin cut short -> "truncated" error
+  artifact_badsum/      one blob byte flipped  -> "checksum mismatch" error
+  artifact_badversion/  version=99             -> "unsupported ... version"
+
+Deterministic by construction (no RNG, no timestamps): re-running it must
+reproduce the committed files byte-for-byte.
+"""
+import os
+import struct
+import zlib
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+CONFIG = dict(config="golden", d=4, layers=1, heads=1, ff=8, vocab=16,
+              max_seq=8, batch=2, seq_lens="8", ldlq_k=16, ldlq_g=2)
+
+# (name, shape) in the rust param_names() order for layers=1
+PARAMS = [
+    ("emb", (16, 4)), ("pos", (8, 4)),
+    ("l0.g1", (4,)), ("l0.wq", (4, 4)), ("l0.wk", (4, 4)), ("l0.wv", (4, 4)),
+    ("l0.wo", (4, 4)), ("l0.g2", (4,)), ("l0.wup", (8, 4)), ("l0.wgate", (8, 4)),
+    ("l0.wdown", (4, 8)), ("gf", (4,)), ("head", (16, 4)),
+]
+
+PACKED = "l0.wq"
+BITS = 4
+SCALE = [0.5, 0.25, 0.5, 0.25]
+ZERO = [2.0, 0.0, 1.0, 3.0]
+
+
+def raw_value(tensor_idx, flat_idx):
+    # multiples of 0.25 are exact in f32
+    return ((tensor_idx * 7 + flat_idx * 3) % 31 - 15) * 0.25
+
+
+def code(r, c):
+    return (r * 5 + c * 3) % 16
+
+
+def pack_blob():
+    out = b"".join(struct.pack("<f", s) for s in SCALE)
+    out += b"".join(struct.pack("<f", z) for z in ZERO)
+    rows = []
+    for r in range(4):
+        # 4 cols x 4 bits = 2 bytes, codes LSB-first
+        row = bytearray(2)
+        for c in range(4):
+            q = code(r, c)
+            start = c * BITS
+            for k in range(BITS):
+                bit = start + k
+                if (q >> k) & 1:
+                    row[bit // 8] |= 1 << (bit % 8)
+        rows.append(bytes(row))
+    return out + b"".join(rows)
+
+
+def raw_blob(tensor_idx, shape):
+    n = 1
+    for d in shape:
+        n *= d
+    return b"".join(struct.pack("<f", raw_value(tensor_idx, i)) for i in range(n))
+
+
+def build():
+    blobs = b""
+    lines = []
+    for idx, (name, shape) in enumerate(PARAMS):
+        if name == PACKED:
+            blob, codec = pack_blob(), f"packed{BITS}"
+        else:
+            blob, codec = raw_blob(idx, shape), "raw"
+        lines.append(
+            f"tensor={name}|codec={codec}|shape={'x'.join(map(str, shape))}"
+            f"|offset={len(blobs)}|len={len(blob)}|crc={zlib.crc32(blob):08x}"
+        )
+        blobs += blob
+
+    manifest = ["format=rsq-artifact", "version=1"]
+    manifest += [f"{k}={v}" for k, v in CONFIG.items()]
+    manifest += [
+        "method=rsq", "strategy=attncon:0.05", "bits=4", "damp=0.01",
+        "rot_seed=20823", "seq_len=8", "expansion=1", "module_mask=all",
+        "hess_key=" + "ab" * 16,
+    ]
+    manifest += lines
+    manifest.append(f"total_len={len(blobs)}")
+    return "\n".join(manifest) + "\n", blobs
+
+
+def write(dirname, manifest, blobs):
+    d = os.path.join(HERE, dirname)
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, "artifact.txt"), "w") as f:
+        f.write(manifest)
+    with open(os.path.join(d, "weights.bin"), "wb") as f:
+        f.write(blobs)
+
+
+def main():
+    manifest, blobs = build()
+    write("artifact_ok", manifest, blobs)
+    write("artifact_truncated", manifest, blobs[:-5])
+    bad = bytearray(blobs)
+    # flip a bit inside l0.wq's packed blob (offset of tensor idx 3)
+    wq_off = sum(len(raw_blob(i, s)) for i, (n, s) in enumerate(PARAMS[:2]))
+    wq_off += len(raw_blob(2, (4,)))
+    bad[wq_off + 3] ^= 0x20
+    write("artifact_badsum", manifest, bytes(bad))
+    write("artifact_badversion", manifest.replace("version=1", "version=99", 1), blobs)
+    print("golden artifact fixtures written under", HERE)
+
+
+if __name__ == "__main__":
+    main()

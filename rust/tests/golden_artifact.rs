@@ -1,0 +1,129 @@
+//! Golden-file tests for the quantized-artifact format: the fixtures
+//! under tests/data/ were produced by an independent implementation
+//! (gen_golden_artifact.py) of the v1 layout, pinning the rust loader
+//! against concrete bytes — and pinning the failure modes (truncated
+//! blob, checksum mismatch, unknown version) to actionable errors, never
+//! a panic or silent garbage. Host-only: no compiled artifacts needed.
+
+use std::path::PathBuf;
+
+use rsq::quant::artifact;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data").join(name)
+}
+
+/// The generator's value formulas, mirrored for assertions.
+fn raw_value(tensor_idx: usize, flat_idx: usize) -> f32 {
+    (((tensor_idx * 7 + flat_idx * 3) % 31) as f32 - 15.0) * 0.25
+}
+
+fn wq_value(r: usize, c: usize) -> f32 {
+    let scale = [0.5f32, 0.25, 0.5, 0.25];
+    let zero = [2.0f32, 0.0, 1.0, 3.0];
+    let code = ((r * 5 + c * 3) % 16) as f32;
+    scale[r] * (code - zero[r])
+}
+
+#[test]
+fn golden_artifact_loads_with_exact_values() {
+    let (p, manifest) = artifact::load(&fixture("artifact_ok")).unwrap();
+    assert_eq!(manifest.version, 1);
+    assert_eq!(manifest.config.name, "golden");
+    assert_eq!(manifest.config.d, 4);
+    assert_eq!(manifest.method, "rsq");
+    assert_eq!(manifest.strategy, "attncon:0.05");
+    assert_eq!(manifest.bits, 4);
+    assert_eq!(manifest.hess_key, "ab".repeat(16));
+    assert_eq!(p.tensors.len(), 13);
+
+    // raw tensors decode the generator's formula exactly
+    let emb = &p.tensors[0];
+    assert_eq!(emb.shape, vec![16, 4]);
+    for i in 0..emb.data.len() {
+        assert_eq!(emb.data[i].to_bits(), raw_value(0, i).to_bits(), "emb[{i}]");
+    }
+    let head = &p.tensors[12];
+    for i in 0..head.data.len() {
+        assert_eq!(head.data[i].to_bits(), raw_value(12, i).to_bits(), "head[{i}]");
+    }
+
+    // the packed tensor dequantizes through the bit-packed path
+    let wq = &p.tensors[3];
+    assert_eq!(wq.shape, vec![4, 4]);
+    assert_eq!(
+        manifest.tensors[3].codec,
+        artifact::Codec::Packed { bits: 4 },
+        "l0.wq is stored packed"
+    );
+    for r in 0..4 {
+        for c in 0..4 {
+            assert_eq!(wq.at2(r, c).to_bits(), wq_value(r, c).to_bits(), "wq[{r},{c}]");
+        }
+    }
+    // spot values: code(0,0)=0 -> 0.5*(0-2) = -1.0; code(3,3)=(15+9)%16=8 -> 0.25*(8-3)
+    assert_eq!(wq.at2(0, 0), -1.0);
+    assert_eq!(wq.at2(3, 3), 1.25);
+}
+
+#[test]
+fn truncated_blob_is_rejected_with_actionable_error() {
+    let err = artifact::load(&fixture("artifact_truncated")).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "{err}");
+    assert!(err.contains("rsq quantize --save"), "error must say how to fix: {err}");
+}
+
+#[test]
+fn checksum_mismatch_is_rejected_and_names_the_tensor() {
+    let err = artifact::load(&fixture("artifact_badsum")).unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch"), "{err}");
+    assert!(err.contains("l0.wq"), "error must name the corrupt tensor: {err}");
+}
+
+#[test]
+fn unknown_version_is_rejected_with_upgrade_hint() {
+    let err = artifact::load(&fixture("artifact_badversion")).unwrap_err().to_string();
+    assert!(err.contains("unsupported artifact version 99"), "{err}");
+    assert!(err.contains("re-save"), "{err}");
+}
+
+#[test]
+fn missing_directory_points_at_save() {
+    let err = artifact::load(&fixture("no_such_artifact")).unwrap_err().to_string();
+    assert!(err.contains("rsq quantize --save"), "{err}");
+}
+
+#[test]
+fn golden_fixture_survives_a_rust_resave() {
+    // load the python-written artifact, re-save it through the rust
+    // writer, and confirm a second load sees identical tensors — the two
+    // implementations agree on the format in both directions
+    let (p, manifest) = artifact::load(&fixture("artifact_ok")).unwrap();
+    let dir = std::env::temp_dir().join(format!("rsq_golden_resave_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // rebuild the save-side inputs: grids for the packed tensor come from
+    // the manifest-recorded codec via a raw fallback (no grids -> raw)
+    let opts = {
+        let mut o = rsq::quant::QuantOptions::new(
+            rsq::quant::Method::parse(&manifest.method).unwrap(),
+            manifest.bits,
+            manifest.seq_len,
+        );
+        o.rot_seed = manifest.rot_seed;
+        o
+    };
+    let report = rsq::quant::QuantReport {
+        hess_key: manifest.hess_key.clone(),
+        ..Default::default()
+    };
+    artifact::save(&dir, &p, &report, &opts).unwrap();
+    let (p2, _) = artifact::load(&dir).unwrap();
+    for (a, b) in p.tensors.iter().zip(&p2.tensors) {
+        assert_eq!(a.shape, b.shape);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,270 @@
+//! Artifact + Hessian-cache integration on the tiny config: `--save` then
+//! `eval --artifact` must match the in-memory pipeline bit-for-bit across
+//! every jobs × sched combination (incl. the partial module_mask path),
+//! and a warm cache must skip pass A while producing byte-identical
+//! artifacts. Requires `make artifacts`.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+use rsq::corpus::{CalibSet, CorpusKind};
+use rsq::eval::perplexity;
+use rsq::model::config::Module;
+use rsq::model::outliers::{inject_outliers, OutlierSpec};
+use rsq::model::ParamSet;
+use rsq::quant::{artifact, quantize, Method, QuantOptions, SchedMode, Strategy};
+use rsq::runtime::Engine;
+use rsq::train::train_or_load;
+
+fn setup() -> (Engine, ParamSet, CalibSet) {
+    let eng = Engine::load("tiny").expect("run `make artifacts` first");
+    let cfg = eng.config().clone();
+    let (mut p, _) = train_or_load(&eng, 7, 150, false).unwrap();
+    inject_outliers(&mut p, OutlierSpec::default(), 7);
+    let calib = CalibSet::generate(cfg.vocab, CorpusKind::Wiki, 8, 64, 7, 1);
+    (eng, p, calib)
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("rsq_int_artifact_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn assert_bit_identical(a: &ParamSet, b: &ParamSet, label: &str) {
+    assert_eq!(a.tensors.len(), b.tensors.len(), "{label}");
+    for (i, (x, y)) in a.tensors.iter().zip(&b.tensors).enumerate() {
+        assert_eq!(x.shape, y.shape, "{label}: tensor {i} shape");
+        for (j, (va, vb)) in x.data.iter().zip(&y.data).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{label}: tensor {i} element {j}: {va} vs {vb}"
+            );
+        }
+    }
+}
+
+fn dir_bytes(dir: &PathBuf) -> (Vec<u8>, Vec<u8>) {
+    (
+        std::fs::read(dir.join(artifact::MANIFEST_FILE)).unwrap(),
+        std::fs::read(dir.join(artifact::BLOBS_FILE)).unwrap(),
+    )
+}
+
+/// `quantize --save` + `eval --artifact` ≡ the in-memory path, for every
+/// jobs × sched combination, and the artifact bytes themselves are
+/// invariant across the grid.
+#[test]
+fn save_then_load_matches_in_memory_across_jobs_and_sched() {
+    let (eng, p, calib) = setup();
+    let mut baseline: Option<(Vec<u8>, Vec<u8>, ParamSet, f64)> = None;
+    for jobs in [1usize, 4] {
+        for sched in [SchedMode::Staged, SchedMode::Pipelined] {
+            let mut opts = QuantOptions::new(Method::Rsq, 3, 64);
+            opts.jobs = jobs;
+            opts.sched = sched;
+            let (q, report) = quantize(&eng, &p, &calib, &opts).unwrap();
+            let dir = tmpdir(&format!("grid_{jobs}_{}", sched.name()));
+            artifact::save(&dir, &q, &report, &opts).unwrap();
+
+            let (loaded, manifest) = artifact::load(&dir).unwrap();
+            assert_eq!(manifest.bits, 3);
+            assert_eq!(&manifest.config, eng.config());
+            assert_bit_identical(&loaded, &q, &format!("jobs={jobs} sched={}", sched.name()));
+
+            // eval through the loaded artifact: logits path == in-memory
+            let eval = CalibSet::generate(eng.config().vocab, CorpusKind::Wiki, 8, 64, 7, 2);
+            let ppl_mem = perplexity(&eng, &q, &eval, 64).unwrap();
+            let ppl_art = perplexity(&eng, &loaded, &eval, 64).unwrap();
+            assert_eq!(
+                ppl_mem.to_bits(),
+                ppl_art.to_bits(),
+                "jobs={jobs} sched={}: artifact-backed ppl must be bit-identical",
+                sched.name()
+            );
+
+            // the artifact bytes are jobs/sched-invariant too
+            let bytes = dir_bytes(&dir);
+            if let Some((man, blob, q0, ppl0)) = &baseline {
+                assert_eq!(&bytes.0, man, "manifest bytes at jobs={jobs} {}", sched.name());
+                assert_eq!(&bytes.1, blob, "blob bytes at jobs={jobs} {}", sched.name());
+                assert_bit_identical(&q, q0, "cross-scheduler quantized params");
+                assert_eq!(ppl_mem.to_bits(), ppl0.to_bits());
+            } else {
+                baseline = Some((bytes.0, bytes.1, q, ppl_mem));
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+/// The partial module_mask path keeps both Hessian sets; its artifacts
+/// must round-trip bit-identically as well.
+#[test]
+fn module_mask_artifact_roundtrip() {
+    let (eng, p, calib) = setup();
+    let mask: HashSet<Module> = [Module::Wq, Module::Wv, Module::Wdown].into_iter().collect();
+    for jobs in [1usize, 4] {
+        let mut opts = QuantOptions::new(Method::Rsq, 3, 64);
+        opts.module_mask = Some(mask.clone());
+        opts.jobs = jobs;
+        let (q, report) = quantize(&eng, &p, &calib, &opts).unwrap();
+        let dir = tmpdir(&format!("mask_{jobs}"));
+        let manifest = artifact::save(&dir, &q, &report, &opts).unwrap();
+        assert_eq!(
+            manifest.module_mask,
+            Some(vec!["wdown".to_string(), "wq".to_string(), "wv".to_string()]),
+            "mask is recorded sorted"
+        );
+        let (loaded, _) = artifact::load(&dir).unwrap();
+        assert_bit_identical(&loaded, &q, &format!("module_mask jobs={jobs}"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Second run over a warm cache: pass A skipped (hit counters say so),
+/// output params and artifact bytes byte-identical to the cold run — and
+/// the hit must survive a jobs/sched change, because the key excludes
+/// both.
+#[test]
+fn warm_hessian_cache_skips_pass_a_and_stays_byte_identical() {
+    let (eng, p, calib) = setup();
+    let cache_dir = tmpdir("hesscache");
+    let layers = eng.config().layers;
+
+    let mut opts = QuantOptions::new(Method::Rsq, 3, 64);
+    opts.hess_cache = Some(cache_dir.clone());
+    let (q_cold, rep_cold) = quantize(&eng, &p, &calib, &opts).unwrap();
+    assert_eq!(rep_cold.hess_cache_hits, 0);
+    assert_eq!(rep_cold.hess_cache_misses, layers, "cold run computes + stores");
+    assert!(!rep_cold.hess_key.is_empty());
+
+    let d_cold = tmpdir("art_cold");
+    artifact::save(&d_cold, &q_cold, &rep_cold, &opts).unwrap();
+
+    // warm, at different jobs AND different sched
+    opts.jobs = 4;
+    opts.sched = SchedMode::Staged;
+    let (q_warm, rep_warm) = quantize(&eng, &p, &calib, &opts).unwrap();
+    assert_eq!(rep_warm.hess_cache_hits, layers, "warm run must hit");
+    assert_eq!(rep_warm.hess_cache_misses, 0);
+    assert_eq!(rep_warm.hess_key, rep_cold.hess_key);
+    assert_eq!(rep_warm.pass_a_seconds, 0.0, "pass A skipped");
+    assert_eq!(rep_warm.fused_seconds, 0.0, "fused sweeps skipped");
+    assert_bit_identical(&q_warm, &q_cold, "warm vs cold params");
+
+    let d_warm = tmpdir("art_warm");
+    artifact::save(&d_warm, &q_warm, &rep_warm, &opts).unwrap();
+    assert_eq!(dir_bytes(&d_cold), dir_bytes(&d_warm), "artifacts must be byte-identical");
+
+    // different strategy misses (sanity that hits aren't unconditional)
+    let mut opts2 = QuantOptions::new(Method::Rsq, 3, 64);
+    opts2.hess_cache = Some(cache_dir.clone());
+    opts2.strategy = Strategy::ActNorm { r_min: 0.05 };
+    let (_, rep2) = quantize(&eng, &p, &calib, &opts2).unwrap();
+    assert_eq!(rep2.hess_cache_hits, 0, "different strategy must not hit");
+    assert_eq!(rep2.hess_cache_misses, layers);
+
+    for d in [&cache_dir, &d_cold, &d_warm] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+/// Warm hit on the partial-mask path: the uniform Hessian set must
+/// survive the store → rehydrate → solve round trip bit-exactly. A bug
+/// that dropped or swapped the uniform accumulators on the warm path
+/// would quantize the unmasked modules against the wrong Hessians —
+/// this is the only end-to-end coverage of that serialization path.
+#[test]
+fn warm_cache_with_partial_module_mask_is_bit_identical() {
+    let (eng, p, calib) = setup();
+    let cache_dir = tmpdir("hesscache_mask");
+    let layers = eng.config().layers;
+    let mask: HashSet<Module> = [Module::Wq, Module::Wdown].into_iter().collect();
+
+    let mut opts = QuantOptions::new(Method::Rsq, 3, 64);
+    opts.module_mask = Some(mask);
+    opts.hess_cache = Some(cache_dir.clone());
+    let (q_cold, rep_cold) = quantize(&eng, &p, &calib, &opts).unwrap();
+    assert_eq!(rep_cold.hess_cache_misses, layers);
+
+    opts.jobs = 4;
+    let (q_warm, rep_warm) = quantize(&eng, &p, &calib, &opts).unwrap();
+    assert_eq!(rep_warm.hess_cache_hits, layers, "masked warm run must hit");
+    assert_bit_identical(&q_warm, &q_cold, "warm vs cold under partial mask");
+
+    // and the artifacts built from both are byte-identical
+    let (d_cold, d_warm) = (tmpdir("mask_art_cold"), tmpdir("mask_art_warm"));
+    artifact::save(&d_cold, &q_cold, &rep_cold, &opts).unwrap();
+    artifact::save(&d_warm, &q_warm, &rep_warm, &opts).unwrap();
+    assert_eq!(dir_bytes(&d_cold), dir_bytes(&d_warm));
+    for d in [&cache_dir, &d_cold, &d_warm] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+/// Uncached runs report skip counters and never touch disk.
+#[test]
+fn disabled_cache_reports_skips() {
+    let (eng, p, calib) = setup();
+    let opts = QuantOptions::new(Method::Rsq, 3, 64);
+    assert!(opts.hess_cache.is_none());
+    let (_, report) = quantize(&eng, &p, &calib, &opts).unwrap();
+    assert_eq!(report.hess_cache_hits, 0);
+    assert_eq!(report.hess_cache_misses, 0);
+    assert_eq!(report.hess_cache_skips, eng.config().layers);
+}
+
+/// VQ methods have no affine grid: their artifacts store raw blobs but
+/// still round-trip bit-identically.
+#[test]
+fn vq_artifact_falls_back_to_raw() {
+    let (eng, p, calib) = setup();
+    let opts = QuantOptions::new(Method::RsqVq, 2, 64);
+    let (q, report) = quantize(&eng, &p, &calib, &opts).unwrap();
+    let dir = tmpdir("vq");
+    let manifest = artifact::save(&dir, &q, &report, &opts).unwrap();
+    assert!(
+        manifest.tensors.iter().all(|t| matches!(t.codec, artifact::Codec::Raw)),
+        "VQ output must store raw"
+    );
+    let (loaded, _) = artifact::load(&dir).unwrap();
+    assert_bit_identical(&loaded, &q, "vq");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Non-VQ artifacts actually pack their layer weights (the size win is
+/// the point of the codec).
+#[test]
+fn scalar_artifacts_are_packed_and_smaller() {
+    let (eng, p, calib) = setup();
+    let opts = QuantOptions::new(Method::Rsq, 3, 64);
+    let (q, report) = quantize(&eng, &p, &calib, &opts).unwrap();
+    let dir = tmpdir("packed");
+    let manifest = artifact::save(&dir, &q, &report, &opts).unwrap();
+    let cfg = eng.config();
+    let packed = manifest
+        .tensors
+        .iter()
+        .filter(|t| matches!(t.codec, artifact::Codec::Packed { bits: 3 }))
+        .count();
+    assert_eq!(packed, cfg.layers * Module::ALL.len(), "every layer weight packs");
+    let raw_bytes: u64 = manifest
+        .tensors
+        .iter()
+        .filter(|t| matches!(t.codec, artifact::Codec::Packed { .. }))
+        .map(|t| 4 * t.shape.iter().product::<usize>() as u64)
+        .sum();
+    let packed_bytes: u64 = manifest
+        .tensors
+        .iter()
+        .filter(|t| matches!(t.codec, artifact::Codec::Packed { .. }))
+        .map(|t| t.len)
+        .sum();
+    assert!(
+        packed_bytes * 2 < raw_bytes,
+        "3-bit packing must at least halve the weight bytes ({packed_bytes} vs {raw_bytes})"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,245 @@
+//! Property tests (hand-rolled harness, util::prop) over the artifact
+//! layer: pack→unpack exactness across bit widths / ragged widths /
+//! degenerate rows, rejection of malformed grids, and the Hessian cache
+//! key's invariance contract (jobs/sched-invariant, everything-else-
+//! sensitive). All host-side — no compiled artifacts needed.
+
+use rsq::corpus::{CalibSet, CorpusKind};
+use rsq::model::config::{ModelConfig, Module};
+use rsq::model::ParamSet;
+use rsq::quant::artifact::cache::cache_key;
+use rsq::quant::{Method, QuantOptions, SchedMode, Strategy};
+use rsq::quantref;
+use rsq::tensor::pack::{PackedRows, RowGrid, PACK_BITS};
+use rsq::tensor::Tensor;
+use rsq::util::prop::{check, Config};
+use rsq::util::Pcg;
+
+fn random_grid(rows: usize, rng: &mut Pcg) -> RowGrid {
+    RowGrid {
+        // powers of two keep the values exactly representable without
+        // relying on rounding luck — exactness is what's under test
+        scale: (0..rows).map(|_| [0.25f32, 0.5, 0.125, 1.0][rng.below(4)]).collect(),
+        zero: (0..rows).map(|_| rng.below(4) as f32).collect(),
+    }
+}
+
+fn tensor_from_codes(rows: usize, cols: usize, bits: u32, grid: &RowGrid, rng: &mut Pcg) -> Tensor {
+    let maxq = (1usize << bits) - 1;
+    let mut t = Tensor::zeros(&[rows, cols]);
+    for r in 0..rows {
+        for c in 0..cols {
+            let code = rng.below(maxq + 1) as f32;
+            t.set2(r, c, grid.scale[r] * (code - grid.zero[r]));
+        }
+    }
+    t
+}
+
+#[test]
+fn prop_pack_roundtrip_exact_all_bit_widths() {
+    // ragged widths: `size` drives cols, rows varies independently
+    for bits in PACK_BITS {
+        check(
+            Config { cases: 24, min_size: 1, max_size: 70, ..Default::default() },
+            &format!("pack_roundtrip_{bits}bit"),
+            |rng, size| {
+                let rows = 1 + rng.below(6);
+                let grid = random_grid(rows, rng);
+                let t = tensor_from_codes(rows, size, bits, &grid, rng);
+                let p = match PackedRows::pack(&t, bits, &grid) {
+                    Ok(p) => p,
+                    Err(_) => return false,
+                };
+                let u = p.unpack();
+                u.shape == t.shape
+                    && u.data.iter().zip(&t.data).all(|(a, b)| a.to_bits() == b.to_bits())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_pack_roundtrip_rtn_grids() {
+    // the real producer: quantref::rtn output on its own row grid, i.e.
+    // grids that are NOT powers of two
+    for bits in PACK_BITS {
+        let maxq = ((1u64 << bits) - 1) as f32;
+        check(
+            Config { cases: 16, min_size: 2, max_size: 48, ..Default::default() },
+            &format!("pack_rtn_{bits}bit"),
+            |rng, size| {
+                let w = Tensor::randn(&[5, size], 1.0, rng);
+                let q = quantref::rtn(&w, maxq);
+                let (scale, zero) = quantref::row_grid(&w, maxq);
+                let grid = RowGrid { scale, zero };
+                match PackedRows::pack(&q, bits, &grid) {
+                    Ok(p) => {
+                        let u = p.unpack();
+                        u.data.iter().zip(&q.data).all(|(a, b)| a.to_bits() == b.to_bits())
+                    }
+                    Err(_) => false,
+                }
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_degenerate_rows_roundtrip() {
+    // all-zero-code and all-max-code rows at every width
+    check(Config { cases: 16, min_size: 1, max_size: 64, ..Default::default() },
+        "degenerate_rows",
+        |rng, size| {
+            PACK_BITS.into_iter().all(|bits| {
+                let maxq = (1u32 << bits) - 1;
+                let grid = random_grid(2, rng);
+                let mut t = Tensor::zeros(&[2, size]);
+                for c in 0..size {
+                    t.set2(0, c, grid.scale[0] * (0.0 - grid.zero[0]));
+                    t.set2(1, c, grid.scale[1] * (maxq as f32 - grid.zero[1]));
+                }
+                let p = PackedRows::pack(&t, bits, &grid).unwrap();
+                (0..size).all(|c| p.code(0, c) == 0 && p.code(1, c) == maxq)
+                    && p.unpack().data.iter().zip(&t.data).all(|(a, b)| a.to_bits() == b.to_bits())
+            })
+        });
+}
+
+#[test]
+fn prop_non_finite_scale_rejected() {
+    check(
+        Config { cases: 16, min_size: 1, max_size: 32, ..Default::default() },
+        "non_finite_scale",
+        |rng, size| {
+            let rows = 1 + rng.below(4);
+            let grid = random_grid(rows, rng);
+            let t = tensor_from_codes(rows, size, 4, &grid, rng);
+            let poison = rng.below(rows);
+            let bad = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -1.0][rng.below(5)];
+            let mut g2 = grid.clone();
+            g2.scale[poison] = bad;
+            PackedRows::pack(&t, 4, &g2).is_err()
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// cache-key invariance
+// ---------------------------------------------------------------------------
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "tiny".into(),
+        d: 64,
+        layers: 2,
+        heads: 2,
+        ff: 128,
+        vocab: 256,
+        max_seq: 64,
+        batch: 4,
+        seq_lens: vec![32, 64],
+        ldlq_k: 1024,
+        ldlq_g: 8,
+    }
+}
+
+fn base_setup() -> (ModelConfig, ParamSet, CalibSet, QuantOptions) {
+    let c = cfg();
+    let p = ParamSet::init(&c, 7);
+    let calib = CalibSet::generate(c.vocab, CorpusKind::Wiki, 8, 64, 7, 1);
+    let opts = QuantOptions::new(Method::Rsq, 3, 64);
+    (c, p, calib, opts)
+}
+
+#[test]
+fn cache_key_invariant_under_jobs_and_sched() {
+    let (c, p, calib, mut opts) = base_setup();
+    let base = cache_key(&c, &p, &calib, &opts);
+    for jobs in [1usize, 2, 4, 16] {
+        for sched in [SchedMode::Staged, SchedMode::Pipelined] {
+            opts.jobs = jobs;
+            opts.sched = sched;
+            opts.verbose = !opts.verbose;
+            opts.hess_cache = Some(std::path::PathBuf::from(format!("/tmp/x{jobs}")));
+            assert_eq!(
+                cache_key(&c, &p, &calib, &opts),
+                base,
+                "key must not see jobs={jobs} sched={sched:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn cache_key_sensitive_to_every_determining_field() {
+    let (c, p, calib, opts) = base_setup();
+    let base = cache_key(&c, &p, &calib, &opts);
+
+    // corpus: different kind, different content, different seq_len
+    let calib_c4 = CalibSet::generate(c.vocab, CorpusKind::C4, 8, 64, 7, 1);
+    assert_ne!(cache_key(&c, &p, &calib_c4, &opts), base, "corpus kind");
+    let calib_seed = CalibSet::generate(c.vocab, CorpusKind::Wiki, 8, 64, 8, 1);
+    assert_ne!(cache_key(&c, &p, &calib_seed, &opts), base, "corpus content");
+    let calib_short = CalibSet::generate(c.vocab, CorpusKind::Wiki, 8, 32, 7, 1);
+    assert_ne!(cache_key(&c, &p, &calib_short, &opts), base, "corpus seq_len");
+
+    // rotation seed
+    let mut o = opts.clone();
+    o.rot_seed += 1;
+    assert_ne!(cache_key(&c, &p, &calib, &o), base, "rot_seed");
+
+    // strategy (kind and r_min both)
+    let mut o = opts.clone();
+    o.strategy = Strategy::ActNorm { r_min: 0.05 };
+    assert_ne!(cache_key(&c, &p, &calib, &o), base, "strategy kind");
+    let mut o = opts.clone();
+    o.strategy = Strategy::AttnCon { r_min: 0.01 };
+    assert_ne!(cache_key(&c, &p, &calib, &o), base, "strategy r_min");
+
+    // solve config reaches layer>0 Hessians through quantized pass B
+    for (label, o) in [
+        ("bits", {
+            let mut o = opts.clone();
+            o.bits = 2;
+            o
+        }),
+        ("damp", {
+            let mut o = opts.clone();
+            o.damp = 0.02;
+            o
+        }),
+        ("method", {
+            let mut o = opts.clone();
+            o.method = Method::QuaRot;
+            o
+        }),
+        ("expansion", {
+            let mut o = opts.clone();
+            o.expansion = 2;
+            o
+        }),
+        ("module_mask", {
+            let mut o = opts.clone();
+            o.module_mask = Some([Module::Wq, Module::Wv].into_iter().collect());
+            o
+        }),
+    ] {
+        assert_ne!(cache_key(&c, &p, &calib, &o), base, "{label}");
+    }
+
+    // model params
+    let mut p2 = p.clone();
+    p2.tensors[3].data[0] += 1e-3;
+    assert_ne!(cache_key(&c, &p2, &calib, &opts), base, "params");
+}
+
+#[test]
+fn cache_key_is_stable_across_calls() {
+    let (c, p, calib, opts) = base_setup();
+    assert_eq!(cache_key(&c, &p, &calib, &opts), cache_key(&c, &p, &calib, &opts));
+    // and hex renders 32 chars of lowercase hex
+    let hex = cache_key(&c, &p, &calib, &opts).hex();
+    assert_eq!(hex.len(), 32);
+    assert!(hex.chars().all(|ch| ch.is_ascii_hexdigit() && !ch.is_ascii_uppercase()));
+}

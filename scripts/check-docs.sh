@@ -71,7 +71,30 @@ if [ -d rust/src/quant/sched ]; then
     done
 fi
 
-[ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler docs OK"
+# The artifact subsystem: if quant/artifact exists, §9 must document the
+# on-disk format (naming its version), the subsystem path, and every
+# Hessian-cache key field — the key derivation IS the cache contract, so
+# the docs and the code must not drift apart. Needles are grepped inside
+# the §9 body only: words like "strategy" and "corpus" appear all over
+# the rest of DESIGN.md, and a whole-file grep would never notice them
+# being dropped from the section this gate protects.
+if [ -d rust/src/quant/artifact ]; then
+    if ! grep -qE "^## 9\." DESIGN.md; then
+        echo "check-docs: FAIL — rust/src/quant/artifact exists but DESIGN.md has no '## 9.' section" >&2
+        fail=1
+    fi
+    sec9=$(awk '/^## 9\./{f=1; print; next} /^## /{f=0} f' DESIGN.md)
+    for needle in "quant/artifact" "artifact format version 1" "hess-cache" \
+                  "rot_seed" "strategy" "corpus" "model parameters" \
+                  "bit-packed" "artifact.txt" "weights.bin"; do
+        if ! printf '%s\n' "${sec9}" | grep -q "${needle}"; then
+            echo "check-docs: FAIL — DESIGN.md §9 never mentions \"${needle}\" (artifact/cache contract drift)" >&2
+            fail=1
+        fi
+    done
+fi
+
+[ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler/artifact docs OK"
 
 # --- 3+4. rustdoc + rustfmt ------------------------------------------------
 if [ "${CHECK_DOCS_SKIP_CARGO:-0}" = "1" ]; then

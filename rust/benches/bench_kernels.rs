@@ -6,8 +6,8 @@
 
 use rsq::model::ParamSet;
 use rsq::runtime::{self, Engine};
-use rsq::tensor::Tensor;
-use rsq::util::{Bench, Pcg};
+use rsq::tensor::{kernels, Tensor};
+use rsq::util::{Bench, Pcg, Pool};
 
 fn bench_config(config: &str) -> anyhow::Result<()> {
     let eng = Engine::load(config)?;
@@ -98,8 +98,56 @@ fn bench_config(config: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The host kernel grid (DESIGN.md §10): every `tensor::kernels` entry
+/// point at representative sizes × jobs ∈ {1, 4}, the kernel-level perf
+/// baseline this PR onward. Runs without the AOT artifact set.
+fn bench_host_kernels() {
+    println!("--- host kernel grid (tensor::kernels, sizes x jobs) ---");
+    let mut rng = Pcg::new(42);
+    for d in [64usize, 128, 256] {
+        let a = Tensor::randn(&[d, d], 1.0, &mut rng);
+        let b = Tensor::randn(&[d, d], 1.0, &mut rng);
+        let flops = 2.0 * (d * d * d) as f64;
+        for jobs in [1usize, 4] {
+            let pool = Pool::new(jobs);
+            let p = Some(&pool);
+            let s = Bench::new(&format!("host/gemm_{d}x{d}_j{jobs}"))
+                .iter(|| kernels::gemm(&a, &b, p))
+                .report();
+            println!("    ~ {:.2} GFLOP/s", flops / s / 1e9);
+            Bench::new(&format!("host/gemm_at_{d}x{d}_j{jobs}"))
+                .iter(|| kernels::gemm_at(&a, &b, p))
+                .report();
+            Bench::new(&format!("host/gemm_bt_{d}x{d}_j{jobs}"))
+                .iter(|| kernels::gemm_bt(&a, &b, p))
+                .report();
+            Bench::new(&format!("host/syrk_t_{d}x{d}_j{jobs}"))
+                .iter(|| kernels::syrk_t(&a, p))
+                .report();
+            let spd = {
+                let mut h = kernels::syrk(&a, p);
+                for i in 0..d {
+                    let v = h.at2(i, i) + d as f32;
+                    h.set2(i, i, v);
+                }
+                h
+            };
+            Bench::new(&format!("host/cholesky_{d}x{d}_j{jobs}"))
+                .samples(5)
+                .iter(|| kernels::cholesky_lower(&spd, p))
+                .report();
+            let lf = kernels::cholesky_lower(&spd, p);
+            Bench::new(&format!("host/tri_inv_{d}x{d}_j{jobs}"))
+                .samples(5)
+                .iter(|| kernels::tri_inv_lower(&lf, p))
+                .report();
+        }
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     println!("=== kernel/module micro-benchmarks ===");
+    bench_host_kernels();
     for config in ["tiny", "small"] {
         bench_config(config)?;
     }

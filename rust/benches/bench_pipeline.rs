@@ -87,14 +87,17 @@ fn main() -> anyhow::Result<()> {
         .iter(|| expand_dataset(&calib, 8))
         .report();
     let q = rotation_matrix(cfg.d, 0);
-    Bench::new("host/fuse+rotate_all_params")
-        .iter(|| {
-            let mut p2 = params.clone();
-            fuse_gains(&mut p2);
-            rotate_params(&mut p2, &q);
-            p2
-        })
-        .report();
+    for jobs in [1usize, 4] {
+        let pool = rsq::util::Pool::new(jobs);
+        Bench::new(&format!("host/fuse+rotate_all_params_j{jobs}"))
+            .iter(|| {
+                let mut p2 = params.clone();
+                fuse_gains(&mut p2);
+                rotate_params(&mut p2, &q, &pool);
+                p2
+            })
+            .report();
+    }
     Bench::new("host/codebook_e8_k1024")
         .samples(5)
         .iter(|| rsq::quant::vq::e8_codebook(1024, 0))

@@ -93,11 +93,13 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     println!("kurtosis     : {:.2} -> {:.2}", report.kurtosis_before, report.kurtosis_after);
     println!("layer errs   : {:?}", report.layer_err);
     println!(
-        "wall         : {:.2}s over {} batches (jobs={} sched={}; pass A {:.2}s, solve {:.2}s, pass B {:.2}s, fused {:.2}s)",
+        "wall         : {:.2}s over {} batches (jobs={} sched={}; rotate {:.2}s, \
+         pass A {:.2}s, solve {:.2}s, pass B {:.2}s, fused {:.2}s)",
         report.wall_seconds,
         report.batches,
         report.jobs,
         report.sched,
+        report.rotate_seconds,
         report.pass_a_seconds,
         report.solve_seconds,
         report.pass_b_seconds,

@@ -104,7 +104,7 @@ mod tests {
         fuse_gains(&mut p);
         let before = kurtosis_ratio(&p);
         let q = rotation_matrix(64, 2);
-        rotate_params(&mut p, &q);
+        rotate_params(&mut p, &q, &crate::util::Pool::new(1));
         let after = kurtosis_ratio(&p);
         assert!(after < before, "{after} !< {before}");
     }

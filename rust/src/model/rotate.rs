@@ -8,9 +8,15 @@
 //!   out-dim weights  W' = Qᵀ·W   (wo, wdown)
 //!   tables           emb' = emb·Q, pos' = pos·Q
 //! Gains must already be fused (`fuse::gains_fused`).
+//!
+//! Every product runs on the pool-parallel `tensor::kernels` layer: the
+//! out-dim weights go through the fused-transpose `gemm_at`, so Qᵀ is
+//! never materialized, and the scheduler's `--jobs` pool parallelizes the
+//! per-weight GEMMs over row blocks without changing a bit of output
+//! (DESIGN.md §10).
 
-use crate::tensor::{randomized_hadamard, Tensor};
-use crate::util::Pcg;
+use crate::tensor::{kernels, randomized_hadamard, Tensor};
+use crate::util::{Pcg, Pool};
 
 use super::fuse::gains_fused;
 use super::params::ParamSet;
@@ -22,28 +28,57 @@ pub fn rotation_matrix(d: usize, seed: u64) -> Tensor {
 }
 
 /// Rotate all parameters in place. Panics if gains are not fused.
-pub fn rotate_params(p: &mut ParamSet, q: &Tensor) {
+pub fn rotate_params(p: &mut ParamSet, q: &Tensor, pool: &Pool) {
     assert!(gains_fused(p), "fuse_gains must run before rotation");
     assert_eq!(q.rows(), p.cfg.d);
-    let qt = q.transpose2();
+    let pool = Some(pool);
     let layers = p.cfg.layers;
-    p.tensors[0] = p.tensors[0].matmul(q); // emb
-    p.tensors[1] = p.tensors[1].matmul(q); // pos
+    p.tensors[0] = kernels::gemm(&p.tensors[0], q, pool); // emb
+    p.tensors[1] = kernels::gemm(&p.tensors[1], q, pool); // pos
     for l in 0..layers {
         let base = 2 + l * 9;
         for off in [1, 2, 3] {
             // wq wk wv: in-dim
-            p.tensors[base + off] = p.tensors[base + off].matmul(q);
+            p.tensors[base + off] = kernels::gemm(&p.tensors[base + off], q, pool);
         }
-        p.tensors[base + 4] = qt.matmul(&p.tensors[base + 4]); // wo: out-dim
+        p.tensors[base + 4] = kernels::gemm_at(q, &p.tensors[base + 4], pool); // wo: out-dim
         for off in [6, 7] {
             // wup wgate: in-dim
-            p.tensors[base + off] = p.tensors[base + off].matmul(q);
+            p.tensors[base + off] = kernels::gemm(&p.tensors[base + off], q, pool);
         }
-        p.tensors[base + 8] = qt.matmul(&p.tensors[base + 8]); // wdown: out-dim
+        p.tensors[base + 8] = kernels::gemm_at(q, &p.tensors[base + 8], pool); // wdown: out-dim
     }
     let n = p.tensors.len();
-    p.tensors[n - 1] = p.tensors[n - 1].matmul(q); // head: in-dim
+    p.tensors[n - 1] = kernels::gemm(&p.tensors[n - 1], q, pool); // head: in-dim
+}
+
+/// Apply the inverse rotation (Qᵀ for orthogonal Q) in place — the exact
+/// mirror of [`rotate_params`], with the transposes fused into
+/// `gemm_bt`/`gemm` so Qᵀ is never materialized either. (Calling
+/// `rotate_params` with a materialized `q.transpose2()` would compute the
+/// same bits; this exists so no call site builds that copy — the §10
+/// no-materialized-transpose contract — and as the de-rotation entry
+/// point for future artifact tooling.)
+pub fn unrotate_params(p: &mut ParamSet, q: &Tensor, pool: &Pool) {
+    assert!(gains_fused(p), "fuse_gains must run before rotation");
+    assert_eq!(q.rows(), p.cfg.d);
+    let pool = Some(pool);
+    let layers = p.cfg.layers;
+    p.tensors[0] = kernels::gemm_bt(&p.tensors[0], q, pool); // emb: W·Qᵀ
+    p.tensors[1] = kernels::gemm_bt(&p.tensors[1], q, pool);
+    for l in 0..layers {
+        let base = 2 + l * 9;
+        for off in [1, 2, 3] {
+            p.tensors[base + off] = kernels::gemm_bt(&p.tensors[base + off], q, pool);
+        }
+        p.tensors[base + 4] = kernels::gemm(q, &p.tensors[base + 4], pool); // (Qᵀ)ᵀ·W = Q·W
+        for off in [6, 7] {
+            p.tensors[base + off] = kernels::gemm_bt(&p.tensors[base + off], q, pool);
+        }
+        p.tensors[base + 8] = kernels::gemm(q, &p.tensors[base + 8], pool);
+    }
+    let n = p.tensors.len();
+    p.tensors[n - 1] = kernels::gemm_bt(&p.tensors[n - 1], q, pool);
 }
 
 #[cfg(test)]
@@ -66,7 +101,7 @@ mod tests {
         let q1 = rotation_matrix(64, 5);
         let q2 = rotation_matrix(64, 5);
         assert_eq!(q1.data, q2.data);
-        let qtq = q1.transpose2().matmul(&q1);
+        let qtq = kernels::syrk_t(&q1, None);
         for i in 0..64 {
             assert!((qtq.at2(i, i) - 1.0).abs() < 1e-4);
         }
@@ -77,7 +112,7 @@ mod tests {
         let mut p = ParamSet::init(&cfg(), 0);
         fuse_gains(&mut p);
         let shapes: Vec<Vec<usize>> = p.tensors.iter().map(|t| t.shape.clone()).collect();
-        rotate_params(&mut p, &rotation_matrix(64, 1));
+        rotate_params(&mut p, &rotation_matrix(64, 1), &Pool::new(1));
         for (t, s) in p.tensors.iter().zip(&shapes) {
             assert_eq!(&t.shape, s);
         }
@@ -89,12 +124,28 @@ mod tests {
         fuse_gains(&mut p);
         let orig = p.clone();
         let q = rotation_matrix(64, 3);
-        rotate_params(&mut p, &q);
+        let pool = Pool::new(1);
+        rotate_params(&mut p, &q, &pool);
         // some weight actually changed
         assert!(!p.weight(0, Module::Wq).allclose(orig.weight(0, Module::Wq), 1e-4));
-        rotate_params(&mut p, &q.transpose2());
+        unrotate_params(&mut p, &q, &pool);
         for (a, b) in p.tensors.iter().zip(&orig.tensors) {
             assert!(a.allclose(b, 1e-3), "round trip drifted");
+        }
+    }
+
+    #[test]
+    fn rotation_bit_identical_across_jobs() {
+        // the §10 determinism contract on the rotate hot path itself:
+        // a 4-worker pool rotation matches the serial one bit for bit
+        let mut serial = ParamSet::init(&cfg(), 7);
+        fuse_gains(&mut serial);
+        let mut pooled = serial.clone();
+        let q = rotation_matrix(64, 11);
+        rotate_params(&mut serial, &q, &Pool::new(1));
+        rotate_params(&mut pooled, &q, &Pool::new(4));
+        for (a, b) in serial.tensors.iter().zip(&pooled.tensors) {
+            assert_eq!(a.data, b.data);
         }
     }
 
@@ -104,7 +155,7 @@ mod tests {
         let mut p = ParamSet::init(&cfg(), 0);
         p.tensors[2].data[0] = 1.5; // perturb a gain
         let q = rotation_matrix(64, 1);
-        rotate_params(&mut p, &q);
+        rotate_params(&mut p, &q, &Pool::new(1));
     }
 
     #[test]
@@ -114,12 +165,12 @@ mod tests {
         fuse_gains(&mut p);
         let wq = p.weight(0, Module::Wq).clone();
         let wk = p.weight(0, Module::Wk).clone();
-        let m_before = wq.matmul(&wk.transpose2());
+        let m_before = kernels::gemm_bt(&wq, &wk, None);
         let q = rotation_matrix(64, 9);
-        rotate_params(&mut p, &q);
+        rotate_params(&mut p, &q, &Pool::new(2));
         let wq2 = p.weight(0, Module::Wq);
         let wk2 = p.weight(0, Module::Wk);
-        let m_after = wq2.matmul(&wk2.transpose2());
+        let m_after = kernels::gemm_bt(wq2, wk2, None);
         assert!(m_before.allclose(&m_after, 1e-4));
     }
 }

@@ -197,6 +197,10 @@ pub struct QuantReport {
     /// per-layer phase timings (empty for RTN: its windowed grid crosses
     /// layer boundaries, so only `solve_seconds` is meaningful there)
     pub layer_timings: Vec<LayerTiming>,
+    /// seconds in the host-side rotate step — the pool-parallel
+    /// `tensor::kernels` GEMMs over every weight (0 for non-rotating
+    /// methods; DESIGN.md §10)
+    pub rotate_seconds: f64,
     /// total seconds in standalone pass A, all layers
     pub pass_a_seconds: f64,
     /// total seconds in the solve phase (GPTQ/LDLQ/RTN), all layers
@@ -257,11 +261,17 @@ pub fn quantize(
         ..Default::default()
     };
 
-    // --- Rotate (paper Sec. 4.2 step 1) ---
+    // --- Rotate (paper Sec. 4.2 step 1) --- host-side GEMMs on the
+    // tensor::kernels layer; the scheduler pool parallelizes them over
+    // row blocks, bit-identically at every --jobs (DESIGN.md §10)
     if opts.method.rotates() {
         fuse_gains(&mut p);
         let q = rotation_matrix(cfg.d, opts.rot_seed);
-        rotate_params(&mut p, &q);
+        // timed from here so rotate_seconds is pure kernel time, not
+        // gain fusion or Hadamard construction
+        let tr = Instant::now();
+        rotate_params(&mut p, &q, &pool);
+        report.rotate_seconds = tr.elapsed().as_secs_f64();
     }
     report.kurtosis_after = kurtosis_ratio(&p);
 

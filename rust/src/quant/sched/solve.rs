@@ -1,5 +1,12 @@
 //! Per-weight stages of the scheduler: the seven-module solve fan-out
 //! (GPTQ / LDLQ-VQ) and the data-free RTN grid (DESIGN.md §2, §5).
+//!
+//! Host-side dense math inside these stages routes through the
+//! `tensor::kernels` layer (DESIGN.md §10); the per-task work here —
+//! `quantref::row_grid` capture and literal plumbing — is O(rows·cols)
+//! with no dense product, so it stays serial *within* a task while the
+//! seven tasks themselves fan out over the pool. Kernel-level pool
+//! threading inside a task would oversubscribe the same workers.
 
 use anyhow::Result;
 

@@ -53,7 +53,23 @@ impl Strategy {
             Some((n, a)) => (n, Some(a)),
             None => (s, None),
         };
-        let rmin = || arg.and_then(|a| a.parse::<f32>().ok()).unwrap_or(0.01);
+        // r_min must be a finite fraction in (0, 1]: Eq. 4 maps scores into
+        // [r_min, 1], so 0 would zero tokens out entirely, values > 1 would
+        // invert the map, and NaN/±inf (which *do* parse as f32, e.g.
+        // "attncon:NaN") would poison every importance weight. Out-of-range
+        // values are rejected like the degenerate chunk specs; an omitted
+        // or unparsable arg keeps the 0.01 default (pinned by
+        // `parse_defaults_and_malformed_args`).
+        let rmin = || -> Option<f32> {
+            match arg {
+                None => Some(0.01),
+                Some(a) => match a.parse::<f32>() {
+                    Ok(v) if v > 0.0 && v <= 1.0 => Some(v),
+                    Ok(_) => None,
+                    Err(_) => Some(0.01),
+                },
+            }
+        };
         match name.to_ascii_lowercase().as_str() {
             "uniform" => Some(Strategy::Uniform),
             "firstn" => Some(Strategy::FirstN(arg?.parse().ok()?)),
@@ -69,11 +85,11 @@ impl Strategy {
                 }
                 Some(Strategy::Chunk { index, of })
             }
-            "tokenfreq" => Some(Strategy::TokenFreq { r_min: rmin() }),
-            "actnorm" => Some(Strategy::ActNorm { r_min: rmin() }),
-            "actdiff" => Some(Strategy::ActDiff { r_min: rmin() }),
-            "tokensim" => Some(Strategy::TokenSim { r_min: rmin() }),
-            "attncon" => Some(Strategy::AttnCon { r_min: rmin() }),
+            "tokenfreq" => Some(Strategy::TokenFreq { r_min: rmin()? }),
+            "actnorm" => Some(Strategy::ActNorm { r_min: rmin()? }),
+            "actdiff" => Some(Strategy::ActDiff { r_min: rmin()? }),
+            "tokensim" => Some(Strategy::TokenSim { r_min: rmin()? }),
+            "attncon" => Some(Strategy::AttnCon { r_min: rmin()? }),
             _ => None,
         }
     }
@@ -240,6 +256,26 @@ mod tests {
             Strategy::parse("AttnCon:0.05"),
             Some(Strategy::AttnCon { r_min: 0.05 })
         );
+    }
+
+    #[test]
+    fn parse_rejects_out_of_range_r_min() {
+        // "NaN"/"inf" parse as f32, and nothing outside (0, 1] is a valid
+        // Eq. 4 floor — all rejected with the same None-handling as the
+        // degenerate chunk specs
+        for s in [
+            "attncon:NaN", "attncon:nan", "attncon:inf", "attncon:Infinity",
+            "attncon:-inf", "attncon:2.0", "attncon:0", "attncon:0.0",
+            "attncon:-0.5", "actnorm:1.0001", "actdiff:-1", "tokensim:inf",
+            "tokenfreq:0",
+        ] {
+            assert_eq!(Strategy::parse(s), None, "{s}");
+        }
+        // the boundaries stay valid and round-trip through name()
+        for s in ["attncon:1", "actnorm:0.0001", "tokenfreq:1.0", "actdiff:0.5"] {
+            let st = Strategy::parse(s).unwrap_or_else(|| panic!("{s} must parse"));
+            assert_eq!(Strategy::parse(&st.name()), Some(st), "{s}");
+        }
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! grid, same dampening, same Cholesky route).
 
 use crate::tensor::linalg::hinv_cholesky_upper;
-use crate::tensor::Tensor;
+use crate::tensor::{kernels, Tensor};
 
 /// Round half-to-even, matching `jnp.round` in quantizer.py — rust's
 /// `f32::round` rounds halves away from zero, which would diverge from
@@ -62,7 +62,9 @@ pub fn rtn(w: &Tensor, maxq: f32) -> Tensor {
 pub fn gptq(w: &Tensor, h: &Tensor, maxq: f32, damp: f32) -> (Tensor, f32) {
     let (rows, din) = (w.rows(), w.cols());
     assert_eq!(h.rows(), din);
-    let u = hinv_cholesky_upper(h, damp);
+    // the oracle stays single-threaded by design (no pool): it is the
+    // fixed point the pool-parallel paths are tested against
+    let u = hinv_cholesky_upper(h, damp, None);
     let (scale, zero) = row_grid(w, maxq);
     let mut wc = w.clone();
     let mut q = Tensor::zeros(&[rows, din]);
@@ -88,7 +90,7 @@ pub fn gptq(w: &Tensor, h: &Tensor, maxq: f32, damp: f32) -> (Tensor, f32) {
 /// tr((W-Q) H (W-Q)ᵀ) — the layer-reconstruction objective (paper Sec. 3.3).
 pub fn hessian_weighted_err(w: &Tensor, q: &Tensor, h: &Tensor) -> f32 {
     let diff = q.sub(w);
-    let dh = diff.matmul(h);
+    let dh = kernels::gemm(&diff, h, None);
     dh.data.iter().zip(&diff.data).map(|(a, b)| a * b).sum()
 }
 

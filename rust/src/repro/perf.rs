@@ -1,7 +1,9 @@
 //! Performance profiling driver (`rsq perf`) — the L3 side of the perf
 //! deliverable. Times every stage of the RSQ pipeline, sweeps the parallel
-//! scheduler's `--jobs` values, prints the engine's per-module breakdown,
-//! and reports end-to-end throughput. Results feed DESIGN.md §Perf.
+//! scheduler's `--jobs` values, sweeps the host kernel layer (tiled GEMM
+//! sizes × jobs, serial-vs-pooled speedup — DESIGN.md §10), prints the
+//! engine's per-module breakdown, and reports end-to-end throughput.
+//! Results feed DESIGN.md §Perf.
 
 use std::time::Instant;
 
@@ -9,7 +11,8 @@ use anyhow::Result;
 
 use crate::corpus::CorpusKind;
 use crate::quant::{quantize, Method, QuantOptions, SchedMode};
-use crate::util::{json::Json, Args, Bench};
+use crate::tensor::{kernels, Tensor};
+use crate::util::{json::Json, Args, Bench, Pcg, Pool};
 
 use super::{print_header, write_record, Ctx};
 
@@ -82,11 +85,12 @@ pub fn perf(args: &Args) -> Result<()> {
             let speedup = if secs > 0.0 && serial_s > 0.0 { serial_s / secs } else { 1.0 };
             println!(
                 "sched={:<9} jobs={:<3} {:>8.3}s  speedup {:>5.2}x  \
-                 [pass A {:.3}s | solve {:.3}s | pass B {:.3}s | fused {:.3}s]",
+                 [rotate {:.3}s | pass A {:.3}s | solve {:.3}s | pass B {:.3}s | fused {:.3}s]",
                 rep.sched,
                 rep.jobs,
                 secs,
                 speedup,
+                rep.rotate_seconds,
                 rep.pass_a_seconds,
                 rep.solve_seconds,
                 rep.pass_b_seconds,
@@ -98,6 +102,7 @@ pub fn perf(args: &Args) -> Result<()> {
                     .set("jobs", rep.jobs)
                     .set("seconds", secs)
                     .set("speedup", speedup)
+                    .set("rotate_s", rep.rotate_seconds)
                     .set("pass_a_s", rep.pass_a_seconds)
                     .set("solve_s", rep.solve_seconds)
                     .set("pass_b_s", rep.pass_b_seconds)
@@ -110,6 +115,53 @@ pub fn perf(args: &Args) -> Result<()> {
                 secs_by_mode[0] / secs_by_mode[1]
             );
         }
+    }
+
+    // Host kernel sweep (DESIGN.md §10): the pool-parallel tiled GEMM
+    // under the rotate/solve hot paths, sizes × jobs, against its own
+    // serial dispatch. Every cell is bit-identical (asserted here on the
+    // fly — the §10 determinism contract); only the wall clock moves.
+    println!("\n--- host kernel sweep (tensor::kernels gemm, serial vs pooled) ---");
+    let mut kernel_results = Vec::new();
+    let mut kjobs = vec![1usize, 2, 4];
+    kjobs.push(args.jobs());
+    kjobs.sort_unstable();
+    kjobs.dedup();
+    for d in [64usize, 128, 256] {
+        let mut rng = Pcg::new(d as u64);
+        let a = Tensor::randn(&[d, d], 1.0, &mut rng);
+        let b = Tensor::randn(&[d, d], 1.0, &mut rng);
+        let iters = (32 * 64 * 64 / (d * d)).max(2);
+        let flops = 2.0 * (d * d * d) as f64;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            kernels::gemm(&a, &b, None);
+        }
+        let serial = t0.elapsed().as_secs_f64() / iters as f64;
+        let reference = kernels::gemm(&a, &b, None);
+        let mut row = format!(
+            "gemm {d:>4}x{d:<4} serial {:>9.1}us ({:>6.2} GFLOP/s) ",
+            serial * 1e6,
+            flops / serial / 1e9
+        );
+        let mut cell = Json::obj().set("size", d).set("serial_s", serial);
+        for &jobs in &kjobs {
+            let pool = Pool::new(jobs);
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                kernels::gemm(&a, &b, Some(&pool));
+            }
+            let pooled = t0.elapsed().as_secs_f64() / iters as f64;
+            assert_eq!(
+                kernels::gemm(&a, &b, Some(&pool)).data,
+                reference.data,
+                "kernel determinism violated at d={d} jobs={jobs}"
+            );
+            row.push_str(&format!("| j{jobs} {:>5.2}x ", serial / pooled.max(1e-12)));
+            cell = cell.set(&format!("jobs{jobs}_speedup"), serial / pooled.max(1e-12));
+        }
+        println!("{row}");
+        kernel_results.push(cell);
     }
 
     // Hessian-cache pass-A elimination (DESIGN.md §9): the same RSQ run
@@ -230,6 +282,7 @@ pub fn perf(args: &Args) -> Result<()> {
         Json::obj()
             .set("methods", Json::Arr(results))
             .set("jobs_sweep", Json::Arr(jobs_results))
+            .set("kernel_sweep", Json::Arr(kernel_results))
             .set("hess_cache", cache_record),
     )
 }

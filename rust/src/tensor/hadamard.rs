@@ -71,7 +71,7 @@ mod tests {
     fn randomized_is_orthogonal() {
         let mut rng = Pcg::new(11);
         let q = randomized_hadamard(64, &mut rng);
-        let qtq = q.transpose2().matmul(&q);
+        let qtq = crate::tensor::kernels::syrk_t(&q, None);
         for i in 0..64 {
             for j in 0..64 {
                 let want = if i == j { 1.0 } else { 0.0 };
@@ -91,7 +91,7 @@ mod tests {
             w.data[idx] += 8.0 * rng.sign();
         }
         let q = randomized_hadamard(d, &mut rng);
-        let wr = w.matmul(&q);
+        let wr = crate::tensor::kernels::gemm(&w, &q, None);
         let ratio = |m: &Tensor| -> f32 {
             (0..d)
                 .map(|i| {

@@ -1,0 +1,193 @@
+//! Blocked triangular factorizations: right-looking Cholesky and
+//! column-block-parallel triangular inversion (DESIGN.md §10).
+//!
+//! Both are **bit-identical** to the unblocked references in
+//! `tensor::linalg`: the blocked schedules regroup *which loop* performs
+//! each subtraction, but every matrix element still absorbs its
+//! `l[i][k]·l[j][k]` (resp. `l[i][k]·x[k][j]`) terms one at a time, in
+//! strictly increasing k — the identical floating-point operation
+//! sequence, so no tolerance is needed in the equivalence tests. Pool
+//! parallelism splits the panel solve and trailing update over row blocks
+//! (columns for `tri_inv_lower`), which are data-independent, so `jobs=N`
+//! is bit-identical to `jobs=1` as well.
+
+use crate::tensor::Tensor;
+use crate::util::Pool;
+
+use super::par_rows;
+
+/// Factor block width (the panel size of the right-looking sweep). A
+/// matrix with `d <= NB` degenerates to the plain unblocked loop.
+const NB: usize = 32;
+
+/// Lower Cholesky of an SPD matrix, blocked right-looking: factor the
+/// diagonal block, forward-substitute the panel below it (row-parallel),
+/// subtract the panel's outer product from the trailing matrix
+/// (row-parallel), repeat. Tiny negative pivots are clamped exactly like
+/// the unblocked reference (`linalg::cholesky_lower`), to which this is
+/// bit-identical at every jobs count. Panics on non-square input.
+pub fn cholesky_lower(a: &Tensor, pool: Option<&Pool>) -> Tensor {
+    let d = a.rows();
+    assert_eq!(d, a.cols(), "cholesky needs a square matrix");
+    // trailing matrix; only its lower triangle is maintained
+    let mut w = a.clone();
+    let mut l = Tensor::zeros(&[d, d]);
+    let mut p0 = 0;
+    while p0 < d {
+        let p1 = (p0 + NB).min(d);
+
+        // diagonal block [p0,p1)²: unblocked factor. Contributions from
+        // k < p0 were already subtracted into `w` by earlier trailing
+        // updates, so only the within-block k range remains.
+        for j in p0..p1 {
+            let mut diag = w.at2(j, j);
+            for k in p0..j {
+                diag -= l.at2(j, k) * l.at2(j, k);
+            }
+            let ljj = diag.max(1e-12).sqrt();
+            l.set2(j, j, ljj);
+            for i in (j + 1)..p1 {
+                let mut v = w.at2(i, j);
+                for k in p0..j {
+                    v -= l.at2(i, k) * l.at2(j, k);
+                }
+                l.set2(i, j, v / ljj);
+            }
+        }
+        if p1 == d {
+            break;
+        }
+
+        // panel solve: each row i >= p1 forward-substitutes against the
+        // diagonal block independently — row-parallel, coordinator writes
+        // the rows back in index order.
+        let bw = p1 - p0;
+        let panel = par_rows(pool, d - p1, |ri| {
+            let i = p1 + ri;
+            let mut row = vec![0.0f32; bw];
+            for j in p0..p1 {
+                let mut v = w.at2(i, j);
+                for k in p0..j {
+                    v -= row[k - p0] * l.at2(j, k);
+                }
+                row[j - p0] = v / l.at2(j, j);
+            }
+            row
+        });
+        for (ri, row) in panel.into_iter().enumerate() {
+            let i = p1 + ri;
+            l.data[i * d + p0..i * d + p1].copy_from_slice(&row);
+        }
+
+        // trailing update: w[i][j] -= Σ_{k∈panel} l[i][k]·l[j][k], one
+        // term at a time in k order (the reference's exact sequence),
+        // lower triangle only — row-parallel.
+        let upd = par_rows(pool, d - p1, |ri| {
+            let i = p1 + ri;
+            let li = &l.data[i * d + p0..i * d + p1];
+            let mut row = Vec::with_capacity(i - p1 + 1);
+            for j in p1..=i {
+                let lj = &l.data[j * d + p0..j * d + p1];
+                let mut v = w.at2(i, j);
+                for (&x, &y) in li.iter().zip(lj) {
+                    v -= x * y;
+                }
+                row.push(v);
+            }
+            row
+        });
+        for (ri, row) in upd.into_iter().enumerate() {
+            let i = p1 + ri;
+            w.data[i * d + p1..i * d + i + 1].copy_from_slice(&row);
+        }
+        p0 = p1;
+    }
+    l
+}
+
+/// Inverse of a lower-triangular matrix. Each output column is an
+/// independent forward substitution, so columns fan out over the pool in
+/// blocks while the within-column arithmetic stays the unblocked
+/// reference's (`linalg::tri_inv_lower`) — bit-identical to it at every
+/// jobs count. Panics on non-square input.
+pub fn tri_inv_lower(l: &Tensor, pool: Option<&Pool>) -> Tensor {
+    let d = l.rows();
+    assert_eq!(d, l.cols(), "tri_inv needs a square matrix");
+    // column j's task returns x[j..d][j]; early columns are the longest,
+    // which the pool's atomic task claim load-balances.
+    let cols = par_rows(pool, d, |j| {
+        let mut col = vec![0.0f32; d - j];
+        for i in j..d {
+            let mut s = if i == j { 1.0 } else { 0.0 };
+            for k in j..i {
+                s -= l.at2(i, k) * col[k - j];
+            }
+            col[i - j] = s / l.at2(i, i);
+        }
+        col
+    });
+    let mut x = Tensor::zeros(&[d, d]);
+    for (j, col) in cols.into_iter().enumerate() {
+        for (ri, v) in col.into_iter().enumerate() {
+            x.set2(j + ri, j, v);
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::kernels::syrk;
+    use crate::tensor::linalg;
+    use crate::util::Pcg;
+
+    fn spd(d: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg::new(seed);
+        let a = Tensor::randn(&[d, d + 2], 1.0, &mut rng);
+        let mut h = syrk(&a, None);
+        for i in 0..d {
+            let v = h.at2(i, i) + d as f32;
+            h.set2(i, i, v);
+        }
+        h
+    }
+
+    #[test]
+    fn blocked_cholesky_bit_identical_to_unblocked() {
+        // sizes below, at, and across the NB=32 block boundary
+        for (d, seed) in [(1, 0), (7, 1), (32, 2), (33, 3), (50, 4), (96, 5)] {
+            let h = spd(d, seed);
+            let reference = linalg::cholesky_lower(&h);
+            for pool in [None, Some(Pool::new(1)), Some(Pool::new(4))] {
+                let got = cholesky_lower(&h, pool.as_ref());
+                assert_eq!(got.data, reference.data, "d={d} pool={:?}", pool);
+            }
+        }
+    }
+
+    #[test]
+    fn column_parallel_tri_inv_bit_identical_to_unblocked() {
+        for (d, seed) in [(1, 6), (13, 7), (48, 8), (80, 9)] {
+            let l = linalg::cholesky_lower(&spd(d, seed));
+            let reference = linalg::tri_inv_lower(&l);
+            for pool in [None, Some(Pool::new(4))] {
+                let got = tri_inv_lower(&l, pool.as_ref());
+                assert_eq!(got.data, reference.data, "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_zero_matrix_stays_finite() {
+        let l = cholesky_lower(&Tensor::zeros(&[40, 40]), Some(&Pool::new(2)));
+        assert!(l.data.iter().all(|v| v.is_finite()));
+        assert_eq!(l.data, linalg::cholesky_lower(&Tensor::zeros(&[40, 40])).data);
+    }
+
+    #[test]
+    #[should_panic(expected = "square")]
+    fn non_square_panics() {
+        cholesky_lower(&Tensor::zeros(&[3, 4]), None);
+    }
+}

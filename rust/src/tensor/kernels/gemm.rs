@@ -1,0 +1,237 @@
+//! The GEMM/SYRK family: pool-parallel over row blocks, cache-tiled over
+//! output columns, bit-identical to the naive reference kernel
+//! (`Tensor::matmul` + materialized `transpose2()`) — see the module docs
+//! in [`super`] for the determinism and zero-skip contracts.
+
+use crate::tensor::Tensor;
+use crate::util::Pool;
+
+use super::par_rows;
+
+/// Output-column tile: one out-row segment plus one B-row segment stay
+/// L1-resident across the k sweep. Tiling over j never touches the
+/// per-element accumulation order (k stays innermost-increasing), so it
+/// cannot perturb a single output bit.
+const BJ: usize = 256;
+
+fn stitch(m: usize, n: usize, rows: Vec<Vec<f32>>) -> Tensor {
+    debug_assert_eq!(rows.len(), m);
+    let mut data = Vec::with_capacity(m * n);
+    for r in rows {
+        debug_assert_eq!(r.len(), n);
+        data.extend_from_slice(&r);
+    }
+    Tensor::from_vec(&[m, n], data)
+}
+
+/// One output row of A·B or Aᵀ·B: `coeff(kk)` yields the row's A
+/// coefficient for inner index `kk` (contiguous for `gemm`, strided for
+/// `gemm_at`); B rows are read in place. Zero coefficients are skipped —
+/// the reference kernel's contract (see [`super`]).
+fn row_ab(coeff: impl Fn(usize) -> f32, b: &Tensor, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + BJ).min(n);
+        for kk in 0..k {
+            let av = coeff(kk);
+            if av == 0.0 {
+                continue;
+            }
+            let b_seg = &b.data[kk * n + j0..kk * n + j1];
+            for (o, &bv) in out[j0..j1].iter_mut().zip(b_seg) {
+                *o += av * bv;
+            }
+        }
+        j0 = j1;
+    }
+    out
+}
+
+/// A [m,k] · B [k,n] → [m,n]. Pool-parallel over row blocks; bit-identical
+/// to `a.matmul(&b)` at every jobs count.
+pub fn gemm(a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "gemm inner dim: {k} vs {k2}");
+    stitch(
+        m,
+        n,
+        par_rows(pool, m, |i| {
+            let a_row = a.row(i);
+            row_ab(|kk| a_row[kk], b, k, n)
+        }),
+    )
+}
+
+/// Aᵀ·B for A [k,m], B [k,n] → [m,n], reading A's columns in place — the
+/// fused-transpose replacement for `a.transpose2().matmul(&b)`,
+/// bit-identical to it without the materialized copy.
+pub fn gemm_at(a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+    let (k, m) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "gemm_at inner dim: {k} vs {k2}");
+    stitch(m, n, par_rows(pool, m, |i| row_ab(|kk| a.data[kk * m + i], b, k, n)))
+}
+
+/// One output row of A·Bᵀ-shaped products: dot products of `a_row`
+/// against `bj(j)` rows, k ascending, zero coefficients of `a_row`
+/// skipped — the element-wise operation sequence of the reference
+/// `a.matmul(&b.transpose2())`.
+fn row_dots<'t>(a_row: &[f32], bj: impl Fn(usize) -> &'t [f32], cols: usize) -> Vec<f32> {
+    (0..cols)
+        .map(|j| {
+            let b_row = bj(j);
+            let mut acc = 0.0f32;
+            for (&av, &bv) in a_row.iter().zip(b_row) {
+                if av == 0.0 {
+                    continue;
+                }
+                acc += av * bv;
+            }
+            acc
+        })
+        .collect()
+}
+
+/// A·Bᵀ for A [m,k], B [n,k] → [m,n]: both operands are walked along
+/// contiguous rows (dot-product form) — the fused-transpose replacement
+/// for `a.matmul(&b.transpose2())`, bit-identical to it.
+pub fn gemm_bt(a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "gemm_bt inner dim: {k} vs {k2}");
+    stitch(m, n, par_rows(pool, m, |i| row_dots(a.row(i), |j| b.row(j), n)))
+}
+
+fn mirror_upper(t: &mut Tensor) {
+    let m = t.rows();
+    for i in 0..m {
+        for j in (i + 1)..m {
+            t.data[i * m + j] = t.data[j * m + i];
+        }
+    }
+}
+
+/// Symmetric rank-k product A·Aᵀ for A [m,k] → [m,m]: only the lower
+/// triangle is computed (ragged rows load-balance through the pool's
+/// atomic task claim), the upper is mirrored. Requires finite input —
+/// with finite data the mirror equals the reference product bit-for-bit
+/// (products commute exactly; a skipped 0·x term contributes an exact
+/// ±0.0 that cannot move a +0.0-seeded accumulator).
+pub fn syrk(a: &Tensor, pool: Option<&Pool>) -> Tensor {
+    let m = a.rows();
+    let rows = par_rows(pool, m, |i| row_dots(a.row(i), |j| a.row(j), i + 1));
+    let mut out = Tensor::zeros(&[m, m]);
+    for (i, r) in rows.into_iter().enumerate() {
+        out.data[i * m..i * m + i + 1].copy_from_slice(&r);
+    }
+    mirror_upper(&mut out);
+    out
+}
+
+/// Symmetric Gram product Aᵀ·A for A [k,m] → [m,m] (the Hessian/`UᵀU`
+/// shape), columns read in place: the fused-transpose replacement for
+/// `a.transpose2().matmul(&a)`. Lower triangle + mirror, same finite-input
+/// contract as [`syrk`].
+pub fn syrk_t(a: &Tensor, pool: Option<&Pool>) -> Tensor {
+    let (k, m) = (a.rows(), a.cols());
+    let rows = par_rows(pool, m, |i| {
+        let mut out = vec![0.0f32; i + 1];
+        for kk in 0..k {
+            let av = a.data[kk * m + i];
+            if av == 0.0 {
+                continue;
+            }
+            let a_row = &a.data[kk * m..kk * m + i + 1];
+            for (o, &bv) in out.iter_mut().zip(a_row) {
+                *o += av * bv;
+            }
+        }
+        out
+    });
+    let mut out = Tensor::zeros(&[m, m]);
+    for (i, r) in rows.into_iter().enumerate() {
+        out.data[i * m..i * m + i + 1].copy_from_slice(&r);
+    }
+    mirror_upper(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    fn randm(r: usize, c: usize, rng: &mut Pcg) -> Tensor {
+        // exact zeros sprinkled in so the zero-skip path is always live
+        let data = (0..r * c)
+            .map(|_| if rng.f32() < 0.2 { 0.0 } else { rng.normal() })
+            .collect();
+        Tensor::from_vec(&[r, c], data)
+    }
+
+    #[test]
+    fn gemm_family_matches_reference_bitwise() {
+        let mut rng = Pcg::new(3);
+        for (m, k, n) in [(5, 7, 6), (1, 9, 4), (17, 3, 33), (8, 64, 8)] {
+            let a = randm(m, k, &mut rng);
+            let b = randm(k, n, &mut rng);
+            let at = a.transpose2();
+            let bt = b.transpose2();
+            for pool in [None, Some(Pool::new(4))] {
+                let pool = pool.as_ref();
+                assert_eq!(gemm(&a, &b, pool).data, a.matmul(&b).data, "gemm {m}x{k}x{n}");
+                assert_eq!(gemm_at(&at, &b, pool).data, a.matmul(&b).data, "gemm_at");
+                assert_eq!(gemm_bt(&a, &bt, pool).data, a.matmul(&b).data, "gemm_bt");
+                assert_eq!(syrk(&a, pool).data, a.matmul(&at).data, "syrk");
+                assert_eq!(syrk_t(&a, pool).data, at.matmul(&a).data, "syrk_t");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let a = Tensor::zeros(&[0, 3]);
+        let b = Tensor::zeros(&[3, 2]);
+        assert_eq!(gemm(&a, &b, None).shape, vec![0, 2]);
+        let a = Tensor::zeros(&[2, 0]);
+        let b = Tensor::zeros(&[0, 5]);
+        assert_eq!(gemm(&a, &b, None).data, vec![0.0; 10], "k=0 sums nothing");
+        let a = Tensor::from_vec(&[1, 1], vec![3.0]);
+        assert_eq!(gemm_bt(&a, &a, None).data, vec![9.0]);
+        assert_eq!(syrk(&Tensor::zeros(&[0, 4]), None).shape, vec![0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "gemm inner dim")]
+    fn gemm_dim_mismatch_panics() {
+        gemm(&Tensor::zeros(&[2, 3]), &Tensor::zeros(&[4, 2]), None);
+    }
+
+    #[test]
+    fn zero_skip_is_contractual_on_non_finite_input() {
+        // An exact 0.0 (either sign) in A skips its term entirely, which
+        // suppresses NaN/∞ from the B row it would have met — exactly like
+        // the reference kernel. This is the pinned contract of DESIGN.md
+        // §10, not an accident of the implementation.
+        let a = Tensor::from_vec(&[1, 3], vec![0.0, -0.0, 2.0]);
+        let b = Tensor::from_vec(
+            &[3, 2],
+            vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, f32::NAN, 1.0, 2.0],
+        );
+        let want = vec![2.0, 4.0];
+        assert_eq!(a.matmul(&b).data, want, "reference skips zeros");
+        assert_eq!(gemm(&a, &b, None).data, want);
+        assert_eq!(gemm_at(&a.transpose2(), &b, None).data, want);
+        assert_eq!(gemm_bt(&a, &b.transpose2(), None).data, want);
+
+        // ... while any non-zero coefficient propagates non-finite values
+        // in reference and tiled kernels alike.
+        let a2 = Tensor::from_vec(&[1, 3], vec![1e-30, 0.0, 2.0]);
+        for q in [a2.matmul(&b), gemm(&a2, &b, None), gemm_bt(&a2, &b.transpose2(), None)] {
+            assert!(q.data[0].is_nan(), "{:?}", q.data);
+            assert!(q.data[1].is_infinite(), "{:?}", q.data);
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Host kernel layer: pool-parallel, cache-tiled dense kernels for every
+//! host-side hot path (DESIGN.md §10).
+//!
+//! The naive [`Tensor::matmul`] forced two costs on the rotate/solve hot
+//! paths: it is single-threaded, and every transposed operand had to be
+//! materialized through `transpose2()` first. This subsystem replaces it
+//! with a small BLAS-shaped family:
+//!
+//! - [`gemm`] / [`gemm_at`] / [`gemm_bt`] — A·B, Aᵀ·B, A·Bᵀ; the fused-
+//!   transpose variants read the transposed operand in place, so no call
+//!   site materializes a transpose copy for a product anymore;
+//! - [`syrk`] / [`syrk_t`] — the symmetric products A·Aᵀ and Aᵀ·A
+//!   (Hessian/Gram shapes): only the lower triangle is computed, the upper
+//!   is mirrored;
+//! - [`cholesky_lower`] / [`tri_inv_lower`] — blocked right-looking
+//!   Cholesky and column-block-parallel triangular inversion, the factor
+//!   chain behind `linalg::hinv_cholesky_upper`.
+//!
+//! **Determinism (DESIGN.md §5, §10).** Every kernel takes an optional
+//! [`Pool`] and parallelizes over *row blocks* (column blocks for
+//! `tri_inv_lower`): workers compute disjoint output rows with the exact
+//! per-row code the serial path runs, and the coordinator stitches the
+//! blocks back in index order. No floating-point reduction ever crosses a
+//! task boundary, so `jobs=N` is bit-identical to `jobs=1` — and, because
+//! the tiling never reassociates a per-element accumulation (k is always
+//! visited in increasing order into the same accumulator), the kernels are
+//! bit-identical to the naive reference kernel itself. The equivalence
+//! tests (`tests/prop_kernels.rs`) assert exact equality, not tolerance.
+//!
+//! **Zero-skip contract.** The reference kernel skips `a == 0.0`
+//! coefficients (both signs), which also suppresses NaN/∞ propagation from
+//! the other operand's row. The tiled kernels keep exactly that semantic —
+//! contractually, not accidentally: `gemm::tests` pins the behavior on
+//! non-finite inputs against the reference. `syrk`/`syrk_t` additionally
+//! assume finite input (the mirrored triangle equals the reference only
+//! when 0·x cannot produce NaN); every call site feeds finite data.
+//!
+//! [`Tensor::matmul`]: crate::tensor::Tensor::matmul
+//! [`Pool`]: crate::util::Pool
+
+pub mod factor;
+pub mod gemm;
+
+pub use factor::{cholesky_lower, tri_inv_lower};
+pub use gemm::{gemm, gemm_at, gemm_bt, syrk, syrk_t};
+
+use crate::util::Pool;
+
+/// Output rows (or columns) dispatched per pool task: small enough to
+/// load-balance ragged work (`syrk` rows grow with the index), large
+/// enough that the atomic task claim is amortized.
+pub(crate) const ROW_BLOCK: usize = 16;
+
+/// Run `f(0), …, f(n-1)` — one call per output row — and return the
+/// results in row order. With a multi-worker pool the rows are dispatched
+/// in blocks of [`ROW_BLOCK`] over [`Pool::run`]; rows are computed by the
+/// same closure either way, so the parallel path is bit-identical to the
+/// serial one (the determinism contract of the module docs).
+pub(crate) fn par_rows<F>(pool: Option<&Pool>, n: usize, f: F) -> Vec<Vec<f32>>
+where
+    F: Fn(usize) -> Vec<f32> + Sync,
+{
+    let starts: Vec<usize> = (0..n).step_by(ROW_BLOCK).collect();
+    match pool {
+        Some(p) if p.jobs() > 1 && starts.len() > 1 => p
+            .run(starts.len(), |bi| {
+                let lo = starts[bi];
+                let hi = (lo + ROW_BLOCK).min(n);
+                (lo..hi).map(&f).collect::<Vec<Vec<f32>>>()
+            })
+            .into_iter()
+            .flatten()
+            .collect(),
+        _ => (0..n).map(f).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_rows_orders_and_matches_serial() {
+        let f = |i: usize| vec![i as f32, (i * i) as f32];
+        let serial = par_rows(None, 67, f);
+        for jobs in [1, 2, 4] {
+            let pool = Pool::new(jobs);
+            assert_eq!(par_rows(Some(&pool), 67, f), serial, "jobs={jobs}");
+        }
+        assert_eq!(par_rows(Some(&Pool::new(4)), 0, f), Vec::<Vec<f32>>::new());
+    }
+}

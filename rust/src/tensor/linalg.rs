@@ -1,12 +1,20 @@
-//! Host-side reference linear algebra (Cholesky, triangular inverse).
+//! Host-side linear algebra: the damped-Hessian inverse-factor chain the
+//! GPTQ recurrence consumes, plus the unblocked Cholesky/tri-inv
+//! *reference* loops the blocked [`kernels`](super::kernels) variants are
+//! equivalence-tested against (bit-identical — DESIGN.md §10).
 //!
-//! Mirrors python/compile/quantizer.py — these back the pure-rust reference
-//! GPTQ in `quantref`, which property-tests the HLO solver. Cold path only.
+//! Mirrors python/compile/quantizer.py — these back the pure-rust
+//! reference GPTQ in `quantref`, which property-tests the HLO solver.
 
+use super::kernels;
 use super::Tensor;
+use crate::util::Pool;
 
-/// Lower Cholesky of an SPD matrix. Panics on non-square input; clamps tiny
-/// negative pivots (fp noise on near-singular H) to keep factors finite.
+/// Lower Cholesky of an SPD matrix — the unblocked reference loop. Panics
+/// on non-square input; clamps tiny negative pivots (fp noise on
+/// near-singular H) to keep factors finite. Production call sites use the
+/// blocked, pool-parallel `kernels::cholesky_lower`, which is
+/// bit-identical to this (`tests/prop_kernels.rs`).
 pub fn cholesky_lower(a: &Tensor) -> Tensor {
     let d = a.rows();
     assert_eq!(d, a.cols(), "cholesky needs a square matrix");
@@ -29,7 +37,8 @@ pub fn cholesky_lower(a: &Tensor) -> Tensor {
     l
 }
 
-/// Inverse of a lower-triangular matrix by forward substitution.
+/// Inverse of a lower-triangular matrix by forward substitution — the
+/// unblocked reference for the column-parallel `kernels::tri_inv_lower`.
 pub fn tri_inv_lower(l: &Tensor) -> Tensor {
     let d = l.rows();
     let mut x = Tensor::zeros(&[d, d]);
@@ -48,7 +57,13 @@ pub fn tri_inv_lower(l: &Tensor) -> Tensor {
 
 /// Upper-triangular U with UᵀU = (H + damp·mean(diag)·I)⁻¹ — the factor the
 /// GPTQ recurrence consumes (same contract as quantizer.hinv_cholesky_upper).
-pub fn hinv_cholesky_upper(h: &Tensor, damp: f32) -> Tensor {
+///
+/// The whole chain — Cholesky, triangular inverse, the LᵀL Gram product,
+/// and the final re-factor — runs on the blocked `tensor::kernels` layer.
+/// `pool` parallelizes each step over row/column blocks without changing
+/// a single output bit (DESIGN.md §10); the `quantref` oracle passes
+/// `None` on purpose, keeping the reference GPTQ serial.
+pub fn hinv_cholesky_upper(h: &Tensor, damp: f32, pool: Option<&Pool>) -> Tensor {
     let d = h.rows();
     let dmean = (0..d).map(|i| h.at2(i, i)).sum::<f32>() / d as f32;
     let dmean = dmean.max(1e-8);
@@ -57,10 +72,12 @@ pub fn hinv_cholesky_upper(h: &Tensor, damp: f32) -> Tensor {
         let v = hd.at2(i, i) + damp * dmean;
         hd.set2(i, i, v);
     }
-    let l = cholesky_lower(&hd);
-    let linv = tri_inv_lower(&l);
-    let hinv = linv.transpose2().matmul(&linv);
-    cholesky_lower(&hinv).transpose2()
+    let l = kernels::cholesky_lower(&hd, pool);
+    let linv = kernels::tri_inv_lower(&l, pool);
+    let hinv = kernels::syrk_t(&linv, pool);
+    // transpose2 here is a layout transform of the returned factor, not a
+    // materialized product operand
+    kernels::cholesky_lower(&hinv, pool).transpose2()
 }
 
 #[cfg(test)]
@@ -71,7 +88,7 @@ mod tests {
     fn spd(d: usize, seed: u64) -> Tensor {
         let mut rng = Pcg::new(seed);
         let a = Tensor::randn(&[d, d], 1.0, &mut rng);
-        let mut h = a.matmul(&a.transpose2());
+        let mut h = kernels::syrk(&a, None);
         for i in 0..d {
             let v = h.at2(i, i) + d as f32;
             h.set2(i, i, v);
@@ -83,7 +100,7 @@ mod tests {
     fn cholesky_reconstructs() {
         let a = spd(16, 0);
         let l = cholesky_lower(&a);
-        assert!(l.matmul(&l.transpose2()).allclose(&a, 1e-3));
+        assert!(kernels::syrk(&l, None).allclose(&a, 1e-3));
         // strictly lower
         for i in 0..16 {
             for j in (i + 1)..16 {
@@ -97,7 +114,7 @@ mod tests {
         let a = spd(12, 1);
         let l = cholesky_lower(&a);
         let li = tri_inv_lower(&l);
-        let eye = li.matmul(&l);
+        let eye = kernels::gemm(&li, &l, None);
         for i in 0..12 {
             for j in 0..12 {
                 let want = if i == j { 1.0 } else { 0.0 };
@@ -109,7 +126,7 @@ mod tests {
     #[test]
     fn hinv_factor_contract() {
         let h = spd(10, 2);
-        let u = hinv_cholesky_upper(&h, 0.01);
+        let u = hinv_cholesky_upper(&h, 0.01, None);
         // UᵀU (H + damp·mean·I) = I
         let dmean = (0..10).map(|i| h.at2(i, i)).sum::<f32>() / 10.0;
         let mut hd = h.clone();
@@ -117,8 +134,8 @@ mod tests {
             let v = hd.at2(i, i) + 0.01 * dmean;
             hd.set2(i, i, v);
         }
-        let utu = u.transpose2().matmul(&u);
-        let prod = utu.matmul(&hd);
+        let utu = kernels::syrk_t(&u, None);
+        let prod = kernels::gemm(&utu, &hd, None);
         for i in 0..10 {
             for j in 0..10 {
                 let want = if i == j { 1.0 } else { 0.0 };
@@ -128,9 +145,19 @@ mod tests {
     }
 
     #[test]
+    fn hinv_chain_jobs_invariant() {
+        // the factor chain under a 4-worker pool is bit-identical to the
+        // serial path — the §10 determinism contract, end to end
+        let h = spd(48, 3);
+        let serial = hinv_cholesky_upper(&h, 0.01, None);
+        let pooled = hinv_cholesky_upper(&h, 0.01, Some(&Pool::new(4)));
+        assert_eq!(serial.data, pooled.data);
+    }
+
+    #[test]
     fn degenerate_hessian_finite() {
         let h = Tensor::zeros(&[8, 8]);
-        let u = hinv_cholesky_upper(&h, 0.01);
+        let u = hinv_cholesky_upper(&h, 0.01, None);
         assert!(u.data.iter().all(|v| v.is_finite()));
     }
 }

@@ -1,11 +1,15 @@
 //! Minimal row-major f32 tensor used host-side by the coordinator.
 //!
 //! All *hot* math runs in AOT HLO on the PJRT client; this type covers the
-//! cold paths: parameter init/fusion/rotation, Hessian assembly checks, the
-//! pure-rust reference quantizer, and test assertions. Keep it simple —
-//! no broadcasting, no views; shapes are explicit.
+//! host-side paths: parameter init/fusion/rotation, Hessian assembly
+//! checks, the pure-rust reference quantizer, and test assertions. Keep it
+//! simple — no broadcasting, no views; shapes are explicit. Dense products
+//! and factorizations route through the pool-parallel [`kernels`] layer
+//! (DESIGN.md §10); [`Tensor::matmul`] survives only as the serial
+//! reference kernel those kernels are equivalence-tested against.
 
 pub mod hadamard;
+pub mod kernels;
 pub mod linalg;
 pub mod pack;
 
@@ -79,6 +83,10 @@ impl Tensor {
         &mut self.data[i * c..(i + 1) * c]
     }
 
+    /// Materialized transpose — a layout transform, not a product input:
+    /// products against a transposed operand go through the fused
+    /// [`kernels::gemm_at`]/[`kernels::gemm_bt`] variants instead, which
+    /// read the operand in place (DESIGN.md §10).
     pub fn transpose2(&self) -> Tensor {
         let (r, c) = (self.rows(), self.cols());
         let mut out = Tensor::zeros(&[c, r]);
@@ -90,8 +98,13 @@ impl Tensor {
         out
     }
 
-    /// Blocked matmul: self [m,k] @ other [k,n]. Cold path only — the
-    /// biggest host-side matmul is the one-time rotation (V×d @ d×d).
+    /// Naive serial matmul: self [m,k] @ other [k,n]. **Reference kernel
+    /// only** — production host paths call the pool-parallel tiled
+    /// [`kernels`] family (`gemm`/`gemm_at`/`gemm_bt`/`syrk`), which is
+    /// bit-identical to this loop (`tests/prop_kernels.rs` asserts exact
+    /// equality, including the `a == 0.0` zero-skip contract on
+    /// non-finite input; DESIGN.md §10). Do not add call sites outside
+    /// `tensor/` and the equivalence tests.
     pub fn matmul(&self, other: &Tensor) -> Tensor {
         let (m, k) = (self.rows(), self.cols());
         let (k2, n) = (other.rows(), other.cols());

@@ -1,0 +1,176 @@
+//! Kernel equivalence property tests (DESIGN.md §10): the pool-parallel
+//! tiled `tensor::kernels` family vs the naive reference kernel
+//! (`Tensor::matmul` + materialized `transpose2()`), over ragged and
+//! degenerate shapes, **bit-identical** — exact equality, no tolerance —
+//! and bit-invariant across jobs ∈ {1, 4}; plus blocked-vs-unblocked
+//! Cholesky / triangular-inverse agreement on SPD matrices.
+//!
+//! This file and `tensor/` are the only sanctioned homes of
+//! reference-kernel products.
+
+use rsq::tensor::{kernels, linalg, Tensor};
+use rsq::util::prop::{check, Config};
+use rsq::util::{Pcg, Pool};
+
+/// A dimension that is deliberately often degenerate: 0, 1, or ragged.
+fn dim(rng: &mut Pcg, size: usize) -> usize {
+    match rng.below(8) {
+        0 => 0,
+        1 => 1,
+        _ => 2 + rng.below(size.max(1)),
+    }
+}
+
+/// Random matrix with exact zeros sprinkled in, so the zero-skip path of
+/// the kernels is exercised on every instance.
+fn randm(r: usize, c: usize, rng: &mut Pcg) -> Tensor {
+    let data = (0..r * c)
+        .map(|_| if rng.f32() < 0.15 { 0.0 } else { rng.normal() })
+        .collect();
+    Tensor::from_vec(&[r, c], data)
+}
+
+fn pools() -> [Option<Pool>; 3] {
+    [None, Some(Pool::new(1)), Some(Pool::new(4))]
+}
+
+#[test]
+fn prop_gemm_bit_identical_to_reference() {
+    check(Config { cases: 48, max_size: 40, ..Default::default() }, "gemm", |rng, size| {
+        let (m, k, n) = (dim(rng, size), dim(rng, size), dim(rng, size));
+        let a = randm(m, k, rng);
+        let b = randm(k, n, rng);
+        let want = a.matmul(&b);
+        pools().iter().all(|p| {
+            let got = kernels::gemm(&a, &b, p.as_ref());
+            got.shape == want.shape && got.data == want.data
+        })
+    });
+}
+
+#[test]
+fn prop_gemm_at_bit_identical_to_transposed_reference() {
+    check(Config { cases: 48, max_size: 40, ..Default::default() }, "gemm_at", |rng, size| {
+        let (m, k, n) = (dim(rng, size), dim(rng, size), dim(rng, size));
+        let a = randm(k, m, rng); // kernels read Aᵀ in place ...
+        let b = randm(k, n, rng);
+        let want = a.transpose2().matmul(&b); // ... the reference materializes it
+        pools().iter().all(|p| kernels::gemm_at(&a, &b, p.as_ref()).data == want.data)
+    });
+}
+
+#[test]
+fn prop_gemm_bt_bit_identical_to_transposed_reference() {
+    check(Config { cases: 48, max_size: 40, ..Default::default() }, "gemm_bt", |rng, size| {
+        let (m, k, n) = (dim(rng, size), dim(rng, size), dim(rng, size));
+        let a = randm(m, k, rng);
+        let b = randm(n, k, rng);
+        let want = a.matmul(&b.transpose2());
+        pools().iter().all(|p| kernels::gemm_bt(&a, &b, p.as_ref()).data == want.data)
+    });
+}
+
+#[test]
+fn prop_syrk_bit_identical_to_reference() {
+    check(Config { cases: 48, max_size: 40, ..Default::default() }, "syrk", |rng, size| {
+        let (m, k) = (dim(rng, size), dim(rng, size));
+        let a = randm(m, k, rng);
+        let want_aat = a.matmul(&a.transpose2());
+        let want_ata = a.transpose2().matmul(&a);
+        pools().iter().all(|p| {
+            kernels::syrk(&a, p.as_ref()).data == want_aat.data
+                && kernels::syrk_t(&a, p.as_ref()).data == want_ata.data
+        })
+    });
+}
+
+fn spd(d: usize, rng: &mut Pcg) -> Tensor {
+    let a = randm(d, d + 3, rng);
+    let mut h = kernels::syrk(&a, None);
+    for i in 0..d {
+        let v = h.at2(i, i) + d as f32;
+        h.set2(i, i, v);
+    }
+    h
+}
+
+#[test]
+fn prop_blocked_cholesky_matches_unblocked() {
+    // sizes past 32 cross the factor block boundary; the blocked
+    // right-looking schedule performs the reference's exact fp operation
+    // sequence, so agreement is bitwise, not approximate
+    let cfg = Config { cases: 24, min_size: 1, max_size: 96, ..Default::default() };
+    check(cfg, "chol", |rng, size| {
+        let h = spd(size, rng);
+        let want = linalg::cholesky_lower(&h);
+        pools().iter().all(|p| kernels::cholesky_lower(&h, p.as_ref()).data == want.data)
+    });
+}
+
+#[test]
+fn prop_blocked_tri_inv_matches_unblocked() {
+    let cfg = Config { cases: 24, min_size: 1, max_size: 96, ..Default::default() };
+    check(cfg, "tri_inv", |rng, size| {
+        let l = linalg::cholesky_lower(&spd(size, rng));
+        let want = linalg::tri_inv_lower(&l);
+        pools().iter().all(|p| kernels::tri_inv_lower(&l, p.as_ref()).data == want.data)
+    });
+}
+
+#[test]
+fn prop_hinv_chain_jobs_invariant_and_correct() {
+    // the full hinv_cholesky_upper chain (cholesky → tri-inv → Gram →
+    // re-factor) is jobs-invariant bit for bit, and its contract
+    // UᵀU·(H + damp·mean·I) ≈ I holds
+    let cfg = Config { cases: 12, min_size: 2, max_size: 48, ..Default::default() };
+    check(cfg, "hinv", |rng, size| {
+        let d = size.max(2);
+        let h = spd(d, rng);
+        let serial = linalg::hinv_cholesky_upper(&h, 0.01, None);
+        let pooled = linalg::hinv_cholesky_upper(&h, 0.01, Some(&Pool::new(4)));
+        if serial.data != pooled.data {
+            return false;
+        }
+        let dmean = (0..d).map(|i| h.at2(i, i)).sum::<f32>() / d as f32;
+        let mut hd = h.clone();
+        for i in 0..d {
+            let v = hd.at2(i, i) + 0.01 * dmean;
+            hd.set2(i, i, v);
+        }
+        let prod = kernels::gemm(&kernels::syrk_t(&serial, None), &hd, None);
+        (0..d).all(|i| {
+            (0..d).all(|j| {
+                let want = if i == j { 1.0 } else { 0.0 };
+                (prod.at2(i, j) - want).abs() < 2e-2 * d as f32
+            })
+        })
+    });
+}
+
+#[test]
+fn prop_zero_skip_contract_under_non_finite_input() {
+    // the a == 0.0 zero-skip (satellite contract, DESIGN.md §10): zeros in
+    // A suppress NaN/∞ from the B rows they meet, identically in the tiled
+    // kernels and the naive reference — including the parallel dispatch
+    let cfg = Config { cases: 24, min_size: 2, max_size: 24, ..Default::default() };
+    check(cfg, "zero_skip", |rng, size| {
+        let (m, k, n) = (dim(rng, size).max(1), dim(rng, size).max(2), dim(rng, size).max(1));
+        let mut a = randm(m, k, rng);
+        let mut b = randm(k, n, rng);
+        // pick a k-index whose A column is zeroed and whose B row is poisoned
+        let kk = rng.below(k);
+        for i in 0..m {
+            a.set2(i, kk, 0.0);
+        }
+        for j in 0..n {
+            b.set2(kk, j, if rng.below(2) == 0 { f32::NAN } else { f32::INFINITY });
+        }
+        let want = a.matmul(&b);
+        want.data.iter().all(|v| v.is_finite())
+            && pools().iter().all(|p| {
+                kernels::gemm(&a, &b, p.as_ref()).data == want.data
+                    && kernels::gemm_at(&a.transpose2(), &b, p.as_ref()).data == want.data
+                    && kernels::gemm_bt(&a, &b.transpose2(), p.as_ref()).data == want.data
+            })
+    });
+}

@@ -6,7 +6,7 @@ use rsq::corpus::{expand_dataset, CalibSet, CorpusKind};
 use rsq::quant::strategy::normalize_eq4;
 use rsq::quantref;
 use rsq::runtime::{self, Engine};
-use rsq::tensor::{linalg, Tensor};
+use rsq::tensor::{kernels, linalg, Tensor};
 use rsq::util::prop::{check, Config};
 use rsq::util::Pcg;
 
@@ -56,13 +56,13 @@ fn prop_cholesky_factor_reconstructs() {
     check(Config { cases: 16, min_size: 2, max_size: 32, ..Default::default() }, "chol", |rng, size| {
         let d = size.max(2);
         let a = Tensor::randn(&[d, d], 1.0, rng);
-        let mut h = a.matmul(&a.transpose2());
+        let mut h = kernels::syrk(&a, None);
         for i in 0..d {
             let v = h.at2(i, i) + d as f32;
             h.set2(i, i, v);
         }
         let l = linalg::cholesky_lower(&h);
-        l.matmul(&l.transpose2()).allclose(&h, 1e-2 * d as f32)
+        kernels::syrk(&l, None).allclose(&h, 1e-2 * d as f32)
     });
 }
 

@@ -94,7 +94,26 @@ if [ -d rust/src/quant/artifact ]; then
     done
 fi
 
-[ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler/artifact docs OK"
+# The host kernel layer: if tensor/kernels exists, §10 must document it —
+# the tiling scheme, the fused-transpose entry points, and the row-block
+# determinism argument are the contract every refactored call site leans
+# on, so the docs must name them.
+if [ -d rust/src/tensor/kernels ]; then
+    if ! grep -qE "^## 10\." DESIGN.md; then
+        echo "check-docs: FAIL — rust/src/tensor/kernels exists but DESIGN.md has no '## 10.' section" >&2
+        fail=1
+    fi
+    sec10=$(awk '/^## 10\./{f=1; print; next} /^## /{f=0} f' DESIGN.md)
+    for needle in "tensor/kernels" "gemm_at" "gemm_bt" "syrk" "row block" \
+                  "cholesky_lower" "tri_inv_lower" "zero-skip" "reference kernel"; do
+        if ! printf '%s\n' "${sec10}" | grep -qi "${needle}"; then
+            echo "check-docs: FAIL — DESIGN.md §10 never mentions \"${needle}\" (host-kernel contract drift)" >&2
+            fail=1
+        fi
+    done
+fi
+
+[ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler/artifact/kernel docs OK"
 
 # --- 3+4. rustdoc + rustfmt ------------------------------------------------
 if [ "${CHECK_DOCS_SKIP_CARGO:-0}" = "1" ]; then

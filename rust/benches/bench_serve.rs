@@ -1,0 +1,111 @@
+//! Serving-layer benchmarks (DESIGN.md §11) — the tokens/s baseline for
+//! the packed-domain decode path. Runs **without** AOT artifacts on disk:
+//! the model is built host-side (RTN quantize + pack at each bit width),
+//! exactly like `rsq serve-bench`'s synthetic mode.
+//!
+//!     cargo bench --bench bench_serve
+//!
+//! Grid: batch × context × jobs × bits, reporting greedy-decode tokens/s
+//! through the continuous-batching scheduler plus, per bit width, the
+//! packed-vs-unpacked resident-bytes ratio — the deployment memory win
+//! the packed-domain kernels preserve at decode time.
+
+use rsq::model::ParamSet;
+use rsq::serve::{bench_model_config, serve, PackedModel, ServeOptions, ServeRequest};
+use rsq::tensor::kernels::{deq_gemv, gemm_bt};
+use rsq::tensor::pack::PACK_BITS;
+use rsq::tensor::Tensor;
+use rsq::util::{Bench, Pcg, Pool};
+
+/// The fused-kernel micro grid: dequant-GEMV vs unpack()+gemm at a
+/// serving projection shape (the ff × d up-projection).
+fn bench_fused_kernels() {
+    println!("--- fused dequant-GEMV vs unpack()+gemm (128x64 projection) ---");
+    let mut rng = Pcg::new(7);
+    let (n, k) = (128usize, 64usize);
+    let w = Tensor::randn(&[n, k], 1.0, &mut rng);
+    let x: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+    let xt = Tensor::from_vec(&[1, k], x.clone());
+    for bits in PACK_BITS {
+        let maxq = ((1u64 << bits) - 1) as f32;
+        let q = rsq::quantref::rtn(&w, maxq);
+        let (scale, zero) = rsq::quantref::row_grid(&w, maxq);
+        let packed = rsq::tensor::pack::PackedRows::pack(
+            &q,
+            bits,
+            &rsq::tensor::pack::RowGrid { scale, zero },
+        )
+        .unwrap();
+        let dense = packed.unpack(None);
+        for jobs in [1usize, 4] {
+            let pool = Pool::new(jobs);
+            Bench::new(&format!("serve/deq_gemv_{bits}b_j{jobs}"))
+                .samples(20)
+                .iter(|| deq_gemv(&x, &packed, Some(&pool)))
+                .report();
+            Bench::new(&format!("serve/unpack_gemm_{bits}b_j{jobs}"))
+                .samples(20)
+                .iter(|| gemm_bt(&xt, &packed.unpack(Some(&pool)), Some(&pool)))
+                .report();
+        }
+        // the amortized comparison point: gemm over an already-dense W
+        Bench::new(&format!("serve/dense_gemm_{bits}b"))
+            .samples(20)
+            .iter(|| gemm_bt(&xt, &dense, None))
+            .report();
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== serving-layer benchmarks (host-side, no artifacts needed) ===");
+    // the same synthetic config `rsq serve-bench` builds, so the grids
+    // stay comparable
+    let cfg = bench_model_config();
+    let p = ParamSet::init(&cfg, 3);
+    bench_fused_kernels();
+
+    println!("--- serve grid: batch x context x jobs x bits ---");
+    for bits in PACK_BITS {
+        let model = PackedModel::from_paramset_rtn(&p, bits)?;
+        let (packed_b, dense_b) = model.resident_bytes();
+        println!(
+            "bits={bits}: resident {packed_b} B packed vs {dense_b} B f32 \
+             ({:.2}x smaller, {} packed weights)",
+            dense_b as f64 / packed_b as f64,
+            model.packed_weights()
+        );
+        for ctx in [32usize, 64] {
+            for batch in [1usize, 4] {
+                for jobs in [1usize, 4] {
+                    let pool = Pool::new(jobs);
+                    let prompt_len = 4usize;
+                    // re-seeded per cell: every cell decodes the same
+                    // prompts, so rows are comparable along any axis
+                    let mut rng = Pcg::new(11);
+                    let requests: Vec<ServeRequest> = (0..batch as u64)
+                        .map(|id| {
+                            let prompt =
+                                (0..prompt_len).map(|_| rng.below(cfg.vocab) as i32).collect();
+                            ServeRequest::new(id, prompt, ctx - prompt_len)
+                        })
+                        .collect();
+                    let opts = ServeOptions { max_batch: batch, ..Default::default() };
+                    let mut tokens = 0usize;
+                    let s = Bench::new(&format!(
+                        "serve/decode_{bits}b_ctx{ctx}_b{batch}_j{jobs}"
+                    ))
+                    .warmup(1)
+                    .samples(3)
+                    .iter(|| {
+                        let rep = serve(&model, &pool, requests.clone(), &opts).unwrap();
+                        tokens = rep.generated_tokens;
+                        rep
+                    })
+                    .report();
+                    println!("    ~ {:.1} tok/s ({tokens} tokens)", tokens as f64 / s);
+                }
+            }
+        }
+    }
+    Ok(())
+}

@@ -26,6 +26,9 @@
 //!                  (packed save/load + content-addressed Hessian cache).
 //! - [`quantref`] — pure-rust RTN + GPTQ oracle for property tests against
 //!                  the HLO path.
+//! - [`serve`]    — the deployment path: packed-domain batched decoding
+//!                  (fused dequantize kernels, paged KV cache, continuous
+//!                  batching) straight from a saved artifact.
 //! - [`eval`]     — perplexity + 10 downstream probe tasks + long-context
 //!                  probe families.
 //! - [`train`]    — Adam training loop over the `train_step` artifact
@@ -39,6 +42,7 @@ pub mod quant;
 pub mod quantref;
 pub mod repro;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 pub mod util;

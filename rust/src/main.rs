@@ -1,10 +1,15 @@
 //! `rsq` — the L3 coordinator CLI.
 //!
-//! Subcommands map one-to-one to the paper's experiments (DESIGN.md §4):
+//! Subcommands map one-to-one to the paper's experiments (DESIGN.md §4),
+//! plus the deployment-side commands:
 //!   rsq table1..table7      regenerate paper tables
 //!   rsq fig2..fig9          regenerate paper figures
 //!   rsq scores              dump Figs. 10-14 score series
 //!   rsq quantize            one-off quantization run
+//!   rsq eval                score a saved artifact or checkpoint
+//!   rsq generate            greedy decode from a packed artifact
+//!   rsq serve-bench         serving throughput sweep (DESIGN.md §11)
+//!   rsq cache               Hessian-cache maintenance (ls / gc)
 //!   rsq train               train a checkpoint
 //!   rsq perf                performance profile (DESIGN.md §Perf)
 //!   rsq all                 every table + figure at default scale
@@ -14,15 +19,18 @@
 //! §Threading); output is bit-identical for every combination.
 
 use std::path::Path;
+use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use rsq::corpus::CorpusKind;
 use rsq::eval::{perplexity, score_model};
 use rsq::quant::{artifact, quantize, Method, QuantOptions, SchedMode, Strategy};
 use rsq::repro::{self, Ctx};
+use rsq::serve;
 use rsq::train::{train, TrainOptions};
-use rsq::util::Args;
+use rsq::util::cli::{parse_bytes, parse_duration_s};
+use rsq::util::{Args, Pcg, Pool};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -46,6 +54,9 @@ fn main() -> Result<()> {
         "perf" => repro::perf::perf(&args)?,
         "quantize" => cmd_quantize(&args)?,
         "eval" => cmd_eval(&args)?,
+        "generate" => cmd_generate(&args)?,
+        "serve-bench" => cmd_serve_bench(&args)?,
+        "cache" => cmd_cache(&args)?,
         "train" => cmd_train(&args)?,
         "all" => cmd_all(&args)?,
         "help" | "--help" | "-h" => print_help(),
@@ -144,7 +155,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
     // the artifact's recorded seq_len when loading an artifact, else
     // cmd_quantize's own default
     let (params, engine, default_t) = if let Some(dir) = args.get("artifact") {
-        let (p, manifest) = artifact::load(Path::new(dir))?;
+        // --jobs also parallelizes the artifact's packed-row unpack
+        // (bit-identical at every value — PackedRows::unpack)
+        let pool = Pool::new(args.jobs());
+        let (p, manifest) = artifact::load_with(Path::new(dir), Some(&pool))?;
         let engine = rsq::runtime::Engine::load(&manifest.config.name)?;
         if engine.config() != &manifest.config {
             bail!(
@@ -185,6 +199,260 @@ fn cmd_eval(args: &Args) -> Result<()> {
         println!("  {:<18} {:>5.1}%", p.name, 100.0 * p.accuracy);
     }
     Ok(())
+}
+
+/// Shared fail-fast validation for the serve-side subcommands: reject
+/// unknown flags AND known value-options passed without a value (the
+/// parser records `--max-new --verbose` as a bare "max-new" flag, which
+/// a known-names check alone would accept while the default silently
+/// applied).
+fn check_flags(cmd: &str, args: &Args, known: &[&str], valued: &[&str]) -> Result<()> {
+    let unknown = args.unknown_keys(known);
+    if !unknown.is_empty() {
+        bail!(
+            "rsq {cmd}: unknown flag(s) --{} (known: --{})",
+            unknown.join(", --"),
+            known.join(", --")
+        );
+    }
+    let missing = args.missing_values(valued);
+    if !missing.is_empty() {
+        bail!("rsq {cmd}: --{} need(s) a value", missing.join(", --"));
+    }
+    Ok(())
+}
+
+/// `rsq generate` — greedy decode through the serving layer (DESIGN.md
+/// §11): `--artifact DIR` decodes **directly from the packed artifact**
+/// host-side (no XLA involved); `--model PATH` serves a full-precision
+/// checkpoint dense (the AOT manifest supplies the config — parsed only,
+/// never compiled). Token output is deterministic — a pure function of
+/// the model and flags — which CI's serve smoke relies on; timings go to
+/// stderr. Unknown flags fail fast instead of being silently ignored.
+fn cmd_generate(args: &Args) -> Result<()> {
+    const KNOWN: &[&str] = &[
+        "artifact", "model", "config", "prompt", "prompt-len", "seed", "max-new", "jobs",
+        "verbose",
+    ];
+    const VALUED: &[&str] =
+        &["artifact", "model", "config", "prompt", "prompt-len", "seed", "max-new", "jobs"];
+    check_flags("generate", args, KNOWN, VALUED)?;
+    if let Err(e) = args.conflict("artifact", "model") {
+        bail!("{e}");
+    }
+    let pool = Pool::new(args.jobs());
+    let model = if let Some(dir) = args.get("artifact") {
+        let (m, manifest) = serve::PackedModel::load(Path::new(dir))?;
+        eprintln!(
+            "[generate] artifact {dir}: {} / {} / {}bit, {} packed weights",
+            manifest.method,
+            manifest.strategy,
+            manifest.bits,
+            m.packed_weights()
+        );
+        m
+    } else if let Some(path) = args.get("model") {
+        let config = args.str_or("config", "small");
+        let manifest = rsq::runtime::Manifest::load(&rsq::artifacts_dir(&config))?;
+        let p = rsq::model::ParamSet::load(&manifest.config, Path::new(path))?;
+        eprintln!("[generate] checkpoint {path} (config {config}, served dense)");
+        serve::PackedModel::from_paramset_dense(&p)?
+    } else {
+        bail!("rsq generate needs --artifact DIR (packed artifact) or --model PATH (checkpoint)");
+    };
+    let cfg = model.cfg.clone();
+    let prompt: Vec<i32> = match args.get("prompt") {
+        Some(s) => s
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<i32>()
+                    .map_err(|_| anyhow!("--prompt expects comma-separated token ids, got {t:?}"))
+            })
+            .collect::<Result<_>>()?,
+        None => {
+            let n = args.usize_or("prompt-len", 4).max(1);
+            let mut rng = Pcg::new(args.u64_or("seed", 0));
+            (0..n).map(|_| rng.below(cfg.vocab) as i32).collect()
+        }
+    };
+    if prompt.is_empty() {
+        bail!("--prompt is empty");
+    }
+    if let Some(&t) = prompt.iter().find(|&&t| !(0..cfg.vocab as i32).contains(&t)) {
+        bail!("prompt token {t} outside vocab {}", cfg.vocab);
+    }
+    if prompt.len() >= cfg.max_seq {
+        bail!(
+            "prompt length {} leaves no room to generate (max_seq {})",
+            prompt.len(),
+            cfg.max_seq
+        );
+    }
+    let max_new = args.usize_or("max-new", 16);
+    let t0 = Instant::now();
+    let gen = serve::greedy_decode(&model, &prompt, max_new, Some(&pool))?;
+    let dt = t0.elapsed().as_secs_f64();
+    let join = |ts: &[i32]| ts.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ");
+    println!("prompt       : {}", join(&prompt));
+    println!("generated    : {}", join(&gen));
+    eprintln!(
+        "[generate] {} tokens in {dt:.3}s ({:.1} tok/s, jobs={})",
+        gen.len(),
+        gen.len() as f64 / dt.max(1e-12),
+        pool.jobs()
+    );
+    Ok(())
+}
+
+/// `rsq serve-bench` — serving throughput sweep: batch × context × jobs
+/// (× bits when no artifact pins them), printing tokens/s and the
+/// packed-vs-f32 resident-bytes ratio (DESIGN.md §11). Without
+/// `--artifact` it builds its own host-side RTN-packed synthetic model,
+/// so it runs anywhere — no artifacts, no XLA.
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    const KNOWN: &[&str] = &[
+        "artifact", "bits", "batches", "contexts", "jobs-sweep", "prompt-len", "seed", "verbose",
+    ];
+    const VALUED: &[&str] =
+        &["artifact", "bits", "batches", "contexts", "jobs-sweep", "prompt-len", "seed"];
+    check_flags("serve-bench", args, KNOWN, VALUED)?;
+    let parse_list = |key: &str, default: &[&str]| -> Result<Vec<usize>> {
+        args.list_or(key, default)
+            .iter()
+            .map(|v| v.parse::<usize>().map_err(|_| anyhow!("--{key}: bad entry {v:?}")))
+            .collect()
+    };
+    let batches = parse_list("batches", &["1", "4"])?;
+    let contexts = parse_list("contexts", &["32", "64"])?;
+    let jobs_sweep = parse_list("jobs-sweep", &["1", "4"])?;
+    let prompt_len = args.usize_or("prompt-len", 4).max(1);
+
+    println!("=== serve-bench: packed-domain host decode (DESIGN.md §11) ===");
+    let (models, source): (Vec<(u32, serve::PackedModel)>, String) =
+        if let Some(dir) = args.get("artifact") {
+            let (m, manifest) = serve::PackedModel::load(Path::new(dir))?;
+            (vec![(manifest.bits, m)], format!("artifact {dir}"))
+        } else {
+            // shared with benches/bench_serve.rs so the grids compare
+            let cfg = serve::bench_model_config();
+            let p = rsq::model::ParamSet::init(&cfg, args.u64_or("seed", 3));
+            let bits = parse_list("bits", &["2", "3", "4", "8"])?;
+            let ms = bits
+                .into_iter()
+                .map(|b| Ok((b as u32, serve::PackedModel::from_paramset_rtn(&p, b as u32)?)))
+                .collect::<Result<_>>()?;
+            (ms, "synthetic d=64 L=2 vocab=256 (host RTN)".to_string())
+        };
+    println!("model        : {source}");
+    for (bits, model) in &models {
+        let (packed, dense) = model.resident_bytes();
+        println!(
+            "bits={bits}  resident {packed} B packed vs {dense} B f32 \
+             ({:.2}x smaller, {} packed weights)",
+            dense as f64 / packed as f64,
+            model.packed_weights()
+        );
+        let cfg = &model.cfg;
+        for &ctx in &contexts {
+            let ctx = ctx.min(cfg.max_seq);
+            let max_new = ctx.saturating_sub(prompt_len).max(1);
+            for &batch in &batches {
+                for &jobs in &jobs_sweep {
+                    let pool = Pool::new(jobs);
+                    // re-seeded per cell so every cell decodes identical
+                    // prompts — rows stay comparable along any sweep axis
+                    let mut rng = Pcg::new(args.u64_or("seed", 3));
+                    let requests: Vec<serve::ServeRequest> = (0..batch.max(1) as u64)
+                        .map(|id| {
+                            let prompt =
+                                (0..prompt_len).map(|_| rng.below(cfg.vocab) as i32).collect();
+                            serve::ServeRequest::new(id, prompt, max_new)
+                        })
+                        .collect();
+                    let opts =
+                        serve::ServeOptions { max_batch: batch.max(1), ..Default::default() };
+                    let rep = serve::serve(model, &pool, requests, &opts)?;
+                    println!(
+                        "  batch={batch:<3} ctx={ctx:<4} jobs={jobs:<3} {:>9.1} tok/s  \
+                         ({} tokens, {} steps, peak {})",
+                        rep.tokens_per_s, rep.generated_tokens, rep.steps, rep.peak_active
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `rsq cache` — Hessian-cache maintenance (DESIGN.md §9): `ls` lists the
+/// content-addressed entries, `gc --max-age D --max-bytes N` evicts by
+/// age then by total size (oldest first). Eviction is always safe —
+/// content addressing turns a deleted entry into a future recompute.
+fn cmd_cache(args: &Args) -> Result<()> {
+    const KNOWN: &[&str] = &["hess-cache", "max-age", "max-bytes", "verbose"];
+    check_flags("cache", args, KNOWN, &["hess-cache", "max-age", "max-bytes"])?;
+    let Some(dir) = args.hess_cache() else {
+        bail!("--hess-cache off leaves no cache to manage");
+    };
+    let cache = artifact::cache::HessCache::new(&dir);
+    let sub = args.positional.get(1).map(String::as_str).unwrap_or("ls");
+    match sub {
+        "ls" => {
+            let entries = cache.entries()?;
+            if entries.is_empty() {
+                println!("hessian cache {dir:?}: empty");
+                return Ok(());
+            }
+            println!("hessian cache {dir:?} (oldest first):");
+            let mut total = 0u64;
+            for e in &entries {
+                total += e.bytes;
+                println!("  {}  {:>12} B  age {}", e.key_hex, e.bytes, fmt_age(e.age_s));
+            }
+            println!("{} entries, {total} B total — evict with `rsq cache gc`", entries.len());
+        }
+        "gc" => {
+            let max_age = args
+                .get("max-age")
+                .map(parse_duration_s)
+                .transpose()
+                .map_err(|e| anyhow!("--max-age: {e}"))?;
+            let max_bytes = args
+                .get("max-bytes")
+                .map(parse_bytes)
+                .transpose()
+                .map_err(|e| anyhow!("--max-bytes: {e}"))?;
+            if max_age.is_none() && max_bytes.is_none() {
+                bail!("rsq cache gc needs --max-age DURATION and/or --max-bytes SIZE");
+            }
+            let rep = cache.gc(max_age, max_bytes)?;
+            println!(
+                "gc {dir:?}: scanned {}, evicted {} ({} B), kept {} ({} B), \
+                 swept {} stale tmp file(s)",
+                rep.scanned,
+                rep.deleted,
+                rep.deleted_bytes,
+                rep.kept,
+                rep.kept_bytes,
+                rep.stale_tmp_deleted
+            );
+        }
+        other => bail!("unknown cache subcommand {other:?} — try `rsq cache ls` or `rsq cache gc`"),
+    }
+    Ok(())
+}
+
+fn fmt_age(age_s: f64) -> String {
+    if age_s >= 86400.0 {
+        format!("{:.1}d", age_s / 86400.0)
+    } else if age_s >= 3600.0 {
+        format!("{:.1}h", age_s / 3600.0)
+    } else if age_s >= 60.0 {
+        format!("{:.1}m", age_s / 60.0)
+    } else {
+        format!("{age_s:.0}s")
+    }
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -245,27 +513,44 @@ fn print_help() {
            eval             score a saved artifact or checkpoint\n\
                             (--artifact DIR | --model PATH; bit-identical\n\
                             to the pipeline that saved it)\n\
+           generate         greedy decode through the serving layer\n\
+                            (--artifact DIR decodes straight from the\n\
+                            packed artifact, host-side; --model PATH\n\
+                            serves a checkpoint dense)\n\
+           serve-bench      serving throughput sweep: batch x context x\n\
+                            jobs (x bits without --artifact); prints\n\
+                            tokens/s + packed-vs-f32 resident bytes\n\
+           cache            Hessian-cache maintenance: `rsq cache ls`,\n\
+                            `rsq cache gc --max-age 30d --max-bytes 500m`\n\
            train            train a checkpoint on the synthetic corpus\n\
            perf             performance profile\n\
            all              run every table + figure\n\
          \n\
          common flags:\n\
            --config NAME    model config (tiny|small|s1|s2|s3|ms1..3|e2e)\n\
+           --configs A,B    figure drivers: config list to sweep\n\
            --seeds N        seeded repetitions (default 3)\n\
            --steps N        training steps for the base checkpoint\n\
+           --train-seed N   init/training RNG seed (default 7)\n\
            --bits B         quantization bits (default 3)\n\
            --method M       rtn|gptq|quarot|sq|rsq|quarot-vq|rsq-vq\n\
            --strategy S     uniform|firstn:N|firstlastn:N|chunk:K/M|\n\
                             tokenfreq:R|actnorm:R|actdiff:R|tokensim:R|attncon:R\n\
            --calib-n/-t     calibration samples / sequence length\n\
+           --eval-t N       eval context length (default: the artifact's\n\
+                            recorded seq_len, else the config default)\n\
+           --eval-n N       held-out eval samples\n\
            --expansion M    dataset expansion factor (paper M=8)\n\
            --damp F         Hessian dampening fraction (GPTQ's lambda, default 0.01)\n\
            --rot-seed N     randomized-Hadamard rotation seed (decimal;\n\
                             default 20823)\n\
            --corpus C       wiki|c4|ptb|redpajama\n\
            --probe-n N      instances per downstream probe task\n\
+           --lc-n N         instances per long-context probe family\n\
+           --outlier-frac/--outlier-mag  injected-outlier spec\n\
            --jobs N|auto    scheduler worker threads (default 1; output is\n\
-                            bit-identical for every value)\n\
+                            bit-identical for every value; also drives\n\
+                            artifact unpack + the serve decode pool)\n\
            --sched M        staged|pipelined cross-layer executor (default\n\
                             pipelined; both modes bit-identical)\n\
            --hess-cache C   auto|off|DIR content-addressed Hessian cache\n\
@@ -274,6 +559,26 @@ fn print_help() {
            --save DIR       quantize: write a packed artifact directory\n\
                             (load with `rsq eval --artifact DIR`);\n\
                             train: write the checkpoint file\n\
-           --verbose        chatty pipeline logging"
+           --log-every N    train: loss-logging interval\n\
+           --iters N        perf: warm-run repetitions per method\n\
+           --bench-samples N  perf: samples per micro-bench\n\
+           --samples N      scores: sequences per importance series\n\
+           --verbose        chatty pipeline logging\n\
+         \n\
+         generate flags (unknown flags fail fast):\n\
+           --prompt T1,T2   explicit prompt token ids\n\
+           --prompt-len N   seeded random prompt length (default 4)\n\
+           --seed N         prompt RNG seed (default 0)\n\
+           --max-new N      tokens to generate (default 16)\n\
+         \n\
+         serve-bench flags:\n\
+           --batches A,B    batch sizes to sweep (default 1,4)\n\
+           --contexts A,B   total context lengths (default 32,64)\n\
+           --jobs-sweep A,B worker counts (default 1,4)\n\
+           --bits A,B       bit widths, synthetic model only (default 2,3,4,8)\n\
+         \n\
+         cache gc flags:\n\
+           --max-age D      evict entries older than D (90, 45m, 12h, 30d)\n\
+           --max-bytes S    then trim, oldest first, to S total (500m, 2g)"
     );
 }

@@ -16,13 +16,18 @@
 //! Content addressing means there is no invalidation protocol: any change
 //! to a key field produces a different key, and an entry is immutable once
 //! written. A corrupt or truncated entry is detected by its CRC and
-//! treated as a miss (recompute + rewrite), never an error.
+//! treated as a miss (recompute + rewrite), never an error. The same
+//! property makes **eviction** always safe — deleting an entry only costs
+//! a future recompute — which is what `rsq cache ls`/`rsq cache gc`
+//! (wrapping [`HessCache::entries`]/[`HessCache::gc`]) rely on to keep
+//! the directory bounded by age and total size.
 //!
 //! On a key hit the scheduler skips pass A, pass B, and the embedding
 //! sweep entirely and runs solve-only (`sched::run_layers_cached`) —
 //! `QuantReport::hess_cache_hits` and `rsq perf` surface the elimination.
 
 use std::path::PathBuf;
+use std::time::SystemTime;
 
 use anyhow::{Context, Result};
 
@@ -168,6 +173,37 @@ pub fn cache_key(
     h.finish()
 }
 
+/// One cache entry as seen by `ls`/`gc` — metadata only, the payload is
+/// never read for maintenance.
+#[derive(Clone, Debug)]
+pub struct CacheEntry {
+    pub path: PathBuf,
+    /// content address (hex), recovered from the file name
+    pub key_hex: String,
+    pub bytes: u64,
+    /// seconds since the entry was written
+    pub age_s: f64,
+}
+
+/// What one [`HessCache::gc`] sweep did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcReport {
+    pub scanned: usize,
+    pub deleted: usize,
+    pub deleted_bytes: u64,
+    pub kept: usize,
+    pub kept_bytes: u64,
+    /// orphaned `*.tmp.*` files from crashed writers, swept by age —
+    /// they are invisible to `ls`/the byte budget, so without this they
+    /// would leak forever
+    pub stale_tmp_deleted: usize,
+}
+
+/// A `*.tmp.*` file older than this is an orphan from a crashed writer
+/// (a live [`HessCache::store`] renames within the same call), safe for
+/// gc to delete.
+const STALE_TMP_S: f64 = 3600.0;
+
 /// On-disk store: one immutable `<key>.hess` file per content address.
 pub struct HessCache {
     dir: PathBuf,
@@ -199,6 +235,102 @@ impl HessCache {
                 None
             }
         }
+    }
+
+    /// List the cache's entries (`*.hess` files), oldest first. A missing
+    /// cache directory is an empty cache, not an error; non-entry files
+    /// (stray names, in-flight `*.tmp.*`) are skipped.
+    pub fn entries(&self) -> Result<Vec<CacheEntry>> {
+        let mut out = Vec::new();
+        let rd = match std::fs::read_dir(&self.dir) {
+            Ok(rd) => rd,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+            Err(e) => return Err(e).with_context(|| format!("read cache dir {:?}", self.dir)),
+        };
+        for dent in rd {
+            let dent = dent.with_context(|| format!("read cache dir {:?}", self.dir))?;
+            let path = dent.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            let Some(key_hex) = name.strip_suffix(".hess") else { continue };
+            let meta = dent.metadata().with_context(|| format!("stat {path:?}"))?;
+            let modified = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+            let age_s = SystemTime::now()
+                .duration_since(modified)
+                .map(|d| d.as_secs_f64())
+                .unwrap_or(0.0);
+            out.push(CacheEntry {
+                key_hex: key_hex.to_string(),
+                bytes: meta.len(),
+                age_s,
+                path,
+            });
+        }
+        // oldest first; path as the tie-break so the order is total
+        out.sort_by(|a, b| b.age_s.total_cmp(&a.age_s).then_with(|| a.path.cmp(&b.path)));
+        Ok(out)
+    }
+
+    /// Evict entries: everything older than `max_age_s`, then — oldest
+    /// first — whatever it takes to bring the directory under
+    /// `max_bytes`. Content addressing makes eviction always safe: a
+    /// deleted entry is simply a future miss, recomputed and rewritten
+    /// (DESIGN.md §9); `rsq cache gc` is the CLI face.
+    pub fn gc(&self, max_age_s: Option<f64>, max_bytes: Option<u64>) -> Result<GcReport> {
+        let entries = self.entries()?;
+        let mut kept_bytes: u64 = entries.iter().map(|e| e.bytes).sum();
+        let mut report = GcReport {
+            scanned: entries.len(),
+            deleted: 0,
+            deleted_bytes: 0,
+            kept: 0,
+            kept_bytes: 0,
+            stale_tmp_deleted: self.sweep_stale_tmps()?,
+        };
+        for e in &entries {
+            let too_old = max_age_s.is_some_and(|max| e.age_s >= max);
+            let too_big = max_bytes.is_some_and(|max| kept_bytes > max);
+            if too_old || too_big {
+                std::fs::remove_file(&e.path).with_context(|| format!("evict {:?}", e.path))?;
+                kept_bytes -= e.bytes;
+                report.deleted += 1;
+                report.deleted_bytes += e.bytes;
+            } else {
+                report.kept += 1;
+                report.kept_bytes += e.bytes;
+            }
+        }
+        Ok(report)
+    }
+
+    /// Delete `*.tmp.*` orphans older than [`STALE_TMP_S`] (a writer
+    /// that crashed between write and rename); young tmps are left alone
+    /// in case a live `store` is mid-rename.
+    fn sweep_stale_tmps(&self) -> Result<usize> {
+        let mut swept = 0;
+        let rd = match std::fs::read_dir(&self.dir) {
+            Ok(rd) => rd,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+            Err(e) => return Err(e).with_context(|| format!("read cache dir {:?}", self.dir)),
+        };
+        for dent in rd {
+            let dent = dent.with_context(|| format!("read cache dir {:?}", self.dir))?;
+            let path = dent.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            if !name.contains(".tmp.") {
+                continue;
+            }
+            let meta = dent.metadata().with_context(|| format!("stat {path:?}"))?;
+            let modified = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+            let age_s = SystemTime::now()
+                .duration_since(modified)
+                .map(|d| d.as_secs_f64())
+                .unwrap_or(0.0);
+            if age_s >= STALE_TMP_S {
+                std::fs::remove_file(&path).with_context(|| format!("sweep {path:?}"))?;
+                swept += 1;
+            }
+        }
+        Ok(swept)
     }
 
     /// Write an entry atomically (tmp + rename) so a concurrent reader —
@@ -415,5 +547,77 @@ mod tests {
     fn absent_entry_is_a_quiet_miss() {
         let cache = HessCache::new(tmpdir("absent"));
         assert!(cache.load(&CacheKey([1u8; 16]), 2, false).is_none());
+    }
+
+    #[test]
+    fn entries_lists_only_hess_files_missing_dir_is_empty() {
+        let missing = HessCache::new(std::env::temp_dir().join("rsq_hesscache_no_such_dir"));
+        assert!(missing.entries().unwrap().is_empty());
+
+        let dir = tmpdir("ls");
+        let cache = HessCache::new(&dir);
+        cache.store(&CacheKey([1u8; 16]), &[lh(0.0, false)]).unwrap();
+        cache.store(&CacheKey([2u8; 16]), &[lh(1.0, false)]).unwrap();
+        // stray files and in-flight tmps are not entries
+        std::fs::write(dir.join("README"), b"x").unwrap();
+        std::fs::write(dir.join(format!("{}.tmp.999", "03".repeat(16))), b"half").unwrap();
+        let es = cache.entries().unwrap();
+        assert_eq!(es.len(), 2);
+        for e in &es {
+            assert_eq!(e.key_hex.len(), 32);
+            assert!(e.bytes > 0);
+            assert!(e.age_s >= 0.0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_by_age_and_by_bytes() {
+        let dir = tmpdir("gc");
+        let cache = HessCache::new(&dir);
+        for b in 1u8..=3 {
+            cache.store(&CacheKey([b; 16]), &[lh(b as f32, false)]).unwrap();
+        }
+        let total: u64 = cache.entries().unwrap().iter().map(|e| e.bytes).sum();
+        let one = total / 3;
+
+        // byte budget of two entries: the oldest is evicted
+        let rep = cache.gc(None, Some(2 * one)).unwrap();
+        assert_eq!((rep.scanned, rep.deleted, rep.kept), (3, 1, 2));
+        assert_eq!(rep.deleted_bytes, one);
+        assert!(rep.kept_bytes <= 2 * one);
+        assert_eq!(cache.entries().unwrap().len(), 2);
+
+        // age 0 evicts everything that remains
+        let rep = cache.gc(Some(0.0), None).unwrap();
+        assert_eq!((rep.deleted, rep.kept), (2, 0));
+        assert!(cache.entries().unwrap().is_empty());
+
+        // gc of an empty cache is a no-op report
+        assert_eq!(cache.gc(Some(0.0), Some(0)).unwrap(), GcReport { ..Default::default() });
+
+        // an evicted entry is simply a future miss
+        assert!(cache.load(&CacheKey([1u8; 16]), 1, false).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_sweeps_stale_tmp_orphans_but_not_live_writers() {
+        let dir = tmpdir("tmps");
+        let cache = HessCache::new(&dir);
+        cache.store(&CacheKey([5u8; 16]), &[lh(0.0, false)]).unwrap();
+        let fresh = dir.join(format!("{}.tmp.123", "0a".repeat(16)));
+        let stale = dir.join(format!("{}.tmp.456", "0b".repeat(16)));
+        std::fs::write(&fresh, b"half").unwrap();
+        std::fs::write(&stale, b"half").unwrap();
+        let old = SystemTime::now() - std::time::Duration::from_secs(2 * 3600);
+        let f = std::fs::File::options().write(true).open(&stale).unwrap();
+        f.set_times(std::fs::FileTimes::new().set_modified(old)).unwrap();
+        let rep = cache.gc(None, Some(u64::MAX)).unwrap();
+        assert_eq!(rep.stale_tmp_deleted, 1);
+        assert!(!stale.exists(), "crashed-writer orphan swept");
+        assert!(fresh.exists(), "young tmp left for its (possibly live) writer");
+        assert_eq!((rep.kept, rep.deleted), (1, 0), "entries untouched");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -325,9 +325,20 @@ pub fn encode_blob(t: &Tensor, packed: Option<&PackedRows>) -> Vec<u8> {
     }
 }
 
-/// Decode one blob back to its tensor. `entry.check()`-validated lengths
+/// A decoded blob in its **storage domain**: packed weights stay packed.
+/// The serving layer (`serve::PackedModel`, DESIGN.md §11) consumes this
+/// directly so decode-time memory matches the on-disk packing; the
+/// `ParamSet` loader unpacks each `Packed` arm on the way out.
+#[derive(Clone, Debug)]
+pub enum Blob {
+    Raw(Tensor),
+    Packed(PackedRows),
+}
+
+/// Decode one blob without leaving the storage domain (packed weights are
+/// validated but **not** dequantized). `entry.check()`-validated lengths
 /// are re-checked here so a decoder on untrusted bytes stays total.
-pub fn decode_blob(entry: &TensorEntry, bytes: &[u8]) -> Result<Tensor> {
+pub fn decode_blob_any(entry: &TensorEntry, bytes: &[u8]) -> Result<Blob> {
     let want = entry
         .expected_len()
         .with_context(|| format!("tensor {}: implausible shape {:?}", entry.name, entry.shape))?;
@@ -342,7 +353,7 @@ pub fn decode_blob(entry: &TensorEntry, bytes: &[u8]) -> Result<Tensor> {
         b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
     };
     match entry.codec {
-        Codec::Raw => Ok(Tensor::from_vec(&entry.shape, f32s(bytes))),
+        Codec::Raw => Ok(Blob::Raw(Tensor::from_vec(&entry.shape, f32s(bytes)))),
         Codec::Packed { bits } => {
             let (rows, cols) = (entry.shape[0], entry.shape[1]);
             let scale = f32s(&bytes[..rows * 4]);
@@ -356,16 +367,28 @@ pub fn decode_blob(entry: &TensorEntry, bytes: &[u8]) -> Result<Tensor> {
                     entry.name
                 );
             }
-            let p = PackedRows {
+            Ok(Blob::Packed(PackedRows {
                 bits,
                 rows,
                 cols,
                 grid: RowGrid { scale, zero },
                 data: bytes[rows * 8..].to_vec(),
-            };
-            Ok(p.unpack())
+            }))
         }
     }
+}
+
+/// Decode one blob back to its f32 tensor, optionally pool-parallel over
+/// packed rows (bit-identical at every jobs count — `PackedRows::unpack`).
+pub fn decode_blob(
+    entry: &TensorEntry,
+    bytes: &[u8],
+    pool: Option<&crate::util::Pool>,
+) -> Result<Tensor> {
+    Ok(match decode_blob_any(entry, bytes)? {
+        Blob::Raw(t) => t,
+        Blob::Packed(p) => p.unpack(pool),
+    })
 }
 
 #[cfg(test)]
@@ -502,7 +525,7 @@ mod tests {
             crc: 0,
         };
         let bytes = encode_blob(&t, None);
-        assert_eq!(decode_blob(&entry, &bytes).unwrap().data, t.data);
+        assert_eq!(decode_blob(&entry, &bytes, None).unwrap().data, t.data);
 
         let grid = RowGrid { scale: vec![0.5, 0.25], zero: vec![2.0, 0.0] };
         let q = Tensor::from_vec(&[2, 3], vec![0.5, -1.0, 0.0, 0.25, 0.0, 0.75]);
@@ -517,9 +540,19 @@ mod tests {
         };
         assert_eq!(entry.expected_len(), Some(18)); // 2 rows * (8 grid + 1 data)
         let bytes = encode_blob(&q, Some(&p));
-        let back = decode_blob(&entry, &bytes).unwrap();
+        let back = decode_blob(&entry, &bytes, None).unwrap();
         for (a, b) in back.data.iter().zip(&q.data) {
             assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // the storage-domain decoder hands the packed rows back verbatim
+        match decode_blob_any(&entry, &bytes).unwrap() {
+            Blob::Packed(p2) => {
+                assert_eq!(p2, p);
+                for (a, b) in p2.unpack(None).data.iter().zip(&q.data) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            Blob::Raw(_) => panic!("packed entry decoded to a raw blob"),
         }
     }
 
@@ -535,7 +568,7 @@ mod tests {
             crc: 0,
         };
         let bytes = encode_blob(&t, None);
-        let err = decode_blob(&entry, &bytes[..10]).unwrap_err().to_string();
+        let err = decode_blob(&entry, &bytes[..10], None).unwrap_err().to_string();
         assert!(err.contains("truncated"), "{err}");
     }
 }

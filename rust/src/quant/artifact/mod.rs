@@ -35,7 +35,9 @@ use crate::util::hash::crc32;
 
 use super::pipeline::{QuantOptions, QuantReport};
 
-pub use format::{ArtifactManifest, Codec, TensorEntry, ARTIFACT_VERSION, BLOBS_FILE, MANIFEST_FILE};
+pub use format::{
+    ArtifactManifest, Blob, Codec, TensorEntry, ARTIFACT_VERSION, BLOBS_FILE, MANIFEST_FILE,
+};
 
 /// Write the quantized `ParamSet` as an artifact directory. `report`
 /// supplies the per-weight grids captured by the solve phase (and the
@@ -128,10 +130,9 @@ pub fn save(
     Ok(manifest)
 }
 
-/// Load an artifact directory back into a `ParamSet`, verifying total
-/// length and every per-blob CRC. Errors are actionable; corrupt input
-/// can never produce a silently-wrong model.
-pub fn load(dir: &Path) -> Result<(ParamSet, ArtifactManifest)> {
+/// Read + parse the manifest and verify `weights.bin` against it (total
+/// length now, per-blob CRCs as the caller walks the entries).
+fn read_verified(dir: &Path) -> Result<(ArtifactManifest, Vec<u8>)> {
     let man_path = dir.join(MANIFEST_FILE);
     let text = std::fs::read_to_string(&man_path).with_context(|| {
         format!(
@@ -151,19 +152,58 @@ pub fn load(dir: &Path) -> Result<(ParamSet, ArtifactManifest)> {
             manifest.total_len
         );
     }
+    Ok((manifest, blobs))
+}
+
+fn verified_span<'b>(entry: &TensorEntry, blobs: &'b [u8]) -> Result<&'b [u8]> {
+    let span = &blobs[entry.offset as usize..(entry.offset + entry.len) as usize];
+    if crc32(span) != entry.crc {
+        bail!(
+            "checksum mismatch in tensor {} — artifact corrupt; re-run \
+             `rsq quantize --save`",
+            entry.name
+        );
+    }
+    Ok(span)
+}
+
+/// Load an artifact directory back into a `ParamSet`, verifying total
+/// length and every per-blob CRC. Errors are actionable; corrupt input
+/// can never produce a silently-wrong model.
+pub fn load(dir: &Path) -> Result<(ParamSet, ArtifactManifest)> {
+    load_with(dir, None)
+}
+
+/// [`load`] with a worker pool: each packed tensor unpacks pool-parallel
+/// over its row blocks (bit-identical to the serial decode at every jobs
+/// count — `PackedRows::unpack`), so a multi-layer artifact no longer
+/// dequantizes one tensor row at a time on one thread.
+pub fn load_with(
+    dir: &Path,
+    pool: Option<&crate::util::Pool>,
+) -> Result<(ParamSet, ArtifactManifest)> {
+    let (manifest, blobs) = read_verified(dir)?;
     let mut tensors = Vec::with_capacity(manifest.tensors.len());
     for entry in &manifest.tensors {
-        let span = &blobs[entry.offset as usize..(entry.offset + entry.len) as usize];
-        if crc32(span) != entry.crc {
-            bail!(
-                "checksum mismatch in tensor {} — artifact corrupt; re-run \
-                 `rsq quantize --save`",
-                entry.name
-            );
-        }
-        tensors.push(format::decode_blob(entry, span)?);
+        tensors.push(format::decode_blob(entry, verified_span(entry, &blobs)?, pool)?);
     }
     Ok((ParamSet { cfg: manifest.config.clone(), tensors }, manifest))
+}
+
+/// Load an artifact **without leaving the storage domain**: packed layer
+/// weights come back as [`tensor::pack::PackedRows`] for the serving
+/// layer's fused dequantize kernels (DESIGN.md §11), raw tensors as f32.
+/// Same verification (total length + per-blob CRCs) and parameter order
+/// as [`load`]; `serve::PackedModel::load` is the consumer.
+///
+/// [`tensor::pack::PackedRows`]: crate::tensor::pack::PackedRows
+pub fn load_packed(dir: &Path) -> Result<(Vec<format::Blob>, ArtifactManifest)> {
+    let (manifest, blobs) = read_verified(dir)?;
+    let mut out = Vec::with_capacity(manifest.tensors.len());
+    for entry in &manifest.tensors {
+        out.push(format::decode_blob_any(entry, verified_span(entry, &blobs)?)?);
+    }
+    Ok((out, manifest))
 }
 
 /// Fail-fast check for `rsq quantize --save DIR`, run **before** training
@@ -275,6 +315,38 @@ mod tests {
             }
             std::fs::remove_dir_all(&dir).ok();
         }
+    }
+
+    #[test]
+    fn load_with_pool_and_load_packed_are_bit_identical() {
+        let (p, report, opts) = quantized_fixture(3);
+        let dir = tmpdir("pool");
+        save(&dir, &p, &report, &opts).unwrap();
+        let (serial, _) = load(&dir).unwrap();
+        let pool = crate::util::Pool::new(4);
+        let (pooled, _) = load_with(&dir, Some(&pool)).unwrap();
+        for (a, b) in serial.tensors.iter().zip(&pooled.tensors) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // storage-domain load: 14 packed layer weights whose unpack equals
+        // the ParamSet load bitwise, everything else raw
+        let (blobs, manifest) = load_packed(&dir).unwrap();
+        let packed = blobs.iter().filter(|b| matches!(b, Blob::Packed(_))).count();
+        assert_eq!(packed, 14);
+        assert_eq!(blobs.len(), manifest.tensors.len());
+        for (blob, t) in blobs.iter().zip(&serial.tensors) {
+            let dense = match blob {
+                Blob::Raw(t) => t.clone(),
+                Blob::Packed(p) => p.unpack(None),
+            };
+            assert_eq!(dense.shape, t.shape);
+            for (x, y) in dense.data.iter().zip(&t.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

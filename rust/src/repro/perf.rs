@@ -1,8 +1,9 @@
 //! Performance profiling driver (`rsq perf`) — the L3 side of the perf
 //! deliverable. Times every stage of the RSQ pipeline, sweeps the parallel
 //! scheduler's `--jobs` values, sweeps the host kernel layer (tiled GEMM
-//! sizes × jobs, serial-vs-pooled speedup — DESIGN.md §10), prints the
-//! engine's per-module breakdown, and reports end-to-end throughput.
+//! sizes × jobs, serial-vs-pooled speedup — DESIGN.md §10), measures the
+//! serving layer's packed-domain decode tokens/s (DESIGN.md §11), prints
+//! the engine's per-module breakdown, and reports end-to-end throughput.
 //! Results feed DESIGN.md §Perf.
 
 use std::time::Instant;
@@ -221,6 +222,59 @@ pub fn perf(args: &Args) -> Result<()> {
         .set("cross_sched_hits", cross.hess_cache_hits)
         .set("key", warm.hess_key.as_str());
 
+    // Serving layer (DESIGN.md §11): packed-domain host decode from the
+    // same trained params, RTN-packed at 3 bits host-side. Reports the
+    // end-to-end tokens/s number the ROADMAP's serving goal asks for,
+    // plus the packed-vs-f32 resident-bytes ratio the fused kernels
+    // preserve at decode time.
+    println!("\n--- serve layer (packed-domain host decode, tensor/kernels/gemv) ---");
+    let serve_model = crate::serve::PackedModel::from_paramset_rtn(&ctx.params, 3)?;
+    let (packed_b, dense_b) = serve_model.resident_bytes();
+    println!(
+        "resident bytes: {packed_b} packed vs {dense_b} f32 ({:.2}x smaller, {} packed weights)",
+        dense_b as f64 / packed_b as f64,
+        serve_model.packed_weights()
+    );
+    let mut serve_cells = Vec::new();
+    let serve_ctx = serve_model.cfg.max_seq.min(32);
+    let mut sjobs = vec![1usize, 4];
+    sjobs.push(args.jobs());
+    sjobs.sort_unstable();
+    sjobs.dedup();
+    for batch in [1usize, 4] {
+        for &jobs in &sjobs {
+            let pool = Pool::new(jobs);
+            let mut prng = Pcg::new(17);
+            let requests: Vec<crate::serve::ServeRequest> = (0..batch as u64)
+                .map(|id| {
+                    let prompt =
+                        (0..4).map(|_| prng.below(serve_model.cfg.vocab) as i32).collect();
+                    crate::serve::ServeRequest::new(id, prompt, serve_ctx.saturating_sub(4).max(1))
+                })
+                .collect();
+            let opts = crate::serve::ServeOptions { max_batch: batch, ..Default::default() };
+            let rep = crate::serve::serve(&serve_model, &pool, requests, &opts)?;
+            println!(
+                "serve batch={batch:<3} jobs={jobs:<3} ctx={serve_ctx:<4} {:>9.1} tok/s \
+                 ({} tokens, {} steps)",
+                rep.tokens_per_s, rep.generated_tokens, rep.steps
+            );
+            serve_cells.push(
+                Json::obj()
+                    .set("batch", batch)
+                    .set("jobs", jobs)
+                    .set("ctx", serve_ctx)
+                    .set("tokens_per_s", rep.tokens_per_s)
+                    .set("tokens", rep.generated_tokens),
+            );
+        }
+    }
+    let serve_record = Json::obj()
+        .set("packed_bytes", packed_b)
+        .set("dense_bytes", dense_b)
+        .set("ratio", dense_b as f64 / packed_b as f64)
+        .set("cells", Json::Arr(serve_cells));
+
     // per-stage micro benches through the engine
     println!("\n--- per-module timings (engine) ---");
     let p_lit: Vec<xla::Literal> = ctx
@@ -283,6 +337,7 @@ pub fn perf(args: &Args) -> Result<()> {
             .set("methods", Json::Arr(results))
             .set("jobs_sweep", Json::Arr(jobs_results))
             .set("kernel_sweep", Json::Arr(kernel_results))
-            .set("hess_cache", cache_record),
+            .set("hess_cache", cache_record)
+            .set("serve", serve_record),
     )
 }

@@ -1,0 +1,392 @@
+//! Continuous-batching request scheduler (DESIGN.md §11).
+//!
+//! The serving loop advances every in-flight sequence by **one position
+//! per engine step** — a sequence still consuming its prompt and one
+//! already generating ride the same step, and no sequence ever computes a
+//! padding position (padded-free batching). Sequences are admitted the
+//! moment a batch slot *and* their full KV-cache reservation are
+//! available, and retired (pages returned to the [`PagePool`]) the moment
+//! they finish, so new requests join mid-flight instead of waiting for
+//! the whole batch to drain.
+//!
+//! Per-step work fans out over `util::Pool`, one task per active
+//! sequence; sequences are fully independent (own decoder, own KV pages),
+//! so the generated tokens are **deterministic** — invariant to `--jobs`,
+//! to `max_batch`, and to which other requests happen to be in flight
+//! ([`serve`]'s output equals per-request solo [`greedy_decode`];
+//! `tests/prop_serve.rs` pins it). Only the wall-clock fields of
+//! [`ServeReport`] vary between runs.
+//!
+//! Deadlines are best-effort admission-relative wall-clock budgets: a
+//! sequence past its deadline stops generating at its next step and is
+//! retired with `deadline_missed` set, surfaced per request in the
+//! report.
+//!
+//! [`PagePool`]: super::kv::PagePool
+//! [`greedy_decode`]: super::model::greedy_decode
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::kv::PagePool;
+use super::model::{Decoder, PackedModel};
+use crate::eval::argmax;
+use crate::util::Pool;
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    /// caller-chosen id, echoed in [`RequestStats`]
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// tokens to generate (greedy argmax)
+    pub max_new: usize,
+    /// optional wall-clock budget in seconds, measured from admission
+    pub deadline_s: Option<f64>,
+}
+
+impl ServeRequest {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> ServeRequest {
+        ServeRequest { id, prompt, max_new, deadline_s: None }
+    }
+}
+
+/// Scheduler knobs.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// sequences decoded concurrently (batch slots)
+    pub max_batch: usize,
+    /// KV page size in positions (0 = `kv::PAGE_POSITIONS`)
+    pub page: usize,
+    /// KV page-pool capacity in pages (0 = auto: enough for `max_batch`
+    /// worst-case sequences)
+    pub pages: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { max_batch: 4, page: 0, pages: 0 }
+    }
+}
+
+/// Per-request outcome.
+#[derive(Clone, Debug)]
+pub struct RequestStats {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// greedy-decoded tokens (deterministic; may be short of `max_new`
+    /// on a missed deadline or the model's context limit)
+    pub generated: Vec<i32>,
+    pub deadline_missed: bool,
+    /// engine step at which the request entered / left the batch
+    pub admitted_step: usize,
+    pub finished_step: usize,
+    /// admission → first generated token, seconds
+    pub ttft_s: Option<f64>,
+    /// admission → retire, seconds
+    pub wall_s: f64,
+}
+
+/// Aggregate serving outcome.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// per-request stats, sorted by request id
+    pub requests: Vec<RequestStats>,
+    /// engine steps executed (each advances every active sequence once)
+    pub steps: usize,
+    pub peak_active: usize,
+    pub generated_tokens: usize,
+    pub wall_s: f64,
+    pub tokens_per_s: f64,
+}
+
+/// One in-flight sequence.
+struct Active<'m> {
+    req: ServeRequest,
+    decoder: Decoder<'m>,
+    consumed: usize,
+    generated: Vec<i32>,
+    admitted_at: Instant,
+    admitted_step: usize,
+    ttft_s: Option<f64>,
+    deadline_missed: bool,
+    done: bool,
+}
+
+impl<'m> Active<'m> {
+    /// Advance one position: consume the next prompt token or the last
+    /// generated one, and (once past the prompt) greedily emit the next
+    /// token. Deadline is checked before spending any compute.
+    fn advance(&mut self, pool: Option<&Pool>) {
+        if self.done {
+            return;
+        }
+        if let Some(deadline) = self.req.deadline_s {
+            if self.admitted_at.elapsed().as_secs_f64() > deadline {
+                self.deadline_missed = true;
+                self.done = true;
+                return;
+            }
+        }
+        let tok = if self.consumed < self.req.prompt.len() {
+            self.req.prompt[self.consumed]
+        } else {
+            *self.generated.last().expect("past the prompt, so a token was generated")
+        };
+        // logits are only needed once this position's output token will
+        // actually be kept; earlier prompt positions prefill the KV
+        // cache without paying the head projection
+        let wants_token = self.consumed + 1 >= self.req.prompt.len()
+            && self.generated.len() < self.req.max_new;
+        if wants_token {
+            let logp = self.decoder.step(tok, pool);
+            let next = argmax(&logp) as i32;
+            self.generated.push(next);
+            if self.ttft_s.is_none() {
+                self.ttft_s = Some(self.admitted_at.elapsed().as_secs_f64());
+            }
+        } else {
+            self.decoder.prefill(tok, pool);
+        }
+        self.consumed += 1;
+        if self.generated.len() >= self.req.max_new
+            || self.decoder.positions() >= self.decoder.capacity()
+        {
+            self.done = true;
+        }
+    }
+
+    fn finish(self, finished_step: usize) -> (RequestStats, Decoder<'m>) {
+        let stats = RequestStats {
+            id: self.req.id,
+            prompt_len: self.req.prompt.len(),
+            generated: self.generated,
+            deadline_missed: self.deadline_missed,
+            admitted_step: self.admitted_step,
+            finished_step,
+            ttft_s: self.ttft_s,
+            wall_s: self.admitted_at.elapsed().as_secs_f64(),
+        };
+        (stats, self.decoder)
+    }
+}
+
+/// Run `requests` to completion through the continuous-batching loop.
+/// Requests are admitted in the given order (FIFO) as slots and KV pages
+/// free up.
+pub fn serve(
+    model: &PackedModel,
+    pool: &Pool,
+    requests: Vec<ServeRequest>,
+    opts: &ServeOptions,
+) -> Result<ServeReport> {
+    let cfg = &model.cfg;
+    if opts.max_batch == 0 {
+        bail!("serve needs max_batch >= 1");
+    }
+    for r in &requests {
+        if r.prompt.is_empty() {
+            bail!("request {}: empty prompt", r.id);
+        }
+        if r.prompt.len() > cfg.max_seq {
+            bail!(
+                "request {}: prompt length {} exceeds max_seq {}",
+                r.id,
+                r.prompt.len(),
+                cfg.max_seq
+            );
+        }
+        if let Some(&t) = r.prompt.iter().find(|&&t| !(0..cfg.vocab as i32).contains(&t)) {
+            bail!("request {}: token {t} outside vocab {}", r.id, cfg.vocab);
+        }
+    }
+    // positions a request reserves for its whole lifetime
+    let worst = |r: &ServeRequest| (r.prompt.len() + r.max_new).min(cfg.max_seq);
+    let probe = PagePool::new(cfg.layers, cfg.d, opts.page, 0);
+    let max_pages = requests.iter().map(|r| probe.pages_for(worst(r))).max().unwrap_or(0);
+    let pages = if opts.pages == 0 { opts.max_batch * max_pages } else { opts.pages };
+    if pages < max_pages {
+        bail!(
+            "page pool of {pages} pages cannot fit the largest request ({max_pages} pages) — \
+             raise ServeOptions::pages"
+        );
+    }
+    let page_pool = PagePool::new(cfg.layers, cfg.d, opts.page, pages);
+
+    let t0 = Instant::now();
+    let mut pending: VecDeque<ServeRequest> = requests.into();
+    let mut active: Vec<Mutex<Active>> = Vec::new();
+    let mut done: Vec<RequestStats> = Vec::new();
+    let mut steps = 0usize;
+    let mut peak_active = 0usize;
+    while !pending.is_empty() || !active.is_empty() {
+        // admit while a slot and a full KV reservation are available
+        while active.len() < opts.max_batch {
+            let Some(front) = pending.front() else { break };
+            let Some(kv) = page_pool.try_alloc(worst(front)) else { break };
+            let req = pending.pop_front().expect("front() was Some");
+            active.push(Mutex::new(Active {
+                decoder: Decoder::new(model, kv),
+                consumed: 0,
+                generated: Vec::with_capacity(req.max_new),
+                admitted_at: Instant::now(),
+                admitted_step: steps,
+                ttft_s: None,
+                deadline_missed: false,
+                done: false,
+                req,
+            }));
+        }
+        peak_active = peak_active.max(active.len());
+        // one position per active sequence; the pool fans out across
+        // sequences — with a single sequence it accelerates the
+        // projections inside the step instead
+        if active.len() > 1 {
+            pool.run(active.len(), |i| active[i].lock().unwrap().advance(None));
+        } else if let Some(only) = active.first() {
+            only.lock().unwrap().advance(Some(pool));
+        }
+        steps += 1;
+        // retire finished sequences, returning their pages
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].get_mut().unwrap().done {
+                let a = active.swap_remove(i).into_inner().unwrap();
+                let (stats, decoder) = a.finish(steps);
+                page_pool.release(decoder.into_kv());
+                done.push(stats);
+            } else {
+                i += 1;
+            }
+        }
+    }
+    done.sort_by_key(|r| r.id);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let generated_tokens: usize = done.iter().map(|r| r.generated.len()).sum();
+    Ok(ServeReport {
+        steps,
+        peak_active,
+        generated_tokens,
+        wall_s,
+        tokens_per_s: generated_tokens as f64 / wall_s.max(1e-12),
+        requests: done,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::ParamSet;
+    use crate::serve::model::greedy_decode;
+    use crate::serve::PackedModel;
+
+    fn model() -> PackedModel {
+        let cfg = ModelConfig {
+            name: "serve-batch-test".into(),
+            d: 16,
+            layers: 2,
+            heads: 2,
+            ff: 32,
+            vocab: 32,
+            max_seq: 32,
+            batch: 2,
+            seq_lens: vec![8, 32],
+            ldlq_k: 64,
+            ldlq_g: 4,
+        };
+        PackedModel::from_paramset_rtn(&ParamSet::init(&cfg, 13), 4).unwrap()
+    }
+
+    fn reqs(n: u64) -> Vec<ServeRequest> {
+        (0..n)
+            .map(|i| ServeRequest::new(i, vec![(i as i32) % 8 + 1, 2, 5], 6 + (i as usize % 3)))
+            .collect()
+    }
+
+    #[test]
+    fn batched_output_equals_solo_decode() {
+        let m = model();
+        let solo: Vec<Vec<i32>> = reqs(5)
+            .into_iter()
+            .map(|r| greedy_decode(&m, &r.prompt, r.max_new, None).unwrap())
+            .collect();
+        for max_batch in [1usize, 2, 4] {
+            for jobs in [1usize, 4] {
+                let pool = Pool::new(jobs);
+                let opts = ServeOptions { max_batch, ..Default::default() };
+                let rep = serve(&m, &pool, reqs(5), &opts).unwrap();
+                assert_eq!(rep.requests.len(), 5);
+                assert!(rep.peak_active <= max_batch);
+                for (r, want) in rep.requests.iter().zip(&solo) {
+                    assert_eq!(&r.generated, want, "id={} batch={max_batch} jobs={jobs}", r.id);
+                    assert!(!r.deadline_missed);
+                    assert!(r.finished_step > r.admitted_step);
+                }
+                assert_eq!(
+                    rep.generated_tokens,
+                    solo.iter().map(Vec::len).sum::<usize>(),
+                    "batch={max_batch}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_page_pool_still_completes_all_requests() {
+        let m = model();
+        let pool = Pool::new(2);
+        // pool sized for exactly one worst-case request: sequences must
+        // admit one at a time as pages are returned
+        let probe = super::PagePool::new(m.cfg.layers, m.cfg.d, 0, 0);
+        let pages = probe.pages_for(3 + 8);
+        let opts = ServeOptions { max_batch: 4, page: 0, pages };
+        let rep = serve(&m, &pool, reqs(4), &opts).unwrap();
+        assert_eq!(rep.requests.len(), 4);
+        assert_eq!(rep.peak_active, 1, "one reservation at a time");
+        let solo = greedy_decode(&m, &[1, 2, 5], 6, None).unwrap();
+        assert_eq!(rep.requests[0].generated, solo);
+    }
+
+    #[test]
+    fn zero_deadline_is_missed_without_generating() {
+        let m = model();
+        let pool = Pool::new(1);
+        let mut r = ServeRequest::new(7, vec![1, 2], 5);
+        r.deadline_s = Some(0.0);
+        let rep = serve(&m, &pool, vec![r], &ServeOptions::default()).unwrap();
+        assert!(rep.requests[0].deadline_missed);
+        assert!(rep.requests[0].generated.is_empty());
+        assert_eq!(rep.requests[0].ttft_s, None);
+    }
+
+    #[test]
+    fn invalid_requests_fail_fast() {
+        let m = model();
+        let pool = Pool::new(1);
+        let empty = ServeRequest::new(0, vec![], 4);
+        assert!(serve(&m, &pool, vec![empty], &ServeOptions::default()).is_err());
+        let oov = ServeRequest::new(1, vec![999], 4);
+        let err = serve(&m, &pool, vec![oov], &ServeOptions::default()).unwrap_err().to_string();
+        assert!(err.contains("outside vocab"), "{err}");
+        let long = ServeRequest::new(2, vec![1; 33], 1);
+        assert!(serve(&m, &pool, vec![long], &ServeOptions::default()).is_err());
+        let starved = ServeOptions { pages: 1, ..Default::default() };
+        let err = serve(&m, &pool, reqs(1), &starved).unwrap_err().to_string();
+        assert!(err.contains("page pool"), "{err}");
+    }
+
+    #[test]
+    fn max_new_zero_retires_immediately() {
+        let m = model();
+        let pool = Pool::new(1);
+        let reqs = vec![ServeRequest::new(0, vec![1, 2, 3], 0)];
+        let rep = serve(&m, &pool, reqs, &ServeOptions::default()).unwrap();
+        assert!(rep.requests[0].generated.is_empty());
+        assert!(!rep.requests[0].deadline_missed);
+        assert_eq!(rep.steps, 1, "a zero-token request retires on its first step");
+    }
+}

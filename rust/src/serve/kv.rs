@@ -1,0 +1,234 @@
+//! Paged KV cache (DESIGN.md §11).
+//!
+//! Decoding token t attends over every previous position's per-layer
+//! key/value projections. Recomputing them each step is the full-context
+//! O(t²·d)-per-token recompute the eval modules do; caching them makes a
+//! decode step O(t·d). Layout:
+//!
+//! - a [`PagePool`] preallocates a fixed number of pages up front; one
+//!   page holds [`PAGE_POSITIONS`] positions of **one layer's** k and v
+//!   rows (`[page, d]` row-major each), so pages are interchangeable
+//!   across layers and sequences;
+//! - a [`SeqKv`] is one sequence's cache: per layer, a page table
+//!   reserved **at admission** for the sequence's whole worst case
+//!   (prompt + max_new positions, capped at the model's `max_seq`), so a
+//!   mid-flight decode step can never fail an allocation;
+//! - retiring a sequence returns its pages ([`PagePool::release`]),
+//!   which is what lets the batch scheduler (`serve::batch`) admit new
+//!   requests mid-flight under a bounded memory budget.
+//!
+//! **Determinism.** Page identity carries no information — a sequence's
+//! contents are addressed purely through its own page table — so which
+//! physical pages a sequence happens to receive (an artifact of admission
+//! order) cannot affect any decoded value.
+
+use std::sync::Mutex;
+
+/// Positions per page: small enough that short sequences waste little
+/// capacity, large enough that page tables stay tiny.
+pub const PAGE_POSITIONS: usize = 16;
+
+/// One page: `page` positions of one layer's k and v rows.
+#[derive(Debug)]
+struct KvPage {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvPage {
+    fn new(page: usize, d: usize) -> KvPage {
+        KvPage { k: vec![0.0; page * d], v: vec![0.0; page * d] }
+    }
+}
+
+/// Preallocated, shared page arena. Cheap to query, `Mutex`-guarded for
+/// the batch scheduler's concurrent retire/admit bookkeeping.
+pub struct PagePool {
+    layers: usize,
+    d: usize,
+    page: usize,
+    total: usize,
+    free: Mutex<Vec<KvPage>>,
+}
+
+impl PagePool {
+    /// Preallocate `pages` pages for a `layers`-layer model with model
+    /// dim `d`, `page` positions per page (0 = [`PAGE_POSITIONS`]).
+    pub fn new(layers: usize, d: usize, page: usize, pages: usize) -> PagePool {
+        let page = if page == 0 { PAGE_POSITIONS } else { page };
+        let free = (0..pages).map(|_| KvPage::new(page, d)).collect();
+        PagePool { layers, d, page, total: pages, free: Mutex::new(free) }
+    }
+
+    /// Positions one page holds.
+    pub fn page_positions(&self) -> usize {
+        self.page
+    }
+
+    /// Pages a sequence of `positions` total positions reserves (its
+    /// worst case, across all layers). Matches [`PagePool::try_alloc`]
+    /// exactly — including the one-page floor an empty reservation pays.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        self.layers * positions.div_ceil(self.page).max(1)
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    /// Reserve a sequence's full worst case up front; `None` when the
+    /// pool cannot cover it (the scheduler then defers admission until a
+    /// retire returns pages).
+    pub fn try_alloc(&self, positions: usize) -> Option<SeqKv> {
+        let per_layer = positions.div_ceil(self.page).max(1);
+        let needed = self.layers * per_layer;
+        let mut free = self.free.lock().unwrap();
+        if free.len() < needed {
+            return None;
+        }
+        let mut layers = Vec::with_capacity(self.layers);
+        for _ in 0..self.layers {
+            layers.push(free.split_off(free.len() - per_layer));
+        }
+        Some(SeqKv { d: self.d, page: self.page, layers })
+    }
+
+    /// Return a retired sequence's pages to the arena.
+    pub fn release(&self, seq: SeqKv) {
+        let mut free = self.free.lock().unwrap();
+        for pages in seq.layers {
+            free.extend(pages);
+        }
+    }
+}
+
+/// One sequence's KV cache: a per-layer page table. Positions are written
+/// once (during that position's decode step) and read by every later
+/// step's attention.
+pub struct SeqKv {
+    d: usize,
+    page: usize,
+    layers: Vec<Vec<KvPage>>,
+}
+
+impl SeqKv {
+    /// Pool-free cache for single-sequence decoding (`rsq generate`,
+    /// tests): owns exactly the pages `capacity` positions need.
+    pub fn standalone(layers: usize, d: usize, capacity: usize) -> SeqKv {
+        let page = PAGE_POSITIONS;
+        let per_layer = capacity.div_ceil(page).max(1);
+        let layers = (0..layers)
+            .map(|_| (0..per_layer).map(|_| KvPage::new(page, d)).collect())
+            .collect();
+        SeqKv { d, page, layers }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Positions this cache can hold (page-granular, so it may exceed the
+    /// reservation that sized it).
+    pub fn capacity(&self) -> usize {
+        self.layers.first().map_or(0, |pages| pages.len() * self.page)
+    }
+
+    /// Store position `pos`'s k and v rows for `layer`.
+    pub fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        assert!(pos < self.capacity(), "kv write past capacity: {pos}");
+        assert_eq!(k.len(), self.d);
+        assert_eq!(v.len(), self.d);
+        let (pi, off) = (pos / self.page, (pos % self.page) * self.d);
+        let p = &mut self.layers[layer][pi];
+        p.k[off..off + self.d].copy_from_slice(k);
+        p.v[off..off + self.d].copy_from_slice(v);
+    }
+
+    /// Position `pos`'s key row for `layer`.
+    pub fn k_at(&self, layer: usize, pos: usize) -> &[f32] {
+        let (pi, off) = (pos / self.page, (pos % self.page) * self.d);
+        &self.layers[layer][pi].k[off..off + self.d]
+    }
+
+    /// Position `pos`'s value row for `layer`.
+    pub fn v_at(&self, layer: usize, pos: usize) -> &[f32] {
+        let (pi, off) = (pos / self.page, (pos % self.page) * self.d);
+        &self.layers[layer][pi].v[off..off + self.d]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_round_trip_across_pages() {
+        let mut kv = SeqKv::standalone(2, 3, 40);
+        assert_eq!(kv.capacity(), 48, "page-granular capacity");
+        assert_eq!(kv.num_layers(), 2);
+        for pos in 0..40 {
+            for layer in 0..2 {
+                let base = (layer * 100 + pos) as f32;
+                let k = [base, base + 1.0, base + 2.0];
+                let v = [-base, -base - 1.0, -base - 2.0];
+                kv.write(layer, pos, &k, &v);
+            }
+        }
+        // reads survive later writes (incl. across the page boundary at 16)
+        for pos in [0usize, 15, 16, 17, 31, 32, 39] {
+            for layer in 0..2 {
+                let base = (layer * 100 + pos) as f32;
+                assert_eq!(kv.k_at(layer, pos), &[base, base + 1.0, base + 2.0]);
+                assert_eq!(kv.v_at(layer, pos), &[-base, -base - 1.0, -base - 2.0]);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "kv write past capacity")]
+    fn write_past_capacity_panics() {
+        let mut kv = SeqKv::standalone(1, 2, 16);
+        kv.write(0, 16, &[0.0, 0.0], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn pool_reserves_and_releases() {
+        // 2 layers, page = 4 positions: a 10-position sequence needs
+        // ceil(10/4) = 3 pages per layer = 6 total
+        let pool = PagePool::new(2, 2, 4, 10);
+        assert_eq!(pool.pages_for(10), 6);
+        assert_eq!(pool.free_pages(), 10);
+        let a = pool.try_alloc(10).unwrap();
+        assert_eq!(a.capacity(), 12);
+        assert_eq!(pool.free_pages(), 4);
+        // a second 10-position sequence does not fit ...
+        assert!(pool.try_alloc(10).is_none());
+        // ... but a 8-position one does (2 pages x 2 layers)
+        let b = pool.try_alloc(8).unwrap();
+        assert_eq!(pool.free_pages(), 0);
+        pool.release(a);
+        assert_eq!(pool.free_pages(), 6);
+        pool.release(b);
+        assert_eq!(pool.free_pages(), 10);
+        // released pages are reusable
+        assert!(pool.try_alloc(10).is_some());
+    }
+
+    #[test]
+    fn zero_position_reservation_still_holds_a_page() {
+        let pool = PagePool::new(2, 2, 4, 4);
+        assert_eq!(pool.pages_for(0), 2, "sizing math matches try_alloc's floor");
+        let kv = pool.try_alloc(0).unwrap();
+        assert_eq!(kv.capacity(), 4);
+        assert_eq!(pool.free_pages(), pool.total_pages() - pool.pages_for(0));
+        pool.release(kv);
+    }
+}

@@ -1,0 +1,52 @@
+//! The serving layer (DESIGN.md §11): packed-domain batched decoding.
+//!
+//! Quantization's end product is a packed artifact (§9), and this
+//! subsystem is its deployment path — the ROADMAP's "serve heavy
+//! traffic" north star. It decodes **directly from packed weights**
+//! (`rsq generate --artifact DIR`), never materializing the f32 model:
+//!
+//! - [`model`] — [`PackedModel`], the host forward pass over
+//!   storage-domain weights via the fused dequantize kernels
+//!   (`tensor::kernels::gemv`), with [`Decoder`] (KV-cache step) and the
+//!   full-context recompute reference it is tested against;
+//! - [`kv`] — the preallocated paged KV cache: per-sequence page tables
+//!   over a shared [`PagePool`], reserved at admission, returned at
+//!   retire;
+//! - [`batch`] — the continuous-batching scheduler on `util::Pool`:
+//!   padded-free token-level steps, mid-flight admit/retire, per-request
+//!   deadlines, all surfaced in a [`ServeReport`].
+//!
+//! Determinism contract: generated tokens are a pure function of (model,
+//! prompt, max_new) — invariant to `--jobs`, batch size, page size, and
+//! co-scheduled requests. `tests/prop_serve.rs` pins the host-side
+//! guarantees (including bit-identity of the fused kernels against
+//! `unpack()` + `gemm`); `tests/integration_serve.rs` pins greedy
+//! token-identity against the XLA engine's full-context recompute.
+
+pub mod batch;
+pub mod kv;
+pub mod model;
+
+pub use batch::{serve, RequestStats, ServeOptions, ServeReport, ServeRequest};
+pub use kv::{PagePool, SeqKv, PAGE_POSITIONS};
+pub use model::{greedy_decode, Decoder, HostWeight, PackedModel};
+
+/// The synthetic model config `rsq serve-bench` and
+/// `benches/bench_serve.rs` both build when no artifact is given — one
+/// definition, so the two tokens/s grids stay comparable (they advertise
+/// running "the same grid").
+pub fn bench_model_config() -> crate::model::ModelConfig {
+    crate::model::ModelConfig {
+        name: "serve-bench".into(),
+        d: 64,
+        layers: 2,
+        heads: 2,
+        ff: 128,
+        vocab: 256,
+        max_seq: 128,
+        batch: 4,
+        seq_lens: vec![32, 64],
+        ldlq_k: 1024,
+        ldlq_g: 8,
+    }
+}

@@ -1,0 +1,690 @@
+//! Host decode forward pass over a packed artifact (DESIGN.md §11).
+//!
+//! The first forward-pass implementation outside XLA: [`PackedModel`]
+//! holds layer weights **in the storage domain** ([`PackedRows`] for
+//! `packedN` artifact blobs, f32 for `raw` ones) and projects through the
+//! fused dequantize kernels (`tensor::kernels::gemv`), so serving memory
+//! tracks the artifact's packed size, not the f32 model
+//! ([`PackedModel::resident_bytes`]).
+//!
+//! Two entry points compute the same function:
+//!
+//! - [`Decoder::step`] — one token against the paged KV cache
+//!   (`serve::kv`): O(t·d) attention per step, the serving path;
+//! - [`PackedModel::logits_full`] — the full-context matrix recompute
+//!   (masked softmax over the whole [T, T] score matrix), mirroring the
+//!   lowered `logits_last_t*` modules position by position.
+//!
+//! **Determinism.** Both paths share every per-row scalar helper
+//! (`rmsnorm_gain`, `attn_row`, `swiglu_row`, `log_softmax_in_place`) and
+//! their projections run the same k-ascending, zero-skipping dot products
+//! (`deq_gemm_bt`/`gemm_bt`), so KV-cache decode is **bit-identical** to
+//! the full-context recompute at every position — a masked score
+//! contributes an exact `+0.0` to the softmax denominator and is skipped
+//! in the value reduction, exactly like the §10 zero-skip contract.
+//! `tests/prop_serve.rs` asserts greedy token-identity and exact logit
+//! equality; `tests/integration_serve.rs` pins greedy token-identity
+//! against the XLA engine's full-context recompute.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::kv::SeqKv;
+use crate::eval::argmax;
+use crate::model::config::ModelConfig;
+use crate::model::ParamSet;
+use crate::quant::artifact::{self, ArtifactManifest, Blob};
+use crate::quantref;
+use crate::tensor::kernels;
+use crate::tensor::pack::{PackedRows, RowGrid, PACK_BITS};
+use crate::tensor::Tensor;
+use crate::util::Pool;
+
+/// RMSNorm epsilon — must match python/compile/model.py.
+const EPS: f32 = 1e-6;
+
+/// One projection weight in its storage domain.
+pub enum HostWeight {
+    /// bit-packed codes + per-row grid, dequantized on the fly
+    Packed(PackedRows),
+    /// plain f32 (raw artifact blobs, VQ fallbacks, checkpoints)
+    Dense(Tensor),
+}
+
+impl HostWeight {
+    pub fn is_packed(&self) -> bool {
+        matches!(self, HostWeight::Packed(_))
+    }
+
+    pub fn out_dim(&self) -> usize {
+        match self {
+            HostWeight::Packed(p) => p.rows,
+            HostWeight::Dense(t) => t.rows(),
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        match self {
+            HostWeight::Packed(p) => p.cols,
+            HostWeight::Dense(t) => t.cols(),
+        }
+    }
+
+    /// `y = a · Wᵀ` — fused dequantization when packed; identical
+    /// element-wise operation sequence either way (DESIGN.md §11).
+    pub fn matmul_bt(&self, a: &Tensor, pool: Option<&Pool>) -> Tensor {
+        match self {
+            HostWeight::Packed(p) => kernels::deq_gemm_bt(a, p, pool),
+            HostWeight::Dense(w) => kernels::gemm_bt(a, w, pool),
+        }
+    }
+
+    /// Single-row `y = x · Wᵀ` (the per-token decode path).
+    pub fn matvec(&self, x: &[f32], pool: Option<&Pool>) -> Vec<f32> {
+        match self {
+            HostWeight::Packed(p) => kernels::deq_gemv(x, p, pool),
+            HostWeight::Dense(w) => {
+                kernels::gemm_bt(&Tensor::from_vec(&[1, x.len()], x.to_vec()), w, pool).data
+            }
+        }
+    }
+
+    /// Bytes this weight keeps resident at serve time.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            // codes + per-row (scale, zero) f32 pair
+            HostWeight::Packed(p) => p.data.len() + 8 * p.rows,
+            HostWeight::Dense(t) => 4 * t.numel(),
+        }
+    }
+
+    /// Bytes the dequantized f32 equivalent would keep resident.
+    pub fn dense_bytes(&self) -> usize {
+        4 * self.out_dim() * self.in_dim()
+    }
+}
+
+/// One transformer layer's serving weights (gains stay f32 vectors).
+struct HostLayer {
+    g1: Vec<f32>,
+    wq: HostWeight,
+    wk: HostWeight,
+    wv: HostWeight,
+    wo: HostWeight,
+    g2: Vec<f32>,
+    wup: HostWeight,
+    wgate: HostWeight,
+    wdown: HostWeight,
+}
+
+/// A model loaded for serving: packed layer weights + f32 tables.
+pub struct PackedModel {
+    pub cfg: ModelConfig,
+    emb: Tensor,
+    pos: Tensor,
+    layers: Vec<HostLayer>,
+    gf: Vec<f32>,
+    head: HostWeight,
+}
+
+fn gain(blob: Blob, name: &str, d: usize) -> Result<Vec<f32>> {
+    match blob {
+        Blob::Raw(t) if t.shape == vec![d] => Ok(t.data),
+        Blob::Raw(t) => bail!("tensor {name}: expected gain shape [{d}], got {:?}", t.shape),
+        Blob::Packed(_) => bail!("tensor {name}: gain unexpectedly bit-packed"),
+    }
+}
+
+fn weight(blob: Blob) -> HostWeight {
+    match blob {
+        Blob::Raw(t) => HostWeight::Dense(t),
+        Blob::Packed(p) => HostWeight::Packed(p),
+    }
+}
+
+fn raw(blob: Blob, name: &str) -> Result<Tensor> {
+    match blob {
+        Blob::Raw(t) => Ok(t),
+        Blob::Packed(_) => bail!("tensor {name}: table unexpectedly bit-packed"),
+    }
+}
+
+impl PackedModel {
+    /// Load an artifact directory for serving, keeping packed weights
+    /// packed (`artifact::load_packed`).
+    pub fn load(dir: &Path) -> Result<(PackedModel, ArtifactManifest)> {
+        let (blobs, manifest) = artifact::load_packed(dir)?;
+        let model = PackedModel::from_blobs(manifest.config.clone(), blobs)
+            .with_context(|| format!("assemble serving model from artifact {dir:?}"))?;
+        Ok((model, manifest))
+    }
+
+    /// Assemble from artifact blobs in `param_names()` order.
+    pub fn from_blobs(cfg: ModelConfig, blobs: Vec<Blob>) -> Result<PackedModel> {
+        let names = cfg.param_names();
+        if blobs.len() != names.len() {
+            bail!("artifact has {} tensors, config expects {}", blobs.len(), names.len());
+        }
+        let mut it = blobs.into_iter().zip(names);
+        let mut next = || it.next().expect("length checked above");
+        let (emb, _) = next();
+        let emb = raw(emb, "emb")?;
+        let (pos, _) = next();
+        let pos = raw(pos, "pos")?;
+        let mut layers = Vec::with_capacity(cfg.layers);
+        for _ in 0..cfg.layers {
+            let (g1b, g1n) = next();
+            let g1 = gain(g1b, &g1n, cfg.d)?;
+            let wq = weight(next().0);
+            let wk = weight(next().0);
+            let wv = weight(next().0);
+            let wo = weight(next().0);
+            let (g2b, g2n) = next();
+            let g2 = gain(g2b, &g2n, cfg.d)?;
+            let wup = weight(next().0);
+            let wgate = weight(next().0);
+            let wdown = weight(next().0);
+            layers.push(HostLayer { g1, wq, wk, wv, wo, g2, wup, wgate, wdown });
+        }
+        let (gfb, gfn) = next();
+        let gf = gain(gfb, &gfn, cfg.d)?;
+        let head = weight(next().0);
+        Ok(PackedModel { cfg, emb, pos, layers, gf, head })
+    }
+
+    /// Host-side RTN quantize-and-pack of a full-precision `ParamSet` at
+    /// `bits` — the artifact-free fixture path for benches, `rsq perf`,
+    /// and tests (mirrors the pipeline's grid: `quantref::row_grid` on
+    /// the pre-quant weight). Weights that fail the exact-pack check fall
+    /// back to dense, like `artifact::save`.
+    pub fn from_paramset_rtn(p: &ParamSet, bits: u32) -> Result<PackedModel> {
+        if !PACK_BITS.contains(&bits) {
+            bail!("unsupported pack width {bits} (supported: {PACK_BITS:?})");
+        }
+        let maxq = ((1u64 << bits) - 1) as f32;
+        let pack = |w: &Tensor| -> HostWeight {
+            let q = quantref::rtn(w, maxq);
+            let (scale, zero) = quantref::row_grid(w, maxq);
+            match PackedRows::pack(&q, bits, &RowGrid { scale, zero }) {
+                Ok(pk) => HostWeight::Packed(pk),
+                Err(_) => HostWeight::Dense(q),
+            }
+        };
+        Self::assemble(p, pack)
+    }
+
+    /// Serve a full-precision checkpoint as-is (the `rsq generate
+    /// --model` path): every weight dense, nothing quantized.
+    pub fn from_paramset_dense(p: &ParamSet) -> Result<PackedModel> {
+        Self::assemble(p, |w| HostWeight::Dense(w.clone()))
+    }
+
+    fn assemble(p: &ParamSet, mut wrap: impl FnMut(&Tensor) -> HostWeight) -> Result<PackedModel> {
+        let cfg = p.cfg.clone();
+        let t = |i: usize| p.tensors[i].clone();
+        let g = |i: usize| -> Result<Vec<f32>> {
+            if p.tensors[i].shape != vec![cfg.d] {
+                bail!("tensor {i}: expected gain shape [{}]", cfg.d);
+            }
+            Ok(p.tensors[i].data.clone())
+        };
+        let mut layers = Vec::with_capacity(cfg.layers);
+        for l in 0..cfg.layers {
+            let base = 2 + l * 9;
+            layers.push(HostLayer {
+                g1: g(base)?,
+                wq: wrap(&p.tensors[base + 1]),
+                wk: wrap(&p.tensors[base + 2]),
+                wv: wrap(&p.tensors[base + 3]),
+                wo: wrap(&p.tensors[base + 4]),
+                g2: g(base + 5)?,
+                wup: wrap(&p.tensors[base + 6]),
+                wgate: wrap(&p.tensors[base + 7]),
+                wdown: wrap(&p.tensors[base + 8]),
+            });
+        }
+        let n = p.tensors.len();
+        Ok(PackedModel {
+            emb: t(0),
+            pos: t(1),
+            layers,
+            gf: g(n - 2)?,
+            head: wrap(&p.tensors[n - 1]),
+            cfg,
+        })
+    }
+
+    /// How many projection weights are actually bit-packed.
+    pub fn packed_weights(&self) -> usize {
+        let mut n = 0;
+        for l in &self.layers {
+            for w in [&l.wq, &l.wk, &l.wv, &l.wo, &l.wup, &l.wgate, &l.wdown] {
+                n += w.is_packed() as usize;
+            }
+        }
+        n + self.head.is_packed() as usize
+    }
+
+    /// (packed-domain resident bytes, f32-equivalent resident bytes) over
+    /// every tensor the server keeps in memory — the deployment memory
+    /// win `bench_serve`/`rsq serve-bench` report.
+    pub fn resident_bytes(&self) -> (usize, usize) {
+        let tables = 4 * (self.emb.numel() + self.pos.numel() + self.gf.len());
+        let (mut packed, mut dense) = (tables, tables);
+        let mut weights: Vec<&HostWeight> = vec![&self.head];
+        for l in &self.layers {
+            let gains = 4 * (l.g1.len() + l.g2.len());
+            packed += gains;
+            dense += gains;
+            weights.extend([&l.wq, &l.wk, &l.wv, &l.wo, &l.wup, &l.wgate, &l.wdown]);
+        }
+        for w in weights {
+            packed += w.resident_bytes();
+            dense += w.dense_bytes();
+        }
+        (packed, dense)
+    }
+
+    /// Embedding row for `token` at absolute position `pos`.
+    fn embed_row(&self, token: i32, pos: usize) -> Vec<f32> {
+        assert!(
+            (0..self.cfg.vocab as i32).contains(&token),
+            "token {token} outside vocab {}",
+            self.cfg.vocab
+        );
+        assert!(pos < self.cfg.max_seq, "position {pos} past max_seq {}", self.cfg.max_seq);
+        self.emb
+            .row(token as usize)
+            .iter()
+            .zip(self.pos.row(pos))
+            .map(|(e, p)| e + p)
+            .collect()
+    }
+
+    /// Full-context recompute: next-token log-probabilities at **every**
+    /// position of `tokens` (`[T, vocab]`), through the same fused
+    /// kernels and per-row helpers as [`Decoder::step`]. Row `i` depends
+    /// only on tokens `0..=i` (causal mask), so it equals a fresh
+    /// prefix-only forward — the reference the KV-cache path is tested
+    /// against.
+    pub fn logits_full(&self, tokens: &[i32], pool: Option<&Pool>) -> Tensor {
+        let tn = tokens.len();
+        assert!(tn >= 1, "logits_full needs at least one token");
+        assert!(tn <= self.cfg.max_seq, "context {tn} past max_seq {}", self.cfg.max_seq);
+        let cfg = &self.cfg;
+        let (d, heads, hd) = (cfg.d, cfg.heads, cfg.head_dim());
+        let mut z = Tensor::zeros(&[tn, d]);
+        for (i, &tok) in tokens.iter().enumerate() {
+            z.row_mut(i).copy_from_slice(&self.embed_row(tok, i));
+        }
+        let rows = |src: &Tensor, g: &[f32]| -> Tensor {
+            let mut out = Tensor::zeros(&[tn, src.cols()]);
+            for i in 0..tn {
+                out.row_mut(i).copy_from_slice(&rmsnorm_gain(src.row(i), g));
+            }
+            out
+        };
+        for layer in &self.layers {
+            let xa = rows(&z, &layer.g1);
+            let q = layer.wq.matmul_bt(&xa, pool);
+            let k = layer.wk.matmul_bt(&xa, pool);
+            let v = layer.wv.matmul_bt(&xa, pool);
+            let mut xo = Tensor::zeros(&[tn, d]);
+            for i in 0..tn {
+                let row = attn_row(q.row(i), heads, hd, i, tn, |s| k.row(s), |s| v.row(s));
+                xo.row_mut(i).copy_from_slice(&row);
+            }
+            z.add_in_place(&layer.wo.matmul_bt(&xo, pool));
+            let xf = rows(&z, &layer.g2);
+            let gate = layer.wgate.matmul_bt(&xf, pool);
+            let up = layer.wup.matmul_bt(&xf, pool);
+            let mut xd = Tensor::zeros(&[tn, cfg.ff]);
+            for i in 0..tn {
+                xd.row_mut(i).copy_from_slice(&swiglu_row(gate.row(i), up.row(i)));
+            }
+            z.add_in_place(&layer.wdown.matmul_bt(&xd, pool));
+        }
+        let h = rows(&z, &self.gf);
+        let mut logits = self.head.matmul_bt(&h, pool);
+        for i in 0..tn {
+            log_softmax_in_place(logits.row_mut(i));
+        }
+        logits
+    }
+}
+
+/// `x · rsqrt(mean(x²) + EPS) · g` — shared by both forward paths.
+fn rmsnorm_gain(x: &[f32], g: &[f32]) -> Vec<f32> {
+    let mut ss = 0.0f32;
+    for &v in x {
+        ss += v * v;
+    }
+    let r = 1.0 / (ss / x.len() as f32 + EPS).sqrt();
+    x.iter().zip(g).map(|(v, gv)| v * r * gv).collect()
+}
+
+/// `silu(gate) · up` per element (`silu(x) = x · sigmoid(x)`).
+fn swiglu_row(gate: &[f32], up: &[f32]) -> Vec<f32> {
+    gate.iter()
+        .zip(up)
+        .map(|(&gv, &uv)| {
+            let sig = 1.0 / (1.0 + (-gv).exp());
+            gv * sig * uv
+        })
+        .collect()
+}
+
+/// In-place log-softmax over one logits row.
+fn log_softmax_in_place(row: &mut [f32]) {
+    let mut maxv = f32::NEG_INFINITY;
+    for &v in row.iter() {
+        maxv = maxv.max(v);
+    }
+    let mut denom = 0.0f32;
+    for &v in row.iter() {
+        denom += (v - maxv).exp();
+    }
+    let lse = denom.ln();
+    for v in row.iter_mut() {
+        *v = *v - maxv - lse;
+    }
+}
+
+/// One position's multi-head causal attention output.
+///
+/// Scores run over `total_t` positions with everything past `causal_t`
+/// masked to `f32::MIN` (the lowered modules' mask constant); the max
+/// fold, the exp/denominator accumulation (s ascending), and the
+/// zero-skipped value reduction are the **single** implementation both
+/// the KV-cache decode (`total_t == causal_t + 1`, no masked tail) and
+/// the full-context recompute execute — a masked score's exp is an exact
+/// `+0.0`, which cannot move the denominator and is skipped in the value
+/// sum, so the two paths are bit-identical (module docs).
+fn attn_row<'a, K, V>(
+    q: &[f32],
+    heads: usize,
+    hd: usize,
+    causal_t: usize,
+    total_t: usize,
+    k_at: K,
+    v_at: V,
+) -> Vec<f32>
+where
+    K: Fn(usize) -> &'a [f32],
+    V: Fn(usize) -> &'a [f32],
+{
+    let mut out = vec![0.0f32; heads * hd];
+    let mut scores = vec![0.0f32; total_t];
+    for m in 0..heads {
+        let qh = &q[m * hd..(m + 1) * hd];
+        for (s, sc) in scores.iter_mut().enumerate() {
+            *sc = if s <= causal_t {
+                let kh = &k_at(s)[m * hd..(m + 1) * hd];
+                let mut dot = 0.0f32;
+                for (a, b) in qh.iter().zip(kh) {
+                    dot += a * b;
+                }
+                dot / (hd as f32).sqrt()
+            } else {
+                f32::MIN
+            };
+        }
+        let mut maxv = f32::NEG_INFINITY;
+        for &sc in &scores {
+            maxv = maxv.max(sc);
+        }
+        let mut denom = 0.0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - maxv).exp();
+            denom += *sc;
+        }
+        let oh = &mut out[m * hd..(m + 1) * hd];
+        for (s, &e) in scores.iter().enumerate() {
+            let p = e / denom;
+            if p == 0.0 {
+                continue;
+            }
+            let vh = &v_at(s)[m * hd..(m + 1) * hd];
+            for (o, &vv) in oh.iter_mut().zip(vh) {
+                *o += p * vv;
+            }
+        }
+    }
+    out
+}
+
+/// Autoregressive decode state over one sequence's KV cache.
+pub struct Decoder<'m> {
+    model: &'m PackedModel,
+    kv: SeqKv,
+    t: usize,
+}
+
+impl<'m> Decoder<'m> {
+    pub fn new(model: &'m PackedModel, kv: SeqKv) -> Decoder<'m> {
+        assert_eq!(kv.num_layers(), model.cfg.layers, "kv cache layer count");
+        assert_eq!(kv.d(), model.cfg.d, "kv cache model dim");
+        Decoder { model, kv, t: 0 }
+    }
+
+    /// Positions consumed so far.
+    pub fn positions(&self) -> usize {
+        self.t
+    }
+
+    /// Positions this decoder can consume (KV capacity ∧ `max_seq`).
+    pub fn capacity(&self) -> usize {
+        self.kv.capacity().min(self.model.cfg.max_seq)
+    }
+
+    /// Consume `token` at the next position and return the next-token
+    /// log-probabilities — O(t) attention against the KV cache instead of
+    /// a full-context recompute.
+    pub fn step(&mut self, token: i32, pool: Option<&Pool>) -> Vec<f32> {
+        self.advance_pos(token, pool, true).expect("logits requested")
+    }
+
+    /// Consume `token` without producing logits: fills the KV cache but
+    /// skips the final norm, the head projection (the model's largest
+    /// GEMV), and the log-softmax. Prompt positions whose logits would be
+    /// discarded go through here — KV state is identical to [`step`]'s,
+    /// so the decode stays deterministic.
+    ///
+    /// [`step`]: Decoder::step
+    pub fn prefill(&mut self, token: i32, pool: Option<&Pool>) {
+        let _ = self.advance_pos(token, pool, false);
+    }
+
+    fn advance_pos(
+        &mut self,
+        token: i32,
+        pool: Option<&Pool>,
+        want_logits: bool,
+    ) -> Option<Vec<f32>> {
+        let t = self.t;
+        assert!(t < self.capacity(), "decode past capacity {}", self.capacity());
+        let model = self.model;
+        let cfg = &model.cfg;
+        let (heads, hd) = (cfg.heads, cfg.head_dim());
+        let mut z = model.embed_row(token, t);
+        for (l, layer) in model.layers.iter().enumerate() {
+            let xa = rmsnorm_gain(&z, &layer.g1);
+            let q = layer.wq.matvec(&xa, pool);
+            let k = layer.wk.matvec(&xa, pool);
+            let v = layer.wv.matvec(&xa, pool);
+            self.kv.write(l, t, &k, &v);
+            let kv = &self.kv;
+            let xo = attn_row(&q, heads, hd, t, t + 1, |s| kv.k_at(l, s), |s| kv.v_at(l, s));
+            for (zv, ov) in z.iter_mut().zip(layer.wo.matvec(&xo, pool)) {
+                *zv += ov;
+            }
+            let xf = rmsnorm_gain(&z, &layer.g2);
+            let gate = layer.wgate.matvec(&xf, pool);
+            let up = layer.wup.matvec(&xf, pool);
+            let xd = swiglu_row(&gate, &up);
+            for (zv, dv) in z.iter_mut().zip(layer.wdown.matvec(&xd, pool)) {
+                *zv += dv;
+            }
+        }
+        self.t = t + 1;
+        if !want_logits {
+            return None;
+        }
+        let h = rmsnorm_gain(&z, &model.gf);
+        let mut logits = model.head.matvec(&h, pool);
+        log_softmax_in_place(&mut logits);
+        Some(logits)
+    }
+
+    /// Hand the KV cache back (the batch scheduler returns it to the
+    /// page pool on retire).
+    pub fn into_kv(self) -> SeqKv {
+        self.kv
+    }
+}
+
+/// Greedy decode helper: consume `prompt`, then generate up to `max_new`
+/// tokens by argmax, stopping early at the model's context limit.
+/// Returns the generated tokens only.
+pub fn greedy_decode(
+    model: &PackedModel,
+    prompt: &[i32],
+    max_new: usize,
+    pool: Option<&Pool>,
+) -> Result<Vec<i32>> {
+    if prompt.is_empty() {
+        bail!("empty prompt — greedy decode needs at least one token");
+    }
+    let cfg = &model.cfg;
+    if prompt.len() > cfg.max_seq {
+        bail!("prompt length {} exceeds max_seq {}", prompt.len(), cfg.max_seq);
+    }
+    let total = (prompt.len() + max_new).min(cfg.max_seq);
+    let kv = SeqKv::standalone(cfg.layers, cfg.d, total);
+    let mut dec = Decoder::new(model, kv);
+    // only the last prompt position's logits are used — earlier ones
+    // prefill the KV cache without paying the head projection
+    for &tok in &prompt[..prompt.len() - 1] {
+        dec.prefill(tok, pool);
+    }
+    let mut logp = dec.step(prompt[prompt.len() - 1], pool);
+    let mut out = Vec::with_capacity(max_new);
+    while out.len() < max_new {
+        let next = argmax(&logp) as i32;
+        out.push(next);
+        if out.len() == max_new || dec.positions() >= dec.capacity() {
+            break;
+        }
+        logp = dec.step(next, pool);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "serve-test".into(),
+            d: 16,
+            layers: 2,
+            heads: 2,
+            ff: 32,
+            vocab: 32,
+            max_seq: 24,
+            batch: 2,
+            seq_lens: vec![8, 24],
+            ldlq_k: 64,
+            ldlq_g: 4,
+        }
+    }
+
+    #[test]
+    fn decode_matches_full_context_bitwise() {
+        let p = ParamSet::init(&cfg(), 11);
+        let model = PackedModel::from_paramset_rtn(&p, 4).unwrap();
+        assert_eq!(model.packed_weights(), 2 * 7 + 1);
+        let prompt = [3i32, 1, 4, 1, 5];
+        let gen = greedy_decode(&model, &prompt, 10, None).unwrap();
+        assert_eq!(gen.len(), 10);
+        let mut seq = prompt.to_vec();
+        seq.extend_from_slice(&gen);
+        let full = model.logits_full(&seq, None);
+        // every decode step's argmax equals the full-context recompute's
+        // at the same position — and the last row is bit-identical
+        for (i, &tok) in gen.iter().enumerate() {
+            let row = full.row(prompt.len() + i - 1);
+            assert_eq!(argmax(row) as i32, tok, "step {i}");
+        }
+        let kv = SeqKv::standalone(model.cfg.layers, model.cfg.d, seq.len());
+        let mut dec = Decoder::new(&model, kv);
+        let mut last = Vec::new();
+        for &tok in &seq {
+            last = dec.step(tok, None);
+        }
+        for (a, b) in last.iter().zip(full.row(seq.len() - 1)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "final log-probs must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn resident_bytes_shrink_with_bits() {
+        let p = ParamSet::init(&cfg(), 3);
+        let (d8, dense8) = PackedModel::from_paramset_rtn(&p, 8).unwrap().resident_bytes();
+        let (d2, dense2) = PackedModel::from_paramset_rtn(&p, 2).unwrap().resident_bytes();
+        assert_eq!(dense8, dense2, "f32 equivalent is bits-independent");
+        assert!(d2 < d8, "2-bit model must be smaller than 8-bit ({d2} vs {d8})");
+        assert!(d8 < dense8, "packed must beat f32");
+        let dense = PackedModel::from_paramset_dense(&p).unwrap();
+        assert_eq!(dense.packed_weights(), 0);
+        assert_eq!(dense.resident_bytes().0, dense.resident_bytes().1);
+    }
+
+    #[test]
+    fn dense_and_packed_paths_agree_at_8_bits_tokens() {
+        // 8-bit RTN is near-lossless; dense-serving the *same* quantized
+        // tensors must produce identical greedy tokens (packed vs dense
+        // dispatch is a storage difference, not a math difference)
+        let p = ParamSet::init(&cfg(), 5);
+        let packed = PackedModel::from_paramset_rtn(&p, 8).unwrap();
+        // dense model over the dequantized weights
+        let mut q = p.clone();
+        for l in 0..q.cfg.layers {
+            for m in crate::model::config::Module::ALL {
+                let w = q.weight(l, m).clone();
+                q.set_weight(l, m, quantref::rtn(&w, 255.0));
+            }
+        }
+        let n = q.tensors.len();
+        q.tensors[n - 1] = quantref::rtn(&q.tensors[n - 1], 255.0);
+        let dense = PackedModel::from_paramset_dense(&q).unwrap();
+        let prompt = [7i32, 2, 9];
+        let a = greedy_decode(&packed, &prompt, 8, None).unwrap();
+        let b = greedy_decode(&dense, &prompt, 8, None).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn jobs_do_not_change_tokens() {
+        let p = ParamSet::init(&cfg(), 9);
+        let model = PackedModel::from_paramset_rtn(&p, 3).unwrap();
+        let prompt = [1i32, 2, 3];
+        let serial = greedy_decode(&model, &prompt, 12, None).unwrap();
+        for jobs in [1usize, 4] {
+            let pool = Pool::new(jobs);
+            assert_eq!(greedy_decode(&model, &prompt, 12, Some(&pool)).unwrap(), serial);
+        }
+    }
+
+    #[test]
+    fn decode_stops_at_context_limit() {
+        let p = ParamSet::init(&cfg(), 2);
+        let model = PackedModel::from_paramset_rtn(&p, 4).unwrap();
+        // max_seq = 24: 20 generated tokens are fed back in (positions
+        // 4..24), plus one final token off the last position's logits
+        let gen = greedy_decode(&model, &[1, 2, 3, 4], 100, None).unwrap();
+        assert_eq!(gen.len(), 24 - 4 + 1, "truncated at max_seq");
+    }
+}

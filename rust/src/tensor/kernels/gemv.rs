@@ -1,0 +1,189 @@
+//! Fused dequantize-GEMV/GEMM over bit-packed weights (DESIGN.md §11).
+//!
+//! The serving layer decodes **directly from packed artifacts**: a
+//! projection `y = x · Wᵀ` against a [`PackedRows`] weight never
+//! materializes the dequantized W. Each pool task walks a block of packed
+//! rows; within a row the codes are dequantized in tiles of `DEQ_TILE`
+//! f32s (one L1-resident scratch buffer per worker) and consumed by the
+//! dot products immediately, so the resident working set stays the packed
+//! bytes plus one tile — the packed-vs-f32 memory win survives decode
+//! time, not just disk (`benches/bench_serve.rs` measures the ratio).
+//!
+//! **Determinism.** The dequant expression is exactly `unpack`'s
+//! (`scale · (code − zero)`, via [`PackedRows::decode_row_into`]), every
+//! accumulator consumes the inner index k in increasing order, and zero
+//! activation coefficients are skipped — the §10 zero-skip contract. The
+//! pool fans out over *packed-row* blocks, i.e. disjoint output columns,
+//! so no reduction crosses a task boundary: [`deq_gemm_bt`] is
+//! bit-identical to `gemm_bt(a, &w.unpack(None), pool)` at every jobs
+//! count. `tests/prop_serve.rs` asserts exact equality, not tolerance,
+//! across bit widths, ragged shapes, and jobs ∈ {1, 4}.
+
+use crate::tensor::pack::PackedRows;
+use crate::tensor::Tensor;
+use crate::util::Pool;
+
+use super::{par_rows, ROW_BLOCK};
+
+/// Codes dequantized per tile: 256 f32s (1 KiB) of stack scratch per
+/// worker. Tiling never touches the per-element accumulation order (k
+/// stays ascending into the same accumulator), so it cannot perturb a bit.
+const DEQ_TILE: usize = 256;
+
+/// Dot the `m` rows of `a` (row stride `k`) against packed row `j`,
+/// tile-decoded on the fly; returns output column j of length `m`.
+fn column(a: &[f32], m: usize, k: usize, w: &PackedRows, j: usize) -> Vec<f32> {
+    let mut acc = vec![0.0f32; m];
+    let mut buf = [0.0f32; DEQ_TILE];
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + DEQ_TILE).min(k);
+        let tile = &mut buf[..k1 - k0];
+        w.decode_row_into(j, k0, tile);
+        for (i, acc_i) in acc.iter_mut().enumerate() {
+            let a_seg = &a[i * k + k0..i * k + k1];
+            for (&av, &wv) in a_seg.iter().zip(tile.iter()) {
+                if av == 0.0 {
+                    continue;
+                }
+                *acc_i += av * wv;
+            }
+        }
+        k0 = k1;
+    }
+    acc
+}
+
+/// A·Wᵀ for A [m,k] and packed W [n,k] → [m,n] with on-the-fly
+/// dequantization — the packed-domain replacement for
+/// `gemm_bt(a, &w.unpack(None), pool)`, bit-identical to it at every
+/// jobs count. Pool tasks cover disjoint packed-row blocks — the large
+/// dimension at decode time — so a batch-1 GEMV still parallelizes.
+pub fn deq_gemm_bt(a: &Tensor, w: &PackedRows, pool: Option<&Pool>) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    assert_eq!(w.cols, k, "deq_gemm_bt inner dim: {k} vs {}", w.cols);
+    let n = w.rows;
+    let cols = par_rows(pool, n, |j| column(&a.data, m, k, w, j));
+    let mut out = Tensor::zeros(&[m, n]);
+    for (j, col) in cols.into_iter().enumerate() {
+        for (i, v) in col.into_iter().enumerate() {
+            out.data[i * n + j] = v;
+        }
+    }
+    out
+}
+
+/// One scalar dot of `x` against packed row `j`, tile-decoded through
+/// `buf` — per-element identical to [`column`]'s m = 1 case (k ascends,
+/// `x == 0.0` skips) without its per-row accumulator allocation.
+fn dot_row(x: &[f32], w: &PackedRows, j: usize, buf: &mut [f32; DEQ_TILE]) -> f32 {
+    let k = x.len();
+    let mut acc = 0.0f32;
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + DEQ_TILE).min(k);
+        let tile = &mut buf[..k1 - k0];
+        w.decode_row_into(j, k0, tile);
+        for (&av, &wv) in x[k0..k1].iter().zip(tile.iter()) {
+            if av == 0.0 {
+                continue;
+            }
+            acc += av * wv;
+        }
+        k0 = k1;
+    }
+    acc
+}
+
+/// Fused dequantize-GEMV: `y = x · Wᵀ` for `x` of length `w.cols` — the
+/// m = 1 row of [`deq_gemm_bt`] without the `Tensor` wrapper. This is
+/// the serve decode hot path (one call per projection per token), so it
+/// dispatches `ROW_BLOCK`-sized packed-row blocks that each write their
+/// outputs into one buffer — no per-output-element allocation — while
+/// keeping the exact per-element operation sequence of the reference.
+pub fn deq_gemv(x: &[f32], w: &PackedRows, pool: Option<&Pool>) -> Vec<f32> {
+    assert_eq!(x.len(), w.cols, "deq_gemv inner dim: {} vs {}", x.len(), w.cols);
+    let n = w.rows;
+    let block = |lo: usize, hi: usize| -> Vec<f32> {
+        let mut out = Vec::with_capacity(hi - lo);
+        let mut buf = [0.0f32; DEQ_TILE];
+        for j in lo..hi {
+            out.push(dot_row(x, w, j, &mut buf));
+        }
+        out
+    };
+    let starts: Vec<usize> = (0..n).step_by(ROW_BLOCK).collect();
+    match pool {
+        Some(p) if p.jobs() > 1 && starts.len() > 1 => p
+            .run(starts.len(), |bi| {
+                let lo = starts[bi];
+                block(lo, (lo + ROW_BLOCK).min(n))
+            })
+            .into_iter()
+            .flatten()
+            .collect(),
+        _ => block(0, n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantref;
+    use crate::tensor::kernels::gemm_bt;
+    use crate::tensor::pack::RowGrid;
+    use crate::util::Pcg;
+
+    /// RTN-quantize a random matrix so it packs exactly.
+    fn packed(rows: usize, cols: usize, bits: u32, rng: &mut Pcg) -> PackedRows {
+        let w = Tensor::randn(&[rows, cols], 1.0, rng);
+        let maxq = ((1u64 << bits) - 1) as f32;
+        let q = quantref::rtn(&w, maxq);
+        let (scale, zero) = quantref::row_grid(&w, maxq);
+        PackedRows::pack(&q, bits, &RowGrid { scale, zero }).unwrap()
+    }
+
+    #[test]
+    fn matches_unpack_then_gemm_bitwise() {
+        let mut rng = Pcg::new(5);
+        for (m, k, n) in [(1usize, 7usize, 5usize), (3, 33, 17), (4, 300, 9)] {
+            // zeros sprinkled in so the zero-skip path is always live
+            let a_data: Vec<f32> = (0..m * k)
+                .map(|_| if rng.f32() < 0.2 { 0.0 } else { rng.normal() })
+                .collect();
+            let a = Tensor::from_vec(&[m, k], a_data);
+            for bits in [2u32, 4] {
+                let w = packed(n, k, bits, &mut rng);
+                let want = gemm_bt(&a, &w.unpack(None), None);
+                for pool in [None, Some(Pool::new(4))] {
+                    let got = deq_gemm_bt(&a, &w, pool.as_ref());
+                    assert_eq!(got.shape, want.shape);
+                    for (x, y) in got.data.iter().zip(&want.data) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "m={m} k={k} n={n} bits={bits}");
+                    }
+                    let gv = deq_gemv(a.row(0), &w, pool.as_ref());
+                    assert_eq!(gv, want.row(0), "gemv row");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let mut rng = Pcg::new(6);
+        let w = packed(4, 3, 2, &mut rng);
+        let empty = Tensor::zeros(&[0, 3]);
+        assert_eq!(deq_gemm_bt(&empty, &w, None).shape, vec![0, 4]);
+        let one = packed(1, 1, 8, &mut rng);
+        let x = Tensor::from_vec(&[1, 1], vec![2.0]);
+        assert_eq!(deq_gemm_bt(&x, &one, None).data, vec![2.0 * one.unpack(None).data[0]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "deq_gemv inner dim")]
+    fn gemv_dim_mismatch_panics() {
+        let mut rng = Pcg::new(7);
+        let w = packed(2, 5, 2, &mut rng);
+        deq_gemv(&[1.0; 4], &w, None);
+    }
+}

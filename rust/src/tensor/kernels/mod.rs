@@ -14,7 +14,10 @@
 //!   is mirrored;
 //! - [`cholesky_lower`] / [`tri_inv_lower`] — blocked right-looking
 //!   Cholesky and column-block-parallel triangular inversion, the factor
-//!   chain behind `linalg::hinv_cholesky_upper`.
+//!   chain behind `linalg::hinv_cholesky_upper`;
+//! - [`deq_gemm_bt`] / [`deq_gemv`] — the serving layer's fused
+//!   dequantize products over bit-packed weights (`tensor::pack`), which
+//!   never materialize the dequantized operand (DESIGN.md §11).
 //!
 //! **Determinism (DESIGN.md §5, §10).** Every kernel takes an optional
 //! [`Pool`] and parallelizes over *row blocks* (column blocks for
@@ -40,9 +43,11 @@
 
 pub mod factor;
 pub mod gemm;
+pub mod gemv;
 
 pub use factor::{cholesky_lower, tri_inv_lower};
 pub use gemm::{gemm, gemm_at, gemm_bt, syrk, syrk_t};
+pub use gemv::{deq_gemm_bt, deq_gemv};
 
 use crate::util::Pool;
 

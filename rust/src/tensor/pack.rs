@@ -22,6 +22,7 @@
 //! logic.
 
 use super::Tensor;
+use crate::util::Pool;
 
 /// Bit widths the codec supports (the paper's sweep range plus 8-bit).
 pub const PACK_BITS: [u32; 4] = [2, 3, 4, 8];
@@ -126,19 +127,60 @@ impl PackedRows {
         Ok(PackedRows { bits, rows, cols, grid: grid.clone(), data })
     }
 
-    /// Decode back to the exact tensor `pack` consumed.
-    pub fn unpack(&self) -> Tensor {
-        let rb = row_bytes(self.cols, self.bits);
-        let mut out = Tensor::zeros(&[self.rows, self.cols]);
-        for r in 0..self.rows {
-            let (s, z) = (self.grid.scale[r], self.grid.zero[r]);
-            let row_data = &self.data[r * rb..(r + 1) * rb];
-            for c in 0..self.cols {
-                let code = read_code(row_data, c, self.bits);
-                out.set2(r, c, s * (code as f32 - z));
+    /// Decode back to the exact tensor `pack` consumed, optionally
+    /// pool-parallel over row blocks. Rows decode independently through
+    /// the identical per-element expression, so the pool cannot change a
+    /// single bit — `unpack(Some(pool))` equals `unpack(None)` exactly
+    /// (rust/tests/prop_serve.rs pins it). The artifact loader hands the
+    /// scheduler's pool in so a multi-layer load no longer unpacks every
+    /// tensor serially; the serial path writes straight into the output
+    /// buffer, and the pooled path allocates per row *block*, not per
+    /// row.
+    pub fn unpack(&self, pool: Option<&Pool>) -> Tensor {
+        use crate::tensor::kernels::ROW_BLOCK;
+        let (rows, cols) = (self.rows, self.cols);
+        let mut out = Tensor::zeros(&[rows, cols]);
+        if rows * cols == 0 {
+            return out;
+        }
+        match pool {
+            Some(p) if p.jobs() > 1 && rows > ROW_BLOCK => {
+                let starts: Vec<usize> = (0..rows).step_by(ROW_BLOCK).collect();
+                let blocks = p.run(starts.len(), |bi| {
+                    let lo = starts[bi];
+                    let hi = (lo + ROW_BLOCK).min(rows);
+                    let mut block = vec![0.0f32; (hi - lo) * cols];
+                    for (r, row) in (lo..hi).zip(block.chunks_exact_mut(cols)) {
+                        self.decode_row_into(r, 0, row);
+                    }
+                    block
+                });
+                for (bi, block) in blocks.into_iter().enumerate() {
+                    let lo = starts[bi] * cols;
+                    out.data[lo..lo + block.len()].copy_from_slice(&block);
+                }
+            }
+            _ => {
+                for r in 0..rows {
+                    self.decode_row_into(r, 0, out.row_mut(r));
+                }
             }
         }
         out
+    }
+
+    /// Dequantize codes `[k0, k0 + out.len())` of row `r` into `out` —
+    /// the per-tile decode primitive shared by [`PackedRows::unpack`] and
+    /// the fused serving kernels (`tensor::kernels::gemv`, DESIGN.md
+    /// §11). Evaluates exactly `scale * (code - zero)` per element, the
+    /// expression `pack` verified against the input bit-for-bit.
+    pub fn decode_row_into(&self, r: usize, k0: usize, out: &mut [f32]) {
+        let rb = row_bytes(self.cols, self.bits);
+        let row_data = &self.data[r * rb..(r + 1) * rb];
+        let (s, z) = (self.grid.scale[r], self.grid.zero[r]);
+        for (t, o) in out.iter_mut().enumerate() {
+            *o = s * (read_code(row_data, k0 + t, self.bits) as f32 - z);
+        }
     }
 
     /// Integer code of one element (tests + debugging).
@@ -190,11 +232,53 @@ mod tests {
         let p = PackedRows::pack(&t, 3, &grid).unwrap();
         assert_eq!(p.code(0, 4), 7);
         assert_eq!(p.code(1, 3), 0);
-        let u = p.unpack();
+        let u = p.unpack(None);
         assert_eq!(u.data, t.data);
         // bit-exactness, not just value equality
         for (a, b) in u.data.iter().zip(&t.data) {
             assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn unpack_pool_parallel_is_bit_identical() {
+        use crate::quantref;
+        use crate::util::Pcg;
+        let mut rng = Pcg::new(23);
+        // ragged widths so row blocks straddle byte boundaries
+        for (rows, cols) in [(1usize, 1usize), (5, 7), (37, 19), (64, 33)] {
+            let w = Tensor::randn(&[rows, cols], 1.0, &mut rng);
+            for bits in PACK_BITS {
+                let maxq = ((1u64 << bits) - 1) as f32;
+                let q = quantref::rtn(&w, maxq);
+                let (scale, zero) = quantref::row_grid(&w, maxq);
+                let p = PackedRows::pack(&q, bits, &RowGrid { scale, zero }).unwrap();
+                let serial = p.unpack(None);
+                for jobs in [1usize, 4] {
+                    let pool = Pool::new(jobs);
+                    let par = p.unpack(Some(&pool));
+                    assert_eq!(par.shape, serial.shape);
+                    for (a, b) in par.data.iter().zip(&serial.data) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{rows}x{cols} bits={bits}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_row_into_tiles_match_full_row() {
+        let (t, grid) =
+            from_codes(&[&[0, 1, 2, 3, 7, 5, 4, 6, 2], &[7, 6, 5, 0, 1, 2, 3, 4, 5]], 0.25, 3.0);
+        let p = PackedRows::pack(&t, 3, &grid).unwrap();
+        for r in 0..2 {
+            let mut full = vec![0.0f32; 9];
+            p.decode_row_into(r, 0, &mut full);
+            assert_eq!(full, t.row(r));
+            // tiled decode at an interior offset reads the same codes
+            let mut tile = vec![0.0f32; 4];
+            p.decode_row_into(r, 3, &mut tile);
+            assert_eq!(tile, &t.row(r)[3..7]);
         }
     }
 
@@ -247,7 +331,7 @@ mod tests {
             let maxs: Vec<u32> = vec![maxq; 11];
             let (t, grid) = from_codes(&[&zeros, &maxs], 0.125, 3.0);
             let p = PackedRows::pack(&t, bits, &grid).unwrap();
-            assert_eq!(p.unpack().data, t.data, "bits={bits}");
+            assert_eq!(p.unpack(None).data, t.data, "bits={bits}");
             assert_eq!(p.code(1, 10), maxq);
         }
     }
@@ -265,7 +349,7 @@ mod tests {
             let grid = RowGrid { scale, zero };
             let p = PackedRows::pack(&q, bits, &grid)
                 .unwrap_or_else(|e| panic!("bits={bits}: {e}"));
-            let u = p.unpack();
+            let u = p.unpack(None);
             for (a, b) in u.data.iter().zip(&q.data) {
                 assert_eq!(a.to_bits(), b.to_bits(), "bits={bits}");
             }

@@ -115,12 +115,85 @@ impl Args {
         }
     }
 
+    /// Option/flag keys this invocation carries that are **not** in
+    /// `known` — lets a subcommand fail fast on typo'd flags instead of
+    /// silently ignoring them (`rsq generate` does; a silently-dropped
+    /// `--max-new` would otherwise just decode the default).
+    pub fn unknown_keys(&self, known: &[&str]) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .options
+            .keys()
+            .map(String::as_str)
+            .chain(self.flags.iter().map(String::as_str))
+            .filter(|k| !known.contains(k))
+            .map(str::to_string)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Known **value** options that were passed without a value — the
+    /// parser records `--max-new --verbose` as a bare flag "max-new",
+    /// which [`Args::unknown_keys`] alone would accept; catching it here
+    /// completes the fail-fast story (the option would otherwise be
+    /// silently dropped and its default used).
+    pub fn missing_values(&self, value_keys: &[&str]) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .flags
+            .iter()
+            .filter(|f| value_keys.contains(&f.as_str()))
+            .cloned()
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
     /// Comma-separated list option.
     pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
         match self.get(key) {
             Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
             None => default.iter().map(|s| s.to_string()).collect(),
         }
+    }
+}
+
+/// Parse a human duration into seconds: a plain number is seconds, the
+/// suffixes `s`/`m`/`h`/`d` scale (`"30d"`, `"12h"`, `"90"`), case
+/// handled like [`parse_bytes`]. Errors stay `String` — the util layer
+/// is anyhow-free.
+pub fn parse_duration_s(s: &str) -> Result<f64, String> {
+    let lower = s.trim().to_ascii_lowercase();
+    let (num, mult) = match lower.chars().last() {
+        Some('s') => (&lower[..lower.len() - 1], 1.0),
+        Some('m') => (&lower[..lower.len() - 1], 60.0),
+        Some('h') => (&lower[..lower.len() - 1], 3600.0),
+        Some('d') => (&lower[..lower.len() - 1], 86400.0),
+        _ => (lower.as_str(), 1.0),
+    };
+    match num.trim().parse::<f64>() {
+        Ok(v) if v >= 0.0 && v.is_finite() => Ok(v * mult),
+        _ => Err(format!("bad duration {s:?} — expected e.g. 90, 45m, 12h, 30d")),
+    }
+}
+
+/// Parse a human byte size: plain bytes, or `k`/`m`/`g` (binary) suffix
+/// (`"500m"`, `"2g"`, `"1048576"`).
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let s = s.trim();
+    let lower = s.to_ascii_lowercase();
+    let (num, mult) = match lower.chars().last() {
+        Some('k') => (&lower[..lower.len() - 1], 1u64 << 10),
+        Some('m') => (&lower[..lower.len() - 1], 1u64 << 20),
+        Some('g') => (&lower[..lower.len() - 1], 1u64 << 30),
+        _ => (lower.as_str(), 1),
+    };
+    match num.trim().parse::<u64>() {
+        Ok(v) => v
+            .checked_mul(mult)
+            .ok_or_else(|| format!("byte size {s:?} overflows")),
+        _ => Err(format!("bad byte size {s:?} — expected e.g. 1048576, 500m, 2g")),
     }
 }
 
@@ -203,6 +276,56 @@ mod tests {
             parse("--hess-cache /tmp/h").hess_cache(),
             Some(std::path::PathBuf::from("/tmp/h"))
         );
+    }
+
+    #[test]
+    fn unknown_keys_catches_typos() {
+        let a = parse("generate --artifact out --max-mew 9 --verbos");
+        assert_eq!(
+            a.unknown_keys(&["artifact", "max-new", "verbose"]),
+            vec!["max-mew".to_string(), "verbos".to_string()]
+        );
+        assert!(a.unknown_keys(&["artifact", "max-mew", "verbos"]).is_empty());
+        // positionals are not flags
+        assert!(parse("generate").unknown_keys(&[]).is_empty());
+    }
+
+    #[test]
+    fn missing_values_catches_valueless_value_options() {
+        // `--prompt --max-new 4` parses "prompt" as a bare flag: a known
+        // name, so unknown_keys accepts it — missing_values must not
+        let a = parse("generate --artifact d --prompt --max-new 4");
+        assert!(a.unknown_keys(&["artifact", "prompt", "max-new"]).is_empty());
+        assert_eq!(a.missing_values(&["artifact", "prompt", "max-new"]), vec!["prompt"]);
+        // trailing value option with no value
+        let b = parse("generate --artifact d --max-new");
+        assert_eq!(b.missing_values(&["artifact", "max-new"]), vec!["max-new"]);
+        // boolean flags are not value options and stay fine
+        let c = parse("generate --artifact d --verbose");
+        assert!(c.missing_values(&["artifact", "max-new"]).is_empty());
+    }
+
+    #[test]
+    fn durations_parse() {
+        assert_eq!(parse_duration_s("90"), Ok(90.0));
+        assert_eq!(parse_duration_s("45m"), Ok(2700.0));
+        assert_eq!(parse_duration_s("12h"), Ok(43200.0));
+        assert_eq!(parse_duration_s("30d"), Ok(2_592_000.0));
+        assert_eq!(parse_duration_s("30D"), Ok(2_592_000.0), "suffix case like parse_bytes");
+        assert_eq!(parse_duration_s("1.5h"), Ok(5400.0));
+        assert!(parse_duration_s("soon").is_err());
+        assert!(parse_duration_s("-5m").is_err());
+        assert!(parse_duration_s("").is_err());
+    }
+
+    #[test]
+    fn byte_sizes_parse() {
+        assert_eq!(parse_bytes("1048576"), Ok(1 << 20));
+        assert_eq!(parse_bytes("500m"), Ok(500 << 20));
+        assert_eq!(parse_bytes("2G"), Ok(2 << 30));
+        assert_eq!(parse_bytes("3k"), Ok(3 << 10));
+        assert!(parse_bytes("lots").is_err());
+        assert!(parse_bytes("99999999999g").is_err(), "overflow is an error");
     }
 
     #[test]

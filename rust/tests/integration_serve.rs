@@ -1,0 +1,206 @@
+//! Serving-layer integration on the tiny config (requires `make
+//! artifacts`): greedy decode through `serve/` on a **packed artifact**
+//! must be token-identical to the XLA engine's full-context recompute at
+//! every step, for jobs ∈ {1, 4}, batch sizes ∈ {1, 4}, and bits ∈
+//! {2, 3, 4, 8} — the DESIGN.md §11 acceptance contract.
+//!
+//! The engine recompute runs `embed_t32` + the `layer_fwd_t32` chain over
+//! the fully decoded sequences, then applies the final RMSNorm + head on
+//! the host: causal attention makes position i's hidden state depend only
+//! on tokens 0..=i, so one full-context forward checks every decode step
+//! at once.
+
+use std::path::PathBuf;
+
+use rsq::corpus::{CalibSet, CorpusKind};
+use rsq::model::ParamSet;
+use rsq::quant::{artifact, quantize, Method, QuantOptions};
+use rsq::runtime::{self, Engine};
+use rsq::serve::{serve, PackedModel, ServeOptions, ServeRequest};
+use rsq::train::train_or_load;
+use rsq::util::Pool;
+
+fn setup() -> (Engine, ParamSet, CalibSet) {
+    let eng = Engine::load("tiny").expect("run `make artifacts` first");
+    let cfg = eng.config().clone();
+    let (p, _) = train_or_load(&eng, 7, 150, false).unwrap();
+    let calib = CalibSet::generate(cfg.vocab, CorpusKind::Wiki, 8, 64, 7, 1);
+    (eng, p, calib)
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("rsq_int_serve_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn rmsnorm_gain(x: &[f32], g: &[f32]) -> Vec<f32> {
+    let mut ss = 0.0f32;
+    for &v in x {
+        ss += v * v;
+    }
+    let r = 1.0 / (ss / x.len() as f32 + 1e-6).sqrt();
+    x.iter().zip(g).map(|(v, gv)| v * r * gv).collect()
+}
+
+/// Per-position greedy argmax of the engine's full-context forward over
+/// `seqs` (each of length `t`): embed + layer chain on the engine, final
+/// norm + head on the host.
+fn engine_stepwise_argmax(
+    eng: &Engine,
+    params: &ParamSet,
+    seqs: &[Vec<i32>],
+    t: usize,
+) -> Vec<Vec<usize>> {
+    let cfg = eng.config().clone();
+    let p_lits = params
+        .tensors
+        .iter()
+        .map(runtime::tensor_literal)
+        .collect::<anyhow::Result<Vec<_>>>()
+        .unwrap();
+    let mut out = Vec::with_capacity(seqs.len());
+    let mut i = 0;
+    while i < seqs.len() {
+        let mut batch: Vec<Vec<i32>> = Vec::with_capacity(cfg.batch);
+        for k in 0..cfg.batch {
+            batch.push(seqs[(i + k).min(seqs.len() - 1)].clone());
+        }
+        let tok = runtime::tokens_literal(&batch, t).unwrap();
+        let emb_ins = vec![tok, p_lits[0].clone(), p_lits[1].clone()];
+        let mut z = eng
+            .exec(&format!("embed_t{t}"), &emb_ins)
+            .unwrap()
+            .into_iter()
+            .next()
+            .unwrap();
+        for l in 0..cfg.layers {
+            let mut ins = vec![z];
+            for k in 0..9 {
+                ins.push(p_lits[2 + l * 9 + k].clone());
+            }
+            z = eng
+                .exec(&format!("layer_fwd_t{t}"), &ins)
+                .unwrap()
+                .into_iter()
+                .next()
+                .unwrap();
+        }
+        let zt = runtime::literal_tensor(&z).unwrap(); // [B, t, d]
+        let gf = &params.tensors[params.tensors.len() - 2].data;
+        let head = &params.tensors[params.tensors.len() - 1];
+        let d = cfg.d;
+        let take = cfg.batch.min(seqs.len() - i);
+        for b in 0..take {
+            let mut rows = Vec::with_capacity(t);
+            for pos in 0..t {
+                let zrow = &zt.data[(b * t + pos) * d..(b * t + pos + 1) * d];
+                let h = rmsnorm_gain(zrow, gf);
+                let mut best = 0usize;
+                let mut best_v = f32::NEG_INFINITY;
+                for (v, hrow) in (0..cfg.vocab).map(|v| (v, head.row(v))) {
+                    let mut dot = 0.0f32;
+                    for (a, bx) in h.iter().zip(hrow) {
+                        dot += a * bx;
+                    }
+                    if dot > best_v {
+                        best_v = dot;
+                        best = v;
+                    }
+                }
+                rows.push(best);
+            }
+            out.push(rows);
+        }
+        i += cfg.batch;
+    }
+    out
+}
+
+/// The acceptance sweep: decode on the packed artifact, recompute on the
+/// engine, compare every step.
+#[test]
+fn packed_decode_matches_engine_recompute_every_step() {
+    let (eng, p, calib) = setup();
+    let t = 32usize;
+    let prompt_len = 2usize;
+    let max_new = t - prompt_len; // consumed positions stay within t
+    for bits in [2u32, 3, 4, 8] {
+        let opts = QuantOptions::new(Method::Rsq, bits, t);
+        let (q, report) = quantize(&eng, &p, &calib, &opts).unwrap();
+        let dir = tmpdir(&format!("bits{bits}"));
+        artifact::save(&dir, &q, &report, &opts).unwrap();
+        let (model, manifest) = PackedModel::load(&dir).unwrap();
+        assert_eq!(manifest.bits, bits);
+        assert!(model.packed_weights() > 0, "bits={bits}: nothing packed");
+
+        let requests: Vec<ServeRequest> = (0..4u64)
+            .map(|i| {
+                let prompt = calib.samples[i as usize][..prompt_len].to_vec();
+                ServeRequest::new(i, prompt, max_new)
+            })
+            .collect();
+        // serve at every (batch, jobs) combination — tokens must agree
+        // across all of them (determinism) ...
+        let mut decoded: Option<Vec<Vec<i32>>> = None;
+        for batch in [1usize, 4] {
+            for jobs in [1usize, 4] {
+                let pool = Pool::new(jobs);
+                let opts = ServeOptions { max_batch: batch, ..Default::default() };
+                let rep = serve(&model, &pool, requests.clone(), &opts).unwrap();
+                let toks: Vec<Vec<i32>> =
+                    rep.requests.iter().map(|r| r.generated.clone()).collect();
+                match &decoded {
+                    None => decoded = Some(toks),
+                    Some(want) => {
+                        assert_eq!(&toks, want, "bits={bits} batch={batch} jobs={jobs}")
+                    }
+                }
+            }
+        }
+        // ... and against the engine's full-context recompute at every
+        // single step
+        let decoded = decoded.unwrap();
+        let seqs: Vec<Vec<i32>> = requests
+            .iter()
+            .zip(&decoded)
+            .map(|(r, gen)| {
+                let mut s = r.prompt.clone();
+                s.extend_from_slice(gen);
+                assert_eq!(s.len(), t, "bits={bits}");
+                s
+            })
+            .collect();
+        let engine_argmax = engine_stepwise_argmax(&eng, &q, &seqs, t);
+        for (si, (gen, am)) in decoded.iter().zip(&engine_argmax).enumerate() {
+            for (step, &tok) in gen.iter().enumerate() {
+                let pos = prompt_len + step - 1;
+                assert_eq!(
+                    am[pos] as i32, tok,
+                    "bits={bits} seq={si} step={step}: serve decode diverged from the \
+                     engine's full-context argmax"
+                );
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// The artifact-loaded serving model and the in-memory quantized set must
+/// agree: serving the artifact equals serving the ParamSet it was saved
+/// from (load is bit-faithful, so this pins the serve loader too).
+#[test]
+fn artifact_and_in_memory_models_decode_identically() {
+    let (eng, p, calib) = setup();
+    let opts = QuantOptions::new(Method::Rsq, 3, 32);
+    let (q, report) = quantize(&eng, &p, &calib, &opts).unwrap();
+    let dir = tmpdir("inmem");
+    artifact::save(&dir, &q, &report, &opts).unwrap();
+    let (from_artifact, _) = PackedModel::load(&dir).unwrap();
+    let dense = PackedModel::from_paramset_dense(&q).unwrap();
+    let prompt = calib.samples[0][..3].to_vec();
+    let a = rsq::serve::greedy_decode(&from_artifact, &prompt, 24, None).unwrap();
+    let b = rsq::serve::greedy_decode(&dense, &prompt, 24, None).unwrap();
+    assert_eq!(a, b, "packed-domain decode != dense decode of the same weights");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -51,7 +51,7 @@ fn prop_pack_roundtrip_exact_all_bit_widths() {
                     Ok(p) => p,
                     Err(_) => return false,
                 };
-                let u = p.unpack();
+                let u = p.unpack(None);
                 u.shape == t.shape
                     && u.data.iter().zip(&t.data).all(|(a, b)| a.to_bits() == b.to_bits())
             },
@@ -75,7 +75,7 @@ fn prop_pack_roundtrip_rtn_grids() {
                 let grid = RowGrid { scale, zero };
                 match PackedRows::pack(&q, bits, &grid) {
                     Ok(p) => {
-                        let u = p.unpack();
+                        let u = p.unpack(None);
                         u.data.iter().zip(&q.data).all(|(a, b)| a.to_bits() == b.to_bits())
                     }
                     Err(_) => false,
@@ -100,8 +100,9 @@ fn prop_degenerate_rows_roundtrip() {
                     t.set2(1, c, grid.scale[1] * (maxq as f32 - grid.zero[1]));
                 }
                 let p = PackedRows::pack(&t, bits, &grid).unwrap();
+                let u = p.unpack(None);
                 (0..size).all(|c| p.code(0, c) == 0 && p.code(1, c) == maxq)
-                    && p.unpack().data.iter().zip(&t.data).all(|(a, b)| a.to_bits() == b.to_bits())
+                    && u.data.iter().zip(&t.data).all(|(a, b)| a.to_bits() == b.to_bits())
             })
         });
 }

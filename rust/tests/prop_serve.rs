@@ -1,0 +1,224 @@
+//! Serving-layer property tests (DESIGN.md §11) — all host-side, no AOT
+//! artifacts required:
+//!
+//! - the fused dequantize kernels are **exactly** equal (bitwise, no
+//!   tolerance) to `unpack()` + `gemm_bt` over every supported bit width,
+//!   ragged and degenerate shapes, and jobs ∈ {1, 4};
+//! - `PackedRows::unpack(Some(pool))` is bit-identical to the serial
+//!   decode;
+//! - greedy KV-cache decode is token-identical to the full-context
+//!   matrix recompute at every step (and the final position's log-probs
+//!   are bit-identical);
+//! - continuous batching returns exactly the solo-decode tokens for
+//!   every (batch, jobs) combination, under page-pool pressure, and
+//!   surfaces missed deadlines.
+
+use rsq::model::config::ModelConfig;
+use rsq::model::ParamSet;
+use rsq::quantref;
+use rsq::serve::{greedy_decode, serve, PackedModel, ServeOptions, ServeRequest};
+use rsq::tensor::kernels::{deq_gemm_bt, deq_gemv, gemm_bt};
+use rsq::tensor::pack::{PackedRows, RowGrid, PACK_BITS};
+use rsq::tensor::Tensor;
+use rsq::util::{Pcg, Pool};
+
+/// RTN-quantize a random [rows, cols] matrix so it packs exactly.
+fn packed(rows: usize, cols: usize, bits: u32, rng: &mut Pcg) -> PackedRows {
+    let w = Tensor::randn(&[rows, cols], 1.0, rng);
+    let maxq = ((1u64 << bits) - 1) as f32;
+    let q = quantref::rtn(&w, maxq);
+    let (scale, zero) = quantref::row_grid(&w, maxq);
+    PackedRows::pack(&q, bits, &RowGrid { scale, zero }).unwrap()
+}
+
+/// Activations with exact zeros sprinkled in so the zero-skip path stays
+/// live (the §10 contract the fused kernels must reproduce).
+fn acts(m: usize, k: usize, rng: &mut Pcg) -> Tensor {
+    let data = (0..m * k)
+        .map(|_| if rng.f32() < 0.2 { 0.0 } else { rng.normal() })
+        .collect();
+    Tensor::from_vec(&[m, k], data)
+}
+
+fn assert_bits_eq(a: &Tensor, b: &Tensor, what: &str) {
+    assert_eq!(a.shape, b.shape, "{what}");
+    for (x, y) in a.data.iter().zip(&b.data) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}");
+    }
+}
+
+#[test]
+fn fused_kernels_match_unpack_gemm_exactly() {
+    let mut rng = Pcg::new(31);
+    // ragged shapes: widths that straddle byte boundaries for every bit
+    // width, single rows/cols, and a tile-crossing k (> 256)
+    for (m, k, n) in [
+        (1usize, 1usize, 1usize),
+        (1, 7, 5),
+        (3, 19, 33),
+        (4, 64, 16),
+        (2, 300, 11),
+        (5, 37, 1),
+    ] {
+        let a = acts(m, k, &mut rng);
+        for bits in PACK_BITS {
+            let w = packed(n, k, bits, &mut rng);
+            let want = gemm_bt(&a, &w.unpack(None), None);
+            for jobs in [1usize, 4] {
+                let pool = Pool::new(jobs);
+                let pooled_ref = gemm_bt(&a, &w.unpack(Some(&pool)), Some(&pool));
+                assert_bits_eq(&pooled_ref, &want, "reference jobs-invariance");
+                for p in [None, Some(&pool)] {
+                    let got = deq_gemm_bt(&a, &w, p);
+                    let what = format!("deq_gemm_bt {m}x{k}x{n} bits={bits} jobs={jobs}");
+                    assert_bits_eq(&got, &want, &what);
+                    for i in 0..m {
+                        let gv = deq_gemv(a.row(i), &w, p);
+                        assert_eq!(gv, want.row(i), "deq_gemv row {i} bits={bits} jobs={jobs}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_kernels_degenerate_shapes() {
+    let mut rng = Pcg::new(32);
+    for bits in PACK_BITS {
+        // empty activation batch
+        let w = packed(6, 9, bits, &mut rng);
+        let empty = Tensor::zeros(&[0, 9]);
+        let out = deq_gemm_bt(&empty, &w, None);
+        assert_eq!(out.shape, vec![0, 6]);
+        // all-zero activations: zero-skip leaves exact +0.0 everywhere
+        let zeros = Tensor::zeros(&[2, 9]);
+        let out = deq_gemm_bt(&zeros, &w, Some(&Pool::new(4)));
+        assert_eq!(out.data, vec![0.0; 12]);
+        assert_bits_eq(&out, &gemm_bt(&zeros, &w.unpack(None), None), "zero acts");
+    }
+}
+
+#[test]
+fn unpack_is_pool_invariant_across_bits_and_ragged_shapes() {
+    let mut rng = Pcg::new(33);
+    for (rows, cols) in [(1usize, 1usize), (3, 5), (17, 31), (40, 65)] {
+        for bits in PACK_BITS {
+            let w = packed(rows, cols, bits, &mut rng);
+            let serial = w.unpack(None);
+            for jobs in [1usize, 4] {
+                let pool = Pool::new(jobs);
+                let what = format!("{rows}x{cols}@{bits}b j{jobs}");
+                assert_bits_eq(&w.unpack(Some(&pool)), &serial, &what);
+            }
+        }
+    }
+}
+
+fn host_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "prop-serve".into(),
+        d: 32,
+        layers: 2,
+        heads: 2,
+        ff: 64,
+        vocab: 64,
+        max_seq: 40,
+        batch: 2,
+        seq_lens: vec![8, 40],
+        ldlq_k: 64,
+        ldlq_g: 4,
+    }
+}
+
+#[test]
+fn kv_decode_token_identical_to_full_context_recompute() {
+    let p = ParamSet::init(&host_cfg(), 41);
+    let prompt = [5i32, 9, 2, 14];
+    for bits in PACK_BITS {
+        let model = PackedModel::from_paramset_rtn(&p, bits).unwrap();
+        for jobs in [1usize, 4] {
+            let pool = Pool::new(jobs);
+            let gen = greedy_decode(&model, &prompt, 20, Some(&pool)).unwrap();
+            assert_eq!(gen.len(), 20, "bits={bits}");
+            let mut seq = prompt.to_vec();
+            seq.extend_from_slice(&gen);
+            // full-context matrix recompute over the whole decoded
+            // sequence: causality makes row i equal a fresh forward over
+            // tokens 0..=i, so this checks EVERY decode step at once
+            let full = model.logits_full(&seq, Some(&pool));
+            for (step, &tok) in gen.iter().enumerate() {
+                let row = full.row(prompt.len() + step - 1);
+                assert_eq!(
+                    rsq::eval::argmax(row) as i32,
+                    tok,
+                    "bits={bits} jobs={jobs} step={step}: KV decode diverged from recompute"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_serving_equals_solo_decode_and_is_jobs_invariant() {
+    let p = ParamSet::init(&host_cfg(), 42);
+    let model = PackedModel::from_paramset_rtn(&p, 3).unwrap();
+    let requests: Vec<ServeRequest> = (0..6u64)
+        .map(|i| ServeRequest::new(i, vec![(i as i32) % 11 + 1, 3, 7], 5 + (i as usize) % 4))
+        .collect();
+    let solo: Vec<Vec<i32>> = requests
+        .iter()
+        .map(|r| greedy_decode(&model, &r.prompt, r.max_new, None).unwrap())
+        .collect();
+    for batch in [1usize, 4] {
+        for jobs in [1usize, 4] {
+            let pool = Pool::new(jobs);
+            let opts = ServeOptions { max_batch: batch, ..Default::default() };
+            let rep = serve(&model, &pool, requests.clone(), &opts).unwrap();
+            assert_eq!(rep.requests.len(), requests.len());
+            assert!(rep.peak_active <= batch);
+            assert!(rep.tokens_per_s > 0.0);
+            for (r, want) in rep.requests.iter().zip(&solo) {
+                assert_eq!(&r.generated, want, "id={} batch={batch} jobs={jobs}", r.id);
+                assert!(!r.deadline_missed);
+            }
+        }
+    }
+}
+
+#[test]
+fn page_pool_pressure_admits_mid_flight_without_changing_tokens() {
+    let p = ParamSet::init(&host_cfg(), 43);
+    let model = PackedModel::from_paramset_rtn(&p, 4).unwrap();
+    let requests: Vec<ServeRequest> =
+        (0..5u64).map(|i| ServeRequest::new(i, vec![1, 2, (i as i32) + 3], 8)).collect();
+    let solo: Vec<Vec<i32>> = requests
+        .iter()
+        .map(|r| greedy_decode(&model, &r.prompt, r.max_new, None).unwrap())
+        .collect();
+    // pool sized for exactly one worst-case reservation: admissions must
+    // serialize through retire-and-release, and tokens must not change
+    let probe = rsq::serve::PagePool::new(model.cfg.layers, model.cfg.d, 0, 0);
+    let pages = probe.pages_for(3 + 8);
+    let opts = ServeOptions { max_batch: 4, page: 0, pages };
+    let rep = serve(&model, &Pool::new(2), requests, &opts).unwrap();
+    assert_eq!(rep.peak_active, 1);
+    for (r, want) in rep.requests.iter().zip(&solo) {
+        assert_eq!(&r.generated, want, "id={}", r.id);
+    }
+}
+
+#[test]
+fn deadlines_are_surfaced_per_request() {
+    let p = ParamSet::init(&host_cfg(), 44);
+    let model = PackedModel::from_paramset_rtn(&p, 4).unwrap();
+    let mut missed = ServeRequest::new(0, vec![1, 2], 12);
+    missed.deadline_s = Some(0.0);
+    let fine = ServeRequest::new(1, vec![1, 2], 4);
+    let rep = serve(&model, &Pool::new(2), vec![missed, fine], &ServeOptions::default()).unwrap();
+    assert!(rep.requests[0].deadline_missed);
+    assert!(rep.requests[0].generated.len() < 12);
+    assert!(!rep.requests[1].deadline_missed);
+    assert_eq!(rep.requests[1].generated.len(), 4);
+    assert!(rep.requests[1].ttft_s.is_some());
+}

@@ -84,10 +84,12 @@ if [ -d rust/src/quant/artifact ]; then
         fail=1
     fi
     sec9=$(awk '/^## 9\./{f=1; print; next} /^## /{f=0} f' DESIGN.md)
+    # herestrings, not printf|grep: under pipefail, `grep -q` exiting at
+    # an early match can SIGPIPE the printf and fail a passing check
     for needle in "quant/artifact" "artifact format version 1" "hess-cache" \
                   "rot_seed" "strategy" "corpus" "model parameters" \
                   "bit-packed" "artifact.txt" "weights.bin"; do
-        if ! printf '%s\n' "${sec9}" | grep -q "${needle}"; then
+        if ! grep -q "${needle}" <<< "${sec9}"; then
             echo "check-docs: FAIL — DESIGN.md §9 never mentions \"${needle}\" (artifact/cache contract drift)" >&2
             fail=1
         fi
@@ -106,14 +108,35 @@ if [ -d rust/src/tensor/kernels ]; then
     sec10=$(awk '/^## 10\./{f=1; print; next} /^## /{f=0} f' DESIGN.md)
     for needle in "tensor/kernels" "gemm_at" "gemm_bt" "syrk" "row block" \
                   "cholesky_lower" "tri_inv_lower" "zero-skip" "reference kernel"; do
-        if ! printf '%s\n' "${sec10}" | grep -qi "${needle}"; then
+        if ! grep -qi "${needle}" <<< "${sec10}"; then
             echo "check-docs: FAIL — DESIGN.md §10 never mentions \"${needle}\" (host-kernel contract drift)" >&2
             fail=1
         fi
     done
 fi
 
-[ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler/artifact/kernel docs OK"
+# The serving layer: if rust/src/serve exists, §11 must document the
+# fused dequantize kernels, the KV-cache layout, the continuous-batching
+# semantics, and the determinism guarantee — the contract `rsq generate`
+# / `rsq serve-bench` and the serve tests lean on. Needles are grepped
+# inside the §11 body only, same scoping rationale as §9.
+if [ -d rust/src/serve ]; then
+    if ! grep -qE "^## 11\." DESIGN.md; then
+        echo "check-docs: FAIL — rust/src/serve exists but DESIGN.md has no '## 11.' section" >&2
+        fail=1
+    fi
+    sec11=$(awk '/^## 11\./{f=1; print; next} /^## /{f=0} f' DESIGN.md)
+    for needle in "tensor/kernels/gemv" "deq_gemm_bt" "deq_gemv" "KV cache" \
+                  "continuous-batching" "paged" "padded-free" "deadline" \
+                  "token-identical" "rsq generate" "serve-bench" "tokens/s"; do
+        if ! grep -qi "${needle}" <<< "${sec11}"; then
+            echo "check-docs: FAIL — DESIGN.md §11 never mentions \"${needle}\" (serving-layer contract drift)" >&2
+            fail=1
+        fi
+    done
+fi
+
+[ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler/artifact/kernel/serve docs OK"
 
 # --- 3+4. rustdoc + rustfmt ------------------------------------------------
 if [ "${CHECK_DOCS_SKIP_CARGO:-0}" = "1" ]; then

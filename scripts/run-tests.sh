@@ -32,4 +32,46 @@ echo "run-tests: cargo build --release"
 cargo build --release
 echo "run-tests: cargo test -q"
 cargo test -q
+
+# Serve smoke (DESIGN.md §11): greedy-decode the golden fixture artifact
+# — a tiny, committed, byte-reproducible packed artifact — through `rsq
+# generate` and assert the token output is non-empty and identical
+# across two runs (the serving layer's determinism contract). Fully
+# host-side: needs no AOT artifact set and no PJRT.
+echo "run-tests: serve smoke (rsq generate on tests/data/artifact_ok)"
+smoke_log="$(mktemp)"
+smoke() {
+    cargo run --release --quiet -- generate \
+        --artifact tests/data/artifact_ok --prompt 1,2 --max-new 5 2>"${smoke_log}"
+}
+# || disarms set -e so a decode failure prints its captured stderr
+# instead of silently killing the script at the assignment
+out1="$(smoke)" || {
+    echo "run-tests: FAIL — serve smoke (rsq generate) exited non-zero:" >&2
+    cat "${smoke_log}" >&2
+    exit 1
+}
+out2="$(smoke)" || {
+    echo "run-tests: FAIL — serve smoke second run exited non-zero:" >&2
+    cat "${smoke_log}" >&2
+    exit 1
+}
+rm -f "${smoke_log}"
+if [ -z "${out1}" ]; then
+    echo "run-tests: FAIL — serve smoke produced no output" >&2
+    exit 1
+fi
+# herestring, not printf|grep: under pipefail an early grep -q match can
+# SIGPIPE the printf and flake a passing check (see check-docs.sh)
+if ! grep -q '^generated' <<< "${out1}"; then
+    echo "run-tests: FAIL — serve smoke output has no 'generated' line:" >&2
+    printf '%s\n' "${out1}" >&2
+    exit 1
+fi
+if [ "${out1}" != "${out2}" ]; then
+    echo "run-tests: FAIL — serve smoke output is not deterministic across runs" >&2
+    printf 'run 1:\n%s\nrun 2:\n%s\n' "${out1}" "${out2}" >&2
+    exit 1
+fi
+echo "run-tests: serve smoke OK"
 echo "run-tests: OK"

@@ -8,10 +8,18 @@
 //! Grid: batch × context × jobs × bits, reporting greedy-decode tokens/s
 //! through the continuous-batching scheduler plus, per bit width, the
 //! packed-vs-unpacked resident-bytes ratio — the deployment memory win
-//! the packed-domain kernels preserve at decode time.
+//! the packed-domain kernels preserve at decode time. A kv-bits axis
+//! (DESIGN.md §12) then sweeps `--kv-bits {32,8,2}` KV storage under a
+//! shared byte budget, reporting the KV resident-bytes ratio and greedy
+//! token divergence vs the f32 oracle — and **asserts** the per-cell
+//! prompt-RNG re-seed holds across the kv axis (every kv cell decodes
+//! identical requests), the invariant that keeps rows comparable.
 
 use rsq::model::ParamSet;
-use rsq::serve::{bench_model_config, serve, PackedModel, ServeOptions, ServeRequest};
+use rsq::serve::{
+    bench_model_config, greedy_decode, serve, token_divergence, KvFormat, PackedModel, PagePool,
+    ServeOptions, ServeRequest, KV_BITS,
+};
 use rsq::tensor::kernels::{deq_gemv, gemm_bt};
 use rsq::tensor::pack::PACK_BITS;
 use rsq::tensor::Tensor;
@@ -106,6 +114,69 @@ fn main() -> anyhow::Result<()> {
                 }
             }
         }
+    }
+
+    println!("--- kv-bits axis: KV storage width under a shared byte budget ---");
+    let model = PackedModel::from_paramset_rtn(&p, 4)?;
+    let (ctx, batch, prompt_len) = (64usize, 4usize, 4usize);
+    let max_new = ctx - prompt_len;
+    let pool = Pool::new(4);
+    // budget: two f32 worst-case reservations, so narrower KV formats
+    // surface their admission gains as higher peak occupancy
+    let probe = PagePool::new(cfg.layers, cfg.d, 0, 0);
+    let budget = 2 * probe.pages_for(ctx) * probe.page_bytes_f32();
+    let cell_requests = || -> Vec<ServeRequest> {
+        // re-seeded per cell — the same pattern as the grid above
+        let mut rng = Pcg::new(11);
+        (0..batch as u64)
+            .map(|id| {
+                let prompt = (0..prompt_len).map(|_| rng.below(cfg.vocab) as i32).collect();
+                ServeRequest::new(id, prompt, max_new)
+            })
+            .collect()
+    };
+    let baseline = cell_requests();
+    let oracle: Vec<Vec<i32>> = baseline
+        .iter()
+        .map(|r| greedy_decode(&model, &r.prompt, r.max_new, Some(&pool)))
+        .collect::<anyhow::Result<_>>()?;
+    for bits in KV_BITS {
+        let kv = KvFormat::from_bits(bits).expect("KV_BITS entries all parse");
+        let requests = cell_requests();
+        // the satellite invariant: the per-cell RNG re-seed must hold
+        // across the kv axis too, or rows stop being comparable
+        assert_eq!(
+            requests, baseline,
+            "kv-bits={bits}: per-cell prompt-RNG re-seed broke across the kv axis"
+        );
+        let opts = ServeOptions { max_batch: batch, pool_bytes: budget, kv, ..Default::default() };
+        let mut tokens = 0usize;
+        let mut divergence = 0usize;
+        let mut resident = (0usize, 0usize);
+        let s = Bench::new(&format!("serve/decode_kv{bits}_ctx{ctx}_b{batch}"))
+            .warmup(1)
+            .samples(3)
+            .iter(|| {
+                let rep = serve(&model, &pool, requests.clone(), &opts).unwrap();
+                tokens = rep.generated_tokens;
+                divergence = rep
+                    .requests
+                    .iter()
+                    .zip(&oracle)
+                    .map(|(r, o)| token_divergence(o, &r.generated))
+                    .sum();
+                resident = (rep.kv_resident_bytes, rep.kv_resident_f32_bytes);
+                rep
+            })
+            .report();
+        assert!(bits != 32 || divergence == 0, "kv-bits 32 is the oracle itself");
+        println!(
+            "    ~ {:.1} tok/s  kv {} B vs {} B f32 ({:.2}x), divergence {divergence}",
+            tokens as f64 / s,
+            resident.0,
+            resident.1,
+            resident.1 as f64 / (resident.0.max(1)) as f64
+        );
     }
     Ok(())
 }

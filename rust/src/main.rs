@@ -231,12 +231,17 @@ fn check_flags(cmd: &str, args: &Args, known: &[&str], valued: &[&str]) -> Resul
 /// stderr. Unknown flags fail fast instead of being silently ignored.
 fn cmd_generate(args: &Args) -> Result<()> {
     const KNOWN: &[&str] = &[
-        "artifact", "model", "config", "prompt", "prompt-len", "seed", "max-new", "jobs",
-        "verbose",
+        "artifact", "model", "config", "prompt", "prompt-len", "seed", "max-new", "kv-bits",
+        "jobs", "verbose",
     ];
-    const VALUED: &[&str] =
-        &["artifact", "model", "config", "prompt", "prompt-len", "seed", "max-new", "jobs"];
+    const VALUED: &[&str] = &[
+        "artifact", "model", "config", "prompt", "prompt-len", "seed", "max-new", "kv-bits",
+        "jobs",
+    ];
     check_flags("generate", args, KNOWN, VALUED)?;
+    let kv = serve::KvFormat::from_bits(args.kv_bits()).ok_or_else(|| {
+        anyhow!("--kv-bits: unsupported width {} (supported: 32, 8, 2)", args.kv_bits())
+    })?;
     if let Err(e) = args.conflict("artifact", "model") {
         bail!("{e}");
     }
@@ -291,13 +296,13 @@ fn cmd_generate(args: &Args) -> Result<()> {
     }
     let max_new = args.usize_or("max-new", 16);
     let t0 = Instant::now();
-    let gen = serve::greedy_decode(&model, &prompt, max_new, Some(&pool))?;
+    let gen = serve::greedy_decode_kv(&model, &prompt, max_new, kv, Some(&pool))?;
     let dt = t0.elapsed().as_secs_f64();
     let join = |ts: &[i32]| ts.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ");
     println!("prompt       : {}", join(&prompt));
     println!("generated    : {}", join(&gen));
     eprintln!(
-        "[generate] {} tokens in {dt:.3}s ({:.1} tok/s, jobs={})",
+        "[generate] {} tokens in {dt:.3}s ({:.1} tok/s, kv-bits={kv}, jobs={})",
         gen.len(),
         gen.len() as f64 / dt.max(1e-12),
         pool.jobs()
@@ -307,15 +312,20 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
 /// `rsq serve-bench` — serving throughput sweep: batch × context × jobs
 /// (× bits when no artifact pins them), printing tokens/s and the
-/// packed-vs-f32 resident-bytes ratio (DESIGN.md §11). Without
-/// `--artifact` it builds its own host-side RTN-packed synthetic model,
-/// so it runs anywhere — no artifacts, no XLA.
+/// packed-vs-f32 resident-bytes ratio (DESIGN.md §11), then a kv-bits
+/// axis (§12): each `--kv-bits` cell re-decodes the same prompts under a
+/// shared KV byte budget and reports the KV resident-bytes ratio, peak
+/// occupancy / page usage, and greedy-token divergence vs the f32 solo
+/// oracle. Without `--artifact` it builds its own host-side RTN-packed
+/// synthetic model, so it runs anywhere — no artifacts, no XLA.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     const KNOWN: &[&str] = &[
-        "artifact", "bits", "batches", "contexts", "jobs-sweep", "prompt-len", "seed", "verbose",
+        "artifact", "bits", "batches", "contexts", "jobs-sweep", "kv-bits", "prompt-len", "seed",
+        "verbose",
     ];
-    const VALUED: &[&str] =
-        &["artifact", "bits", "batches", "contexts", "jobs-sweep", "prompt-len", "seed"];
+    const VALUED: &[&str] = &[
+        "artifact", "bits", "batches", "contexts", "jobs-sweep", "kv-bits", "prompt-len", "seed",
+    ];
     check_flags("serve-bench", args, KNOWN, VALUED)?;
     let parse_list = |key: &str, default: &[&str]| -> Result<Vec<usize>> {
         args.list_or(key, default)
@@ -326,6 +336,14 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let batches = parse_list("batches", &["1", "4"])?;
     let contexts = parse_list("contexts", &["32", "64"])?;
     let jobs_sweep = parse_list("jobs-sweep", &["1", "4"])?;
+    let kv_bits = parse_list("kv-bits", &["32", "8", "2"])?;
+    let kv_formats = kv_bits
+        .iter()
+        .map(|&b| {
+            serve::KvFormat::from_bits(b as u32)
+                .ok_or_else(|| anyhow!("--kv-bits: unsupported width {b} (supported: 32, 8, 2)"))
+        })
+        .collect::<Result<Vec<_>>>()?;
     let prompt_len = args.usize_or("prompt-len", 4).max(1);
 
     println!("=== serve-bench: packed-domain host decode (DESIGN.md §11) ===");
@@ -380,6 +398,63 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                     );
                 }
             }
+        }
+        // kv-bits axis (DESIGN.md §12): one cell per --kv-bits width at
+        // the grid's largest batch/ctx/jobs. Every cell re-seeds the
+        // prompt RNG, so all kv cells decode IDENTICAL prompts (the same
+        // per-cell pattern as the grid above — bench_serve.rs asserts
+        // it), under one shared KV byte budget sized to two f32
+        // worst-case reservations so narrower formats show their
+        // admission gains as peak occupancy.
+        let kv_batch = batches.iter().copied().max().unwrap_or(1).max(1);
+        let ctx = contexts.iter().copied().max().unwrap_or(32).min(cfg.max_seq);
+        let max_new = ctx.saturating_sub(prompt_len).max(1);
+        let jobs = jobs_sweep.iter().copied().max().unwrap_or(1).max(1);
+        let pool = Pool::new(jobs);
+        let probe = serve::PagePool::new(cfg.layers, cfg.d, 0, 0);
+        let worst = (prompt_len + max_new).min(cfg.max_seq);
+        let budget = 2 * probe.pages_for(worst) * probe.page_bytes_f32();
+        println!(
+            "  kv-bits axis: batch={kv_batch} ctx={ctx} jobs={jobs}, KV budget {budget} B, \
+             divergence vs f32 solo oracle"
+        );
+        for kv in &kv_formats {
+            // re-seeded per kv cell: identical prompts along the axis
+            let mut rng = Pcg::new(args.u64_or("seed", 3));
+            let requests: Vec<serve::ServeRequest> = (0..kv_batch as u64)
+                .map(|id| {
+                    let prompt = (0..prompt_len).map(|_| rng.below(cfg.vocab) as i32).collect();
+                    serve::ServeRequest::new(id, prompt, max_new)
+                })
+                .collect();
+            let oracle: Vec<Vec<i32>> = requests
+                .iter()
+                .map(|r| serve::greedy_decode(model, &r.prompt, r.max_new, Some(&pool)))
+                .collect::<Result<_>>()?;
+            let opts = serve::ServeOptions {
+                max_batch: kv_batch,
+                pool_bytes: budget,
+                kv: *kv,
+                ..Default::default()
+            };
+            let rep = serve::serve(model, &pool, requests, &opts)?;
+            let divergence: usize = rep
+                .requests
+                .iter()
+                .zip(&oracle)
+                .map(|(r, o)| serve::token_divergence(o, &r.generated))
+                .sum();
+            println!(
+                "  kv={:<3} {:>9.1} tok/s  kv resident {:>8} B vs {:>8} B f32 ({:.2}x), \
+                 peak {} seqs / {} pages, divergence {divergence}",
+                rep.kv_bits,
+                rep.tokens_per_s,
+                rep.kv_resident_bytes,
+                rep.kv_resident_f32_bytes,
+                rep.kv_resident_f32_bytes as f64 / rep.kv_resident_bytes.max(1) as f64,
+                rep.peak_active,
+                rep.kv_peak_pages,
+            );
         }
     }
     Ok(())
@@ -518,8 +593,9 @@ fn print_help() {
                             packed artifact, host-side; --model PATH\n\
                             serves a checkpoint dense)\n\
            serve-bench      serving throughput sweep: batch x context x\n\
-                            jobs (x bits without --artifact); prints\n\
-                            tokens/s + packed-vs-f32 resident bytes\n\
+                            jobs (x bits without --artifact) plus a\n\
+                            kv-bits axis; prints tokens/s, packed-vs-f32\n\
+                            resident bytes, and KV divergence vs f32\n\
            cache            Hessian-cache maintenance: `rsq cache ls`,\n\
                             `rsq cache gc --max-age 30d --max-bytes 500m`\n\
            train            train a checkpoint on the synthetic corpus\n\
@@ -570,12 +646,17 @@ fn print_help() {
            --prompt-len N   seeded random prompt length (default 4)\n\
            --seed N         prompt RNG seed (default 0)\n\
            --max-new N      tokens to generate (default 16)\n\
+           --kv-bits W      KV-cache storage width 32|8|2 (default 32 =\n\
+                            exact f32; 8 = linear, 2 = log codec)\n\
          \n\
          serve-bench flags:\n\
            --batches A,B    batch sizes to sweep (default 1,4)\n\
            --contexts A,B   total context lengths (default 32,64)\n\
            --jobs-sweep A,B worker counts (default 1,4)\n\
            --bits A,B       bit widths, synthetic model only (default 2,3,4,8)\n\
+           --kv-bits A,B    KV widths for the kv axis (default 32,8,2);\n\
+                            each cell reports the KV resident-bytes\n\
+                            ratio + token divergence vs the f32 oracle\n\
          \n\
          cache gc flags:\n\
            --max-age D      evict entries older than D (90, 45m, 12h, 30d)\n\

@@ -32,12 +32,13 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::kv::PagePool;
+use super::kvq::KvFormat;
 use super::model::{Decoder, PackedModel};
 use crate::eval::argmax;
 use crate::util::Pool;
 
 /// One generation request.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServeRequest {
     /// caller-chosen id, echoed in [`RequestStats`]
     pub id: u64,
@@ -62,13 +63,21 @@ pub struct ServeOptions {
     /// KV page size in positions (0 = `kv::PAGE_POSITIONS`)
     pub page: usize,
     /// KV page-pool capacity in pages (0 = auto: enough for `max_batch`
-    /// worst-case sequences)
+    /// worst-case sequences, unless `pool_bytes` sizes it instead)
     pub pages: usize,
+    /// KV page-pool capacity as a **byte** budget (0 = off). Converted
+    /// to pages at the chosen `kv` format's page size — the admission
+    /// accounting where lower `--kv-bits` buys more pages, more
+    /// concurrent reservations, and higher peak occupancy under the same
+    /// memory budget. Ignored when `pages` is set explicitly.
+    pub pool_bytes: usize,
+    /// KV storage format (`--kv-bits`; default f32 = the exact path)
+    pub kv: KvFormat,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { max_batch: 4, page: 0, pages: 0 }
+        ServeOptions { max_batch: 4, page: 0, pages: 0, pool_bytes: 0, kv: KvFormat::F32 }
     }
 }
 
@@ -101,6 +110,15 @@ pub struct ServeReport {
     pub generated_tokens: usize,
     pub wall_s: f64,
     pub tokens_per_s: f64,
+    /// KV storage width served at (`--kv-bits`: 32, 8, or 2)
+    pub kv_bits: u32,
+    /// most pages simultaneously reserved from the pool
+    pub kv_peak_pages: usize,
+    /// peak KV bytes resident at `kv_bits` (`kv_peak_pages` × page size)
+    pub kv_resident_bytes: usize,
+    /// bytes the same peak page count would occupy at f32 — the
+    /// denominator of the KV resident-bytes ratio
+    pub kv_resident_f32_bytes: usize,
 }
 
 /// One in-flight sequence.
@@ -205,16 +223,24 @@ pub fn serve(
     }
     // positions a request reserves for its whole lifetime
     let worst = |r: &ServeRequest| (r.prompt.len() + r.max_new).min(cfg.max_seq);
-    let probe = PagePool::new(cfg.layers, cfg.d, opts.page, 0);
+    let probe = PagePool::with_format(opts.kv, cfg.layers, cfg.d, opts.page, 0);
     let max_pages = requests.iter().map(|r| probe.pages_for(worst(r))).max().unwrap_or(0);
-    let pages = if opts.pages == 0 { opts.max_batch * max_pages } else { opts.pages };
+    // explicit pages > byte budget > auto; a byte budget buys more pages
+    // (= more concurrent admissions) the narrower the KV format is
+    let pages = if opts.pages != 0 {
+        opts.pages
+    } else if opts.pool_bytes != 0 {
+        opts.pool_bytes / probe.page_bytes().max(1)
+    } else {
+        opts.max_batch * max_pages
+    };
     if pages < max_pages {
         bail!(
             "page pool of {pages} pages cannot fit the largest request ({max_pages} pages) — \
-             raise ServeOptions::pages"
+             raise ServeOptions::pages or pool_bytes"
         );
     }
-    let page_pool = PagePool::new(cfg.layers, cfg.d, opts.page, pages);
+    let page_pool = PagePool::with_format(opts.kv, cfg.layers, cfg.d, opts.page, pages);
 
     let t0 = Instant::now();
     let mut pending: VecDeque<ServeRequest> = requests.into();
@@ -222,6 +248,7 @@ pub fn serve(
     let mut done: Vec<RequestStats> = Vec::new();
     let mut steps = 0usize;
     let mut peak_active = 0usize;
+    let mut kv_peak_pages = 0usize;
     while !pending.is_empty() || !active.is_empty() {
         // admit while a slot and a full KV reservation are available
         while active.len() < opts.max_batch {
@@ -241,6 +268,7 @@ pub fn serve(
             }));
         }
         peak_active = peak_active.max(active.len());
+        kv_peak_pages = kv_peak_pages.max(page_pool.total_pages() - page_pool.free_pages());
         // one position per active sequence; the pool fans out across
         // sequences — with a single sequence it accelerates the
         // projections inside the step instead
@@ -272,6 +300,10 @@ pub fn serve(
         generated_tokens,
         wall_s,
         tokens_per_s: generated_tokens as f64 / wall_s.max(1e-12),
+        kv_bits: opts.kv.bits(),
+        kv_peak_pages,
+        kv_resident_bytes: kv_peak_pages * page_pool.page_bytes(),
+        kv_resident_f32_bytes: kv_peak_pages * page_pool.page_bytes_f32(),
         requests: done,
     })
 }
@@ -331,6 +363,9 @@ mod tests {
                     solo.iter().map(Vec::len).sum::<usize>(),
                     "batch={max_batch}"
                 );
+                assert_eq!(rep.kv_bits, 32);
+                assert!(rep.kv_peak_pages > 0);
+                assert_eq!(rep.kv_resident_bytes, rep.kv_resident_f32_bytes, "f32 ratio is 1");
             }
         }
     }
@@ -343,12 +378,75 @@ mod tests {
         // admit one at a time as pages are returned
         let probe = super::PagePool::new(m.cfg.layers, m.cfg.d, 0, 0);
         let pages = probe.pages_for(3 + 8);
-        let opts = ServeOptions { max_batch: 4, page: 0, pages };
+        let opts = ServeOptions { max_batch: 4, pages, ..Default::default() };
         let rep = serve(&m, &pool, reqs(4), &opts).unwrap();
         assert_eq!(rep.requests.len(), 4);
         assert_eq!(rep.peak_active, 1, "one reservation at a time");
         let solo = greedy_decode(&m, &[1, 2, 5], 6, None).unwrap();
         assert_eq!(rep.requests[0].generated, solo);
+    }
+
+    #[test]
+    fn quantized_batch_equals_quantized_solo_and_shrinks_resident_bytes() {
+        let m = model();
+        for kv in [KvFormat::Linear8, KvFormat::Log2] {
+            // the oracle for a lossy format is its own solo decode — the
+            // scheduler must not add any divergence of its own
+            let solo: Vec<Vec<i32>> = reqs(4)
+                .into_iter()
+                .map(|r| {
+                    crate::serve::model::greedy_decode_kv(&m, &r.prompt, r.max_new, kv, None)
+                        .unwrap()
+                })
+                .collect();
+            for max_batch in [1usize, 3] {
+                let pool = Pool::new(2);
+                let opts = ServeOptions { max_batch, kv, ..Default::default() };
+                let rep = serve(&m, &pool, reqs(4), &opts).unwrap();
+                for (r, want) in rep.requests.iter().zip(&solo) {
+                    assert_eq!(&r.generated, want, "kv={kv:?} id={} batch={max_batch}", r.id);
+                }
+                assert_eq!(rep.kv_bits, kv.bits());
+                assert!(
+                    rep.kv_resident_bytes < rep.kv_resident_f32_bytes,
+                    "kv={kv:?}: quantized pages must be smaller"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn byte_budget_admits_more_sequences_at_lower_kv_bits() {
+        let m = model();
+        let pool = Pool::new(2);
+        // one f32 worst-case reservation is 2 pages x 2048 B = 4096 B, so
+        // this budget serializes f32 admissions but fits two 8-bit ones
+        let budget = 4096usize;
+        let f32_opts =
+            ServeOptions { max_batch: 4, pool_bytes: budget, ..Default::default() };
+        let f32_rep = serve(&m, &pool, reqs(4), &f32_opts).unwrap();
+        assert_eq!(f32_rep.peak_active, 1, "budget admits one f32 sequence at a time");
+        let q_opts = ServeOptions {
+            max_batch: 4,
+            pool_bytes: budget,
+            kv: KvFormat::Linear8,
+            ..Default::default()
+        };
+        let q_rep = serve(&m, &pool, reqs(4), &q_opts).unwrap();
+        assert!(
+            q_rep.peak_active > f32_rep.peak_active,
+            "same byte budget must admit more 8-bit sequences ({} vs {})",
+            q_rep.peak_active,
+            f32_rep.peak_active
+        );
+        // explicit pages wins over the byte budget
+        let probe = super::PagePool::new(m.cfg.layers, m.cfg.d, 0, 0);
+        let both = ServeOptions {
+            pages: probe.pages_for(3 + 8),
+            pool_bytes: 1,
+            ..Default::default()
+        };
+        assert!(serve(&m, &pool, reqs(1), &both).is_ok());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Paged KV cache (DESIGN.md §11).
+//! Paged KV cache (DESIGN.md §11, §12).
 //!
 //! Decoding token t attends over every previous position's per-layer
 //! key/value projections. Recomputing them each step is the full-context
@@ -17,33 +17,95 @@
 //!   which is what lets the batch scheduler (`serve::batch`) admit new
 //!   requests mid-flight under a bounded memory budget.
 //!
+//! **Storage format.** Every page in a pool shares one [`KvFormat`]
+//! (`--kv-bits`): f32 rows stored verbatim (the exact path), or packed
+//! low-bit codes plus per-position-row scale state, quantized on write
+//! through `serve::kvq` and decoded row-at-a-time on read. A position is
+//! written exactly once (its own decode step), so per-row scale state
+//! never has to be revised by later writes, and a row's decoded value is
+//! independent of page size and of everything written after it.
+//!
 //! **Determinism.** Page identity carries no information — a sequence's
 //! contents are addressed purely through its own page table — so which
 //! physical pages a sequence happens to receive (an artifact of admission
-//! order) cannot affect any decoded value.
+//! order) cannot affect any decoded value. Quantized rows keep that
+//! property: encode and decode are pure per-row functions.
 
 use std::sync::Mutex;
+
+use super::kvq::{decode_row, encode_row, KvFormat, RowSource};
 
 /// Positions per page: small enough that short sequences waste little
 /// capacity, large enough that page tables stay tiny.
 pub const PAGE_POSITIONS: usize = 16;
 
+/// One half (k or v) of a page, in its storage domain.
+#[derive(Debug)]
+enum PageHalf {
+    /// `[page, d]` row-major f32 — read in place, never copied
+    F32(Vec<f32>),
+    /// `[page, row_code_bytes(d)]` packed codes + per-row scale state
+    Packed { codes: Vec<u8>, s0: Vec<f32>, s1: Vec<f32> },
+}
+
+impl PageHalf {
+    fn new(fmt: KvFormat, page: usize, d: usize) -> PageHalf {
+        match fmt {
+            KvFormat::F32 => PageHalf::F32(vec![0.0; page * d]),
+            _ => PageHalf::Packed {
+                codes: vec![0u8; page * fmt.row_code_bytes(d)],
+                s0: vec![0.0; page],
+                s1: vec![0.0; page],
+            },
+        }
+    }
+
+    /// Store row `r` (quantizing when packed; `encode_row` clears the
+    /// slot's code bytes first, so overwrites are safe).
+    fn write(&mut self, fmt: KvFormat, r: usize, d: usize, src: &[f32]) {
+        match self {
+            PageHalf::F32(data) => data[r * d..(r + 1) * d].copy_from_slice(src),
+            PageHalf::Packed { codes, s0, s1 } => {
+                let cb = fmt.row_code_bytes(d);
+                let (a, b) = encode_row(fmt, src, &mut codes[r * cb..(r + 1) * cb]);
+                s0[r] = a;
+                s1[r] = b;
+            }
+        }
+    }
+
+    /// Row `r`: the resident slice when f32, a decode into `scratch`
+    /// when packed.
+    fn row<'a>(&'a self, fmt: KvFormat, r: usize, d: usize, scratch: &'a mut [f32]) -> &'a [f32] {
+        match self {
+            PageHalf::F32(data) => &data[r * d..(r + 1) * d],
+            PageHalf::Packed { codes, s0, s1 } => {
+                let cb = fmt.row_code_bytes(d);
+                let out = &mut scratch[..d];
+                decode_row(fmt, &codes[r * cb..(r + 1) * cb], s0[r], s1[r], out);
+                out
+            }
+        }
+    }
+}
+
 /// One page: `page` positions of one layer's k and v rows.
 #[derive(Debug)]
 struct KvPage {
-    k: Vec<f32>,
-    v: Vec<f32>,
+    k: PageHalf,
+    v: PageHalf,
 }
 
 impl KvPage {
-    fn new(page: usize, d: usize) -> KvPage {
-        KvPage { k: vec![0.0; page * d], v: vec![0.0; page * d] }
+    fn new(fmt: KvFormat, page: usize, d: usize) -> KvPage {
+        KvPage { k: PageHalf::new(fmt, page, d), v: PageHalf::new(fmt, page, d) }
     }
 }
 
 /// Preallocated, shared page arena. Cheap to query, `Mutex`-guarded for
 /// the batch scheduler's concurrent retire/admit bookkeeping.
 pub struct PagePool {
+    fmt: KvFormat,
     layers: usize,
     d: usize,
     page: usize,
@@ -52,17 +114,45 @@ pub struct PagePool {
 }
 
 impl PagePool {
-    /// Preallocate `pages` pages for a `layers`-layer model with model
-    /// dim `d`, `page` positions per page (0 = [`PAGE_POSITIONS`]).
+    /// Preallocate `pages` f32 pages for a `layers`-layer model with
+    /// model dim `d`, `page` positions per page (0 = [`PAGE_POSITIONS`]).
     pub fn new(layers: usize, d: usize, page: usize, pages: usize) -> PagePool {
+        Self::with_format(KvFormat::F32, layers, d, page, pages)
+    }
+
+    /// [`PagePool::new`] with an explicit KV storage format
+    /// (`--kv-bits`); every page in the pool shares it.
+    pub fn with_format(
+        fmt: KvFormat,
+        layers: usize,
+        d: usize,
+        page: usize,
+        pages: usize,
+    ) -> PagePool {
         let page = if page == 0 { PAGE_POSITIONS } else { page };
-        let free = (0..pages).map(|_| KvPage::new(page, d)).collect();
-        PagePool { layers, d, page, total: pages, free: Mutex::new(free) }
+        let free = (0..pages).map(|_| KvPage::new(fmt, page, d)).collect();
+        PagePool { fmt, layers, d, page, total: pages, free: Mutex::new(free) }
+    }
+
+    /// Storage format every page in this pool uses.
+    pub fn format(&self) -> KvFormat {
+        self.fmt
     }
 
     /// Positions one page holds.
     pub fn page_positions(&self) -> usize {
         self.page
+    }
+
+    /// Resident bytes of one page at this pool's format.
+    pub fn page_bytes(&self) -> usize {
+        self.fmt.page_bytes(self.page, self.d)
+    }
+
+    /// Resident bytes the same page would occupy at f32 — the baseline
+    /// for the KV resident-bytes ratio `ServeReport` surfaces.
+    pub fn page_bytes_f32(&self) -> usize {
+        KvFormat::F32.page_bytes(self.page, self.d)
     }
 
     /// Pages a sequence of `positions` total positions reserves (its
@@ -94,7 +184,7 @@ impl PagePool {
         for _ in 0..self.layers {
             layers.push(free.split_off(free.len() - per_layer));
         }
-        Some(SeqKv { d: self.d, page: self.page, layers })
+        Some(SeqKv { fmt: self.fmt, d: self.d, page: self.page, layers })
     }
 
     /// Return a retired sequence's pages to the arena.
@@ -110,21 +200,32 @@ impl PagePool {
 /// once (during that position's decode step) and read by every later
 /// step's attention.
 pub struct SeqKv {
+    fmt: KvFormat,
     d: usize,
     page: usize,
     layers: Vec<Vec<KvPage>>,
 }
 
 impl SeqKv {
-    /// Pool-free cache for single-sequence decoding (`rsq generate`,
+    /// Pool-free f32 cache for single-sequence decoding (`rsq generate`,
     /// tests): owns exactly the pages `capacity` positions need.
     pub fn standalone(layers: usize, d: usize, capacity: usize) -> SeqKv {
+        Self::standalone_fmt(KvFormat::F32, layers, d, capacity)
+    }
+
+    /// [`SeqKv::standalone`] with an explicit KV storage format.
+    pub fn standalone_fmt(fmt: KvFormat, layers: usize, d: usize, capacity: usize) -> SeqKv {
         let page = PAGE_POSITIONS;
         let per_layer = capacity.div_ceil(page).max(1);
         let layers = (0..layers)
-            .map(|_| (0..per_layer).map(|_| KvPage::new(page, d)).collect())
+            .map(|_| (0..per_layer).map(|_| KvPage::new(fmt, page, d)).collect())
             .collect();
-        SeqKv { d, page, layers }
+        SeqKv { fmt, d, page, layers }
+    }
+
+    /// Storage format of this cache's pages.
+    pub fn format(&self) -> KvFormat {
+        self.fmt
     }
 
     pub fn num_layers(&self) -> usize {
@@ -141,27 +242,47 @@ impl SeqKv {
         self.layers.first().map_or(0, |pages| pages.len() * self.page)
     }
 
-    /// Store position `pos`'s k and v rows for `layer`.
+    /// Store position `pos`'s k and v rows for `layer` — quantizing on
+    /// write when the format is lossy.
     pub fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         assert!(pos < self.capacity(), "kv write past capacity: {pos}");
         assert_eq!(k.len(), self.d);
         assert_eq!(v.len(), self.d);
-        let (pi, off) = (pos / self.page, (pos % self.page) * self.d);
+        let (pi, r) = (pos / self.page, pos % self.page);
         let p = &mut self.layers[layer][pi];
-        p.k[off..off + self.d].copy_from_slice(k);
-        p.v[off..off + self.d].copy_from_slice(v);
+        p.k.write(self.fmt, r, self.d, k);
+        p.v.write(self.fmt, r, self.d, v);
     }
 
-    /// Position `pos`'s key row for `layer`.
-    pub fn k_at(&self, layer: usize, pos: usize) -> &[f32] {
-        let (pi, off) = (pos / self.page, (pos % self.page) * self.d);
-        &self.layers[layer][pi].k[off..off + self.d]
+    /// `layer`'s key rows as a [`RowSource`] for `attn_row` — the f32
+    /// format reads in place; lossy formats decode into the kernel's
+    /// scratch row, so no f32 page is ever rebuilt.
+    pub fn k_rows(&self, layer: usize) -> KvHalfRows<'_> {
+        let pages = &self.layers[layer];
+        KvHalfRows { fmt: self.fmt, d: self.d, page: self.page, pages, v: false }
     }
 
-    /// Position `pos`'s value row for `layer`.
-    pub fn v_at(&self, layer: usize, pos: usize) -> &[f32] {
-        let (pi, off) = (pos / self.page, (pos % self.page) * self.d);
-        &self.layers[layer][pi].v[off..off + self.d]
+    /// `layer`'s value rows as a [`RowSource`] (see [`SeqKv::k_rows`]).
+    pub fn v_rows(&self, layer: usize) -> KvHalfRows<'_> {
+        let pages = &self.layers[layer];
+        KvHalfRows { fmt: self.fmt, d: self.d, page: self.page, pages, v: true }
+    }
+}
+
+/// [`RowSource`] view over one layer's k **or** v rows of a [`SeqKv`].
+pub struct KvHalfRows<'s> {
+    fmt: KvFormat,
+    d: usize,
+    page: usize,
+    pages: &'s [KvPage],
+    v: bool,
+}
+
+impl RowSource for KvHalfRows<'_> {
+    fn row<'a>(&'a self, s: usize, scratch: &'a mut [f32]) -> &'a [f32] {
+        let (pi, r) = (s / self.page, s % self.page);
+        let half = if self.v { &self.pages[pi].v } else { &self.pages[pi].k };
+        half.row(self.fmt, r, self.d, scratch)
     }
 }
 
@@ -169,11 +290,18 @@ impl SeqKv {
 mod tests {
     use super::*;
 
+    fn read(kv: &SeqKv, layer: usize, pos: usize, v: bool) -> Vec<f32> {
+        let mut scratch = vec![0.0f32; kv.d()];
+        let rows = if v { kv.v_rows(layer) } else { kv.k_rows(layer) };
+        rows.row(pos, &mut scratch).to_vec()
+    }
+
     #[test]
     fn write_read_round_trip_across_pages() {
         let mut kv = SeqKv::standalone(2, 3, 40);
         assert_eq!(kv.capacity(), 48, "page-granular capacity");
         assert_eq!(kv.num_layers(), 2);
+        assert_eq!(kv.format(), KvFormat::F32);
         for pos in 0..40 {
             for layer in 0..2 {
                 let base = (layer * 100 + pos) as f32;
@@ -186,8 +314,45 @@ mod tests {
         for pos in [0usize, 15, 16, 17, 31, 32, 39] {
             for layer in 0..2 {
                 let base = (layer * 100 + pos) as f32;
-                assert_eq!(kv.k_at(layer, pos), &[base, base + 1.0, base + 2.0]);
-                assert_eq!(kv.v_at(layer, pos), &[-base, -base - 1.0, -base - 2.0]);
+                assert_eq!(read(&kv, layer, pos, false), &[base, base + 1.0, base + 2.0]);
+                assert_eq!(read(&kv, layer, pos, true), &[-base, -base - 1.0, -base - 2.0]);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_rows_are_read_in_place_not_from_scratch() {
+        let mut kv = SeqKv::standalone(1, 2, 4);
+        kv.write(0, 0, &[5.0, 6.0], &[7.0, 8.0]);
+        // poisoned scratch must not leak into an exact-format read
+        let mut scratch = vec![f32::NAN; 2];
+        assert_eq!(kv.k_rows(0).row(0, &mut scratch), &[5.0, 6.0]);
+        assert!(scratch.iter().all(|s| s.is_nan()), "f32 path never touches scratch");
+    }
+
+    #[test]
+    fn quantized_round_trip_is_bounded_and_deterministic() {
+        for fmt in [KvFormat::Linear8, KvFormat::Log2] {
+            let mut kv = SeqKv::standalone_fmt(fmt, 2, 4, 20);
+            assert_eq!(kv.format(), fmt);
+            for pos in 0..20 {
+                for layer in 0..2 {
+                    let base = (1 + layer * 50 + pos) as f32;
+                    let k = [base, -base, 0.5 * base, 0.0];
+                    kv.write(layer, pos, &k, &k);
+                }
+            }
+            for pos in [0usize, 15, 16, 19] {
+                for layer in 0..2 {
+                    let base = (1 + layer * 50 + pos) as f32;
+                    let got = read(&kv, layer, pos, false);
+                    // per-row max-abs bounds both codecs' absolute error
+                    for (g, w) in got.iter().zip([base, -base, 0.5 * base, 0.0]) {
+                        assert!((g - w).abs() <= base, "fmt={fmt:?} pos={pos}: {g} vs {w}");
+                    }
+                    assert_eq!(got, read(&kv, layer, pos, false), "decode must be deterministic");
+                    assert_eq!(got, read(&kv, layer, pos, true), "same row, same decode");
+                }
             }
         }
     }
@@ -220,6 +385,18 @@ mod tests {
         assert_eq!(pool.free_pages(), 10);
         // released pages are reusable
         assert!(pool.try_alloc(10).is_some());
+    }
+
+    #[test]
+    fn pool_format_flows_into_sequences_and_page_bytes() {
+        let pool = PagePool::with_format(KvFormat::Linear8, 2, 8, 4, 4);
+        assert_eq!(pool.format(), KvFormat::Linear8);
+        assert_eq!(pool.page_bytes(), KvFormat::Linear8.page_bytes(4, 8));
+        assert_eq!(pool.page_bytes_f32(), 2 * 4 * 4 * 8);
+        assert!(pool.page_bytes() < pool.page_bytes_f32());
+        let kv = pool.try_alloc(4).unwrap();
+        assert_eq!(kv.format(), KvFormat::Linear8);
+        pool.release(kv);
     }
 
     #[test]

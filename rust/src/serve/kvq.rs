@@ -1,0 +1,298 @@
+//! Quantized KV-cache codecs (DESIGN.md §12).
+//!
+//! At long contexts and high concurrency the paged KV cache — not the
+//! packed weights — dominates serving's resident bytes, capping how many
+//! requests the batch scheduler can admit. This module is the KV-side
+//! counterpart of the weight codec (`tensor::pack`): per-row (one
+//! position of one layer's k or v projection) lossy encodings selected
+//! by [`KvFormat`] and stored through the same LSB-first bitstream
+//! primitives (`pack::write_code`/`pack::read_code`, `pack::row_bytes`).
+//!
+//! Formats (`--kv-bits {32,8,2}`):
+//!
+//! - [`KvFormat::F32`] — today's exact path, byte-for-byte unchanged:
+//!   the oracle every lossy format is measured against;
+//! - [`KvFormat::Linear8`] — 8-bit affine per-row codec: codes
+//!   `round((v − lo) / step)` on the row's `[lo, hi]` span, absolute
+//!   error bounded by half the per-row step (`rust/tests/prop_kvq.rs`);
+//! - [`KvFormat::Log2`] — 2-bit log-distributed codec per **LogQuant**
+//!   (PAPERS.md): attention activations have log-distributed magnitude
+//!   profiles, so the two magnitude levels per sign sit geometrically at
+//!   `{M/4, M}` of the row max-abs `M`. Sign-correct, monotone in
+//!   magnitude, and idempotent (encode∘decode∘encode is a fixed point).
+//!
+//! **Non-finite policy.** Lossy codecs never emit garbage codes: row
+//! statistics (`lo`/`hi`/`M`) are folded over *finite* elements only,
+//! NaN clamps to the smallest code, ±inf to the span's matching end —
+//! all deterministic, pinned by `prop_kvq.rs`.
+//!
+//! **Exactness-oracle policy.** F32 stays the correctness oracle: every
+//! lossy path is *deterministic* (same inputs → same codes → same
+//! decode, invariant to jobs/batch/page pressure) and its greedy-token
+//! divergence against the F32 decode is measured, not assumed
+//! ([`token_divergence`], surfaced in `ServeReport` / `rsq serve-bench`).
+
+use crate::tensor::pack::{read_code, row_bytes, write_code};
+
+/// Storage format of one KV cache (`--kv-bits`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvFormat {
+    /// exact f32 rows — the PR-5 path and the divergence oracle
+    F32,
+    /// 8-bit affine per-row codec (codes 0..=255 on the row's span)
+    Linear8,
+    /// 2-bit log-distributed codec: sign bit + magnitude level {M/4, M}
+    Log2,
+}
+
+/// KV bit widths the CLI accepts, in `--kv-bits` spelling.
+pub const KV_BITS: [u32; 3] = [32, 8, 2];
+
+impl KvFormat {
+    /// Parse a `--kv-bits` value; `None` for anything outside
+    /// [`KV_BITS`].
+    pub fn from_bits(bits: u32) -> Option<KvFormat> {
+        match bits {
+            32 => Some(KvFormat::F32),
+            8 => Some(KvFormat::Linear8),
+            2 => Some(KvFormat::Log2),
+            _ => None,
+        }
+    }
+
+    /// The `--kv-bits` spelling of this format.
+    pub fn bits(&self) -> u32 {
+        match self {
+            KvFormat::F32 => 32,
+            KvFormat::Linear8 => 8,
+            KvFormat::Log2 => 2,
+        }
+    }
+
+    /// Whether decode reproduces written rows bit-for-bit.
+    pub fn is_exact(&self) -> bool {
+        matches!(self, KvFormat::F32)
+    }
+
+    /// Packed code bytes one d-length row occupies (`pack::row_bytes`
+    /// layout; 0 for the f32 format, which stores no codes).
+    pub fn row_code_bytes(&self, d: usize) -> usize {
+        match self {
+            KvFormat::F32 => 0,
+            KvFormat::Linear8 => row_bytes(d, 8),
+            KvFormat::Log2 => row_bytes(d, 2),
+        }
+    }
+
+    /// Per-row scale-state f32s a page stores alongside the codes
+    /// (Linear8: `(lo, step)`; Log2: `(M, unused)`; F32: none).
+    pub fn row_state_f32s(&self) -> usize {
+        if self.is_exact() {
+            0
+        } else {
+            2
+        }
+    }
+
+    /// Resident bytes of one k **or** v page half (`page` positions of
+    /// d-length rows) at this format.
+    pub fn half_page_bytes(&self, page: usize, d: usize) -> usize {
+        match self {
+            KvFormat::F32 => 4 * page * d,
+            _ => page * self.row_code_bytes(d) + 4 * page * self.row_state_f32s(),
+        }
+    }
+
+    /// Resident bytes of one full page (k + v halves) at this format.
+    pub fn page_bytes(&self, page: usize, d: usize) -> usize {
+        2 * self.half_page_bytes(page, d)
+    }
+}
+
+impl std::fmt::Display for KvFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.bits())
+    }
+}
+
+/// Quantize one row into `codes` (length `fmt.row_code_bytes(src.len())`,
+/// cleared here — safe to re-encode a slot) and return its scale state
+/// `(s0, s1)` for [`decode_row`]. Must not be called for [`KvFormat::F32`]
+/// (the exact path never materializes codes).
+pub fn encode_row(fmt: KvFormat, src: &[f32], codes: &mut [u8]) -> (f32, f32) {
+    debug_assert_eq!(codes.len(), fmt.row_code_bytes(src.len()));
+    codes.fill(0);
+    match fmt {
+        KvFormat::F32 => unreachable!("f32 KV rows are stored, not encoded"),
+        KvFormat::Linear8 => {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &v in src {
+                if v.is_finite() {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+            }
+            if !(lo <= hi) {
+                // no finite element: every code 0, decode to exact 0.0
+                return (0.0, 0.0);
+            }
+            // hi/255 - lo/255 (not (hi-lo)/255) so an extreme span can
+            // never overflow the step to inf
+            let step = hi / 255.0 - lo / 255.0;
+            let step = if step.is_finite() && step > 0.0 { step } else { 0.0 };
+            for (c, &v) in src.iter().enumerate() {
+                let code = if step == 0.0 || v.is_nan() {
+                    0 // constant row decodes to lo exactly; NaN clamps low
+                } else if v >= hi {
+                    255 // +inf (and the span max) clamps to the top code
+                } else if v <= lo {
+                    0 // -inf (and the span min) clamps to the bottom code
+                } else {
+                    ((v - lo) / step).round().clamp(0.0, 255.0) as u32
+                };
+                write_code(codes, c, 8, code);
+            }
+            (lo, step)
+        }
+        KvFormat::Log2 => {
+            let mut m = 0.0f32;
+            for &v in src {
+                if v.is_finite() {
+                    m = m.max(v.abs());
+                }
+            }
+            if m == 0.0 {
+                // all-zero (or no finite element): codes 0 decode to 0.0
+                return (0.0, 0.0);
+            }
+            // geometric threshold between the M/4 and M levels; strict >
+            // keeps encode∘decode∘encode a fixed point even where
+            // subnormal scaling collapses 0.25·M and 0.5·M together
+            let t = 0.5 * m;
+            for (c, &v) in src.iter().enumerate() {
+                let (neg, mag) =
+                    if v.is_nan() { (false, 0.0) } else { (v < 0.0, v.abs().min(m)) };
+                let code = ((neg as u32) << 1) | (mag > t) as u32;
+                write_code(codes, c, 2, code);
+            }
+            (m, 0.0)
+        }
+    }
+}
+
+/// Dequantize one row of codes into `out` — the per-row decode primitive
+/// the attention path fuses into `attn_row`'s scratch buffer the way
+/// `gemv.rs` tile-decodes packed weights (no f32 page is ever rebuilt).
+pub fn decode_row(fmt: KvFormat, codes: &[u8], s0: f32, s1: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), fmt.row_code_bytes(out.len()));
+    match fmt {
+        KvFormat::F32 => unreachable!("f32 KV rows are read in place, not decoded"),
+        KvFormat::Linear8 => {
+            let (lo, step) = (s0, s1);
+            for (c, o) in out.iter_mut().enumerate() {
+                // min(MAX): a near-f32::MAX span's top codes overflow
+                // lo + step·code past MAX even though the true value
+                // (≤ hi) is finite — saturate so decode never emits inf
+                *o = (lo + step * read_code(codes, c, 8) as f32).min(f32::MAX);
+            }
+        }
+        KvFormat::Log2 => {
+            let m = s0;
+            for (c, o) in out.iter_mut().enumerate() {
+                let code = read_code(codes, c, 2);
+                let mag = if code & 1 == 1 { m } else { 0.25 * m };
+                *o = if code & 2 != 0 { -mag } else { mag };
+            }
+        }
+    }
+}
+
+/// Row source for the unified attention kernel (`serve::model::attn_row`):
+/// position `s`'s full d-length row, decoding into `scratch` when the
+/// storage is quantized. The f32 path returns its resident slice and
+/// never copies, which is what keeps `--kv-bits 32` byte-for-byte the
+/// PR-5 exact path.
+pub trait RowSource {
+    fn row<'a>(&'a self, s: usize, scratch: &'a mut [f32]) -> &'a [f32];
+}
+
+/// Greedy-token divergence between a lossy decode and its f32 oracle:
+/// the number of positions where the two token streams differ, with
+/// every unpaired tail position of a length mismatch counted as a
+/// divergence (DESIGN.md §12 defines the metric; `--kv-bits 32` is 0 by
+/// construction and `rust/tests/prop_serve.rs` pins it).
+pub fn token_divergence(oracle: &[i32], got: &[i32]) -> usize {
+    let shared = oracle.len().min(got.len());
+    let mut n = oracle.len().max(got.len()) - shared;
+    for i in 0..shared {
+        if oracle[i] != got[i] {
+            n += 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(fmt: KvFormat, src: &[f32]) -> Vec<f32> {
+        let mut codes = vec![0u8; fmt.row_code_bytes(src.len())];
+        let (s0, s1) = encode_row(fmt, src, &mut codes);
+        let mut out = vec![0.0f32; src.len()];
+        decode_row(fmt, &codes, s0, s1, &mut out);
+        out
+    }
+
+    #[test]
+    fn parse_and_bits_round_trip() {
+        for bits in KV_BITS {
+            let fmt = KvFormat::from_bits(bits).unwrap();
+            assert_eq!(fmt.bits(), bits);
+            assert_eq!(fmt.to_string(), bits.to_string());
+        }
+        assert_eq!(KvFormat::from_bits(4), None);
+        assert_eq!(KvFormat::from_bits(0), None);
+        assert!(KvFormat::F32.is_exact());
+        assert!(!KvFormat::Linear8.is_exact());
+    }
+
+    #[test]
+    fn page_bytes_shrink_with_bits() {
+        let (page, d) = (16usize, 64usize);
+        let f32b = KvFormat::F32.page_bytes(page, d);
+        let l8 = KvFormat::Linear8.page_bytes(page, d);
+        let l2 = KvFormat::Log2.page_bytes(page, d);
+        assert_eq!(f32b, 2 * 4 * page * d);
+        assert!(l8 < f32b, "{l8} vs {f32b}");
+        assert!(l2 < l8, "{l2} vs {l8}");
+        // 8-bit: d code bytes + 8 state bytes per row, both halves
+        assert_eq!(l8, 2 * (page * d + page * 8));
+    }
+
+    #[test]
+    fn linear8_constant_row_is_exact() {
+        for v in [0.0f32, -3.5, 7.25] {
+            let out = roundtrip(KvFormat::Linear8, &[v; 9]);
+            for o in out {
+                assert_eq!(o.to_bits(), v.to_bits(), "constant row must decode exactly");
+            }
+        }
+    }
+
+    #[test]
+    fn log2_levels_and_signs() {
+        let src = [4.0f32, -4.0, 0.5, -0.5, 0.0];
+        let out = roundtrip(KvFormat::Log2, &src);
+        assert_eq!(out, vec![4.0, -4.0, 1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn divergence_counts_mismatches_and_tails() {
+        assert_eq!(token_divergence(&[1, 2, 3], &[1, 2, 3]), 0);
+        assert_eq!(token_divergence(&[1, 2, 3], &[1, 9, 3]), 1);
+        assert_eq!(token_divergence(&[1, 2], &[1, 2, 7, 8]), 2);
+        assert_eq!(token_divergence(&[], &[]), 0);
+        assert_eq!(token_divergence(&[5], &[]), 1);
+    }
+}

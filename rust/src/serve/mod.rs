@@ -12,24 +12,31 @@
 //! - [`kv`] — the preallocated paged KV cache: per-sequence page tables
 //!   over a shared [`PagePool`], reserved at admission, returned at
 //!   retire;
+//! - [`kvq`] — the KV-page codecs behind `--kv-bits` (§12): exact f32,
+//!   8-bit linear, and 2-bit log-distributed storage, quantize-on-write /
+//!   decode-into-scratch-on-read, with [`token_divergence`] measuring
+//!   every lossy path against the f32 oracle;
 //! - [`batch`] — the continuous-batching scheduler on `util::Pool`:
 //!   padded-free token-level steps, mid-flight admit/retire, per-request
 //!   deadlines, all surfaced in a [`ServeReport`].
 //!
 //! Determinism contract: generated tokens are a pure function of (model,
-//! prompt, max_new) — invariant to `--jobs`, batch size, page size, and
-//! co-scheduled requests. `tests/prop_serve.rs` pins the host-side
-//! guarantees (including bit-identity of the fused kernels against
-//! `unpack()` + `gemm`); `tests/integration_serve.rs` pins greedy
+//! prompt, max_new, kv format) — invariant to `--jobs`, batch size, page
+//! size, and co-scheduled requests. `tests/prop_serve.rs` pins the
+//! host-side guarantees (including bit-identity of the fused kernels
+//! against `unpack()` + `gemm`, and of `--kv-bits 32` against the
+//! full-context recompute); `tests/integration_serve.rs` pins greedy
 //! token-identity against the XLA engine's full-context recompute.
 
 pub mod batch;
 pub mod kv;
+pub mod kvq;
 pub mod model;
 
 pub use batch::{serve, RequestStats, ServeOptions, ServeReport, ServeRequest};
 pub use kv::{PagePool, SeqKv, PAGE_POSITIONS};
-pub use model::{greedy_decode, Decoder, HostWeight, PackedModel};
+pub use kvq::{token_divergence, KvFormat, KV_BITS};
+pub use model::{greedy_decode, greedy_decode_kv, Decoder, HostWeight, PackedModel};
 
 /// The synthetic model config `rsq serve-bench` and
 /// `benches/bench_serve.rs` both build when no artifact is given — one

@@ -31,6 +31,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::kv::SeqKv;
+use super::kvq::{KvFormat, RowSource};
 use crate::eval::argmax;
 use crate::model::config::ModelConfig;
 use crate::model::ParamSet;
@@ -332,7 +333,7 @@ impl PackedModel {
             let v = layer.wv.matmul_bt(&xa, pool);
             let mut xo = Tensor::zeros(&[tn, d]);
             for i in 0..tn {
-                let row = attn_row(q.row(i), heads, hd, i, tn, |s| k.row(s), |s| v.row(s));
+                let row = attn_row(q.row(i), heads, hd, i, tn, &TensorRows(&k), &TensorRows(&v));
                 xo.row_mut(i).copy_from_slice(&row);
             }
             z.add_in_place(&layer.wo.matmul_bt(&xo, pool));
@@ -391,6 +392,17 @@ fn log_softmax_in_place(row: &mut [f32]) {
     }
 }
 
+/// [`RowSource`] view over a `[T, d]` activation tensor (the
+/// full-context recompute's materialized k/v projections): rows are
+/// resident f32, so reads never touch the scratch.
+struct TensorRows<'t>(&'t Tensor);
+
+impl RowSource for TensorRows<'_> {
+    fn row<'a>(&'a self, s: usize, _scratch: &'a mut [f32]) -> &'a [f32] {
+        self.0.row(s)
+    }
+}
+
 /// One position's multi-head causal attention output.
 ///
 /// Scores run over `total_t` positions with everything past `causal_t`
@@ -401,51 +413,71 @@ fn log_softmax_in_place(row: &mut [f32]) {
 /// the full-context recompute execute — a masked score's exp is an exact
 /// `+0.0`, which cannot move the denominator and is skipped in the value
 /// sum, so the two paths are bit-identical (module docs).
-fn attn_row<'a, K, V>(
+///
+/// Rows come through [`RowSource`], which is where the quantized KV
+/// decode fuses in (DESIGN.md §12): position loops run s-outer so each
+/// stored row is decoded into the L1 scratch **once** per call — the
+/// same shape as `gemv.rs`'s tiled weight decode — and the f32 source
+/// returns its resident slice untouched. Per output element the
+/// accumulation order (k-ascending dots, s-ascending max/denominator/
+/// value sums) is exactly the pre-§12 per-head loop's, which is what
+/// keeps `--kv-bits 32` bit-identical to the PR 5 path
+/// (`tests/prop_serve.rs` pins it).
+fn attn_row<K: RowSource, V: RowSource>(
     q: &[f32],
     heads: usize,
     hd: usize,
     causal_t: usize,
     total_t: usize,
-    k_at: K,
-    v_at: V,
-) -> Vec<f32>
-where
-    K: Fn(usize) -> &'a [f32],
-    V: Fn(usize) -> &'a [f32],
-{
-    let mut out = vec![0.0f32; heads * hd];
-    let mut scores = vec![0.0f32; total_t];
-    for m in 0..heads {
-        let qh = &q[m * hd..(m + 1) * hd];
-        for (s, sc) in scores.iter_mut().enumerate() {
-            *sc = if s <= causal_t {
-                let kh = &k_at(s)[m * hd..(m + 1) * hd];
-                let mut dot = 0.0f32;
-                for (a, b) in qh.iter().zip(kh) {
-                    dot += a * b;
-                }
-                dot / (hd as f32).sqrt()
-            } else {
-                f32::MIN
-            };
+    k_rows: &K,
+    v_rows: &V,
+) -> Vec<f32> {
+    let d = heads * hd;
+    let mut out = vec![0.0f32; d];
+    let mut scratch = vec![0.0f32; d];
+    // scores[m * total_t + s]: per-head rows, s contiguous
+    let mut scores = vec![0.0f32; heads * total_t];
+    for s in 0..total_t {
+        if s > causal_t {
+            for m in 0..heads {
+                scores[m * total_t + s] = f32::MIN;
+            }
+            continue;
         }
+        let krow = k_rows.row(s, &mut scratch);
+        for m in 0..heads {
+            let qh = &q[m * hd..(m + 1) * hd];
+            let kh = &krow[m * hd..(m + 1) * hd];
+            let mut dot = 0.0f32;
+            for (a, b) in qh.iter().zip(kh) {
+                dot += a * b;
+            }
+            scores[m * total_t + s] = dot / (hd as f32).sqrt();
+        }
+    }
+    let mut denoms = vec![0.0f32; heads];
+    for m in 0..heads {
+        let sc = &mut scores[m * total_t..(m + 1) * total_t];
         let mut maxv = f32::NEG_INFINITY;
-        for &sc in &scores {
-            maxv = maxv.max(sc);
+        for &v in sc.iter() {
+            maxv = maxv.max(v);
         }
         let mut denom = 0.0f32;
-        for sc in scores.iter_mut() {
-            *sc = (*sc - maxv).exp();
-            denom += *sc;
+        for v in sc.iter_mut() {
+            *v = (*v - maxv).exp();
+            denom += *v;
         }
-        let oh = &mut out[m * hd..(m + 1) * hd];
-        for (s, &e) in scores.iter().enumerate() {
-            let p = e / denom;
+        denoms[m] = denom;
+    }
+    for s in 0..=causal_t.min(total_t - 1) {
+        let vrow = v_rows.row(s, &mut scratch);
+        for m in 0..heads {
+            let p = scores[m * total_t + s] / denoms[m];
             if p == 0.0 {
                 continue;
             }
-            let vh = &v_at(s)[m * hd..(m + 1) * hd];
+            let oh = &mut out[m * hd..(m + 1) * hd];
+            let vh = &vrow[m * hd..(m + 1) * hd];
             for (o, &vv) in oh.iter_mut().zip(vh) {
                 *o += p * vv;
             }
@@ -514,8 +546,7 @@ impl<'m> Decoder<'m> {
             let k = layer.wk.matvec(&xa, pool);
             let v = layer.wv.matvec(&xa, pool);
             self.kv.write(l, t, &k, &v);
-            let kv = &self.kv;
-            let xo = attn_row(&q, heads, hd, t, t + 1, |s| kv.k_at(l, s), |s| kv.v_at(l, s));
+            let xo = attn_row(&q, heads, hd, t, t + 1, &self.kv.k_rows(l), &self.kv.v_rows(l));
             for (zv, ov) in z.iter_mut().zip(layer.wo.matvec(&xo, pool)) {
                 *zv += ov;
             }
@@ -546,11 +577,26 @@ impl<'m> Decoder<'m> {
 
 /// Greedy decode helper: consume `prompt`, then generate up to `max_new`
 /// tokens by argmax, stopping early at the model's context limit.
-/// Returns the generated tokens only.
+/// Returns the generated tokens only. Uses the exact f32 KV cache — the
+/// divergence oracle for every lossy `--kv-bits` path.
 pub fn greedy_decode(
     model: &PackedModel,
     prompt: &[i32],
     max_new: usize,
+    pool: Option<&Pool>,
+) -> Result<Vec<i32>> {
+    greedy_decode_kv(model, prompt, max_new, KvFormat::F32, pool)
+}
+
+/// [`greedy_decode`] with an explicit KV storage format (`--kv-bits`):
+/// `KvFormat::F32` is byte-for-byte the exact path; lossy formats
+/// quantize each position's k/v rows on write and decode them inside
+/// `attn_row`'s scratch on read.
+pub fn greedy_decode_kv(
+    model: &PackedModel,
+    prompt: &[i32],
+    max_new: usize,
+    fmt: KvFormat,
     pool: Option<&Pool>,
 ) -> Result<Vec<i32>> {
     if prompt.is_empty() {
@@ -561,7 +607,7 @@ pub fn greedy_decode(
         bail!("prompt length {} exceeds max_seq {}", prompt.len(), cfg.max_seq);
     }
     let total = (prompt.len() + max_new).min(cfg.max_seq);
-    let kv = SeqKv::standalone(cfg.layers, cfg.d, total);
+    let kv = SeqKv::standalone_fmt(fmt, cfg.layers, cfg.d, total);
     let mut dec = Decoder::new(model, kv);
     // only the last prompt position's logits are used — earlier ones
     // prefill the KV cache without paying the head projection
@@ -675,6 +721,25 @@ mod tests {
         for jobs in [1usize, 4] {
             let pool = Pool::new(jobs);
             assert_eq!(greedy_decode(&model, &prompt, 12, Some(&pool)).unwrap(), serial);
+        }
+    }
+
+    #[test]
+    fn kv_formats_decode_deterministically_and_f32_wrapper_is_exact() {
+        let p = ParamSet::init(&cfg(), 11);
+        let model = PackedModel::from_paramset_rtn(&p, 4).unwrap();
+        let prompt = [3i32, 1, 4];
+        let oracle = greedy_decode(&model, &prompt, 8, None).unwrap();
+        assert_eq!(
+            greedy_decode_kv(&model, &prompt, 8, KvFormat::F32, None).unwrap(),
+            oracle,
+            "greedy_decode must be exactly the F32-format decode"
+        );
+        for fmt in [KvFormat::Linear8, KvFormat::Log2] {
+            let a = greedy_decode_kv(&model, &prompt, 8, fmt, None).unwrap();
+            assert_eq!(a.len(), 8, "{fmt:?}");
+            let b = greedy_decode_kv(&model, &prompt, 8, fmt, None).unwrap();
+            assert_eq!(a, b, "{fmt:?}: lossy decode must still be deterministic");
         }
     }
 

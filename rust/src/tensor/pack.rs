@@ -190,7 +190,12 @@ impl PackedRows {
     }
 }
 
-fn write_code(row: &mut [u8], col: usize, bits: u32, code: u32) {
+/// Write element `col`'s `bits`-wide code into a zeroed row buffer,
+/// LSB-first within each byte — the single bitstream layout shared by
+/// [`PackedRows`] and the serving layer's KV-page codecs
+/// (`serve::kvq`, DESIGN.md §12). Only ORs bits in: callers re-encoding
+/// a slot must clear its bytes first.
+pub fn write_code(row: &mut [u8], col: usize, bits: u32, code: u32) {
     let start = col * bits as usize;
     for k in 0..bits as usize {
         let bit = start + k;
@@ -200,7 +205,9 @@ fn write_code(row: &mut [u8], col: usize, bits: u32, code: u32) {
     }
 }
 
-fn read_code(row: &[u8], col: usize, bits: u32) -> u32 {
+/// Read element `col`'s `bits`-wide code back — the exact inverse of
+/// [`write_code`] over the same LSB-first layout.
+pub fn read_code(row: &[u8], col: usize, bits: u32) -> u32 {
     let start = col * bits as usize;
     let mut code = 0u32;
     for k in 0..bits as usize {

@@ -104,6 +104,14 @@ impl Args {
         }
     }
 
+    /// KV-cache storage width: `--kv-bits 32|8|2`. Defaults to 32 — the
+    /// exact f32 path (DESIGN.md §12). Returned raw; the serving layer's
+    /// `KvFormat::from_bits` validates it so the error message can name
+    /// the supported set.
+    pub fn kv_bits(&self) -> u32 {
+        self.u64_or("kv-bits", 32) as u32
+    }
+
     /// Reject mutually-exclusive options. Returns the offending pair's
     /// message so callers surface it however they report errors (the util
     /// layer stays anyhow-free).
@@ -261,6 +269,13 @@ mod tests {
         assert_eq!(parse("quantize").sched(), "pipelined", "pipelined by default");
         assert_eq!(parse("--sched staged").sched(), "staged");
         assert_eq!(parse("--sched=pipelined").sched(), "pipelined");
+    }
+
+    #[test]
+    fn kv_bits_parsing() {
+        assert_eq!(parse("generate").kv_bits(), 32, "exact f32 path by default");
+        assert_eq!(parse("--kv-bits 8").kv_bits(), 8);
+        assert_eq!(parse("--kv-bits=2").kv_bits(), 2);
     }
 
     #[test]

@@ -1,0 +1,225 @@
+//! KV-codec property tests (DESIGN.md §12) — the codec-level half of the
+//! quantized-KV test layer (`prop_serve.rs` holds the serving-level
+//! half):
+//!
+//! - the 8-bit linear codec's round-trip error is bounded by the per-row
+//!   step for arbitrary finite rows, and all-zero / single-element /
+//!   constant rows decode **exactly**;
+//! - the 2-bit log codec is sign-correct, monotone in magnitude, and
+//!   idempotent (encode∘decode∘encode is a fixed point);
+//! - non-finite inputs are clamped deterministically, never written as
+//!   garbage codes, and always decode to finite values;
+//! - ragged head dims and partial final pages round-trip through
+//!   [`SeqKv`] at every format.
+//!
+//! [`SeqKv`]: rsq::serve::SeqKv
+
+use rsq::serve::kvq::{decode_row, encode_row, RowSource};
+use rsq::serve::{KvFormat, SeqKv, KV_BITS};
+use rsq::util::Pcg;
+
+/// Row lengths that straddle the code-byte boundaries of both lossy
+/// widths (8-bit: 1 code/byte; 2-bit: 4 codes/byte) — ragged head dims.
+const DIMS: [usize; 8] = [1, 2, 3, 5, 8, 16, 31, 33];
+
+fn roundtrip(fmt: KvFormat, src: &[f32]) -> Vec<f32> {
+    let mut codes = vec![0u8; fmt.row_code_bytes(src.len())];
+    let (s0, s1) = encode_row(fmt, src, &mut codes);
+    let mut out = vec![0.0f32; src.len()];
+    decode_row(fmt, &codes, s0, s1, &mut out);
+    out
+}
+
+fn random_row(d: usize, scale: f32, rng: &mut Pcg) -> Vec<f32> {
+    (0..d).map(|_| rng.normal() * scale).collect()
+}
+
+#[test]
+fn linear8_roundtrip_error_bounded_by_per_row_step() {
+    let mut rng = Pcg::new(61);
+    for d in DIMS {
+        for scale in [1e-3f32, 1.0, 1e3, 1e30] {
+            for _ in 0..20 {
+                let src = random_row(d, scale, &mut rng);
+                let (lo, hi) = src.iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| {
+                    (l.min(v), h.max(v))
+                });
+                let step = hi / 255.0 - lo / 255.0;
+                let out = roundtrip(KvFormat::Linear8, &src);
+                // half a step of quantization error plus float slack
+                // proportional to the row's magnitude
+                let bound = 0.5 * step + 1e-5 * lo.abs().max(hi.abs());
+                for (g, &w) in out.iter().zip(&src) {
+                    assert!(g.is_finite(), "d={d} scale={scale}");
+                    assert!(
+                        (g - w).abs() <= bound,
+                        "d={d} scale={scale}: |{g} - {w}| > {bound} (step {step})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn linear8_degenerate_rows_decode_exactly() {
+    // all-zero, single-element, and constant rows have step == 0: every
+    // code is 0 and decode returns the row value bit-for-bit
+    let mut cases: Vec<Vec<f32>> = vec![
+        vec![0.0; 7],
+        vec![42.5],
+        vec![-1e-20],
+        vec![-3.25; 33],
+        vec![f32::MAX; 3],
+    ];
+    cases.push(vec![1e30, 1e30, 1e30]);
+    for src in cases {
+        let out = roundtrip(KvFormat::Linear8, &src);
+        for (g, w) in out.iter().zip(&src) {
+            assert_eq!(g.to_bits(), w.to_bits(), "constant row {src:?} must be exact");
+        }
+    }
+}
+
+#[test]
+fn linear8_extreme_span_does_not_overflow_the_step() {
+    // hi - lo overflows f32; hi/255 - lo/255 must not
+    let src = [f32::MAX, -f32::MAX, 0.0];
+    let out = roundtrip(KvFormat::Linear8, &src);
+    for g in &out {
+        assert!(g.is_finite(), "decode must stay finite: {out:?}");
+    }
+    assert_eq!(out[0], f32::MAX, "span max takes the top code exactly");
+    assert_eq!(out[1], -f32::MAX, "span min takes the bottom code exactly");
+}
+
+#[test]
+fn log2_sign_correct_and_monotone_in_magnitude() {
+    let mut rng = Pcg::new(62);
+    for d in DIMS {
+        for scale in [1e-3f32, 1.0, 1e3] {
+            for _ in 0..20 {
+                let src = random_row(d, scale, &mut rng);
+                let out = roundtrip(KvFormat::Log2, &src);
+                for (g, &w) in out.iter().zip(&src) {
+                    if w != 0.0 {
+                        assert_eq!(
+                            g.is_sign_negative(),
+                            w.is_sign_negative(),
+                            "sign must survive: {w} -> {g}"
+                        );
+                    }
+                }
+                for i in 0..d {
+                    for j in 0..d {
+                        if src[i].abs() <= src[j].abs() {
+                            assert!(
+                                out[i].abs() <= out[j].abs(),
+                                "|{}| <= |{}| but |{}| > |{}|",
+                                src[i],
+                                src[j],
+                                out[i],
+                                out[j]
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn log2_roundtrip_is_idempotent() {
+    let mut rng = Pcg::new(63);
+    let mut rows: Vec<Vec<f32>> =
+        (0..40).map(|i| random_row(DIMS[i % DIMS.len()], 2.0, &mut rng)).collect();
+    // denormal edge: 0.25·M and 0.5·M collapse toward zero, where only
+    // the strict level threshold keeps the fixed point
+    rows.push(vec![1e-45, -1e-45, 3e-45, 0.0]);
+    rows.push(vec![f32::MIN_POSITIVE, -f32::MIN_POSITIVE / 2.0]);
+    rows.push(vec![0.0; 5]);
+    for src in rows {
+        let once = roundtrip(KvFormat::Log2, &src);
+        let twice = roundtrip(KvFormat::Log2, &once);
+        // f32 equality (not to_bits): a -0.25·M that underflows to -0.0
+        // legitimately re-encodes as +0.0
+        assert_eq!(twice, once, "encode∘decode∘encode must be a fixed point for {src:?}");
+    }
+}
+
+#[test]
+fn non_finite_inputs_clamp_deterministically() {
+    for fmt in [KvFormat::Linear8, KvFormat::Log2] {
+        let src = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 2.0, -4.0, 0.5];
+        let a = roundtrip(fmt, &src);
+        let b = roundtrip(fmt, &src);
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.is_finite(), "{fmt:?}: non-finite input decoded non-finite: {a:?}");
+            assert_eq!(x.to_bits(), y.to_bits(), "{fmt:?}: clamping must be deterministic");
+        }
+        // row statistics come from finite elements only: ±inf clamps to
+        // the finite span's ends, NaN to the smallest code
+        let (lo, hi) = (-4.0f32, 2.0f32);
+        match fmt {
+            KvFormat::Linear8 => {
+                assert_eq!(a[1], hi, "+inf clamps to the row max");
+                assert_eq!(a[2], lo, "-inf clamps to the row min");
+                assert_eq!(a[0], lo, "NaN clamps to the bottom code");
+            }
+            KvFormat::Log2 => {
+                assert_eq!(a[1], 4.0, "+inf clamps to +M");
+                assert_eq!(a[2], -4.0, "-inf clamps to -M");
+                assert_eq!(a[0], 1.0, "NaN takes the smallest positive level");
+            }
+            KvFormat::F32 => unreachable!(),
+        }
+    }
+}
+
+#[test]
+fn all_nonfinite_row_decodes_to_exact_zero() {
+    for fmt in [KvFormat::Linear8, KvFormat::Log2] {
+        for src in [vec![f32::NAN; 4], vec![f32::INFINITY, f32::NEG_INFINITY, f32::NAN]] {
+            let out = roundtrip(fmt, &src);
+            for g in &out {
+                assert_eq!(g.to_bits(), 0.0f32.to_bits(), "{fmt:?} {src:?} -> {out:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn ragged_dims_and_partial_final_pages_round_trip_through_seqkv() {
+    let mut rng = Pcg::new(64);
+    for bits in KV_BITS {
+        let fmt = KvFormat::from_bits(bits).unwrap();
+        for d in [1usize, 3, 5, 33] {
+            // capacity 20 = one full 16-position page + a partial one
+            let cap = 20usize;
+            let mut kv = SeqKv::standalone_fmt(fmt, 2, d, cap);
+            let rows: Vec<Vec<f32>> = (0..cap).map(|_| random_row(d, 1.0, &mut rng)).collect();
+            for (pos, row) in rows.iter().enumerate() {
+                kv.write(0, pos, row, row);
+                kv.write(1, pos, row, row);
+            }
+            let mut scratch = vec![0.0f32; d];
+            for (pos, row) in rows.iter().enumerate() {
+                for layer in 0..2 {
+                    let got = kv.k_rows(layer).row(pos, &mut scratch).to_vec();
+                    let maxabs = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                    for (g, w) in got.iter().zip(row) {
+                        assert!(g.is_finite());
+                        let bound = if fmt.is_exact() { 0.0 } else { maxabs };
+                        assert!(
+                            (g - w).abs() <= bound,
+                            "bits={bits} d={d} pos={pos}: {g} vs {w}"
+                        );
+                    }
+                    let again = kv.v_rows(layer).row(pos, &mut scratch).to_vec();
+                    assert_eq!(got, again, "k and v were written the same row");
+                }
+            }
+        }
+    }
+}

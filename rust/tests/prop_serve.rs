@@ -16,7 +16,10 @@
 use rsq::model::config::ModelConfig;
 use rsq::model::ParamSet;
 use rsq::quantref;
-use rsq::serve::{greedy_decode, serve, PackedModel, ServeOptions, ServeRequest};
+use rsq::serve::{
+    greedy_decode, greedy_decode_kv, serve, token_divergence, Decoder, KvFormat, PackedModel,
+    SeqKv, ServeOptions, ServeRequest,
+};
 use rsq::tensor::kernels::{deq_gemm_bt, deq_gemv, gemm_bt};
 use rsq::tensor::pack::{PackedRows, RowGrid, PACK_BITS};
 use rsq::tensor::Tensor;
@@ -160,6 +163,114 @@ fn kv_decode_token_identical_to_full_context_recompute() {
 }
 
 #[test]
+fn kv_bits_32_remains_bit_identical_to_full_context_recompute() {
+    // the §12 regression pin: the RowSource/attn_row refactor must have
+    // changed ZERO exact-path bits — `--kv-bits 32` still reproduces the
+    // full-context recompute's log-probs exactly, at jobs {1, 4}
+    let p = ParamSet::init(&host_cfg(), 45);
+    let model = PackedModel::from_paramset_rtn(&p, 4).unwrap();
+    let prompt = [5i32, 9, 2, 14];
+    for jobs in [1usize, 4] {
+        let pool = Pool::new(jobs);
+        let gen = greedy_decode_kv(&model, &prompt, 12, KvFormat::F32, Some(&pool)).unwrap();
+        assert_eq!(
+            gen,
+            greedy_decode(&model, &prompt, 12, Some(&pool)).unwrap(),
+            "jobs={jobs}: the F32 format IS greedy_decode's path"
+        );
+        let mut seq = prompt.to_vec();
+        seq.extend_from_slice(&gen);
+        let full = model.logits_full(&seq, Some(&pool));
+        let kv = SeqKv::standalone(model.cfg.layers, model.cfg.d, seq.len());
+        assert_eq!(kv.format(), KvFormat::F32, "standalone stays on the exact path");
+        let mut dec = Decoder::new(&model, kv);
+        let mut last = Vec::new();
+        for &tok in &seq {
+            last = dec.step(tok, Some(&pool));
+        }
+        for (a, b) in last.iter().zip(full.row(seq.len() - 1)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "jobs={jobs}: exact-path bits changed");
+        }
+    }
+}
+
+#[test]
+fn quantized_decode_is_deterministic_and_invariant_to_jobs_batch_and_pages() {
+    // lossy but DETERMINISTIC: for kv-bits {8, 2} the decoded tokens are
+    // a pure function of (model, prompt, max_new, format) — invariant to
+    // jobs, batch size, and page-pool pressure
+    let p = ParamSet::init(&host_cfg(), 46);
+    let model = PackedModel::from_paramset_rtn(&p, 8).unwrap();
+    let requests: Vec<ServeRequest> =
+        (0..4u64).map(|i| ServeRequest::new(i, vec![(i as i32) + 2, 7, 11], 6)).collect();
+    for fmt in [KvFormat::Linear8, KvFormat::Log2] {
+        let solo: Vec<Vec<i32>> = requests
+            .iter()
+            .map(|r| greedy_decode_kv(&model, &r.prompt, r.max_new, fmt, None).unwrap())
+            .collect();
+        for (r, s) in requests.iter().zip(&solo) {
+            for jobs in [1usize, 4] {
+                let pool = Pool::new(jobs);
+                let again =
+                    greedy_decode_kv(&model, &r.prompt, r.max_new, fmt, Some(&pool)).unwrap();
+                assert_eq!(&again, s, "fmt={fmt:?} id={} jobs={jobs}", r.id);
+            }
+        }
+        for batch in [1usize, 4] {
+            let opts = ServeOptions { max_batch: batch, kv: fmt, ..Default::default() };
+            let rep = serve(&model, &Pool::new(2), requests.clone(), &opts).unwrap();
+            for (r, want) in rep.requests.iter().zip(&solo) {
+                assert_eq!(&r.generated, want, "fmt={fmt:?} id={} batch={batch}", r.id);
+            }
+            assert!(rep.kv_resident_bytes < rep.kv_resident_f32_bytes, "fmt={fmt:?}");
+        }
+        // page pressure: pool sized for exactly one worst-case
+        // reservation — admissions serialize, tokens must not change
+        let probe = rsq::serve::PagePool::new(model.cfg.layers, model.cfg.d, 0, 0);
+        let tight = ServeOptions {
+            max_batch: 4,
+            pages: probe.pages_for(3 + 6),
+            kv: fmt,
+            ..Default::default()
+        };
+        let rep = serve(&model, &Pool::new(2), requests.clone(), &tight).unwrap();
+        assert_eq!(rep.peak_active, 1, "fmt={fmt:?}");
+        for (r, want) in rep.requests.iter().zip(&solo) {
+            assert_eq!(&r.generated, want, "fmt={fmt:?} id={} under page pressure", r.id);
+        }
+    }
+}
+
+#[test]
+fn token_divergence_is_measured_monotone_and_exactly_zero_at_32() {
+    // 8-bit weights keep the weight side near-lossless so the KV format
+    // is the only thing varying; short decodes bound error accumulation
+    let p = ParamSet::init(&host_cfg(), 47);
+    let model = PackedModel::from_paramset_rtn(&p, 8).unwrap();
+    let mut div = std::collections::BTreeMap::new();
+    for bits in [32u32, 8, 2] {
+        let fmt = KvFormat::from_bits(bits).unwrap();
+        let mut total = 0usize;
+        for seed in 0..4i32 {
+            let prompt = [seed + 1, 9, 2];
+            let oracle = greedy_decode(&model, &prompt, 6, None).unwrap();
+            let got = greedy_decode_kv(&model, &prompt, 6, fmt, None).unwrap();
+            total += token_divergence(&oracle, &got);
+        }
+        div.insert(bits, total);
+    }
+    assert_eq!(div[&32], 0, "the f32 format is the oracle itself — divergence 0 by construction");
+    // monotone non-increasing in kv-bits: wider KV storage never
+    // diverges more (8-bit KV is near-lossless on this model, so the
+    // chain stays meaningful rather than vacuous)
+    assert!(
+        div[&32] <= div[&8] && div[&8] <= div[&2],
+        "divergence must be monotone non-increasing in kv-bits: {div:?}"
+    );
+    assert_eq!(div[&8], 0, "8-bit KV must not diverge on the tiny model");
+}
+
+#[test]
 fn batched_serving_equals_solo_decode_and_is_jobs_invariant() {
     let p = ParamSet::init(&host_cfg(), 42);
     let model = PackedModel::from_paramset_rtn(&p, 3).unwrap();
@@ -200,7 +311,7 @@ fn page_pool_pressure_admits_mid_flight_without_changing_tokens() {
     // serialize through retire-and-release, and tokens must not change
     let probe = rsq::serve::PagePool::new(model.cfg.layers, model.cfg.d, 0, 0);
     let pages = probe.pages_for(3 + 8);
-    let opts = ServeOptions { max_batch: 4, page: 0, pages };
+    let opts = ServeOptions { max_batch: 4, pages, ..Default::default() };
     let rep = serve(&model, &Pool::new(2), requests, &opts).unwrap();
     assert_eq!(rep.peak_active, 1);
     for (r, want) in rep.requests.iter().zip(&solo) {

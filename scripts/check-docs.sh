@@ -136,6 +136,28 @@ if [ -d rust/src/serve ]; then
     done
 fi
 
+# The quantized KV cache: if serve/kvq.rs exists, §12 must document the
+# codec formats, the packed page layout with its per-row scale state, the
+# fused decode path, the exactness-oracle policy behind --kv-bits 32, and
+# the divergence metric the serve-bench kv axis reports. Needles are
+# grepped inside the §12 body only, same scoping rationale as §9.
+if [ -f rust/src/serve/kvq.rs ]; then
+    if ! grep -qE "^## 12\." DESIGN.md; then
+        echo "check-docs: FAIL — rust/src/serve/kvq.rs exists but DESIGN.md has no '## 12.' section" >&2
+        fail=1
+    fi
+    sec12=$(awk '/^## 12\./{f=1; print; next} /^## /{f=0} f' DESIGN.md)
+    for needle in "serve/kvq" "kv-bits" "Linear8" "8-bit linear" \
+                  "log-distributed" "quantize-on-write" "scale state" \
+                  "attn_row" "exactness oracle" "token_divergence" \
+                  "resident-bytes"; do
+        if ! grep -qi "${needle}" <<< "${sec12}"; then
+            echo "check-docs: FAIL — DESIGN.md §12 never mentions \"${needle}\" (KV-codec contract drift)" >&2
+            fail=1
+        fi
+    done
+fi
+
 [ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler/artifact/kernel/serve docs OK"
 
 # --- 3+4. rustdoc + rustfmt ------------------------------------------------

@@ -14,6 +14,34 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Python suite collection check — toolchain-free, so it runs BEFORE the
+# cargo gates. The property files guard their hypothesis import with
+# pytest.importorskip, so collection must succeed (zero errors) whether
+# or not hypothesis is installed; the count floor catches a suite that
+# silently stopped being collected.
+if command -v python3 >/dev/null 2>&1 && python3 -c 'import pytest' >/dev/null 2>&1; then
+    echo "run-tests: pytest --collect-only python/tests"
+    collect="$(python3 -m pytest --collect-only -q python/tests 2>&1 | tail -2)" || {
+        echo "run-tests: FAIL — python test collection errored:" >&2
+        printf '%s\n' "${collect}" >&2
+        exit 1
+    }
+    if grep -qi 'error' <<< "${collect}"; then
+        echo "run-tests: FAIL — python test collection reports errors:" >&2
+        printf '%s\n' "${collect}" >&2
+        exit 1
+    fi
+    n_tests="$(sed -n 's/^\([0-9][0-9]*\) tests collected.*/\1/p' <<< "${collect}")"
+    if [ -z "${n_tests}" ] || [ "${n_tests}" -lt 25 ]; then
+        echo "run-tests: FAIL — expected >= 25 collectable python tests, got '${n_tests:-none}':" >&2
+        printf '%s\n' "${collect}" >&2
+        exit 1
+    fi
+    echo "run-tests: python collection OK (${n_tests} tests, 0 errors)"
+else
+    echo "run-tests: NOTE — python3/pytest not available, skipping python collection check" >&2
+fi
+
 if [ "${CHECK_TESTS_SKIP_CARGO:-0}" = "1" ]; then
     echo "run-tests: NOTE — CHECK_TESTS_SKIP_CARGO=1, skipping cargo build/test" >&2
     exit 0
@@ -74,4 +102,49 @@ if [ "${out1}" != "${out2}" ]; then
     exit 1
 fi
 echo "run-tests: serve smoke OK"
+
+# Quantized-KV smoke (DESIGN.md §12): the same golden-fixture decode at
+# --kv-bits 8 must be non-empty, deterministic, AND token-identical to
+# the f32 run — the acceptance bar that 8-bit KV divergence is 0 on the
+# smoke prompt.
+echo "run-tests: kv smoke (rsq generate --kv-bits 8)"
+kv_log="$(mktemp)"
+kv_smoke() {
+    cargo run --release --quiet -- generate \
+        --artifact tests/data/artifact_ok --prompt 1,2 --max-new 5 \
+        --kv-bits 8 2>"${kv_log}"
+}
+kv1="$(kv_smoke)" || {
+    echo "run-tests: FAIL — kv smoke (--kv-bits 8) exited non-zero:" >&2
+    cat "${kv_log}" >&2
+    exit 1
+}
+kv2="$(kv_smoke)" || {
+    echo "run-tests: FAIL — kv smoke second run exited non-zero:" >&2
+    cat "${kv_log}" >&2
+    exit 1
+}
+rm -f "${kv_log}"
+if [ -z "${kv1}" ]; then
+    echo "run-tests: FAIL — kv smoke produced no output" >&2
+    exit 1
+fi
+if [ "${kv1}" != "${kv2}" ]; then
+    echo "run-tests: FAIL — kv smoke output is not deterministic across runs" >&2
+    printf 'run 1:\n%s\nrun 2:\n%s\n' "${kv1}" "${kv2}" >&2
+    exit 1
+fi
+gen_f32="$(grep '^generated' <<< "${out1}")"
+gen_kv8="$(grep '^generated' <<< "${kv1}")"
+if [ -z "${gen_kv8}" ]; then
+    echo "run-tests: FAIL — kv smoke output has no 'generated' line:" >&2
+    printf '%s\n' "${kv1}" >&2
+    exit 1
+fi
+if [ "${gen_kv8}" != "${gen_f32}" ]; then
+    echo "run-tests: FAIL — 8-bit KV diverged from f32 on the smoke prompt:" >&2
+    printf 'f32 : %s\nkv8 : %s\n' "${gen_f32}" "${gen_kv8}" >&2
+    exit 1
+fi
+echo "run-tests: kv smoke OK (8-bit KV divergence 0)"
 echo "run-tests: OK"

@@ -103,6 +103,11 @@ fn bench_config(config: &str) -> anyhow::Result<()> {
 /// baseline this PR onward. Runs without the AOT artifact set.
 fn bench_host_kernels() {
     println!("--- host kernel grid (tensor::kernels, sizes x jobs) ---");
+    println!(
+        "    pool dispatch min-work threshold: POOL_MIN_WORK = {} work units \
+         (smaller shapes run serial, skipping task-claim overhead)",
+        kernels::POOL_MIN_WORK
+    );
     let mut rng = Pcg::new(42);
     for d in [64usize, 128, 256] {
         let a = Tensor::randn(&[d, d], 1.0, &mut rng);
@@ -145,9 +150,57 @@ fn bench_host_kernels() {
     }
 }
 
+/// Backend comparison grid (DESIGN.md §13): the GEMM family and the
+/// serving fused-decode kernels through `Backend::Reference` vs
+/// `Backend::Simd`, with per-shape speedup. simd is tolerance-pinned
+/// against reference (tests/prop_kernels); this grid only times it.
+fn bench_backends() {
+    use rsq::tensor::kernels::Backend;
+    println!("--- backend grid (reference vs simd, DESIGN.md 13) ---");
+    if !kernels::simd_available() {
+        println!("    simd backend unavailable (needs x86-64 AVX2+FMA); grid skipped");
+        return;
+    }
+    fn pair(label: &str, mut f: impl FnMut(Backend)) {
+        let r = Bench::new(&format!("backend/{label}_ref")).iter(|| f(Backend::Reference)).report();
+        let s = Bench::new(&format!("backend/{label}_simd")).iter(|| f(Backend::Simd)).report();
+        println!("    {label}: simd speedup {:.2}x", r / s.max(1e-12));
+    }
+    let mut rng = Pcg::new(7);
+    let pool = Pool::new(4);
+    let p = Some(&pool);
+    for d in [64usize, 128, 256] {
+        let a = Tensor::randn(&[d, d], 1.0, &mut rng);
+        let b = Tensor::randn(&[d, d], 1.0, &mut rng);
+        pair(&format!("gemm_{d}x{d}"), |be| {
+            be.gemm(&a, &b, p);
+        });
+        pair(&format!("gemm_bt_{d}x{d}"), |be| {
+            be.gemm_bt(&a, &b, p);
+        });
+        pair(&format!("syrk_t_{d}x{d}"), |be| {
+            be.syrk_t(&a, p);
+        });
+    }
+    // fused-decode shapes: 3-bit RTN-packed weights, one activation row
+    for n in [256usize, 512] {
+        let w = Tensor::randn(&[n, n], 1.0, &mut rng);
+        let q = rsq::quantref::rtn(&w, 7.0);
+        let (scale, zero) = rsq::quantref::row_grid(&w, 7.0);
+        let grid = rsq::tensor::pack::RowGrid { scale, zero };
+        let packed =
+            rsq::tensor::pack::PackedRows::pack(&q, 3, &grid).expect("rtn output packs exactly");
+        let x = Tensor::randn(&[1, n], 1.0, &mut rng);
+        pair(&format!("deq_gemv_{n}x{n}"), |be| {
+            be.deq_gemv(&x.data, &packed, p);
+        });
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     println!("=== kernel/module micro-benchmarks ===");
     bench_host_kernels();
+    bench_backends();
     for config in ["tiny", "small"] {
         bench_config(config)?;
     }

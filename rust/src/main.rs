@@ -28,9 +28,20 @@ use rsq::eval::{perplexity, score_model};
 use rsq::quant::{artifact, quantize, Method, QuantOptions, SchedMode, Strategy};
 use rsq::repro::{self, Ctx};
 use rsq::serve;
+use rsq::tensor::kernels::Backend;
 use rsq::train::{train, TrainOptions};
 use rsq::util::cli::{parse_bytes, parse_duration_s};
 use rsq::util::{Args, Pcg, Pool};
+
+/// Parse and resolve `--backend reference|simd|auto` (DESIGN.md §13).
+/// Unknown spellings fail fast; `simd`/`auto` silently resolve to the
+/// reference backend on hosts without AVX2+FMA, so scripts can pass
+/// `--backend auto` unconditionally.
+fn parse_backend(args: &Args) -> Result<Backend> {
+    let raw = args.backend();
+    Backend::parse(&raw)
+        .ok_or_else(|| anyhow!("--backend: unsupported backend {raw:?} (reference|simd|auto)"))
+}
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -88,6 +99,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     opts.sched = SchedMode::parse(&args.sched())
         .ok_or_else(|| anyhow::anyhow!("bad --sched (staged|pipelined)"))?;
     opts.hess_cache = args.hess_cache();
+    opts.backend = parse_backend(args)?;
     opts.verbose = args.flag("verbose");
     let corpus = CorpusKind::parse(&args.str_or("corpus", "wiki"))
         .ok_or_else(|| anyhow::anyhow!("bad --corpus"))?;
@@ -116,6 +128,11 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         report.pass_b_seconds,
         report.fused_seconds
     );
+    // printed only off the bit-exact default, so `--backend reference`
+    // (and no flag at all) keeps the historical stdout byte-for-byte
+    if opts.backend != Backend::Reference {
+        println!("backend      : {} (tolerance-pinned; DESIGN.md 13)", report.backend);
+    }
     if !report.hess_key.is_empty() {
         println!(
             "hess cache   : {} (layers hit {} / miss {} / skip {}; key {})",
@@ -151,6 +168,11 @@ fn cmd_eval(args: &Args) -> Result<()> {
     if let Err(e) = args.conflict("artifact", "model") {
         bail!("{e}");
     }
+    // Validated for interface uniformity and fail-fast on typos; eval's
+    // host-side work (packed-row unpack) is an elementwise decode that is
+    // identical on every backend, and scoring runs through the XLA
+    // engine, so the flag cannot change a byte of output here.
+    let _backend = parse_backend(args)?;
     // default_t mirrors the context the quantize-time printout scored at:
     // the artifact's recorded seq_len when loading an artifact, else
     // cmd_quantize's own default
@@ -232,21 +254,22 @@ fn check_flags(cmd: &str, args: &Args, known: &[&str], valued: &[&str]) -> Resul
 fn cmd_generate(args: &Args) -> Result<()> {
     const KNOWN: &[&str] = &[
         "artifact", "model", "config", "prompt", "prompt-len", "seed", "max-new", "kv-bits",
-        "jobs", "verbose",
+        "jobs", "backend", "verbose",
     ];
     const VALUED: &[&str] = &[
         "artifact", "model", "config", "prompt", "prompt-len", "seed", "max-new", "kv-bits",
-        "jobs",
+        "jobs", "backend",
     ];
     check_flags("generate", args, KNOWN, VALUED)?;
     let kv = serve::KvFormat::from_bits(args.kv_bits()).ok_or_else(|| {
         anyhow!("--kv-bits: unsupported width {} (supported: 32, 8, 2)", args.kv_bits())
     })?;
+    let backend = parse_backend(args)?;
     if let Err(e) = args.conflict("artifact", "model") {
         bail!("{e}");
     }
     let pool = Pool::new(args.jobs());
-    let model = if let Some(dir) = args.get("artifact") {
+    let mut model = if let Some(dir) = args.get("artifact") {
         let (m, manifest) = serve::PackedModel::load(Path::new(dir))?;
         eprintln!(
             "[generate] artifact {dir}: {} / {} / {}bit, {} packed weights",
@@ -265,6 +288,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     } else {
         bail!("rsq generate needs --artifact DIR (packed artifact) or --model PATH (checkpoint)");
     };
+    model.set_backend(backend);
     let cfg = model.cfg.clone();
     let prompt: Vec<i32> = match args.get("prompt") {
         Some(s) => s
@@ -302,10 +326,11 @@ fn cmd_generate(args: &Args) -> Result<()> {
     println!("prompt       : {}", join(&prompt));
     println!("generated    : {}", join(&gen));
     eprintln!(
-        "[generate] {} tokens in {dt:.3}s ({:.1} tok/s, kv-bits={kv}, jobs={})",
+        "[generate] {} tokens in {dt:.3}s ({:.1} tok/s, kv-bits={kv}, jobs={}, backend={})",
         gen.len(),
         gen.len() as f64 / dt.max(1e-12),
-        pool.jobs()
+        pool.jobs(),
+        model.backend().name()
     );
     Ok(())
 }
@@ -321,12 +346,14 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     const KNOWN: &[&str] = &[
         "artifact", "bits", "batches", "contexts", "jobs-sweep", "kv-bits", "prompt-len", "seed",
-        "verbose",
+        "backend", "verbose",
     ];
     const VALUED: &[&str] = &[
         "artifact", "bits", "batches", "contexts", "jobs-sweep", "kv-bits", "prompt-len", "seed",
+        "backend",
     ];
     check_flags("serve-bench", args, KNOWN, VALUED)?;
+    let backend = parse_backend(args)?;
     let parse_list = |key: &str, default: &[&str]| -> Result<Vec<usize>> {
         args.list_or(key, default)
             .iter()
@@ -347,7 +374,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let prompt_len = args.usize_or("prompt-len", 4).max(1);
 
     println!("=== serve-bench: packed-domain host decode (DESIGN.md §11) ===");
-    let (models, source): (Vec<(u32, serve::PackedModel)>, String) =
+    let (mut models, source): (Vec<(u32, serve::PackedModel)>, String) =
         if let Some(dir) = args.get("artifact") {
             let (m, manifest) = serve::PackedModel::load(Path::new(dir))?;
             (vec![(manifest.bits, m)], format!("artifact {dir}"))
@@ -363,6 +390,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             (ms, "synthetic d=64 L=2 vocab=256 (host RTN)".to_string())
         };
     println!("model        : {source}");
+    for (_, m) in models.iter_mut() {
+        m.set_backend(backend);
+    }
+    println!("backend      : {}", backend.name());
     for (bits, model) in &models {
         let (packed, dense) = model.resident_bytes();
         println!(
@@ -629,6 +660,12 @@ fn print_help() {
                             artifact unpack + the serve decode pool)\n\
            --sched M        staged|pipelined cross-layer executor (default\n\
                             pipelined; both modes bit-identical)\n\
+           --backend B      reference|simd|auto kernel backend for the\n\
+                            host GEMM/decode layer (default reference =\n\
+                            bit-exact; simd = AVX2+FMA, tolerance-pinned;\n\
+                            auto detects at runtime and falls back to\n\
+                            reference — quantize, eval, generate,\n\
+                            serve-bench)\n\
            --hess-cache C   auto|off|DIR content-addressed Hessian cache\n\
                             (default auto = cache/hessians; a key hit\n\
                             skips pass A, output stays byte-identical)\n\

@@ -15,7 +15,8 @@
 //! per-weight GEMMs over row blocks without changing a bit of output
 //! (DESIGN.md §10).
 
-use crate::tensor::{kernels, randomized_hadamard, Tensor};
+use crate::tensor::kernels::{self, Backend};
+use crate::tensor::{randomized_hadamard, Tensor};
 use crate::util::{Pcg, Pool};
 
 use super::fuse::gains_fused;
@@ -28,28 +29,37 @@ pub fn rotation_matrix(d: usize, seed: u64) -> Tensor {
 }
 
 /// Rotate all parameters in place. Panics if gains are not fused.
+/// Runs on the bit-exact `reference` backend; quantize-pipeline call
+/// sites that honor `--backend` go through [`rotate_params_with`].
 pub fn rotate_params(p: &mut ParamSet, q: &Tensor, pool: &Pool) {
+    rotate_params_with(p, q, pool, Backend::Reference)
+}
+
+/// [`rotate_params`] on an explicit kernel backend (DESIGN.md §13).
+/// `Backend::Reference` is bit-identical to the historical path at every
+/// jobs count; `Backend::Simd` is tolerance-pinned against it.
+pub fn rotate_params_with(p: &mut ParamSet, q: &Tensor, pool: &Pool, backend: Backend) {
     assert!(gains_fused(p), "fuse_gains must run before rotation");
     assert_eq!(q.rows(), p.cfg.d);
     let pool = Some(pool);
     let layers = p.cfg.layers;
-    p.tensors[0] = kernels::gemm(&p.tensors[0], q, pool); // emb
-    p.tensors[1] = kernels::gemm(&p.tensors[1], q, pool); // pos
+    p.tensors[0] = backend.gemm(&p.tensors[0], q, pool); // emb
+    p.tensors[1] = backend.gemm(&p.tensors[1], q, pool); // pos
     for l in 0..layers {
         let base = 2 + l * 9;
         for off in [1, 2, 3] {
             // wq wk wv: in-dim
-            p.tensors[base + off] = kernels::gemm(&p.tensors[base + off], q, pool);
+            p.tensors[base + off] = backend.gemm(&p.tensors[base + off], q, pool);
         }
-        p.tensors[base + 4] = kernels::gemm_at(q, &p.tensors[base + 4], pool); // wo: out-dim
+        p.tensors[base + 4] = backend.gemm_at(q, &p.tensors[base + 4], pool); // wo: out-dim
         for off in [6, 7] {
             // wup wgate: in-dim
-            p.tensors[base + off] = kernels::gemm(&p.tensors[base + off], q, pool);
+            p.tensors[base + off] = backend.gemm(&p.tensors[base + off], q, pool);
         }
-        p.tensors[base + 8] = kernels::gemm_at(q, &p.tensors[base + 8], pool); // wdown: out-dim
+        p.tensors[base + 8] = backend.gemm_at(q, &p.tensors[base + 8], pool); // wdown: out-dim
     }
     let n = p.tensors.len();
-    p.tensors[n - 1] = kernels::gemm(&p.tensors[n - 1], q, pool); // head: in-dim
+    p.tensors[n - 1] = backend.gemm(&p.tensors[n - 1], q, pool); // head: in-dim
 }
 
 /// Apply the inverse rotation (Qᵀ for orthogonal Q) in place — the exact
@@ -146,6 +156,23 @@ mod tests {
         rotate_params(&mut pooled, &q, &Pool::new(4));
         for (a, b) in serial.tensors.iter().zip(&pooled.tensors) {
             assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn rotate_with_simd_backend_stays_close_to_reference() {
+        // Backend::Simd resolves to the scalar reference path on hosts
+        // without AVX2+FMA, so this holds everywhere; on AVX2 hosts it
+        // pins the §13 tolerance contract on the rotate call sites.
+        let mut reference = ParamSet::init(&cfg(), 21);
+        fuse_gains(&mut reference);
+        let mut simd = reference.clone();
+        let q = rotation_matrix(64, 13);
+        let pool = Pool::new(2);
+        rotate_params(&mut reference, &q, &pool);
+        rotate_params_with(&mut simd, &q, &pool, Backend::Simd);
+        for (a, b) in reference.tensors.iter().zip(&simd.tensors) {
+            assert!(a.allclose(b, 1e-3), "simd rotation drifted");
         }
     }
 

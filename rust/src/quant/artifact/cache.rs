@@ -170,6 +170,14 @@ pub fn cache_key(
             h.str(&format!("mask={}", names.join(",")));
         }
     }
+    // The simd backend's rotate GEMMs reassociate reductions, so the
+    // rotated params — and therefore the Hessians pass A accumulates —
+    // can differ from the reference run's. Hash the backend only when it
+    // is not Reference: every pre-§13 entry stays addressed by its
+    // original key.
+    if opts.backend != crate::tensor::kernels::Backend::Reference {
+        h.str(&format!("backend={}", opts.backend.name()));
+    }
     h.finish()
 }
 

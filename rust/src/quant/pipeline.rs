@@ -27,9 +27,10 @@ use crate::corpus::{expand_dataset, CalibSet};
 use crate::model::config::Module;
 use crate::model::fuse::fuse_gains;
 use crate::model::outliers::kurtosis_ratio;
-use crate::model::rotate::{rotate_params, rotation_matrix};
+use crate::model::rotate::{rotate_params_with, rotation_matrix};
 use crate::model::ParamSet;
 use crate::runtime::{self, Engine};
+use crate::tensor::kernels::Backend;
 use crate::tensor::pack::RowGrid;
 use crate::util::Pool;
 
@@ -131,6 +132,10 @@ pub struct QuantOptions {
     /// disables caching. A key hit skips pass A entirely while keeping the
     /// output byte-identical (DESIGN.md §9).
     pub hess_cache: Option<PathBuf>,
+    /// kernel backend for the host-side rotate GEMMs (`--backend`);
+    /// `Backend::Reference` (the default) is bit-exact, `Backend::Simd`
+    /// is tolerance-pinned (DESIGN.md §13)
+    pub backend: Backend,
     /// log per-layer reconstruction error to stderr
     pub verbose: bool,
 }
@@ -151,6 +156,7 @@ impl QuantOptions {
             jobs: 1,
             sched: SchedMode::Pipelined,
             hess_cache: None,
+            backend: Backend::Reference,
             verbose: false,
         }
     }
@@ -194,6 +200,9 @@ pub struct QuantReport {
     pub jobs: usize,
     /// scheduler mode the run executed with (`SchedMode::name`)
     pub sched: String,
+    /// kernel backend the host-side rotate ran on (`Backend::name`:
+    /// "reference" or "simd", DESIGN.md §13)
+    pub backend: String,
     /// per-layer phase timings (empty for RTN: its windowed grid crosses
     /// layer boundaries, so only `solve_seconds` is meaningful there)
     pub layer_timings: Vec<LayerTiming>,
@@ -258,6 +267,7 @@ pub fn quantize(
         kurtosis_before: kurtosis_ratio(&p),
         jobs: pool.jobs(),
         sched: opts.sched.name().to_string(),
+        backend: opts.backend.name().to_string(),
         ..Default::default()
     };
 
@@ -270,7 +280,7 @@ pub fn quantize(
         // timed from here so rotate_seconds is pure kernel time, not
         // gain fusion or Hadamard construction
         let tr = Instant::now();
-        rotate_params(&mut p, &q, &pool);
+        rotate_params_with(&mut p, &q, &pool, opts.backend);
         report.rotate_seconds = tr.elapsed().as_secs_f64();
     }
     report.kurtosis_after = kurtosis_ratio(&p);
@@ -423,5 +433,6 @@ mod tests {
         assert_eq!(o.expansion, 1);
         assert!(o.module_mask.is_none());
         assert!(o.hess_cache.is_none(), "hessian caching is opt-in via --hess-cache");
+        assert_eq!(o.backend, Backend::Reference, "simd is opt-in via --backend");
     }
 }

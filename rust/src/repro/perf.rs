@@ -1,8 +1,9 @@
 //! Performance profiling driver (`rsq perf`) — the L3 side of the perf
 //! deliverable. Times every stage of the RSQ pipeline, sweeps the parallel
 //! scheduler's `--jobs` values, sweeps the host kernel layer (tiled GEMM
-//! sizes × jobs, serial-vs-pooled speedup — DESIGN.md §10), measures the
-//! serving layer's packed-domain decode tokens/s (DESIGN.md §11), prints
+//! sizes × jobs, serial-vs-pooled speedup — DESIGN.md §10), compares the
+//! reference and simd kernel backends per shape (DESIGN.md §13), measures
+//! the serving layer's packed-domain decode tokens/s (DESIGN.md §11), prints
 //! the engine's per-module breakdown, and reports end-to-end throughput.
 //! Results feed DESIGN.md §Perf.
 
@@ -163,6 +164,90 @@ pub fn perf(args: &Args) -> Result<()> {
         }
         println!("{row}");
         kernel_results.push(cell);
+    }
+
+    // Backend dispatch (DESIGN.md §13): the same hot shapes through the
+    // reference kernels and the runtime-detected AVX2+FMA simd backend.
+    // simd reassociates its dot reductions, so cross-backend agreement is
+    // tolerance-pinned (prop_kernels owns the bounds), not bit-equality —
+    // the reference sweep above remains the bit-exact oracle.
+    println!("\n--- backend dispatch (tensor::kernels, reference vs simd) ---");
+    let mut backend_results = Vec::new();
+    if kernels::simd_available() {
+        use crate::tensor::kernels::Backend;
+        let pool = Pool::new(args.jobs().max(2));
+        for d in [64usize, 128, 256] {
+            let mut rng = Pcg::new(d as u64 ^ 0x5eed);
+            let a = Tensor::randn(&[d, d], 1.0, &mut rng);
+            let b = Tensor::randn(&[d, d], 1.0, &mut rng);
+            let iters = (32 * 64 * 64 / (d * d)).max(2);
+            let flops = 2.0 * (d * d * d) as f64;
+            let time = |be: Backend| {
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    be.gemm(&a, &b, Some(&pool));
+                }
+                t0.elapsed().as_secs_f64() / iters as f64
+            };
+            let ref_s = time(Backend::Reference);
+            let simd_s = time(Backend::Simd).max(1e-12);
+            println!(
+                "gemm     {d:>4}x{d:<4} reference {:>9.1}us  simd {:>9.1}us  \
+                 speedup {:>5.2}x ({:>6.2} GFLOP/s)",
+                ref_s * 1e6,
+                simd_s * 1e6,
+                ref_s / simd_s,
+                flops / simd_s / 1e9
+            );
+            backend_results.push(
+                Json::obj()
+                    .set("kernel", "gemm")
+                    .set("size", d)
+                    .set("reference_s", ref_s)
+                    .set("simd_s", simd_s)
+                    .set("speedup", ref_s / simd_s),
+            );
+        }
+        // the serving fused-decode shape (DESIGN.md §11): one activation
+        // row against a 3-bit packed weight matrix, the decode inner loop.
+        for n in [256usize, 512] {
+            let mut rng = Pcg::new(n as u64 ^ 0xdec0de);
+            let w = Tensor::randn(&[n, n], 1.0, &mut rng);
+            let maxq = 7.0f32;
+            let q = crate::quantref::rtn(&w, maxq);
+            let (scale, zero) = crate::quantref::row_grid(&w, maxq);
+            let grid = crate::tensor::pack::RowGrid { scale, zero };
+            let packed = crate::tensor::pack::PackedRows::pack(&q, 3, &grid)
+                .expect("rtn output packs exactly");
+            let x = Tensor::randn(&[1, n], 1.0, &mut rng);
+            let iters = (64 * 256 * 256 / (n * n)).max(8);
+            let time = |be: Backend| {
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    be.deq_gemv(&x.data, &packed, Some(&pool));
+                }
+                t0.elapsed().as_secs_f64() / iters as f64
+            };
+            let ref_s = time(Backend::Reference);
+            let simd_s = time(Backend::Simd).max(1e-12);
+            println!(
+                "deq_gemv {n:>4}x{n:<4} reference {:>9.1}us  simd {:>9.1}us  \
+                 speedup {:>5.2}x (3-bit packed)",
+                ref_s * 1e6,
+                simd_s * 1e6,
+                ref_s / simd_s
+            );
+            backend_results.push(
+                Json::obj()
+                    .set("kernel", "deq_gemv")
+                    .set("size", n)
+                    .set("reference_s", ref_s)
+                    .set("simd_s", simd_s)
+                    .set("speedup", ref_s / simd_s),
+            );
+        }
+    } else {
+        println!("simd backend unavailable on this host (needs x86-64 AVX2+FMA); sweep skipped");
     }
 
     // Hessian-cache pass-A elimination (DESIGN.md §9): the same RSQ run
@@ -337,6 +422,7 @@ pub fn perf(args: &Args) -> Result<()> {
             .set("methods", Json::Arr(results))
             .set("jobs_sweep", Json::Arr(jobs_results))
             .set("kernel_sweep", Json::Arr(kernel_results))
+            .set("backend_sweep", Json::Arr(backend_results))
             .set("hess_cache", cache_record)
             .set("serve", serve_record),
     )

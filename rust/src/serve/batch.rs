@@ -119,6 +119,9 @@ pub struct ServeReport {
     /// bytes the same peak page count would occupy at f32 — the
     /// denominator of the KV resident-bytes ratio
     pub kv_resident_f32_bytes: usize,
+    /// kernel backend the forward passes ran on (`--backend` after
+    /// resolution: "reference" or "simd", DESIGN.md §13)
+    pub backend: String,
 }
 
 /// One in-flight sequence.
@@ -304,6 +307,7 @@ pub fn serve(
         kv_peak_pages,
         kv_resident_bytes: kv_peak_pages * page_pool.page_bytes(),
         kv_resident_f32_bytes: kv_peak_pages * page_pool.page_bytes_f32(),
+        backend: model.backend().name().to_string(),
         requests: done,
     })
 }
@@ -366,7 +370,30 @@ mod tests {
                 assert_eq!(rep.kv_bits, 32);
                 assert!(rep.kv_peak_pages > 0);
                 assert_eq!(rep.kv_resident_bytes, rep.kv_resident_f32_bytes, "f32 ratio is 1");
+                assert_eq!(rep.backend, "reference", "default backend in the report");
             }
+        }
+    }
+
+    #[test]
+    fn simd_backend_batch_equals_its_own_solo_decode() {
+        // the scheduler must not add divergence on top of the simd
+        // backend's: batched output equals per-request solo decode on the
+        // same backend, and the report records which backend ran
+        let mut m = model();
+        m.set_backend(crate::tensor::kernels::Backend::Simd);
+        let solo: Vec<Vec<i32>> = reqs(4)
+            .into_iter()
+            .map(|r| greedy_decode(&m, &r.prompt, r.max_new, None).unwrap())
+            .collect();
+        for max_batch in [1usize, 3] {
+            let pool = Pool::new(2);
+            let opts = ServeOptions { max_batch, ..Default::default() };
+            let rep = serve(&m, &pool, reqs(4), &opts).unwrap();
+            for (r, want) in rep.requests.iter().zip(&solo) {
+                assert_eq!(&r.generated, want, "id={} batch={max_batch}", r.id);
+            }
+            assert_eq!(rep.backend, "simd");
         }
     }
 

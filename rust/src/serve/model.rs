@@ -37,7 +37,7 @@ use crate::model::config::ModelConfig;
 use crate::model::ParamSet;
 use crate::quant::artifact::{self, ArtifactManifest, Blob};
 use crate::quantref;
-use crate::tensor::kernels;
+use crate::tensor::kernels::Backend;
 use crate::tensor::pack::{PackedRows, RowGrid, PACK_BITS};
 use crate::tensor::Tensor;
 use crate::util::Pool;
@@ -72,21 +72,22 @@ impl HostWeight {
         }
     }
 
-    /// `y = a · Wᵀ` — fused dequantization when packed; identical
-    /// element-wise operation sequence either way (DESIGN.md §11).
-    pub fn matmul_bt(&self, a: &Tensor, pool: Option<&Pool>) -> Tensor {
+    /// `y = a · Wᵀ` on the given kernel backend — fused dequantization
+    /// when packed; on `Backend::Reference` the element-wise operation
+    /// sequence is identical either way (DESIGN.md §11, §13).
+    pub fn matmul_bt(&self, a: &Tensor, pool: Option<&Pool>, backend: Backend) -> Tensor {
         match self {
-            HostWeight::Packed(p) => kernels::deq_gemm_bt(a, p, pool),
-            HostWeight::Dense(w) => kernels::gemm_bt(a, w, pool),
+            HostWeight::Packed(p) => backend.deq_gemm_bt(a, p, pool),
+            HostWeight::Dense(w) => backend.gemm_bt(a, w, pool),
         }
     }
 
     /// Single-row `y = x · Wᵀ` (the per-token decode path).
-    pub fn matvec(&self, x: &[f32], pool: Option<&Pool>) -> Vec<f32> {
+    pub fn matvec(&self, x: &[f32], pool: Option<&Pool>, backend: Backend) -> Vec<f32> {
         match self {
-            HostWeight::Packed(p) => kernels::deq_gemv(x, p, pool),
+            HostWeight::Packed(p) => backend.deq_gemv(x, p, pool),
             HostWeight::Dense(w) => {
-                kernels::gemm_bt(&Tensor::from_vec(&[1, x.len()], x.to_vec()), w, pool).data
+                backend.gemm_bt(&Tensor::from_vec(&[1, x.len()], x.to_vec()), w, pool).data
             }
         }
     }
@@ -119,7 +120,9 @@ struct HostLayer {
     wdown: HostWeight,
 }
 
-/// A model loaded for serving: packed layer weights + f32 tables.
+/// A model loaded for serving: packed layer weights + f32 tables, plus
+/// the kernel backend every forward pass dispatches through (`--backend`,
+/// DESIGN.md §13). Defaults to the bit-exact `Backend::Reference`.
 pub struct PackedModel {
     pub cfg: ModelConfig,
     emb: Tensor,
@@ -127,6 +130,7 @@ pub struct PackedModel {
     layers: Vec<HostLayer>,
     gf: Vec<f32>,
     head: HostWeight,
+    backend: Backend,
 }
 
 fn gain(blob: Blob, name: &str, d: usize) -> Result<Vec<f32>> {
@@ -191,7 +195,7 @@ impl PackedModel {
         let (gfb, gfn) = next();
         let gf = gain(gfb, &gfn, cfg.d)?;
         let head = weight(next().0);
-        Ok(PackedModel { cfg, emb, pos, layers, gf, head })
+        Ok(PackedModel { cfg, emb, pos, layers, gf, head, backend: Backend::Reference })
     }
 
     /// Host-side RTN quantize-and-pack of a full-precision `ParamSet` at
@@ -253,7 +257,22 @@ impl PackedModel {
             gf: g(n - 2)?,
             head: wrap(&p.tensors[n - 1]),
             cfg,
+            backend: Backend::Reference,
         })
+    }
+
+    /// Select the kernel backend all subsequent forward passes dispatch
+    /// through (`--backend`, DESIGN.md §13). `Backend::Reference` (the
+    /// default) is bit-identical to the historical path; `Backend::Simd`
+    /// is tolerance-pinned against it and falls back to scalar code on
+    /// hosts without AVX2+FMA.
+    pub fn set_backend(&mut self, backend: Backend) {
+        self.backend = backend;
+    }
+
+    /// The kernel backend forward passes currently run on.
+    pub fn backend(&self) -> Backend {
+        self.backend
     }
 
     /// How many projection weights are actually bit-packed.
@@ -326,28 +345,31 @@ impl PackedModel {
             }
             out
         };
+        let be = self.backend;
         for layer in &self.layers {
             let xa = rows(&z, &layer.g1);
-            let q = layer.wq.matmul_bt(&xa, pool);
-            let k = layer.wk.matmul_bt(&xa, pool);
-            let v = layer.wv.matmul_bt(&xa, pool);
+            let q = layer.wq.matmul_bt(&xa, pool, be);
+            let k = layer.wk.matmul_bt(&xa, pool, be);
+            let v = layer.wv.matmul_bt(&xa, pool, be);
             let mut xo = Tensor::zeros(&[tn, d]);
             for i in 0..tn {
-                let row = attn_row(q.row(i), heads, hd, i, tn, &TensorRows(&k), &TensorRows(&v));
+                let kr = TensorRows(&k);
+                let vr = TensorRows(&v);
+                let row = attn_row(q.row(i), heads, hd, (i, tn), &kr, &vr, be);
                 xo.row_mut(i).copy_from_slice(&row);
             }
-            z.add_in_place(&layer.wo.matmul_bt(&xo, pool));
+            z.add_in_place(&layer.wo.matmul_bt(&xo, pool, be));
             let xf = rows(&z, &layer.g2);
-            let gate = layer.wgate.matmul_bt(&xf, pool);
-            let up = layer.wup.matmul_bt(&xf, pool);
+            let gate = layer.wgate.matmul_bt(&xf, pool, be);
+            let up = layer.wup.matmul_bt(&xf, pool, be);
             let mut xd = Tensor::zeros(&[tn, cfg.ff]);
             for i in 0..tn {
                 xd.row_mut(i).copy_from_slice(&swiglu_row(gate.row(i), up.row(i)));
             }
-            z.add_in_place(&layer.wdown.matmul_bt(&xd, pool));
+            z.add_in_place(&layer.wdown.matmul_bt(&xd, pool, be));
         }
         let h = rows(&z, &self.gf);
-        let mut logits = self.head.matmul_bt(&h, pool);
+        let mut logits = self.head.matmul_bt(&h, pool, be);
         for i in 0..tn {
             log_softmax_in_place(logits.row_mut(i));
         }
@@ -423,15 +445,22 @@ impl RowSource for TensorRows<'_> {
 /// value sums) is exactly the pre-§12 per-head loop's, which is what
 /// keeps `--kv-bits 32` bit-identical to the PR 5 path
 /// (`tests/prop_serve.rs` pins it).
+///
+/// `t` is `(causal_t, total_t)`. The q·k dots and the p·v AXPYs run on
+/// `backend` ([`Backend::dot`]/[`Backend::axpy`]): `Reference` is exactly
+/// the historical inlined loops, `Simd` vectorizes them under the §13
+/// tolerance contract (the `p == 0.0` skip stays caller-side, so the
+/// zero-skip contract is backend-independent here).
 fn attn_row<K: RowSource, V: RowSource>(
     q: &[f32],
     heads: usize,
     hd: usize,
-    causal_t: usize,
-    total_t: usize,
+    t: (usize, usize),
     k_rows: &K,
     v_rows: &V,
+    backend: Backend,
 ) -> Vec<f32> {
+    let (causal_t, total_t) = t;
     let d = heads * hd;
     let mut out = vec![0.0f32; d];
     let mut scratch = vec![0.0f32; d];
@@ -448,10 +477,7 @@ fn attn_row<K: RowSource, V: RowSource>(
         for m in 0..heads {
             let qh = &q[m * hd..(m + 1) * hd];
             let kh = &krow[m * hd..(m + 1) * hd];
-            let mut dot = 0.0f32;
-            for (a, b) in qh.iter().zip(kh) {
-                dot += a * b;
-            }
+            let dot = backend.dot(qh, kh);
             scores[m * total_t + s] = dot / (hd as f32).sqrt();
         }
     }
@@ -478,9 +504,7 @@ fn attn_row<K: RowSource, V: RowSource>(
             }
             let oh = &mut out[m * hd..(m + 1) * hd];
             let vh = &vrow[m * hd..(m + 1) * hd];
-            for (o, &vv) in oh.iter_mut().zip(vh) {
-                *o += p * vv;
-            }
+            backend.axpy(p, vh, oh);
         }
     }
     out
@@ -539,22 +563,24 @@ impl<'m> Decoder<'m> {
         let model = self.model;
         let cfg = &model.cfg;
         let (heads, hd) = (cfg.heads, cfg.head_dim());
+        let be = model.backend;
         let mut z = model.embed_row(token, t);
         for (l, layer) in model.layers.iter().enumerate() {
             let xa = rmsnorm_gain(&z, &layer.g1);
-            let q = layer.wq.matvec(&xa, pool);
-            let k = layer.wk.matvec(&xa, pool);
-            let v = layer.wv.matvec(&xa, pool);
+            let q = layer.wq.matvec(&xa, pool, be);
+            let k = layer.wk.matvec(&xa, pool, be);
+            let v = layer.wv.matvec(&xa, pool, be);
             self.kv.write(l, t, &k, &v);
-            let xo = attn_row(&q, heads, hd, t, t + 1, &self.kv.k_rows(l), &self.kv.v_rows(l));
-            for (zv, ov) in z.iter_mut().zip(layer.wo.matvec(&xo, pool)) {
+            let (kr, vr) = (self.kv.k_rows(l), self.kv.v_rows(l));
+            let xo = attn_row(&q, heads, hd, (t, t + 1), &kr, &vr, be);
+            for (zv, ov) in z.iter_mut().zip(layer.wo.matvec(&xo, pool, be)) {
                 *zv += ov;
             }
             let xf = rmsnorm_gain(&z, &layer.g2);
-            let gate = layer.wgate.matvec(&xf, pool);
-            let up = layer.wup.matvec(&xf, pool);
+            let gate = layer.wgate.matvec(&xf, pool, be);
+            let up = layer.wup.matvec(&xf, pool, be);
             let xd = swiglu_row(&gate, &up);
-            for (zv, dv) in z.iter_mut().zip(layer.wdown.matvec(&xd, pool)) {
+            for (zv, dv) in z.iter_mut().zip(layer.wdown.matvec(&xd, pool, be)) {
                 *zv += dv;
             }
         }
@@ -563,7 +589,7 @@ impl<'m> Decoder<'m> {
             return None;
         }
         let h = rmsnorm_gain(&z, &model.gf);
-        let mut logits = model.head.matvec(&h, pool);
+        let mut logits = model.head.matvec(&h, pool, be);
         log_softmax_in_place(&mut logits);
         Some(logits)
     }
@@ -721,6 +747,36 @@ mod tests {
         for jobs in [1usize, 4] {
             let pool = Pool::new(jobs);
             assert_eq!(greedy_decode(&model, &prompt, 12, Some(&pool)).unwrap(), serial);
+        }
+    }
+
+    #[test]
+    fn simd_backend_decode_is_deterministic_and_close_to_reference() {
+        // Backend::Simd resolves to scalar fallbacks off-AVX2, so this
+        // runs everywhere; on AVX2 hosts it pins the §13 contracts on the
+        // serve path: logits within tolerance of reference, greedy tokens
+        // jobs-invariant, and every KV format still deterministic.
+        let p = ParamSet::init(&cfg(), 11);
+        let mut model = PackedModel::from_paramset_rtn(&p, 4).unwrap();
+        let prompt = [3i32, 1, 4, 1, 5];
+        let reference = model.logits_full(&prompt, None);
+        assert_eq!(model.backend(), Backend::Reference, "default backend");
+        model.set_backend(Backend::Simd);
+        let simd = model.logits_full(&prompt, None);
+        for (a, b) in reference.data.iter().zip(&simd.data) {
+            let tol = 1e-3f32.max(a.abs() * 1e-3);
+            assert!((a - b).abs() <= tol, "logit drift {a} vs {b}");
+        }
+        let serial = greedy_decode(&model, &prompt, 8, None).unwrap();
+        for jobs in [1usize, 4] {
+            let pool = Pool::new(jobs);
+            let got = greedy_decode(&model, &prompt, 8, Some(&pool)).unwrap();
+            assert_eq!(got, serial, "simd decode must be jobs-invariant");
+        }
+        for fmt in [KvFormat::F32, KvFormat::Linear8, KvFormat::Log2] {
+            let a = greedy_decode_kv(&model, &prompt, 8, fmt, None).unwrap();
+            let b = greedy_decode_kv(&model, &prompt, 8, fmt, None).unwrap();
+            assert_eq!(a, b, "{fmt:?}: simd decode must be deterministic");
         }
     }
 

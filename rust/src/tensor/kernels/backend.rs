@@ -1,0 +1,316 @@
+//! Backend dispatch for the host kernel layer (DESIGN.md §13).
+//!
+//! Two implementations of the same kernel family sit behind
+//! [`KernelBackend`]:
+//!
+//! - [`ReferenceKernels`] — the free functions of this module tree
+//!   (`gemm.rs`, `gemv.rs`), bit-identical to the naive reference at
+//!   every jobs count. This backend IS the repo's bit-exact oracle: all
+//!   exact-equality tests, golden fixtures, and the quantize/eval/
+//!   generate default run through it unchanged.
+//! - [`SimdKernels`] — runtime-detected AVX2+FMA paths (`simd.rs`).
+//!   SIMD reassociates the k-reductions (eight lanes × multiple
+//!   accumulators, FMA contraction), so its outputs are pinned by the
+//!   shared tolerance/ULP harness (`tests/common/mod.rs`), never by
+//!   exact equality. Deterministic and jobs-invariant all the same: the
+//!   lane structure is fixed and the row-block dispatch never splits a
+//!   reduction.
+//!
+//! [`Backend`] is the value call sites thread around (CLI → pipeline →
+//! serve). `Backend::parse` maps the `--backend` flag: `reference` is
+//! the default, `simd` and `auto` both resolve to [`Backend::Simd`] when
+//! the host supports AVX2+FMA (checked once per call via
+//! `is_x86_feature_detected!`) and **silently** to
+//! [`Backend::Reference`] otherwise — on a non-x86 or pre-AVX2 host
+//! every spelling degrades to the oracle, so reports record the
+//! *resolved* backend name, never the flag spelling.
+
+use crate::tensor::pack::PackedRows;
+use crate::tensor::Tensor;
+use crate::util::Pool;
+
+use super::{gemm, gemv, simd};
+
+/// The kernel entry points a backend must provide: the GEMM family, the
+/// fused dequantize kernels, and the dot/AXPY primitives the serving
+/// layer's `attn_row` consumes over decoded KV scratch.
+pub trait KernelBackend: Sync {
+    /// Resolved backend name, as recorded by `QuantReport`/`ServeReport`.
+    fn name(&self) -> &'static str;
+    /// A\[m,k\] · B\[k,n\] → \[m,n\].
+    fn gemm(&self, a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor;
+    /// Aᵀ·B for A\[k,m\], B\[k,n\] → \[m,n\], reading A columns in place.
+    fn gemm_at(&self, a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor;
+    /// A·Bᵀ for A\[m,k\], B\[n,k\] → \[m,n\].
+    fn gemm_bt(&self, a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor;
+    /// Symmetric A·Aᵀ for A\[m,k\] → \[m,m\] (finite input contract, §10).
+    fn syrk(&self, a: &Tensor, pool: Option<&Pool>) -> Tensor;
+    /// Symmetric Aᵀ·A for A\[k,m\] → \[m,m\] (finite input contract, §10).
+    fn syrk_t(&self, a: &Tensor, pool: Option<&Pool>) -> Tensor;
+    /// Fused dequantize A·Wᵀ over bit-packed W (DESIGN.md §11).
+    fn deq_gemm_bt(&self, a: &Tensor, w: &PackedRows, pool: Option<&Pool>) -> Tensor;
+    /// Fused dequantize GEMV `x · Wᵀ` — the serve decode hot path.
+    fn deq_gemv(&self, x: &[f32], w: &PackedRows, pool: Option<&Pool>) -> Vec<f32>;
+    /// Plain dot product (no zero-skip) — `attn_row`'s score kernel.
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32;
+    /// `y += c · x` (caller skips `c == 0`) — `attn_row`'s value kernel.
+    fn axpy(&self, c: f32, x: &[f32], y: &mut [f32]);
+}
+
+/// The scalar dot product `attn_row` historically inlined: k ascending
+/// into one accumulator, no zero-skip. [`ReferenceKernels::dot`] must be
+/// exactly this loop so the KV attention path stays bit-identical to the
+/// pre-backend code.
+pub(super) fn scalar_dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// The scalar AXPY `attn_row` historically inlined (value accumulation);
+/// the `c == 0.0` skip stays at the call site, as before.
+pub(super) fn scalar_axpy(c: f32, x: &[f32], y: &mut [f32]) {
+    for (o, &v) in y.iter_mut().zip(x) {
+        *o += c * v;
+    }
+}
+
+/// The bit-exact oracle backend: delegates to the reference free
+/// functions, so routing a call site through the trait changes nothing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReferenceKernels;
+
+impl KernelBackend for ReferenceKernels {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+    fn gemm(&self, a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+        gemm::gemm(a, b, pool)
+    }
+    fn gemm_at(&self, a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+        gemm::gemm_at(a, b, pool)
+    }
+    fn gemm_bt(&self, a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+        gemm::gemm_bt(a, b, pool)
+    }
+    fn syrk(&self, a: &Tensor, pool: Option<&Pool>) -> Tensor {
+        gemm::syrk(a, pool)
+    }
+    fn syrk_t(&self, a: &Tensor, pool: Option<&Pool>) -> Tensor {
+        gemm::syrk_t(a, pool)
+    }
+    fn deq_gemm_bt(&self, a: &Tensor, w: &PackedRows, pool: Option<&Pool>) -> Tensor {
+        gemv::deq_gemm_bt(a, w, pool)
+    }
+    fn deq_gemv(&self, x: &[f32], w: &PackedRows, pool: Option<&Pool>) -> Vec<f32> {
+        gemv::deq_gemv(x, w, pool)
+    }
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        scalar_dot(a, b)
+    }
+    fn axpy(&self, c: f32, x: &[f32], y: &mut [f32]) {
+        scalar_axpy(c, x, y)
+    }
+}
+
+/// The AVX2+FMA backend. Every entry point re-checks availability and
+/// falls back to the reference implementation when the host lacks the
+/// features, so the struct is always safe to construct and call — but
+/// call sites normally never see that fallback, because
+/// [`Backend::parse`] already resolves `simd`/`auto` to
+/// [`Backend::Reference`] on such hosts.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimdKernels;
+
+impl KernelBackend for SimdKernels {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+    fn gemm(&self, a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+        simd::gemm(a, b, pool)
+    }
+    fn gemm_at(&self, a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+        simd::gemm_at(a, b, pool)
+    }
+    fn gemm_bt(&self, a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+        simd::gemm_bt(a, b, pool)
+    }
+    fn syrk(&self, a: &Tensor, pool: Option<&Pool>) -> Tensor {
+        simd::syrk(a, pool)
+    }
+    fn syrk_t(&self, a: &Tensor, pool: Option<&Pool>) -> Tensor {
+        simd::syrk_t(a, pool)
+    }
+    fn deq_gemm_bt(&self, a: &Tensor, w: &PackedRows, pool: Option<&Pool>) -> Tensor {
+        simd::deq_gemm_bt(a, w, pool)
+    }
+    fn deq_gemv(&self, x: &[f32], w: &PackedRows, pool: Option<&Pool>) -> Vec<f32> {
+        simd::deq_gemv(x, w, pool)
+    }
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        simd::dot(a, b)
+    }
+    fn axpy(&self, c: f32, x: &[f32], y: &mut [f32]) {
+        simd::axpy(c, x, y)
+    }
+}
+
+static REFERENCE: ReferenceKernels = ReferenceKernels;
+static SIMD: SimdKernels = SimdKernels;
+
+/// The resolved backend selection call sites thread around — `Copy`, so
+/// it rides in options structs and model state without lifetimes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// The bit-exact oracle (default).
+    #[default]
+    Reference,
+    /// AVX2+FMA kernels; tolerance-pinned against the oracle.
+    Simd,
+}
+
+impl Backend {
+    /// Parse a `--backend` spelling. `reference` always maps to the
+    /// oracle; `simd` and `auto` resolve to [`Backend::Simd`] when the
+    /// host supports AVX2+FMA and silently to [`Backend::Reference`]
+    /// otherwise (the §13 degradation contract — non-x86 and pre-AVX2
+    /// hosts run every spelling bit-identically to the default). Unknown
+    /// spellings return `None` for the caller's fail-fast path.
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "reference" => Some(Backend::Reference),
+            "simd" | "auto" => {
+                Some(if simd::simd_available() { Backend::Simd } else { Backend::Reference })
+            }
+            _ => None,
+        }
+    }
+
+    /// Resolved name, recorded by `QuantReport`/`ServeReport`.
+    pub fn name(self) -> &'static str {
+        self.ops().name()
+    }
+
+    /// The trait object for generic call sites.
+    pub fn ops(self) -> &'static dyn KernelBackend {
+        match self {
+            Backend::Reference => &REFERENCE,
+            Backend::Simd => &SIMD,
+        }
+    }
+
+    /// A·B through the selected backend.
+    pub fn gemm(self, a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+        self.ops().gemm(a, b, pool)
+    }
+
+    /// Aᵀ·B through the selected backend.
+    pub fn gemm_at(self, a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+        self.ops().gemm_at(a, b, pool)
+    }
+
+    /// A·Bᵀ through the selected backend.
+    pub fn gemm_bt(self, a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+        self.ops().gemm_bt(a, b, pool)
+    }
+
+    /// A·Aᵀ through the selected backend.
+    pub fn syrk(self, a: &Tensor, pool: Option<&Pool>) -> Tensor {
+        self.ops().syrk(a, pool)
+    }
+
+    /// Aᵀ·A through the selected backend.
+    pub fn syrk_t(self, a: &Tensor, pool: Option<&Pool>) -> Tensor {
+        self.ops().syrk_t(a, pool)
+    }
+
+    /// Fused dequantize A·Wᵀ through the selected backend.
+    pub fn deq_gemm_bt(self, a: &Tensor, w: &PackedRows, pool: Option<&Pool>) -> Tensor {
+        self.ops().deq_gemm_bt(a, w, pool)
+    }
+
+    /// Fused dequantize GEMV through the selected backend.
+    pub fn deq_gemv(self, x: &[f32], w: &PackedRows, pool: Option<&Pool>) -> Vec<f32> {
+        self.ops().deq_gemv(x, w, pool)
+    }
+
+    /// Dot product through the selected backend — matched inline (no
+    /// vtable) because `attn_row` calls it once per head per position.
+    #[inline]
+    pub fn dot(self, a: &[f32], b: &[f32]) -> f32 {
+        match self {
+            Backend::Reference => scalar_dot(a, b),
+            Backend::Simd => simd::dot(a, b),
+        }
+    }
+
+    /// AXPY through the selected backend (same inlining rationale).
+    #[inline]
+    pub fn axpy(self, c: f32, x: &[f32], y: &mut [f32]) {
+        match self {
+            Backend::Reference => scalar_axpy(c, x, y),
+            Backend::Simd => simd::axpy(c, x, y),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spellings() {
+        assert_eq!(Backend::parse("reference"), Some(Backend::Reference));
+        // `auto` and `simd` resolve identically: Simd where AVX2+FMA is
+        // detected, Reference otherwise — never an error.
+        assert_eq!(Backend::parse("simd"), Backend::parse("auto"));
+        let resolved = Backend::parse("auto").unwrap();
+        if simd::simd_available() {
+            assert_eq!(resolved, Backend::Simd);
+        } else {
+            assert_eq!(resolved, Backend::Reference);
+        }
+        for bad in ["", "avx2", "Reference", "SIMD", "fastest"] {
+            assert_eq!(Backend::parse(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn names_and_default() {
+        assert_eq!(Backend::default(), Backend::Reference);
+        assert_eq!(Backend::Reference.name(), "reference");
+        assert_eq!(Backend::Simd.name(), "simd");
+        assert_eq!(ReferenceKernels.name(), "reference");
+        assert_eq!(SimdKernels.name(), "simd");
+    }
+
+    #[test]
+    fn reference_primitives_match_the_inlined_loops() {
+        let a = [1.5f32, -2.0, 0.0, 3.25, 0.5];
+        let b = [0.5f32, 1.0, f32::NAN, -1.0, 2.0];
+        // dot has NO zero-skip: the NaN term is 0.0 * NaN = NaN
+        assert!(Backend::Reference.dot(&a, &b).is_nan());
+        let mut want = 0.0f32;
+        let bf = [0.5f32, 1.0, 4.0, -1.0, 2.0];
+        for (&x, &y) in a.iter().zip(&bf) {
+            want += x * y;
+        }
+        assert_eq!(Backend::Reference.dot(&a, &bf).to_bits(), want.to_bits());
+        let mut y = [1.0f32, 2.0, 3.0];
+        Backend::Reference.axpy(2.0, &[0.5, -1.0, 0.25], &mut y);
+        assert_eq!(y, [2.0, 0.0, 3.5]);
+    }
+
+    #[test]
+    fn reference_trait_is_the_free_functions() {
+        use crate::util::Pcg;
+        let mut rng = Pcg::new(9);
+        let a = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let b = Tensor::randn(&[7, 4], 1.0, &mut rng);
+        let via_trait = Backend::Reference.gemm(&a, &b, None);
+        assert_eq!(via_trait.data, gemm::gemm(&a, &b, None).data);
+        assert_eq!(via_trait.data, a.matmul(&b).data);
+    }
+}

@@ -62,7 +62,7 @@ pub fn cholesky_lower(a: &Tensor, pool: Option<&Pool>) -> Tensor {
         // diagonal block independently — row-parallel, coordinator writes
         // the rows back in index order.
         let bw = p1 - p0;
-        let panel = par_rows(pool, d - p1, |ri| {
+        let panel = par_rows(pool, d - p1, (d - p1) * bw * bw, |ri| {
             let i = p1 + ri;
             let mut row = vec![0.0f32; bw];
             for j in p0..p1 {
@@ -82,7 +82,7 @@ pub fn cholesky_lower(a: &Tensor, pool: Option<&Pool>) -> Tensor {
         // trailing update: w[i][j] -= Σ_{k∈panel} l[i][k]·l[j][k], one
         // term at a time in k order (the reference's exact sequence),
         // lower triangle only — row-parallel.
-        let upd = par_rows(pool, d - p1, |ri| {
+        let upd = par_rows(pool, d - p1, (d - p1) * (d - p1) * bw / 2, |ri| {
             let i = p1 + ri;
             let li = &l.data[i * d + p0..i * d + p1];
             let mut row = Vec::with_capacity(i - p1 + 1);
@@ -115,7 +115,7 @@ pub fn tri_inv_lower(l: &Tensor, pool: Option<&Pool>) -> Tensor {
     assert_eq!(d, l.cols(), "tri_inv needs a square matrix");
     // column j's task returns x[j..d][j]; early columns are the longest,
     // which the pool's atomic task claim load-balances.
-    let cols = par_rows(pool, d, |j| {
+    let cols = par_rows(pool, d, d * d * d / 6, |j| {
         let mut col = vec![0.0f32; d - j];
         for i in j..d {
             let mut s = if i == j { 1.0 } else { 0.0 };

@@ -1,12 +1,15 @@
 //! The GEMM/SYRK family: pool-parallel over row blocks, cache-tiled over
 //! output columns, bit-identical to the naive reference kernel
 //! (`Tensor::matmul` + materialized `transpose2()`) — see the module docs
-//! in [`super`] for the determinism and zero-skip contracts.
+//! in [`super`] for the determinism and zero-skip contracts. These free
+//! functions are the `reference` backend (DESIGN.md §13); rows write
+//! through [`par_rows_into`] straight into the output buffer, so the
+//! dispatch spine allocates per row *block* at most, never per row.
 
 use crate::tensor::Tensor;
 use crate::util::Pool;
 
-use super::par_rows;
+use super::par_rows_into;
 
 /// Output-column tile: one out-row segment plus one B-row segment stay
 /// L1-resident across the k sweep. Tiling over j never touches the
@@ -14,22 +17,13 @@ use super::par_rows;
 /// cannot perturb a single output bit.
 const BJ: usize = 256;
 
-fn stitch(m: usize, n: usize, rows: Vec<Vec<f32>>) -> Tensor {
-    debug_assert_eq!(rows.len(), m);
-    let mut data = Vec::with_capacity(m * n);
-    for r in rows {
-        debug_assert_eq!(r.len(), n);
-        data.extend_from_slice(&r);
-    }
-    Tensor::from_vec(&[m, n], data)
-}
-
-/// One output row of A·B or Aᵀ·B: `coeff(kk)` yields the row's A
-/// coefficient for inner index `kk` (contiguous for `gemm`, strided for
-/// `gemm_at`); B rows are read in place. Zero coefficients are skipped —
-/// the reference kernel's contract (see [`super`]).
-fn row_ab(coeff: impl Fn(usize) -> f32, b: &Tensor, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n];
+/// One output row of A·B or Aᵀ·B into a zeroed `out` slice: `coeff(kk)`
+/// yields the row's A coefficient for inner index `kk` (contiguous for
+/// `gemm`, strided for `gemm_at`); B rows are read in place. Zero
+/// coefficients are skipped — the reference kernel's contract (see
+/// [`super`]).
+fn row_ab(coeff: impl Fn(usize) -> f32, b: &Tensor, k: usize, out: &mut [f32]) {
+    let n = out.len();
     let mut j0 = 0;
     while j0 < n {
         let j1 = (j0 + BJ).min(n);
@@ -45,7 +39,6 @@ fn row_ab(coeff: impl Fn(usize) -> f32, b: &Tensor, k: usize, n: usize) -> Vec<f
         }
         j0 = j1;
     }
-    out
 }
 
 /// A [m,k] · B [k,n] → [m,n]. Pool-parallel over row blocks; bit-identical
@@ -54,14 +47,13 @@ pub fn gemm(a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2, "gemm inner dim: {k} vs {k2}");
-    stitch(
-        m,
-        n,
-        par_rows(pool, m, |i| {
-            let a_row = a.row(i);
-            row_ab(|kk| a_row[kk], b, k, n)
-        }),
-    )
+    let mut out = Tensor::zeros(&[m, n]);
+    let span = |i: usize| i * n..(i + 1) * n;
+    par_rows_into(pool, m, m * k * n, &mut out.data, span, |i, row| {
+        let a_row = a.row(i);
+        row_ab(|kk| a_row[kk], b, k, row)
+    });
+    out
 }
 
 /// Aᵀ·B for A [k,m], B [k,n] → [m,n], reading A's columns in place — the
@@ -71,27 +63,30 @@ pub fn gemm_at(a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
     let (k, m) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2, "gemm_at inner dim: {k} vs {k2}");
-    stitch(m, n, par_rows(pool, m, |i| row_ab(|kk| a.data[kk * m + i], b, k, n)))
+    let mut out = Tensor::zeros(&[m, n]);
+    let span = |i: usize| i * n..(i + 1) * n;
+    par_rows_into(pool, m, m * k * n, &mut out.data, span, |i, row| {
+        row_ab(|kk| a.data[kk * m + i], b, k, row)
+    });
+    out
 }
 
-/// One output row of A·Bᵀ-shaped products: dot products of `a_row`
-/// against `bj(j)` rows, k ascending, zero coefficients of `a_row`
-/// skipped — the element-wise operation sequence of the reference
+/// Dot products of `a_row` against `bj(j)` rows into a zeroed `out`
+/// slice, k ascending, zero coefficients of `a_row` skipped — the
+/// element-wise operation sequence of the reference
 /// `a.matmul(&b.transpose2())`.
-fn row_dots<'t>(a_row: &[f32], bj: impl Fn(usize) -> &'t [f32], cols: usize) -> Vec<f32> {
-    (0..cols)
-        .map(|j| {
-            let b_row = bj(j);
-            let mut acc = 0.0f32;
-            for (&av, &bv) in a_row.iter().zip(b_row) {
-                if av == 0.0 {
-                    continue;
-                }
-                acc += av * bv;
+fn row_dots<'t>(a_row: &[f32], bj: impl Fn(usize) -> &'t [f32], out: &mut [f32]) {
+    for (j, o) in out.iter_mut().enumerate() {
+        let b_row = bj(j);
+        let mut acc = 0.0f32;
+        for (&av, &bv) in a_row.iter().zip(b_row) {
+            if av == 0.0 {
+                continue;
             }
-            acc
-        })
-        .collect()
+            acc += av * bv;
+        }
+        *o = acc;
+    }
 }
 
 /// A·Bᵀ for A [m,k], B [n,k] → [m,n]: both operands are walked along
@@ -101,10 +96,18 @@ pub fn gemm_bt(a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (n, k2) = (b.rows(), b.cols());
     assert_eq!(k, k2, "gemm_bt inner dim: {k} vs {k2}");
-    stitch(m, n, par_rows(pool, m, |i| row_dots(a.row(i), |j| b.row(j), n)))
+    let mut out = Tensor::zeros(&[m, n]);
+    let span = |i: usize| i * n..(i + 1) * n;
+    par_rows_into(pool, m, m * k * n, &mut out.data, span, |i, row| {
+        row_dots(a.row(i), |j| b.row(j), row)
+    });
+    out
 }
 
-fn mirror_upper(t: &mut Tensor) {
+/// Mirror the computed lower triangle onto the upper one — shared by the
+/// reference and simd `syrk`/`syrk_t` (the simd backend reuses it, so
+/// the symmetric-output convention cannot drift between backends).
+pub(super) fn mirror_upper(t: &mut Tensor) {
     let m = t.rows();
     for i in 0..m {
         for j in (i + 1)..m {
@@ -120,12 +123,12 @@ fn mirror_upper(t: &mut Tensor) {
 /// (products commute exactly; a skipped 0·x term contributes an exact
 /// ±0.0 that cannot move a +0.0-seeded accumulator).
 pub fn syrk(a: &Tensor, pool: Option<&Pool>) -> Tensor {
-    let m = a.rows();
-    let rows = par_rows(pool, m, |i| row_dots(a.row(i), |j| a.row(j), i + 1));
+    let (m, k) = (a.rows(), a.cols());
     let mut out = Tensor::zeros(&[m, m]);
-    for (i, r) in rows.into_iter().enumerate() {
-        out.data[i * m..i * m + i + 1].copy_from_slice(&r);
-    }
+    let span = |i: usize| i * m..i * m + i + 1;
+    par_rows_into(pool, m, m * m * k / 2, &mut out.data, span, |i, row| {
+        row_dots(a.row(i), |j| a.row(j), row)
+    });
     mirror_upper(&mut out);
     out
 }
@@ -136,24 +139,20 @@ pub fn syrk(a: &Tensor, pool: Option<&Pool>) -> Tensor {
 /// contract as [`syrk`].
 pub fn syrk_t(a: &Tensor, pool: Option<&Pool>) -> Tensor {
     let (k, m) = (a.rows(), a.cols());
-    let rows = par_rows(pool, m, |i| {
-        let mut out = vec![0.0f32; i + 1];
+    let mut out = Tensor::zeros(&[m, m]);
+    let span = |i: usize| i * m..i * m + i + 1;
+    par_rows_into(pool, m, m * m * k / 2, &mut out.data, span, |i, row| {
         for kk in 0..k {
             let av = a.data[kk * m + i];
             if av == 0.0 {
                 continue;
             }
             let a_row = &a.data[kk * m..kk * m + i + 1];
-            for (o, &bv) in out.iter_mut().zip(a_row) {
+            for (o, &bv) in row.iter_mut().zip(a_row) {
                 *o += av * bv;
             }
         }
-        out
     });
-    let mut out = Tensor::zeros(&[m, m]);
-    for (i, r) in rows.into_iter().enumerate() {
-        out.data[i * m..i * m + i + 1].copy_from_slice(&r);
-    }
     mirror_upper(&mut out);
     out
 }

@@ -23,7 +23,7 @@ use crate::tensor::pack::PackedRows;
 use crate::tensor::Tensor;
 use crate::util::Pool;
 
-use super::{par_rows, ROW_BLOCK};
+use super::{par_rows, pooled, ROW_BLOCK};
 
 /// Codes dequantized per tile: 256 f32s (1 KiB) of stack scratch per
 /// worker. Tiling never touches the per-element accumulation order (k
@@ -63,7 +63,7 @@ pub fn deq_gemm_bt(a: &Tensor, w: &PackedRows, pool: Option<&Pool>) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     assert_eq!(w.cols, k, "deq_gemm_bt inner dim: {k} vs {}", w.cols);
     let n = w.rows;
-    let cols = par_rows(pool, n, |j| column(&a.data, m, k, w, j));
+    let cols = par_rows(pool, n, m * k * n, |j| column(&a.data, m, k, w, j));
     let mut out = Tensor::zeros(&[m, n]);
     for (j, col) in cols.into_iter().enumerate() {
         for (i, v) in col.into_iter().enumerate() {
@@ -101,6 +101,10 @@ fn dot_row(x: &[f32], w: &PackedRows, j: usize, buf: &mut [f32; DEQ_TILE]) -> f3
 /// dispatches `ROW_BLOCK`-sized packed-row blocks that each write their
 /// outputs into one buffer — no per-output-element allocation — while
 /// keeping the exact per-element operation sequence of the reference.
+/// Shapes under [`super::POOL_MIN_WORK`] (`n·k` here — the batch-1
+/// decode GEMVs of a tiny model) skip the pool entirely: the task-claim
+/// round trip would cost more than the arithmetic, and the serial path
+/// is bit-identical anyway.
 pub fn deq_gemv(x: &[f32], w: &PackedRows, pool: Option<&Pool>) -> Vec<f32> {
     assert_eq!(x.len(), w.cols, "deq_gemv inner dim: {} vs {}", x.len(), w.cols);
     let n = w.rows;
@@ -113,8 +117,8 @@ pub fn deq_gemv(x: &[f32], w: &PackedRows, pool: Option<&Pool>) -> Vec<f32> {
         out
     };
     let starts: Vec<usize> = (0..n).step_by(ROW_BLOCK).collect();
-    match pool {
-        Some(p) if p.jobs() > 1 && starts.len() > 1 => p
+    match pooled(pool, starts.len(), n * w.cols) {
+        Some(p) => p
             .run(starts.len(), |bi| {
                 let lo = starts[bi];
                 block(lo, (lo + ROW_BLOCK).min(n))
@@ -122,7 +126,7 @@ pub fn deq_gemv(x: &[f32], w: &PackedRows, pool: Option<&Pool>) -> Vec<f32> {
             .into_iter()
             .flatten()
             .collect(),
-        _ => block(0, n),
+        None => block(0, n),
     }
 }
 

@@ -1,5 +1,5 @@
 //! Host kernel layer: pool-parallel, cache-tiled dense kernels for every
-//! host-side hot path (DESIGN.md §10).
+//! host-side hot path (DESIGN.md §10), dispatched per backend (§13).
 //!
 //! The naive [`Tensor::matmul`] forced two costs on the rotate/solve hot
 //! paths: it is single-threaded, and every transposed operand had to be
@@ -19,6 +19,15 @@
 //!   dequantize products over bit-packed weights (`tensor::pack`), which
 //!   never materialize the dequantized operand (DESIGN.md §11).
 //!
+//! **Backends (DESIGN.md §13).** The free functions above are the
+//! `reference` backend — the bit-exact oracle every equivalence test pins
+//! against. [`Backend`] selects between them and the runtime-detected
+//! AVX2+FMA implementations in [`simd`] (`--backend reference|simd|auto`):
+//! [`KernelBackend`] is the dispatch trait, [`Backend::parse`] resolves
+//! `simd`/`auto` to `reference` silently when the host lacks AVX2+FMA, and
+//! the simd kernels are tolerance-pinned (they reassociate reductions),
+//! never exact-pinned — see `backend.rs` and `tests/common/mod.rs`.
+//!
 //! **Determinism (DESIGN.md §5, §10).** Every kernel takes an optional
 //! [`Pool`] and parallelizes over *row blocks* (column blocks for
 //! `tri_inv_lower`): workers compute disjoint output rows with the exact
@@ -29,6 +38,9 @@
 //! visited in increasing order into the same accumulator), the kernels are
 //! bit-identical to the naive reference kernel itself. The equivalence
 //! tests (`tests/prop_kernels.rs`) assert exact equality, not tolerance.
+//! The same row-block dispatch carries the simd backend, so simd output is
+//! equally jobs-invariant — it only differs from reference by the
+//! documented in-row reassociation.
 //!
 //! **Zero-skip contract.** The reference kernel skips `a == 0.0`
 //! coefficients (both signs), which also suppresses NaN/∞ propagation from
@@ -36,38 +48,66 @@
 //! contractually, not accidentally: `gemm::tests` pins the behavior on
 //! non-finite inputs against the reference. `syrk`/`syrk_t` additionally
 //! assume finite input (the mirrored triangle equals the reference only
-//! when 0·x cannot produce NaN); every call site feeds finite data.
+//! when 0·x cannot produce NaN); every call site feeds finite data. The
+//! simd backend keeps the skip only where it is a scalar coefficient test
+//! (the AXPY-form kernels); see §13 for the caveat on the dot-form ones.
 //!
 //! [`Tensor::matmul`]: crate::tensor::Tensor::matmul
 //! [`Pool`]: crate::util::Pool
 
+pub mod backend;
 pub mod factor;
 pub mod gemm;
 pub mod gemv;
+pub mod simd;
 
+pub use backend::{Backend, KernelBackend, ReferenceKernels, SimdKernels};
 pub use factor::{cholesky_lower, tri_inv_lower};
 pub use gemm::{gemm, gemm_at, gemm_bt, syrk, syrk_t};
 pub use gemv::{deq_gemm_bt, deq_gemv};
+pub use simd::simd_available;
 
 use crate::util::Pool;
+use std::ops::Range;
 
 /// Output rows (or columns) dispatched per pool task: small enough to
 /// load-balance ragged work (`syrk` rows grow with the index), large
 /// enough that the atomic task claim is amortized.
 pub(crate) const ROW_BLOCK: usize = 16;
 
+/// Minimum per-call work (fused multiply-add count, estimated by each
+/// kernel as the product of its loop extents) below which pool dispatch
+/// is skipped entirely and the serial path runs in the calling thread.
+/// Tiny shapes — the batch-1 decode GEMVs of `serve/` above all — would
+/// otherwise pay the atomic task-claim round trip for microseconds of
+/// arithmetic. Dispatch is bit-identical either way (the serial path IS
+/// the per-row code the workers run), so the threshold is pure policy;
+/// `benches/bench_kernels.rs` prints it next to the shapes it gates.
+pub const POOL_MIN_WORK: usize = 1 << 12;
+
+/// Whether `pool` should be used for `starts.len()` row blocks of
+/// estimated total `work`: multi-worker, more than one block, and enough
+/// arithmetic to amortize the task claims ([`POOL_MIN_WORK`]).
+fn pooled(pool: Option<&Pool>, blocks: usize, work: usize) -> Option<&Pool> {
+    match pool {
+        Some(p) if p.jobs() > 1 && blocks > 1 && work >= POOL_MIN_WORK => Some(p),
+        _ => None,
+    }
+}
+
 /// Run `f(0), …, f(n-1)` — one call per output row — and return the
-/// results in row order. With a multi-worker pool the rows are dispatched
-/// in blocks of [`ROW_BLOCK`] over [`Pool::run`]; rows are computed by the
-/// same closure either way, so the parallel path is bit-identical to the
-/// serial one (the determinism contract of the module docs).
-pub(crate) fn par_rows<F>(pool: Option<&Pool>, n: usize, f: F) -> Vec<Vec<f32>>
+/// results in row order. With a multi-worker pool (and at least
+/// [`POOL_MIN_WORK`] estimated work) the rows are dispatched in blocks of
+/// [`ROW_BLOCK`] over [`Pool::run`]; rows are computed by the same closure
+/// either way, so the parallel path is bit-identical to the serial one
+/// (the determinism contract of the module docs).
+pub(crate) fn par_rows<F>(pool: Option<&Pool>, n: usize, work: usize, f: F) -> Vec<Vec<f32>>
 where
     F: Fn(usize) -> Vec<f32> + Sync,
 {
     let starts: Vec<usize> = (0..n).step_by(ROW_BLOCK).collect();
-    match pool {
-        Some(p) if p.jobs() > 1 && starts.len() > 1 => p
+    match pooled(pool, starts.len(), work) {
+        Some(p) => p
             .run(starts.len(), |bi| {
                 let lo = starts[bi];
                 let hi = (lo + ROW_BLOCK).min(n);
@@ -76,7 +116,58 @@ where
             .into_iter()
             .flatten()
             .collect(),
-        _ => (0..n).map(f).collect(),
+        None => (0..n).map(f).collect(),
+    }
+}
+
+/// The allocation-free spine: run `f(i, row)` for each row `i`, where
+/// `row` is `out[span(i)]` — zero-initialized on entry — instead of a
+/// freshly allocated `Vec` per row ([`par_rows`]'s cost). The serial path
+/// writes straight into `out`; the pooled path allocates one buffer per
+/// [`ROW_BLOCK`] block covering `span(lo).start..span(hi-1).end` and the
+/// coordinator copies blocks back in index order, so the parallel path
+/// stays bit-identical to the serial one.
+///
+/// Contract: `span` must be non-decreasing (row i+1 starts at or after
+/// row i), every row slice arrives zeroed, and positions of `out` that
+/// fall inside a block's covering range but in no row's span (the gaps of
+/// ragged triangular outputs) are written as `0.0` by the pooled path —
+/// callers pass freshly zeroed outputs, or overwrite the gaps afterwards
+/// (`syrk`'s upper-triangle mirror does the latter).
+pub(crate) fn par_rows_into<S, F>(
+    pool: Option<&Pool>,
+    n: usize,
+    work: usize,
+    out: &mut [f32],
+    span: S,
+    f: F,
+) where
+    S: Fn(usize) -> Range<usize> + Sync,
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let starts: Vec<usize> = (0..n).step_by(ROW_BLOCK).collect();
+    match pooled(pool, starts.len(), work) {
+        Some(p) => {
+            let blocks = p.run(starts.len(), |bi| {
+                let lo = starts[bi];
+                let hi = (lo + ROW_BLOCK).min(n);
+                let base = span(lo).start;
+                let mut buf = vec![0.0f32; span(hi - 1).end - base];
+                for i in lo..hi {
+                    let r = span(i);
+                    f(i, &mut buf[r.start - base..r.end - base]);
+                }
+                (base, buf)
+            });
+            for (base, buf) in blocks {
+                out[base..base + buf.len()].copy_from_slice(&buf);
+            }
+        }
+        None => {
+            for i in 0..n {
+                f(i, &mut out[span(i)]);
+            }
+        }
     }
 }
 
@@ -87,11 +178,56 @@ mod tests {
     #[test]
     fn par_rows_orders_and_matches_serial() {
         let f = |i: usize| vec![i as f32, (i * i) as f32];
-        let serial = par_rows(None, 67, f);
+        let serial = par_rows(None, 67, POOL_MIN_WORK, f);
         for jobs in [1, 2, 4] {
             let pool = Pool::new(jobs);
-            assert_eq!(par_rows(Some(&pool), 67, f), serial, "jobs={jobs}");
+            assert_eq!(par_rows(Some(&pool), 67, POOL_MIN_WORK, f), serial, "jobs={jobs}");
         }
-        assert_eq!(par_rows(Some(&Pool::new(4)), 0, f), Vec::<Vec<f32>>::new());
+        assert_eq!(par_rows(Some(&Pool::new(4)), 0, POOL_MIN_WORK, f), Vec::<Vec<f32>>::new());
+    }
+
+    #[test]
+    fn par_rows_below_min_work_matches_pooled() {
+        // under the threshold the pool is bypassed; output is identical
+        let f = |i: usize| vec![i as f32; 3];
+        let pool = Pool::new(4);
+        assert_eq!(
+            par_rows(Some(&pool), 67, POOL_MIN_WORK - 1, f),
+            par_rows(Some(&pool), 67, POOL_MIN_WORK, f),
+        );
+    }
+
+    #[test]
+    fn par_rows_into_matches_par_rows_contiguous_and_ragged() {
+        let n = 67usize;
+        // contiguous rows of width 3 (the gemm shape)
+        let f = |i: usize| vec![i as f32, (i * 2) as f32, (i * i) as f32];
+        let want: Vec<f32> = par_rows(None, n, POOL_MIN_WORK, f).into_iter().flatten().collect();
+        for pool in [None, Some(Pool::new(1)), Some(Pool::new(4))] {
+            let mut out = vec![0.0f32; n * 3];
+            let span = |i: usize| i * 3..(i + 1) * 3;
+            par_rows_into(pool.as_ref(), n, POOL_MIN_WORK, &mut out, span, |i, row| {
+                row[0] = i as f32;
+                row[1] = (i * 2) as f32;
+                row[2] = (i * i) as f32;
+            });
+            assert_eq!(out, want, "contiguous pool={:?}", pool.as_ref().map(|p| p.jobs()));
+        }
+        // ragged triangular rows (the syrk shape): row i spans i*n..i*n+i+1
+        for pool in [None, Some(Pool::new(4))] {
+            let mut out = vec![0.0f32; n * n];
+            let span = |i: usize| i * n..i * n + i + 1;
+            par_rows_into(pool.as_ref(), n, POOL_MIN_WORK, &mut out, span, |i, row| {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = (i * n + j) as f32 + 1.0;
+                }
+            });
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if j <= i { (i * n + j) as f32 + 1.0 } else { 0.0 };
+                    assert_eq!(out[i * n + j], want, "ragged ({i},{j})");
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,534 @@
+//! AVX2+FMA kernel implementations, runtime-detected (DESIGN.md §13).
+//!
+//! Every public function here is a *dispatcher*: it runs the
+//! `core::arch` x86-64 path when [`simd_available`] holds and falls back
+//! to the reference implementation otherwise, so this module compiles
+//! and behaves correctly on every architecture — off x86-64 the inner
+//! `avx` module does not exist at all and the dispatchers are plain
+//! delegation.
+//!
+//! **What changes vs the oracle.** The dot-form kernels (`gemm_bt`,
+//! `syrk`, the fused dequantize dots, `dot`) reassociate the k-reduction
+//! into eight lanes × multiple accumulators with FMA contraction —
+//! tolerance-pinned, never exact (`tests/common/mod.rs` holds the
+//! bounds). They also drop the per-element `a == 0.0` zero-skip (a lane
+//! test would cost more than it saves), so they require finite input —
+//! the same contract `syrk`/`syrk_t` already had in §10. The AXPY-form
+//! kernels (`gemm`, `gemm_at`, `syrk_t`, `axpy`) keep the zero-skip: it
+//! is a scalar coefficient test there, outside the vector loop.
+//!
+//! **What does not change.** The per-element dequantize expression is
+//! `scale * (code - zero)` evaluated as the exact same two rounded f32
+//! ops as `PackedRows::decode_row_into`, so weight/KV decode is
+//! bit-identical — only the dots over decoded values differ. The row
+//! codes themselves are recovered by a windowed two-byte read instead of
+//! `read_code`'s per-bit loop (every `PACK_BITS` width fits a 16-bit
+//! window), recovering identical integers. And dispatch rides the same
+//! row-block spine as the reference, so simd output is deterministic and
+//! jobs-invariant.
+
+use crate::tensor::pack::PackedRows;
+use crate::tensor::Tensor;
+use crate::util::Pool;
+
+use super::backend::{scalar_axpy, scalar_dot};
+
+/// True when the running CPU supports the AVX2+FMA kernel set; always
+/// false off x86-64. `--backend simd|auto` resolves to `reference`
+/// silently when this is false (DESIGN.md §13), and every dispatcher
+/// below re-checks it, so the simd paths can never execute unsupported
+/// instructions.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// A·B, simd when available (see module docs for the numeric contract).
+pub fn gemm(a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2+FMA presence just checked.
+        return unsafe { avx::gemm(a, b, pool) };
+    }
+    super::gemm::gemm(a, b, pool)
+}
+
+/// Aᵀ·B, simd when available.
+pub fn gemm_at(a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2+FMA presence just checked.
+        return unsafe { avx::gemm_at(a, b, pool) };
+    }
+    super::gemm::gemm_at(a, b, pool)
+}
+
+/// A·Bᵀ, simd when available (finite input: no zero-skip in the dots).
+pub fn gemm_bt(a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2+FMA presence just checked.
+        return unsafe { avx::gemm_bt(a, b, pool) };
+    }
+    super::gemm::gemm_bt(a, b, pool)
+}
+
+/// A·Aᵀ, simd when available (finite input contract as in §10).
+pub fn syrk(a: &Tensor, pool: Option<&Pool>) -> Tensor {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2+FMA presence just checked.
+        return unsafe { avx::syrk(a, pool) };
+    }
+    super::gemm::syrk(a, pool)
+}
+
+/// Aᵀ·A, simd when available (finite input contract as in §10).
+pub fn syrk_t(a: &Tensor, pool: Option<&Pool>) -> Tensor {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2+FMA presence just checked.
+        return unsafe { avx::syrk_t(a, pool) };
+    }
+    super::gemm::syrk_t(a, pool)
+}
+
+/// Fused dequantize A·Wᵀ, simd when available.
+pub fn deq_gemm_bt(a: &Tensor, w: &PackedRows, pool: Option<&Pool>) -> Tensor {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2+FMA presence just checked.
+        return unsafe { avx::deq_gemm_bt(a, w, pool) };
+    }
+    super::gemv::deq_gemm_bt(a, w, pool)
+}
+
+/// Fused dequantize GEMV, simd when available.
+pub fn deq_gemv(x: &[f32], w: &PackedRows, pool: Option<&Pool>) -> Vec<f32> {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2+FMA presence just checked.
+        return unsafe { avx::deq_gemv(x, w, pool) };
+    }
+    super::gemv::deq_gemv(x, w, pool)
+}
+
+/// Dot product, simd when available.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2+FMA presence just checked.
+        return unsafe { avx::dot(a, b) };
+    }
+    scalar_dot(a, b)
+}
+
+/// `y += c · x`, simd when available.
+#[inline]
+pub fn axpy(c: f32, x: &[f32], y: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: AVX2+FMA presence just checked.
+        return unsafe { avx::axpy(c, x, y) };
+    }
+    scalar_axpy(c, x, y)
+}
+
+/// The actual AVX2+FMA kernels. Every function is `unsafe` with the
+/// same precondition: the caller has verified [`simd_available`].
+#[cfg(target_arch = "x86_64")]
+mod avx {
+    use core::arch::x86_64::*;
+
+    use crate::tensor::pack::{row_bytes, PackedRows};
+    use crate::tensor::Tensor;
+    use crate::util::Pool;
+
+    use super::super::gemm::mirror_upper;
+    use super::super::{par_rows, par_rows_into, pooled, ROW_BLOCK};
+
+    /// Decoded f32s per dequantize tile — same L1 budget as the
+    /// reference `gemv.rs` tile.
+    const DEQ_TILE: usize = 256;
+
+    /// Horizontal sum of one 8-lane register (final reassociation step
+    /// of every dot).
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let q = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
+        let q = _mm_add_ps(q, _mm_movehl_ps(q, q));
+        let q = _mm_add_ss(q, _mm_shuffle_ps(q, q, 1));
+        _mm_cvtss_f32(q)
+    }
+
+    /// One fused multiply-add over 8 lanes loaded from `a`/`b`.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; `a` and `b` must be readable for 8 f32s.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn fm(a: *const f32, b: *const f32, acc: __m256) -> __m256 {
+        _mm256_fmadd_ps(_mm256_loadu_ps(a), _mm256_loadu_ps(b), acc)
+    }
+
+    /// AVX2+FMA dot product: four 8-lane accumulators over the main
+    /// body, one over the 8-wide remainder, scalar tail — the
+    /// reassociation the tolerance harness pins.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA ([`super::simd_available`]).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut i = 0usize;
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        while i + 32 <= n {
+            acc0 = fm(pa.add(i), pb.add(i), acc0);
+            acc1 = fm(pa.add(i + 8), pb.add(i + 8), acc1);
+            acc2 = fm(pa.add(i + 16), pb.add(i + 16), acc2);
+            acc3 = fm(pa.add(i + 24), pb.add(i + 24), acc3);
+            i += 32;
+        }
+        let mut acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+        while i + 8 <= n {
+            acc = fm(pa.add(i), pb.add(i), acc);
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// AVX2+FMA `y += c · x`: per-element rounding differs from the
+    /// scalar loop only by FMA contraction (no reassociation — each
+    /// output element still absorbs its terms in k order).
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA ([`super::simd_available`]).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn axpy(c: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let cv = _mm256_set1_ps(c);
+        let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let r = _mm256_fmadd_ps(cv, _mm256_loadu_ps(px.add(i)), _mm256_loadu_ps(py.add(i)));
+            _mm256_storeu_ps(py.add(i), r);
+            i += 8;
+        }
+        while i < n {
+            y[i] += c * x[i];
+            i += 1;
+        }
+    }
+
+    /// Windowed LSB-first code read: every `PACK_BITS` width (≤ 8 bits)
+    /// starts at a bit shift ≤ 7, so the code always fits the 16-bit
+    /// window `row[byte] | row[byte+1] << 8` — two byte loads replace
+    /// `read_code`'s per-bit loop, recovering the identical integer.
+    #[inline]
+    fn read_window(row: &[u8], idx: usize, bits: usize, mask: u32) -> u32 {
+        let bit = idx * bits;
+        let byte = bit >> 3;
+        let sh = bit & 7;
+        let b0 = row[byte] as u32;
+        let b1 = if byte + 1 < row.len() { row[byte + 1] as u32 } else { 0 };
+        ((b0 | (b1 << 8)) >> sh) & mask
+    }
+
+    /// Decode codes `[k0, k0 + out.len())` of packed row `r` — the simd
+    /// counterpart of `PackedRows::decode_row_into`. The dequant
+    /// `scale * (code - zero)` runs as the exact same two rounded f32
+    /// ops per element (cvt/sub/mul in lanes), so decode output is
+    /// bit-identical to the reference decode.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA ([`super::simd_available`]).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn decode_row(w: &PackedRows, r: usize, k0: usize, out: &mut [f32]) {
+        let bits = w.bits as usize;
+        let mask = (1u32 << bits) - 1;
+        let rb = row_bytes(w.cols, w.bits);
+        let row = &w.data[r * rb..(r + 1) * rb];
+        let (s, z) = (w.grid.scale[r], w.grid.zero[r]);
+        let sv = _mm256_set1_ps(s);
+        let zv = _mm256_set1_ps(z);
+        let n = out.len();
+        let mut codes = [0i32; 8];
+        let mut t = 0usize;
+        while t + 8 <= n {
+            for (u, c) in codes.iter_mut().enumerate() {
+                *c = read_window(row, k0 + t + u, bits, mask) as i32;
+            }
+            let cv = _mm256_cvtepi32_ps(_mm256_loadu_si256(codes.as_ptr() as *const __m256i));
+            let dv = _mm256_mul_ps(sv, _mm256_sub_ps(cv, zv));
+            _mm256_storeu_ps(out.as_mut_ptr().add(t), dv);
+            t += 8;
+        }
+        while t < n {
+            out[t] = s * (read_window(row, k0 + t, bits, mask) as f32 - z);
+            t += 1;
+        }
+    }
+
+    /// One output row of A·B / Aᵀ·B: `coeffs` strides over the row's A
+    /// coefficients (stride 1 for `gemm`, the column stride for
+    /// `gemm_at`); zero coefficients are skipped (a scalar test — the
+    /// §10 contract survives in the AXPY form), non-zero ones AXPY the
+    /// B row into `out`.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; `coeffs` must be readable at
+    /// `coeffs + kk * stride` for `kk < k`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn row_ab(coeffs: *const f32, stride: usize, k: usize, b: &Tensor, out: &mut [f32]) {
+        let n = out.len();
+        for kk in 0..k {
+            let av = *coeffs.add(kk * stride);
+            if av == 0.0 {
+                continue;
+            }
+            axpy(av, &b.data[kk * n..(kk + 1) * n], out);
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA ([`super::simd_available`]).
+    pub(super) unsafe fn gemm(a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+        let (m, k) = (a.rows(), a.cols());
+        let (k2, n) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "gemm inner dim: {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        if k == 0 {
+            return out;
+        }
+        let span = |i: usize| i * n..(i + 1) * n;
+        par_rows_into(pool, m, m * k * n, &mut out.data, span, |i, row| {
+            // SAFETY: module precondition; row i of A is k coefficients.
+            unsafe { row_ab(a.data.as_ptr().add(i * k), 1, k, b, row) }
+        });
+        out
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA ([`super::simd_available`]).
+    pub(super) unsafe fn gemm_at(a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+        let (k, m) = (a.rows(), a.cols());
+        let (k2, n) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "gemm_at inner dim: {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        if k == 0 {
+            return out;
+        }
+        let span = |i: usize| i * n..(i + 1) * n;
+        par_rows_into(pool, m, m * k * n, &mut out.data, span, |i, row| {
+            // SAFETY: module precondition; column i of A strides by m.
+            unsafe { row_ab(a.data.as_ptr().add(i), m, k, b, row) }
+        });
+        out
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA ([`super::simd_available`]).
+    pub(super) unsafe fn gemm_bt(a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+        let (m, k) = (a.rows(), a.cols());
+        let (n, k2) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "gemm_bt inner dim: {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        let span = |i: usize| i * n..(i + 1) * n;
+        par_rows_into(pool, m, m * k * n, &mut out.data, span, |i, row| {
+            let a_row = a.row(i);
+            for (j, o) in row.iter_mut().enumerate() {
+                // SAFETY: module precondition.
+                *o = unsafe { dot(a_row, b.row(j)) };
+            }
+        });
+        out
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA ([`super::simd_available`]).
+    pub(super) unsafe fn syrk(a: &Tensor, pool: Option<&Pool>) -> Tensor {
+        let (m, k) = (a.rows(), a.cols());
+        let mut out = Tensor::zeros(&[m, m]);
+        let span = |i: usize| i * m..i * m + i + 1;
+        par_rows_into(pool, m, m * m * k / 2, &mut out.data, span, |i, row| {
+            let a_row = a.row(i);
+            for (j, o) in row.iter_mut().enumerate() {
+                // SAFETY: module precondition.
+                *o = unsafe { dot(a_row, a.row(j)) };
+            }
+        });
+        mirror_upper(&mut out);
+        out
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA ([`super::simd_available`]).
+    pub(super) unsafe fn syrk_t(a: &Tensor, pool: Option<&Pool>) -> Tensor {
+        let (k, m) = (a.rows(), a.cols());
+        let mut out = Tensor::zeros(&[m, m]);
+        let span = |i: usize| i * m..i * m + i + 1;
+        par_rows_into(pool, m, m * m * k / 2, &mut out.data, span, |i, row| {
+            for kk in 0..k {
+                let av = a.data[kk * m + i];
+                if av == 0.0 {
+                    continue;
+                }
+                // SAFETY: module precondition.
+                unsafe { axpy(av, &a.data[kk * m..kk * m + i + 1], row) }
+            }
+        });
+        mirror_upper(&mut out);
+        out
+    }
+
+    /// One scalar dot of `x` against packed row `j`, tile-decoded
+    /// through `buf`; per-tile partial dots accumulate in k order.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA ([`super::simd_available`]).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn deq_dot_row(x: &[f32], w: &PackedRows, j: usize, buf: &mut [f32; DEQ_TILE]) -> f32 {
+        let k = x.len();
+        let mut acc = 0.0f32;
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + DEQ_TILE).min(k);
+            let tile = &mut buf[..k1 - k0];
+            decode_row(w, j, k0, tile);
+            acc += dot(&x[k0..k1], tile);
+            k0 = k1;
+        }
+        acc
+    }
+
+    /// Output column j of A·Wᵀ (all m rows of `a` against packed row j),
+    /// tile-decoded once per tile.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA ([`super::simd_available`]).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn deq_column(a: &[f32], m: usize, k: usize, w: &PackedRows, j: usize) -> Vec<f32> {
+        let mut acc = vec![0.0f32; m];
+        let mut buf = [0.0f32; DEQ_TILE];
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + DEQ_TILE).min(k);
+            let tile = &mut buf[..k1 - k0];
+            decode_row(w, j, k0, tile);
+            for (i, acc_i) in acc.iter_mut().enumerate() {
+                *acc_i += dot(&a[i * k + k0..i * k + k1], tile);
+            }
+            k0 = k1;
+        }
+        acc
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA ([`super::simd_available`]).
+    pub(super) unsafe fn deq_gemm_bt(a: &Tensor, w: &PackedRows, pool: Option<&Pool>) -> Tensor {
+        let (m, k) = (a.rows(), a.cols());
+        assert_eq!(w.cols, k, "deq_gemm_bt inner dim: {k} vs {}", w.cols);
+        let n = w.rows;
+        // SAFETY: module precondition.
+        let cols = par_rows(pool, n, m * k * n, |j| unsafe { deq_column(&a.data, m, k, w, j) });
+        let mut out = Tensor::zeros(&[m, n]);
+        for (j, col) in cols.into_iter().enumerate() {
+            for (i, v) in col.into_iter().enumerate() {
+                out.data[i * n + j] = v;
+            }
+        }
+        out
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA ([`super::simd_available`]).
+    pub(super) unsafe fn deq_gemv(x: &[f32], w: &PackedRows, pool: Option<&Pool>) -> Vec<f32> {
+        assert_eq!(x.len(), w.cols, "deq_gemv inner dim: {} vs {}", x.len(), w.cols);
+        let n = w.rows;
+        let block = |lo: usize, hi: usize| -> Vec<f32> {
+            let mut out = Vec::with_capacity(hi - lo);
+            let mut buf = [0.0f32; DEQ_TILE];
+            for j in lo..hi {
+                // SAFETY: module precondition.
+                out.push(unsafe { deq_dot_row(x, w, j, &mut buf) });
+            }
+            out
+        };
+        let starts: Vec<usize> = (0..n).step_by(ROW_BLOCK).collect();
+        match pooled(pool, starts.len(), n * w.cols) {
+            Some(p) => p
+                .run(starts.len(), |bi| {
+                    let lo = starts[bi];
+                    block(lo, (lo + ROW_BLOCK).min(n))
+                })
+                .into_iter()
+                .flatten()
+                .collect(),
+            None => block(0, n),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    #[test]
+    fn dispatchers_fall_back_cleanly() {
+        // Whatever the host: the dispatcher output must match the
+        // selected implementation. On non-AVX2 hosts that is exact
+        // equality with the reference; on AVX2 hosts this is a smoke
+        // check that the simd path produces finite, same-shape output
+        // (tolerance bounds live in tests/prop_kernels.rs).
+        let mut rng = Pcg::new(17);
+        let a = Tensor::randn(&[9, 40], 1.0, &mut rng);
+        let b = Tensor::randn(&[40, 7], 1.0, &mut rng);
+        let got = gemm(&a, &b, None);
+        let want = super::super::gemm::gemm(&a, &b, None);
+        assert_eq!(got.shape, want.shape);
+        if !simd_available() {
+            assert_eq!(got.data, want.data, "fallback must be the reference bit-for-bit");
+        } else {
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0), "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_axpy_tails_cover_all_lengths() {
+        // every length from empty through past the 32-lane unroll
+        for n in 0..70usize {
+            let a: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).cos()).collect();
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot(&a, &b);
+            assert!((got - want).abs() <= 1e-4 * want.abs().max(1.0), "n={n}: {got} vs {want}");
+            let mut y = vec![1.0f32; n];
+            axpy(0.5, &a, &mut y);
+            for (i, v) in y.iter().enumerate() {
+                let w = 1.0 + 0.5 * a[i];
+                assert!((v - w).abs() <= 1e-6, "n={n} i={i}");
+            }
+        }
+    }
+}

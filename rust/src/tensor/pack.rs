@@ -131,41 +131,24 @@ impl PackedRows {
     /// pool-parallel over row blocks. Rows decode independently through
     /// the identical per-element expression, so the pool cannot change a
     /// single bit — `unpack(Some(pool))` equals `unpack(None)` exactly
-    /// (rust/tests/prop_serve.rs pins it). The artifact loader hands the
-    /// scheduler's pool in so a multi-layer load no longer unpacks every
-    /// tensor serially; the serial path writes straight into the output
-    /// buffer, and the pooled path allocates per row *block*, not per
-    /// row.
+    /// (rust/tests/prop_serve.rs pins it). Dispatch rides the kernel
+    /// layer's write-into spine (`par_rows_into`, DESIGN.md §13): the
+    /// serial path writes straight into the output buffer, the pooled
+    /// path allocates per row *block*, and tensors under the kernel
+    /// minimum-work threshold decode serially in the calling thread.
     pub fn unpack(&self, pool: Option<&Pool>) -> Tensor {
-        use crate::tensor::kernels::ROW_BLOCK;
+        use crate::tensor::kernels::par_rows_into;
         let (rows, cols) = (self.rows, self.cols);
         let mut out = Tensor::zeros(&[rows, cols]);
         if rows * cols == 0 {
             return out;
         }
-        match pool {
-            Some(p) if p.jobs() > 1 && rows > ROW_BLOCK => {
-                let starts: Vec<usize> = (0..rows).step_by(ROW_BLOCK).collect();
-                let blocks = p.run(starts.len(), |bi| {
-                    let lo = starts[bi];
-                    let hi = (lo + ROW_BLOCK).min(rows);
-                    let mut block = vec![0.0f32; (hi - lo) * cols];
-                    for (r, row) in (lo..hi).zip(block.chunks_exact_mut(cols)) {
-                        self.decode_row_into(r, 0, row);
-                    }
-                    block
-                });
-                for (bi, block) in blocks.into_iter().enumerate() {
-                    let lo = starts[bi] * cols;
-                    out.data[lo..lo + block.len()].copy_from_slice(&block);
-                }
-            }
-            _ => {
-                for r in 0..rows {
-                    self.decode_row_into(r, 0, out.row_mut(r));
-                }
-            }
-        }
+        // decode (bit extraction + affine) is markedly heavier per
+        // element than a fused multiply-add; weight the work estimate up
+        let work = rows * cols * 4;
+        par_rows_into(pool, rows, work, &mut out.data, |r| r * cols..(r + 1) * cols, |r, row| {
+            self.decode_row_into(r, 0, row)
+        });
         out
     }
 

@@ -112,6 +112,14 @@ impl Args {
         self.u64_or("kv-bits", 32) as u32
     }
 
+    /// Kernel backend: `--backend reference|simd|auto`. Defaults to
+    /// `reference` — the bit-exact path (DESIGN.md §13). Returned as the
+    /// raw spelling; `tensor::kernels::Backend::parse` validates it so
+    /// the error message can name the supported set.
+    pub fn backend(&self) -> String {
+        self.str_or("backend", "reference")
+    }
+
     /// Reject mutually-exclusive options. Returns the offending pair's
     /// message so callers surface it however they report errors (the util
     /// layer stays anyhow-free).
@@ -276,6 +284,13 @@ mod tests {
         assert_eq!(parse("generate").kv_bits(), 32, "exact f32 path by default");
         assert_eq!(parse("--kv-bits 8").kv_bits(), 8);
         assert_eq!(parse("--kv-bits=2").kv_bits(), 2);
+    }
+
+    #[test]
+    fn backend_parsing() {
+        assert_eq!(parse("quantize").backend(), "reference", "bit-exact path by default");
+        assert_eq!(parse("--backend simd").backend(), "simd");
+        assert_eq!(parse("--backend=auto").backend(), "auto");
     }
 
     #[test]

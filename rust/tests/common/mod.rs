@@ -1,0 +1,129 @@
+//! Shared tolerance harness for cross-backend equivalence tests
+//! (DESIGN.md §13). The simd backend reassociates its dot reductions
+//! (8 lanes × 4 accumulators + FMA), so simd-vs-reference comparisons
+//! are pinned by ULP distance + relative error, never bit-equality —
+//! bit-equality remains reserved for the reference backend's own tests.
+//!
+//! Bounds are deliberately generous: a k-term reassociated f32 sum
+//! differs from the sequential one by O(k·eps·Σ|terms|), which for the
+//! shapes under test stays far inside MAX_ULP/MAX_REL. Tightening them
+//! is safe only with an error analysis in hand.
+
+// not every test binary that mounts `mod common;` uses every helper
+#![allow(dead_code)]
+
+/// Maximum units-in-last-place distance accepted between a simd result
+/// and its reference counterpart.
+pub const MAX_ULP: u32 = 128;
+
+/// Maximum relative error accepted when the ULP bound is exceeded near
+/// zero crossings (catastrophic cancellation makes ULP meaningless at
+/// magnitudes far below the summands).
+pub const MAX_REL: f32 = 1e-4;
+
+/// Absolute floor under which any difference is accepted: results this
+/// close to zero are dominated by cancellation noise in both backends.
+pub const MAX_ABS: f32 = 1e-5;
+
+/// ULP distance between two finite f32s via the ordered-integer map
+/// (sign-magnitude → two's-complement-like monotone ordering). Equal
+/// values — including `0.0` vs `-0.0` — map to 0; NaN/∞ anywhere maps
+/// to `u32::MAX` so they always fail the bound.
+pub fn ulp_diff(a: f32, b: f32) -> u32 {
+    if !a.is_finite() || !b.is_finite() {
+        return if a == b || (a.is_nan() && b.is_nan()) { 0 } else { u32::MAX };
+    }
+    let ord = |x: f32| -> i64 {
+        let bits = x.to_bits() as i32;
+        // flip negative floats so the integer line is monotone in value;
+        // bits < 0 keeps i32::MIN - bits inside [i32::MIN + 1, 0]
+        i64::from(if bits < 0 { i32::MIN - bits } else { bits })
+    };
+    let d = (ord(a) - ord(b)).unsigned_abs();
+    u32::try_from(d).unwrap_or(u32::MAX)
+}
+
+/// True when `got` is within the documented harness bounds of `want`:
+/// ULP ≤ [`MAX_ULP`], or relative error ≤ [`MAX_REL`], or absolute
+/// difference ≤ [`MAX_ABS`].
+pub fn within_tolerance(want: f32, got: f32) -> bool {
+    let u = ulp_diff(want, got);
+    if u == 0 {
+        return true;
+    }
+    if !want.is_finite() || !got.is_finite() {
+        return false; // an Inf/NaN mismatch is never reassociation noise
+    }
+    if u <= MAX_ULP {
+        return true;
+    }
+    let diff = (want - got).abs();
+    diff <= MAX_ABS || diff <= MAX_REL * want.abs().max(got.abs())
+}
+
+/// Assert two slices agree elementwise within the harness bounds,
+/// reporting the worst offender (index, values, ULP distance) on
+/// failure. `label` names the kernel/shape under test.
+pub fn assert_close(label: &str, want: &[f32], got: &[f32]) {
+    assert_eq!(want.len(), got.len(), "{label}: length mismatch");
+    let mut worst: Option<(usize, u32)> = None;
+    for (i, (&w, &g)) in want.iter().zip(got.iter()).enumerate() {
+        if !within_tolerance(w, g) {
+            let u = ulp_diff(w, g);
+            let better = match worst {
+                None => true,
+                Some((_, wu)) => u > wu,
+            };
+            if better {
+                worst = Some((i, u));
+            }
+        }
+    }
+    if let Some((i, u)) = worst {
+        panic!(
+            "{label}: out of tolerance at [{i}]: want {:?} got {:?} \
+             (ulp {u}, rel {:e}, bounds: ulp<={MAX_ULP} rel<={MAX_REL:e} abs<={MAX_ABS:e})",
+            want[i],
+            got[i],
+            (want[i] - got[i]).abs() / want[i].abs().max(got[i].abs()).max(f32::MIN_POSITIVE),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ulp_of_equal_and_signed_zero_is_zero() {
+        assert_eq!(ulp_diff(1.5, 1.5), 0);
+        assert_eq!(ulp_diff(0.0, -0.0), 0);
+    }
+
+    #[test]
+    fn ulp_counts_representable_steps() {
+        let a = 1.0f32;
+        let b = f32::from_bits(a.to_bits() + 3);
+        assert_eq!(ulp_diff(a, b), 3);
+        assert_eq!(ulp_diff(b, a), 3);
+        // across the zero crossing: -min_sub to +min_sub is two steps
+        let sub = f32::from_bits(1);
+        assert_eq!(ulp_diff(-sub, sub), 2);
+    }
+
+    #[test]
+    fn nan_and_inf_never_pass() {
+        assert_eq!(ulp_diff(f32::NAN, 1.0), u32::MAX);
+        assert_eq!(ulp_diff(f32::INFINITY, f32::MAX), u32::MAX);
+        assert!(!within_tolerance(f32::NAN, 1.0));
+        assert!(!within_tolerance(1.0, f32::INFINITY));
+    }
+
+    #[test]
+    fn tolerance_accepts_reassociation_noise_rejects_real_drift() {
+        assert!(within_tolerance(100.0, 100.0 + 100.0 * 0.5 * MAX_REL));
+        assert!(within_tolerance(0.0, 0.5 * MAX_ABS));
+        assert!(!within_tolerance(100.0, 101.0));
+        assert!(!within_tolerance(1.0, -1.0));
+    }
+}

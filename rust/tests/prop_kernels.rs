@@ -7,7 +7,16 @@
 //!
 //! This file and `tensor/` are the only sanctioned homes of
 //! reference-kernel products.
+//!
+//! The second half pins the simd backend (DESIGN.md §13) against the
+//! reference backend through the shared `common` tolerance harness —
+//! ULP/relative bounds, never exact equality, because the AVX2+FMA
+//! kernels reassociate their dot reductions. Those properties self-skip
+//! on hosts without AVX2+FMA.
 
+mod common;
+
+use rsq::tensor::pack::{PackedRows, RowGrid};
 use rsq::tensor::{kernels, linalg, Tensor};
 use rsq::util::prop::{check, Config};
 use rsq::util::{Pcg, Pool};
@@ -172,5 +181,124 @@ fn prop_zero_skip_contract_under_non_finite_input() {
                     && kernels::gemm_at(&a.transpose2(), &b, p.as_ref()).data == want.data
                     && kernels::gemm_bt(&a, &b.transpose2(), p.as_ref()).data == want.data
             })
+    });
+}
+
+// --------------------------------------------------------------------------
+// simd backend vs reference (DESIGN.md §13) — tolerance-pinned, never exact
+
+/// Jobs sweep for the simd properties; `None` (serial) is covered by the
+/// `Pool::new(1)` cell because dispatch below `POOL_MIN_WORK` is serial.
+fn simd_pools() -> [Option<Pool>; 2] {
+    [Some(Pool::new(1)), Some(Pool::new(4))]
+}
+
+fn close_slice(want: &[f32], got: &[f32]) -> bool {
+    want.len() == got.len()
+        && want.iter().zip(got).all(|(&w, &g)| common::within_tolerance(w, g))
+}
+
+fn close(want: &Tensor, got: &Tensor) -> bool {
+    want.shape == got.shape && close_slice(&want.data, &got.data)
+}
+
+/// Skip marker for hosts without AVX2+FMA: the simd dispatchers would
+/// fall back to the scalar reference there, making the property vacuous.
+fn simd_or_skip(name: &str) -> bool {
+    let ok = kernels::simd_available();
+    if !ok {
+        eprintln!("{name}: host lacks x86-64 AVX2+FMA, simd property skipped");
+    }
+    ok
+}
+
+/// RTN-quantize a random matrix so it packs exactly (gemv test idiom).
+fn packed(rows: usize, cols: usize, bits: u32, rng: &mut Pcg) -> PackedRows {
+    let w = Tensor::randn(&[rows, cols], 1.0, rng);
+    let maxq = ((1u64 << bits) - 1) as f32;
+    let q = rsq::quantref::rtn(&w, maxq);
+    let (scale, zero) = rsq::quantref::row_grid(&w, maxq);
+    PackedRows::pack(&q, bits, &RowGrid { scale, zero }).unwrap()
+}
+
+#[test]
+fn prop_simd_gemm_family_matches_reference_within_tolerance() {
+    if !simd_or_skip("simd_gemm") {
+        return;
+    }
+    let be = kernels::Backend::Simd;
+    check(Config { cases: 48, max_size: 40, ..Default::default() }, "simd_gemm", |rng, size| {
+        let (m, k, n) = (dim(rng, size), dim(rng, size), dim(rng, size));
+        let a = randm(m, k, rng);
+        let b = randm(k, n, rng);
+        let at = a.transpose2();
+        let bt = b.transpose2();
+        simd_pools().iter().all(|p| {
+            let p = p.as_ref();
+            close(&kernels::gemm(&a, &b, None), &be.gemm(&a, &b, p))
+                && close(&kernels::gemm_at(&at, &b, None), &be.gemm_at(&at, &b, p))
+                && close(&kernels::gemm_bt(&a, &bt, None), &be.gemm_bt(&a, &bt, p))
+        })
+    });
+}
+
+#[test]
+fn prop_simd_syrk_matches_reference_within_tolerance() {
+    if !simd_or_skip("simd_syrk") {
+        return;
+    }
+    let be = kernels::Backend::Simd;
+    check(Config { cases: 48, max_size: 40, ..Default::default() }, "simd_syrk", |rng, size| {
+        let (m, k) = (dim(rng, size), dim(rng, size));
+        let a = randm(m, k, rng);
+        simd_pools().iter().all(|p| {
+            let p = p.as_ref();
+            close(&kernels::syrk(&a, None), &be.syrk(&a, p))
+                && close(&kernels::syrk_t(&a, None), &be.syrk_t(&a, p))
+        })
+    });
+}
+
+#[test]
+fn prop_simd_deq_kernels_match_reference_within_tolerance() {
+    if !simd_or_skip("simd_deq") {
+        return;
+    }
+    let be = kernels::Backend::Simd;
+    let cfg = Config { cases: 32, max_size: 32, ..Default::default() };
+    check(cfg, "simd_deq", |rng, size| {
+        // every supported packed width; dims ≥ 1 because the RTN grid of
+        // an empty row is undefined
+        let bits = [2u32, 3, 4, 8][rng.below(4)];
+        let (m, k, n) = (dim(rng, size).max(1), dim(rng, size).max(1), dim(rng, size).max(1));
+        let w = packed(n, k, bits, rng);
+        let a = randm(m, k, rng);
+        let x = randm(1, k, rng);
+        simd_pools().iter().all(|p| {
+            let p = p.as_ref();
+            close(&kernels::deq_gemm_bt(&a, &w, None), &be.deq_gemm_bt(&a, &w, p))
+                && close_slice(&kernels::deq_gemv(&x.data, &w, None), &be.deq_gemv(&x.data, &w, p))
+        })
+    });
+}
+
+#[test]
+fn prop_simd_dot_axpy_match_reference_within_tolerance() {
+    if !simd_or_skip("simd_dot_axpy") {
+        return;
+    }
+    let cfg = Config { cases: 48, max_size: 96, ..Default::default() };
+    check(cfg, "simd_dot_axpy", |rng, size| {
+        let n = dim(rng, size);
+        let a = randm(1, n, rng);
+        let b = randm(1, n, rng);
+        let c = rng.normal();
+        let rd = kernels::Backend::Reference.dot(&a.data, &b.data);
+        let sd = kernels::Backend::Simd.dot(&a.data, &b.data);
+        let mut ry = b.data.clone();
+        let mut sy = b.data.clone();
+        kernels::Backend::Reference.axpy(c, &a.data, &mut ry);
+        kernels::Backend::Simd.axpy(c, &a.data, &mut sy);
+        common::within_tolerance(rd, sd) && close_slice(&ry, &sy)
     });
 }

@@ -158,7 +158,30 @@ if [ -f rust/src/serve/kvq.rs ]; then
     done
 fi
 
-[ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler/artifact/kernel/serve docs OK"
+# The kernel backend dispatch: if tensor/kernels/backend.rs exists, §13
+# must document the backend trait, the --backend flag, runtime feature
+# detection, and the tolerance policy that separates the simd path from
+# the bit-exact reference oracle. Needles are grepped inside the §13
+# body only, same scoping rationale as §9; `grep -q --` so needles that
+# begin with a dash (--backend) are not parsed as grep options.
+if [ -f rust/src/tensor/kernels/backend.rs ]; then
+    if ! grep -qE "^## 13\." DESIGN.md; then
+        echo "check-docs: FAIL — rust/src/tensor/kernels/backend.rs exists but DESIGN.md has no '## 13.' section" >&2
+        fail=1
+    fi
+    sec13=$(awk '/^## 13\./{f=1; print; next} /^## /{f=0} f' DESIGN.md)
+    for needle in "kernels/backend" "--backend" "is_x86_feature_detected" \
+                  "AVX2" "FMA" "tolerance" "ULP" "bit-exact" \
+                  "reassociat" "par_rows_into" "POOL_MIN_WORK" \
+                  "zero-skip" "prop_kernels"; do
+        if ! grep -qi -- "${needle}" <<< "${sec13}"; then
+            echo "check-docs: FAIL — DESIGN.md §13 never mentions \"${needle}\" (backend-dispatch contract drift)" >&2
+            fail=1
+        fi
+    done
+fi
+
+[ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler/artifact/kernel/serve/backend docs OK"
 
 # --- 3+4. rustdoc + rustfmt ------------------------------------------------
 if [ "${CHECK_DOCS_SKIP_CARGO:-0}" = "1" ]; then

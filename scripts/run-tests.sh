@@ -61,6 +61,13 @@ cargo build --release
 echo "run-tests: cargo test -q"
 cargo test -q
 
+# Kernel backend for the smokes below (DESIGN.md §13). Default is the
+# bit-exact reference path; the tests.yml cargo-test-simd leg re-runs
+# the smokes with RSQ_SMOKE_BACKEND=simd, which resolves back to
+# reference on hosts without AVX2+FMA — so it is safe everywhere.
+backend="${RSQ_SMOKE_BACKEND:-reference}"
+echo "run-tests: smoke backend = ${backend}"
+
 # Serve smoke (DESIGN.md §11): greedy-decode the golden fixture artifact
 # — a tiny, committed, byte-reproducible packed artifact — through `rsq
 # generate` and assert the token output is non-empty and identical
@@ -70,7 +77,8 @@ echo "run-tests: serve smoke (rsq generate on tests/data/artifact_ok)"
 smoke_log="$(mktemp)"
 smoke() {
     cargo run --release --quiet -- generate \
-        --artifact tests/data/artifact_ok --prompt 1,2 --max-new 5 2>"${smoke_log}"
+        --artifact tests/data/artifact_ok --prompt 1,2 --max-new 5 \
+        --backend "${backend}" 2>"${smoke_log}"
 }
 # || disarms set -e so a decode failure prints its captured stderr
 # instead of silently killing the script at the assignment
@@ -112,7 +120,7 @@ kv_log="$(mktemp)"
 kv_smoke() {
     cargo run --release --quiet -- generate \
         --artifact tests/data/artifact_ok --prompt 1,2 --max-new 5 \
-        --kv-bits 8 2>"${kv_log}"
+        --kv-bits 8 --backend "${backend}" 2>"${kv_log}"
 }
 kv1="$(kv_smoke)" || {
     echo "run-tests: FAIL — kv smoke (--kv-bits 8) exited non-zero:" >&2
@@ -147,4 +155,59 @@ if [ "${gen_kv8}" != "${gen_f32}" ]; then
     exit 1
 fi
 echo "run-tests: kv smoke OK (8-bit KV divergence 0)"
+
+# Backend smoke (DESIGN.md §13): a run with no --backend flag must be
+# byte-identical on stdout to an explicit --backend reference run (the
+# default is the bit-exact path), and --backend simd — which silently
+# resolves to reference on hosts without AVX2+FMA — must be
+# deterministic across two runs. simd-vs-reference greedy token
+# divergence is REPORTED, not fatal: simd is tolerance-pinned, and a
+# greedy argmax can legitimately flip on a near-tie.
+echo "run-tests: backend smoke (rsq generate, default vs reference vs simd)"
+be_log="$(mktemp)"
+be_smoke() {
+    cargo run --release --quiet -- generate \
+        --artifact tests/data/artifact_ok --prompt 1,2 --max-new 5 \
+        --backend "$1" 2>"${be_log}"
+}
+be_noflag="$(cargo run --release --quiet -- generate \
+    --artifact tests/data/artifact_ok --prompt 1,2 --max-new 5 2>"${be_log}")" || {
+    echo "run-tests: FAIL — backend smoke (no flag) exited non-zero:" >&2
+    cat "${be_log}" >&2
+    exit 1
+}
+be_ref="$(be_smoke reference)" || {
+    echo "run-tests: FAIL — backend smoke (--backend reference) exited non-zero:" >&2
+    cat "${be_log}" >&2
+    exit 1
+}
+if [ "${be_noflag}" != "${be_ref}" ]; then
+    echo "run-tests: FAIL — default stdout differs from --backend reference:" >&2
+    printf 'default  :\n%s\nreference:\n%s\n' "${be_noflag}" "${be_ref}" >&2
+    exit 1
+fi
+be_simd1="$(be_smoke simd)" || {
+    echo "run-tests: FAIL — backend smoke (--backend simd) exited non-zero:" >&2
+    cat "${be_log}" >&2
+    exit 1
+}
+be_simd2="$(be_smoke simd)" || {
+    echo "run-tests: FAIL — backend smoke simd second run exited non-zero:" >&2
+    cat "${be_log}" >&2
+    exit 1
+}
+rm -f "${be_log}"
+if [ "${be_simd1}" != "${be_simd2}" ]; then
+    echo "run-tests: FAIL — --backend simd output is not deterministic across runs" >&2
+    printf 'run 1:\n%s\nrun 2:\n%s\n' "${be_simd1}" "${be_simd2}" >&2
+    exit 1
+fi
+gen_ref_be="$(grep '^generated' <<< "${be_ref}")"
+gen_simd_be="$(grep '^generated' <<< "${be_simd1}")"
+if [ "${gen_simd_be}" = "${gen_ref_be}" ]; then
+    echo "run-tests: backend smoke OK (simd greedy-token divergence 0)"
+else
+    echo "run-tests: backend smoke OK (NOTE — simd greedy tokens diverge from reference:)"
+    printf 'reference: %s\nsimd     : %s\n' "${gen_ref_be}" "${gen_simd_be}"
+fi
 echo "run-tests: OK"

@@ -25,10 +25,11 @@ use anyhow::{anyhow, bail, Result};
 
 use rsq::corpus::CorpusKind;
 use rsq::eval::{perplexity, score_model};
-use rsq::quant::{artifact, quantize, Method, QuantOptions, SchedMode, Strategy};
+use rsq::quant::{artifact, quantize, BitBudget, Method, QuantOptions, SchedMode, Strategy};
 use rsq::repro::{self, Ctx};
 use rsq::serve;
 use rsq::tensor::kernels::Backend;
+use rsq::tensor::pack::PACK_BITS;
 use rsq::train::{train, TrainOptions};
 use rsq::util::cli::{parse_bytes, parse_duration_s};
 use rsq::util::{Args, Pcg, Pool};
@@ -82,6 +83,31 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     if let Some(out) = args.get("save") {
         artifact::validate_save_dir(Path::new(out))?;
     }
+    // the three budget spellings are mutually exclusive: --bits pins one
+    // global width, --avg-bits / --budget-bytes hand the choice to the
+    // allocator (DESIGN.md §14)
+    for (a, b) in [("avg-bits", "budget-bytes"), ("avg-bits", "bits"), ("budget-bytes", "bits")] {
+        if let Err(e) = args.conflict(a, b) {
+            bail!("{e}");
+        }
+    }
+    // validate the width BEFORE training/calibration: an out-of-range
+    // --bits must fail at parse time, not after shifting garbage into the
+    // solver's maxq (the packed formats are the full supported set)
+    let bits = args.usize_or("bits", 3);
+    if !PACK_BITS.iter().any(|&b| b as usize == bits) {
+        bail!("--bits {bits}: unsupported width (supported: {PACK_BITS:?})");
+    }
+    let alloc = if let Some(s) = args.get("avg-bits") {
+        let avg: f32 = s
+            .parse()
+            .map_err(|_| anyhow!("--avg-bits expects a decimal width, got {s:?}"))?;
+        Some(BitBudget::AvgBits(avg))
+    } else if let Some(s) = args.get("budget-bytes") {
+        Some(BitBudget::Bytes(parse_bytes(s).map_err(|e| anyhow!("--budget-bytes: {e}"))?))
+    } else {
+        None
+    };
     let config = args.str_or("config", "small");
     let ctx = Ctx::prepare(&config, args)?;
     let cfg = ctx.engine.config().clone();
@@ -90,8 +116,9 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("bad --method"))?;
     let strategy = Strategy::parse(&args.str_or("strategy", "attncon:0.01"))
         .ok_or_else(|| anyhow::anyhow!("bad --strategy"))?;
-    let mut opts = QuantOptions::new(method, args.usize_or("bits", 3) as u32, t);
+    let mut opts = QuantOptions::new(method, bits as u32, t);
     opts.strategy = strategy;
+    opts.alloc = alloc;
     opts.expansion = args.usize_or("expansion", 1);
     opts.damp = args.f32_or("damp", opts.damp);
     opts.rot_seed = args.u64_or("rot-seed", opts.rot_seed);
@@ -110,6 +137,14 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     let score = score_model(&ctx.engine, &q, &ctx.eval, t, args.usize_or("probe-n", 32))?;
     println!("config       : {config} ({} params)", cfg.num_params());
     println!("method       : {} / {} / {}bit", method.name(), opts.strategy.name(), opts.bits);
+    if let (Some(avg), Some(bytes)) = (report.avg_bits, report.packed_bytes) {
+        println!(
+            "mixed bits   : avg {avg:.3} over {} layer weights ({bytes} packed bytes, {})",
+            report.widths.len(),
+            report.budget.as_deref().unwrap_or("-"),
+        );
+        println!("widths       : {:?}", report.widths);
+    }
     println!("full  PPL    : {full_ppl:.3}");
     println!("quant PPL    : {:.3}", score.ppl);
     println!("avg accuracy : {:.1}%", 100.0 * score.mean_acc);
@@ -194,6 +229,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
             "artifact     : {dir} ({} / {} / {}bit, hess key {})",
             manifest.method, manifest.strategy, manifest.bits, manifest.hess_key
         );
+        if let Some(avg) = manifest.avg_bits {
+            println!(
+                "mixed bits   : avg {avg:.3} ({})",
+                manifest.budget.as_deref().unwrap_or("-"),
+            );
+        }
         let t = manifest.seq_len;
         (p, engine, t)
     } else if let Some(path) = args.get("model") {
@@ -639,7 +680,14 @@ fn print_help() {
            --seeds N        seeded repetitions (default 3)\n\
            --steps N        training steps for the base checkpoint\n\
            --train-seed N   init/training RNG seed (default 7)\n\
-           --bits B         quantization bits (default 3)\n\
+           --bits B         quantization bits (default 3; one of 2,3,4,8)\n\
+           --avg-bits X     quantize: mixed-precision budget as a target\n\
+                            average width (e.g. 3.0) — a deterministic\n\
+                            greedy allocator picks per-module widths from\n\
+                            {{2,3,4,8}} by Hessian sensitivity; excludes\n\
+                            --bits and --budget-bytes (DESIGN.md 14)\n\
+           --budget-bytes S quantize: same allocator under a total\n\
+                            packed-bytes budget (accepts 500k, 2m, ...)\n\
            --method M       rtn|gptq|quarot|sq|rsq|quarot-vq|rsq-vq\n\
            --strategy S     uniform|firstn:N|firstlastn:N|chunk:K/M|\n\
                             tokenfreq:R|actnorm:R|actdiff:R|tokensim:R|attncon:R\n\

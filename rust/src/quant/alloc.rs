@@ -1,0 +1,436 @@
+//! Layer-adaptive mixed-precision bit allocation (DESIGN.md §14).
+//!
+//! After pass A every (layer, module) slot has a damped Hessian; this
+//! module scores each slot's reconstruction sensitivity at every packable
+//! width (`PACK_BITS`) with the host GPTQ oracle — one Cholesky factor
+//! per slot, reused across widths — and solves for per-module widths
+//! under a byte or average-bit budget (`--budget-bytes` / `--avg-bits`)
+//! with a deterministic greedy marginal-gain allocator: every slot starts
+//! at the 2-bit floor and the upgrade with the largest error reduction
+//! per extra budget unit is applied first, tie-broken on (layer, module)
+//! order. Nothing here depends on `--jobs` or `--sched`: scoring fans out
+//! over the pool but lands in slot order, and the greedy solve is pure
+//! host arithmetic — so the allocation (and therefore the quantized
+//! output) is bit-invariant across every scheduler configuration, and
+//! across warm-vs-cold Hessian cache (cached Hessians are exact f32).
+//!
+//! `pipeline::quantize` drives the two-phase flow: a proxy pass at the
+//! single reference width `opts.bits` collects the Hessians (or a cache
+//! hit supplies them), the allocator picks widths, and a solve-only sweep
+//! re-quantizes the kept rotated full-precision params at those widths.
+
+use anyhow::{bail, Result};
+
+use crate::model::config::Module;
+use crate::model::ParamSet;
+use crate::quantref;
+use crate::tensor::linalg::hinv_cholesky_upper;
+use crate::tensor::pack::{row_bytes, PACK_BITS};
+use crate::util::Pool;
+
+use super::artifact::cache::LayerHessians;
+use super::pipeline::QuantOptions;
+use super::sched::passes::HessAccum;
+
+/// The resource budget a mixed-precision run allocates under
+/// (`--avg-bits` / `--budget-bytes`, mutually exclusive with each other
+/// and with a plain global `--bits`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BitBudget {
+    /// `--avg-bits X`: numel-weighted average width over the packed layer
+    /// weights must not exceed X (budget in bit units: Σ numel·width ≤
+    /// X·Σ numel).
+    AvgBits(f32),
+    /// `--budget-bytes N`: total packed weight bytes — codes plus the
+    /// 8-byte-per-row f32 grid — must not exceed N.
+    Bytes(u64),
+}
+
+impl BitBudget {
+    /// Provenance spelling recorded in `QuantReport` and the artifact
+    /// manifest (`budget=` key).
+    pub fn spec(&self) -> String {
+        match self {
+            BitBudget::AvgBits(x) => format!("avg-bits:{x}"),
+            BitBudget::Bytes(n) => format!("budget-bytes:{n}"),
+        }
+    }
+}
+
+/// The allocator's output: one width per (layer, `Module::ALL`) slot, in
+/// `QuantReport::grids` order, plus the achieved budget accounting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Allocation {
+    /// chosen width per slot, each from [`PACK_BITS`]
+    pub widths: Vec<u32>,
+    /// achieved numel-weighted average width
+    pub avg_bits: f32,
+    /// total packed bytes under this allocation (codes + per-row grids)
+    pub packed_bytes: u64,
+    /// the budget spec that drove the solve ([`BitBudget::spec`])
+    pub budget: String,
+}
+
+/// Packed on-disk/resident bytes of one (rows × cols) weight at `bits`:
+/// the per-row f32 scale+zero grid plus the LSB-first code stream —
+/// exactly `tensor::pack`'s layout, which `artifact::save` writes.
+pub fn packed_weight_bytes(rows: usize, cols: usize, bits: u32) -> u64 {
+    rows as u64 * 8 + rows as u64 * row_bytes(cols, bits) as u64
+}
+
+/// Per-slot (rows, cols) for every (layer, `Module::ALL`) slot.
+fn slot_dims(p: &ParamSet) -> Vec<(usize, usize)> {
+    let cfg = &p.cfg;
+    (0..cfg.layers)
+        .flat_map(|_| Module::ALL.into_iter().map(|m| cfg.weight_shape(m)))
+        .collect()
+}
+
+/// Score every slot's Hessian-weighted reconstruction error at every
+/// packable width. Fans out over the pool — one task per slot, results
+/// landed in slot order — with the Cholesky factor of the damped inverse
+/// Hessian computed once per slot and reused across the widths (the
+/// width only changes the grid, not the factor). The Hessian each slot
+/// scores against mirrors `sched::solve::solve_layer`'s selection
+/// (scaled vs uniform under a partial module mask) exactly, so the
+/// scores rank the same objective the final solve minimizes.
+pub(crate) fn score(
+    p: &ParamSet,
+    hessians: &[LayerHessians],
+    opts: &QuantOptions,
+    needs_uniform: bool,
+    pool: &Pool,
+) -> Vec<[f32; PACK_BITS.len()]> {
+    let nmod = Module::ALL.len();
+    let accs: Vec<HessAccum> =
+        hessians.iter().map(|lh| HessAccum::from_layer_hessians(lh.clone())).collect();
+    pool.run(accs.len() * nmod, |k| {
+        let (l, mi) = (k / nmod, k % nmod);
+        let m = Module::ALL[mi];
+        let scaled = match &opts.module_mask {
+            Some(mask) => opts.method.scales() && mask.contains(&m),
+            None => opts.method.scales(),
+        };
+        let h = accs[l].hessian(m.input_stream(), scaled, needs_uniform);
+        let w = p.weight(l, m);
+        let u = hinv_cholesky_upper(h, opts.damp, None);
+        let mut errs = [0.0f32; PACK_BITS.len()];
+        for (bi, &b) in PACK_BITS.iter().enumerate() {
+            let maxq = ((1u64 << b) - 1) as f32;
+            errs[bi] = quantref::gptq_with_factor(w, h, &u, maxq).1;
+        }
+        errs
+    })
+}
+
+/// The deterministic greedy marginal-gain solve, pure host arithmetic.
+/// Every slot starts at `PACK_BITS[0]`; while budget remains, the ladder
+/// upgrade (2→3→4→8) with the largest error reduction per extra budget
+/// unit is applied, tie-broken on the smallest slot index — i.e. fixed
+/// (layer, module) order — so the result is a pure function of the
+/// scores, dims, and budget. Errors when even the all-2-bit floor does
+/// not fit.
+pub fn solve_widths(
+    errs: &[[f32; PACK_BITS.len()]],
+    dims: &[(usize, usize)],
+    budget: &BitBudget,
+) -> Result<Vec<u32>> {
+    assert_eq!(errs.len(), dims.len(), "one score row per slot");
+    let cost = |s: usize, bi: usize| -> u64 {
+        let (rows, cols) = dims[s];
+        match budget {
+            BitBudget::AvgBits(_) => rows as u64 * cols as u64 * PACK_BITS[bi] as u64,
+            BitBudget::Bytes(_) => packed_weight_bytes(rows, cols, PACK_BITS[bi]),
+        }
+    };
+    let total_numel: u64 = dims.iter().map(|&(r, c)| r as u64 * c as u64).sum();
+    let total_budget: u64 = match budget {
+        BitBudget::AvgBits(x) => {
+            if !x.is_finite() || *x <= 0.0 {
+                bail!("--avg-bits {x} is not a positive width");
+            }
+            (*x as f64 * total_numel as f64).floor() as u64
+        }
+        BitBudget::Bytes(n) => *n,
+    };
+    let mut level = vec![0usize; errs.len()];
+    let mut spent: u64 = (0..errs.len()).map(|s| cost(s, 0)).sum();
+    if spent > total_budget {
+        let floor = PACK_BITS[0];
+        match budget {
+            BitBudget::AvgBits(x) => bail!(
+                "--avg-bits {x} is below the {floor}-bit floor — the packed formats \
+                 support widths {PACK_BITS:?}, so the average cannot go under {floor}"
+            ),
+            BitBudget::Bytes(n) => {
+                let floor_bytes: u64 =
+                    dims.iter().map(|&(r, c)| packed_weight_bytes(r, c, floor)).sum();
+                bail!(
+                    "--budget-bytes {n} is below the all-{floor}-bit floor of {floor_bytes} \
+                     bytes for this model — pass at least {floor_bytes}"
+                );
+            }
+        }
+    }
+    loop {
+        // the upgrade with the best error-reduction per extra budget
+        // unit that still fits; strict `>` keeps the smallest slot on a
+        // ratio tie, making the pick order total and jobs-independent
+        let mut best: Option<(f64, usize)> = None;
+        for s in 0..errs.len() {
+            if level[s] + 1 >= PACK_BITS.len() {
+                continue;
+            }
+            let dcost = cost(s, level[s] + 1) - cost(s, level[s]);
+            if dcost > total_budget - spent {
+                continue;
+            }
+            // clamp: the oracle's error is monotone non-increasing in
+            // width up to float noise; a slightly negative gain must not
+            // poison the ratio ordering
+            let gain = f64::from((errs[s][level[s]] - errs[s][level[s] + 1]).max(0.0));
+            let ratio = gain / dcost as f64;
+            if best.map(|(r, _)| ratio > r).unwrap_or(true) {
+                best = Some((ratio, s));
+            }
+        }
+        match best {
+            Some((_, s)) => {
+                spent += cost(s, level[s] + 1) - cost(s, level[s]);
+                level[s] += 1;
+            }
+            None => break,
+        }
+    }
+    Ok(level.into_iter().map(|bi| PACK_BITS[bi]).collect())
+}
+
+/// Assemble the achieved-budget accounting for a width vector.
+pub fn accounting(widths: &[u32], dims: &[(usize, usize)], budget: &BitBudget) -> Allocation {
+    let mut bit_sum = 0u64;
+    let mut numel_sum = 0u64;
+    let mut bytes = 0u64;
+    for (&b, &(r, c)) in widths.iter().zip(dims) {
+        bit_sum += r as u64 * c as u64 * b as u64;
+        numel_sum += r as u64 * c as u64;
+        bytes += packed_weight_bytes(r, c, b);
+    }
+    Allocation {
+        widths: widths.to_vec(),
+        avg_bits: (bit_sum as f64 / numel_sum as f64) as f32,
+        packed_bytes: bytes,
+        budget: budget.spec(),
+    }
+}
+
+/// Score + solve + account: the entry `pipeline::quantize` calls between
+/// obtaining the Hessians and the final solve-only sweep.
+pub(crate) fn allocate(
+    p: &ParamSet,
+    hessians: &[LayerHessians],
+    opts: &QuantOptions,
+    needs_uniform: bool,
+    pool: &Pool,
+    budget: &BitBudget,
+) -> Result<Allocation> {
+    let errs = score(p, hessians, opts, needs_uniform, pool);
+    let dims = slot_dims(p);
+    let widths = solve_widths(&errs, &dims, budget)?;
+    Ok(accounting(&widths, &dims, budget))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::Pcg;
+
+    /// A synthetic scoring instance: per-slot errors that decay with
+    /// width at slot-dependent rates, so the allocator has real choices.
+    fn instance(n: usize, seed: u64) -> (Vec<[f32; PACK_BITS.len()]>, Vec<(usize, usize)>) {
+        let mut rng = Pcg::new(seed);
+        let errs = (0..n)
+            .map(|_| {
+                let base = 1.0 + 10.0 * rng.f32();
+                let decay = 0.2 + 0.6 * rng.f32();
+                let mut e = [0.0f32; PACK_BITS.len()];
+                for (bi, slot) in e.iter_mut().enumerate() {
+                    *slot = base * decay.powi(bi as i32);
+                }
+                e
+            })
+            .collect();
+        let dims = (0..n)
+            .map(|k| if k % 2 == 0 { (16, 32) } else { (32, 16) })
+            .collect();
+        (errs, dims)
+    }
+
+    fn avg_bits(widths: &[u32], dims: &[(usize, usize)]) -> f64 {
+        let bits: u64 =
+            widths.iter().zip(dims).map(|(&b, &(r, c))| b as u64 * (r * c) as u64).sum();
+        let numel: u64 = dims.iter().map(|&(r, c)| (r * c) as u64).sum();
+        bits as f64 / numel as f64
+    }
+
+    #[test]
+    fn budget_is_never_exceeded() {
+        let (errs, dims) = instance(14, 1);
+        for avg in [2.0f32, 2.25, 2.5, 3.0, 3.5, 4.0, 5.0, 8.0, 11.0] {
+            let w = solve_widths(&errs, &dims, &BitBudget::AvgBits(avg)).unwrap();
+            assert!(
+                avg_bits(&w, &dims) <= avg as f64 + 1e-9,
+                "avg {avg}: achieved {}",
+                avg_bits(&w, &dims)
+            );
+            assert!(w.iter().all(|b| PACK_BITS.contains(b)));
+        }
+        let floor: u64 = dims.iter().map(|&(r, c)| packed_weight_bytes(r, c, 2)).sum();
+        let ceil: u64 = dims.iter().map(|&(r, c)| packed_weight_bytes(r, c, 8)).sum();
+        let mut bytes = floor;
+        while bytes <= ceil + 64 {
+            let w = solve_widths(&errs, &dims, &BitBudget::Bytes(bytes)).unwrap();
+            let a = accounting(&w, &dims, &BitBudget::Bytes(bytes));
+            assert!(a.packed_bytes <= bytes, "budget {bytes}: used {}", a.packed_bytes);
+            bytes += (ceil - floor) / 7 + 1;
+        }
+    }
+
+    #[test]
+    fn achieved_avg_bits_monotone_in_budget() {
+        let (errs, dims) = instance(14, 2);
+        let mut prev = 0.0f64;
+        for avg in [2.0f32, 2.2, 2.5, 2.8, 3.0, 3.3, 3.7, 4.0, 5.0, 6.5, 8.0] {
+            let w = solve_widths(&errs, &dims, &BitBudget::AvgBits(avg)).unwrap();
+            let got = avg_bits(&w, &dims);
+            assert!(got >= prev - 1e-9, "avg {avg}: achieved {got} < previous {prev}");
+            prev = got;
+        }
+        assert_eq!(prev, 8.0, "an 8-bit average budget saturates every slot");
+    }
+
+    #[test]
+    fn total_error_monotone_non_increasing_in_budget() {
+        let (errs, dims) = instance(14, 3);
+        let total = |w: &[u32]| -> f64 {
+            w.iter()
+                .enumerate()
+                .map(|(s, &b)| {
+                    let bi = PACK_BITS.iter().position(|&x| x == b).unwrap();
+                    f64::from(errs[s][bi])
+                })
+                .sum()
+        };
+        let mut prev = f64::INFINITY;
+        for avg in [2.0f32, 2.5, 3.0, 3.5, 4.0, 6.0, 8.0] {
+            let w = solve_widths(&errs, &dims, &BitBudget::AvgBits(avg)).unwrap();
+            let e = total(&w);
+            assert!(e <= prev + 1e-9, "avg {avg}: error {e} > previous {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn greedy_prefers_the_most_sensitive_slot() {
+        // slot 0 gains hugely from width, slot 1 barely: a budget with
+        // room for exactly one upgrade must spend it on slot 0
+        let errs = vec![[100.0f32, 1.0, 0.5, 0.25], [1.0, 0.9, 0.8, 0.7]];
+        let dims = vec![(4, 8), (4, 8)];
+        // floor = 2 bits avg; one slot to 3 bits = 2.5 avg
+        let w = solve_widths(&errs, &dims, &BitBudget::AvgBits(2.5)).unwrap();
+        assert_eq!(w, vec![3, 2]);
+    }
+
+    #[test]
+    fn ratio_ties_break_on_slot_order() {
+        // identical slots: the earlier (layer, module) slot upgrades first
+        let errs = vec![[4.0f32, 2.0, 1.0, 0.5]; 3];
+        let dims = vec![(4, 8); 3];
+        let w = solve_widths(&errs, &dims, &BitBudget::AvgBits(2.34)).unwrap();
+        assert_eq!(w, vec![3, 2, 2], "tie must go to the smallest slot index");
+    }
+
+    #[test]
+    fn infeasible_budgets_error_actionably() {
+        let (errs, dims) = instance(4, 4);
+        let err = solve_widths(&errs, &dims, &BitBudget::AvgBits(1.5))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("2-bit floor"), "{err}");
+        let err = solve_widths(&errs, &dims, &BitBudget::Bytes(16)).unwrap_err().to_string();
+        assert!(err.contains("pass at least"), "{err}");
+        assert!(
+            solve_widths(&errs, &dims, &BitBudget::AvgBits(f32::NAN)).is_err(),
+            "NaN budget must be rejected"
+        );
+    }
+
+    #[test]
+    fn allocation_identical_across_pool_sizes() {
+        // the scoring fan-out lands results in slot order, so the widths
+        // must be bit-identical at every jobs count — the allocator's
+        // share of the --jobs invariance contract. Exercised through
+        // score() itself with synthetic weights + Hessians.
+        use crate::model::config::ModelConfig;
+        use crate::quant::pipeline::Method;
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            d: 8,
+            layers: 2,
+            heads: 2,
+            ff: 16,
+            vocab: 32,
+            max_seq: 16,
+            batch: 2,
+            seq_lens: vec![16],
+            ldlq_k: 16,
+            ldlq_g: 2,
+        };
+        let p = ParamSet::init(&cfg, 7);
+        let mut rng = Pcg::new(11);
+        let hess = |k: usize| -> Tensor {
+            let x: Vec<Vec<f32>> =
+                (0..3 * k).map(|_| (0..k).map(|_| rng.normal()).collect()).collect();
+            quantref::hessian_scaled(&x, &vec![1.0; 3 * k])
+        };
+        let hessians: Vec<LayerHessians> = (0..cfg.layers)
+            .map(|_| LayerHessians {
+                scaled: vec![hess(cfg.d), hess(cfg.d), hess(cfg.d), hess(cfg.ff)],
+                uniform: None,
+            })
+            .collect();
+        let opts = QuantOptions::new(Method::Rsq, 3, 16);
+        let dims = slot_dims(&p);
+        let mut reference: Option<(Vec<[f32; PACK_BITS.len()]>, Vec<u32>)> = None;
+        for jobs in [1usize, 4] {
+            let pool = Pool::new(jobs);
+            let errs = score(&p, &hessians, &opts, false, &pool);
+            let w = solve_widths(&errs, &dims, &BitBudget::AvgBits(3.0)).unwrap();
+            match &reference {
+                None => reference = Some((errs, w)),
+                Some((e0, w0)) => {
+                    for (a, b) in errs.iter().flatten().zip(e0.iter().flatten()) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "jobs={jobs} score drift");
+                    }
+                    assert_eq!(&w, w0, "jobs={jobs} allocation drift");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn budget_spec_spelling() {
+        assert_eq!(BitBudget::AvgBits(3.0).spec(), "avg-bits:3");
+        assert_eq!(BitBudget::Bytes(4096).spec(), "budget-bytes:4096");
+    }
+
+    #[test]
+    fn packed_bytes_match_pack_layout() {
+        // rows*8 grid bytes + rows*ceil(cols*bits/8) code bytes — pinned
+        // against tensor::pack's row_bytes so the budget accounting and
+        // the artifact writer can never drift
+        assert_eq!(packed_weight_bytes(2, 3, 2), 2 * 8 + 2); // 1 code byte/row
+        assert_eq!(packed_weight_bytes(4, 64, 3), 4 * 8 + 4 * 24);
+        assert_eq!(packed_weight_bytes(1, 1, 8), 8 + 1);
+    }
+}

@@ -60,8 +60,15 @@ impl Codec {
         }
         if let Some(b) = s.strip_prefix("packed") {
             let bits: u32 = b.parse().with_context(|| format!("bad codec {s:?}"))?;
+            // strict render/parse inverse: u32::from_str tolerates leading
+            // zeros and an explicit '+' ("packed03", "packed+3"), which
+            // would make two spellings of one codec — reject anything that
+            // does not round-trip through render()
+            if format!("packed{bits}") != s {
+                bail!("non-canonical codec spelling {s:?} (expected \"packed{bits}\")");
+            }
             if !PACK_BITS.contains(&bits) {
-                bail!("codec {s:?}: unsupported pack width");
+                bail!("codec {s:?}: unsupported pack width (supported: {PACK_BITS:?})");
             }
             return Ok(Codec::Packed { bits });
         }
@@ -82,7 +89,8 @@ pub struct TensorEntry {
 
 impl TensorEntry {
     /// Expected blob length for this entry's codec + shape. `None` when
-    /// the dims are implausible enough to overflow — the manifest is
+    /// the dims are implausible enough to overflow — or when a packed
+    /// codec is claimed for a non-matrix shape — the manifest is
     /// untrusted input, so size arithmetic must be checked, not panicking
     /// (the module contract: malformed input never panics).
     pub fn expected_len(&self) -> Option<u64> {
@@ -90,6 +98,11 @@ impl TensorEntry {
         match self.codec {
             Codec::Raw => numel.checked_mul(4),
             Codec::Packed { bits } => {
+                // packed layout is strictly per-row over a 2-D matrix; a
+                // 1-D (or 3-D) shape has no row/col split to pack under
+                if self.shape.len() != 2 {
+                    return None;
+                }
                 let (rows, cols) = (self.shape[0] as u64, self.shape[1] as u64);
                 let row_bits = cols.checked_mul(bits as u64)?;
                 let rb = row_bits.checked_add(7)? / 8;
@@ -116,6 +129,14 @@ pub struct ArtifactManifest {
     /// content address of the Hessians the solve consumed (hex), "-" for
     /// data-free RTN provenance
     pub hess_key: String,
+    /// mixed-precision provenance: the budget spec that drove the
+    /// allocator (`avg-bits:3` / `budget-bytes:4096`), absent for a
+    /// single global `--bits` run. Rendered only when present; parse
+    /// ignores unknown keys, so old readers and old artifacts both work.
+    pub budget: Option<String>,
+    /// achieved packed-weight weighted average width in bits (mixed-
+    /// precision runs only)
+    pub avg_bits: Option<f32>,
     pub tensors: Vec<TensorEntry>,
     /// exact size of weights.bin — read back first, so truncation is
     /// caught before any blob is touched
@@ -140,6 +161,12 @@ impl ArtifactManifest {
             Some(names) => out.push_str(&format!("module_mask={}\n", names.join(","))),
         }
         out.push_str(&format!("hess_key={}\n", self.hess_key));
+        if let Some(b) = &self.budget {
+            out.push_str(&format!("budget={b}\n"));
+        }
+        if let Some(a) = self.avg_bits {
+            out.push_str(&format!("avg_bits={a}\n"));
+        }
         for t in &self.tensors {
             let shape: Vec<String> = t.shape.iter().map(|d| d.to_string()).collect();
             out.push_str(&format!(
@@ -206,6 +233,11 @@ impl ArtifactManifest {
             expansion: get("expansion")?.parse().context("bad expansion")?,
             module_mask,
             hess_key: get("hess_key")?,
+            budget: kv.get("budget").cloned(),
+            avg_bits: match kv.get("avg_bits") {
+                None => None,
+                Some(v) => Some(v.parse().context("bad avg_bits")?),
+            },
             tensors,
             total_len: get("total_len")?.parse().context("bad total_len")?,
         };
@@ -339,9 +371,15 @@ pub enum Blob {
 /// validated but **not** dequantized). `entry.check()`-validated lengths
 /// are re-checked here so a decoder on untrusted bytes stays total.
 pub fn decode_blob_any(entry: &TensorEntry, bytes: &[u8]) -> Result<Blob> {
-    let want = entry
-        .expected_len()
-        .with_context(|| format!("tensor {}: implausible shape {:?}", entry.name, entry.shape))?;
+    let want = entry.expected_len().with_context(|| {
+        format!(
+            "tensor {}: shape {:?} is implausible or not packable under codec {} — \
+             artifact corrupt; re-save with `rsq quantize --save`",
+            entry.name,
+            entry.shape,
+            entry.codec.render(),
+        )
+    })?;
     if bytes.len() as u64 != want {
         bail!(
             "tensor {}: blob is {} bytes, expected {want} — weights.bin truncated or corrupt",
@@ -441,6 +479,8 @@ mod tests {
             expansion: 1,
             module_mask: None,
             hess_key: "00".repeat(16),
+            budget: None,
+            avg_bits: None,
             tensors,
             total_len: cursor,
         }
@@ -503,6 +543,64 @@ mod tests {
             crc: 0,
         };
         assert_eq!(huge.expected_len(), None);
+    }
+
+    #[test]
+    fn packed_codec_on_non_matrix_shape_is_total() {
+        // the headline regression: a hostile manifest claiming a packed
+        // codec for a 1-D tensor must not index shape[1] — expected_len
+        // returns None and both decoders turn that into an actionable
+        // error instead of a panic
+        for shape in [vec![4], vec![], vec![2, 2, 2]] {
+            let e = TensorEntry {
+                name: "l0.g1".into(),
+                codec: Codec::Packed { bits: 3 },
+                shape,
+                offset: 0,
+                len: 0,
+                crc: 0,
+            };
+            assert_eq!(e.expected_len(), None, "shape {:?}", e.shape);
+            let err = decode_blob_any(&e, &[0u8; 16]).unwrap_err().to_string();
+            assert!(err.contains("not packable"), "{err}");
+            assert!(err.contains("rsq quantize --save"), "error must be actionable: {err}");
+        }
+    }
+
+    #[test]
+    fn codec_parse_is_strict_inverse_of_render() {
+        for bits in PACK_BITS {
+            let c = Codec::Packed { bits };
+            assert_eq!(Codec::parse(&c.render()).unwrap(), c);
+        }
+        assert_eq!(Codec::parse("raw").unwrap(), Codec::Raw);
+        // non-canonical spellings that u32::from_str would happily accept
+        for s in ["packed03", "packed+3", "packed 3", "packed0x3"] {
+            let err = Codec::parse(s).unwrap_err().to_string();
+            assert!(!err.is_empty(), "{s:?} must be rejected");
+        }
+        assert!(Codec::parse("packed03").unwrap_err().to_string().contains("non-canonical"));
+        // out-of-set widths name the supported set
+        let err = Codec::parse("packed5").unwrap_err().to_string();
+        assert!(err.contains("unsupported pack width"), "{err}");
+        assert!(err.contains('2') && err.contains('8'), "must name PACK_BITS: {err}");
+    }
+
+    #[test]
+    fn budget_provenance_round_trip_and_optional() {
+        // absent on a plain --bits manifest (and absent from render)
+        let m = sample_manifest();
+        assert!(!m.render().contains("budget="));
+        let m2 = ArtifactManifest::parse(&m.render()).unwrap();
+        assert_eq!(m2.budget, None);
+        assert_eq!(m2.avg_bits, None);
+        // present round-trips exactly
+        let mut m3 = sample_manifest();
+        m3.budget = Some("avg-bits:3".into());
+        m3.avg_bits = Some(2.875);
+        let m4 = ArtifactManifest::parse(&m3.render()).unwrap();
+        assert_eq!(m4.budget.as_deref(), Some("avg-bits:3"));
+        assert_eq!(m4.avg_bits, Some(2.875));
     }
 
     #[test]

@@ -54,13 +54,19 @@ pub fn save(
     // mkdir -p an arbitrary tree)
     validate_save_dir(dir)?;
     let cfg = &q.cfg;
-    // tensor index -> solve grid, from the report's (layer, module) order
+    // tensor index -> solve grid (and allocator width, when the
+    // mixed-precision path chose per-module widths — DESIGN.md §14),
+    // from the report's (layer, module) order
     let mut grid_of: Vec<Option<&RowGrid>> = vec![None; q.tensors.len()];
+    let mut width_of: Vec<u32> = vec![opts.bits; q.tensors.len()];
     if report.grids.len() == cfg.layers * Module::ALL.len() {
         for l in 0..cfg.layers {
             for (mi, m) in Module::ALL.into_iter().enumerate() {
-                grid_of[cfg.param_index(l, m)] =
-                    report.grids[l * Module::ALL.len() + mi].as_ref();
+                let slot = l * Module::ALL.len() + mi;
+                grid_of[cfg.param_index(l, m)] = report.grids[slot].as_ref();
+                if let Some(&w) = report.widths.get(slot) {
+                    width_of[cfg.param_index(l, m)] = w;
+                }
             }
         }
     }
@@ -69,7 +75,7 @@ pub fn save(
     let mut blobs: Vec<u8> = Vec::new();
     let mut tensors = Vec::with_capacity(q.tensors.len());
     for (i, t) in q.tensors.iter().enumerate() {
-        let packed = grid_of[i].and_then(|g| match PackedRows::pack(t, opts.bits, g) {
+        let packed = grid_of[i].and_then(|g| match PackedRows::pack(t, width_of[i], g) {
             Ok(p) => Some(p),
             Err(e) => {
                 if opts.verbose {
@@ -115,6 +121,8 @@ pub fn save(
         } else {
             report.hess_key.clone()
         },
+        budget: report.budget.clone(),
+        avg_bits: report.avg_bits,
         total_len: blobs.len() as u64,
         tensors,
     };
@@ -315,6 +323,77 @@ mod tests {
             }
             std::fs::remove_dir_all(&dir).ok();
         }
+    }
+
+    #[test]
+    fn mixed_width_save_load_bit_identical() {
+        // per-module widths (report.widths, DESIGN.md §14): every layer
+        // weight packs at its own slot width, the manifest records the
+        // codec per tensor plus the budget provenance, and the load is
+        // bit-identical — the serve/eval paths already decode per-tensor
+        // widths, so this pins the writer side of the contract
+        let c = cfg();
+        let mut p = ParamSet::init(&c, 5);
+        let mut report = QuantReport::default();
+        report.hess_key = "cd".repeat(16);
+        let widths: Vec<u32> = vec![2, 3, 4, 8, 2, 3, 4, 8, 4, 3, 2, 8, 3, 2];
+        assert_eq!(widths.len(), c.layers * Module::ALL.len());
+        let mut k = 0;
+        for l in 0..c.layers {
+            for m in Module::ALL {
+                let bits = widths[k];
+                k += 1;
+                let maxq = ((1u64 << bits) - 1) as f32;
+                let w = p.weight(l, m).clone();
+                let q = quantref::rtn(&w, maxq);
+                let (scale, zero) = quantref::row_grid(&w, maxq);
+                report.grids.push(Some(RowGrid { scale, zero }));
+                p.set_weight(l, m, q);
+            }
+        }
+        report.widths = widths.clone();
+        report.avg_bits = Some(3.625);
+        report.budget = Some("avg-bits:4".into());
+        let mut opts = QuantOptions::new(Method::Rtn, 3, 64);
+        opts.strategy = crate::quant::Strategy::Uniform;
+
+        let dir = tmpdir("mixed");
+        let manifest = save(&dir, &p, &report, &opts).unwrap();
+        assert_eq!(manifest.budget.as_deref(), Some("avg-bits:4"));
+        assert_eq!(manifest.avg_bits, Some(3.625));
+        // each layer weight's codec carries its slot width
+        let mut k = 0;
+        for l in 0..c.layers {
+            for m in Module::ALL {
+                let entry = &manifest.tensors[c.param_index(l, m)];
+                assert_eq!(
+                    entry.codec,
+                    Codec::Packed { bits: widths[k] },
+                    "layer {l} {m:?}"
+                );
+                k += 1;
+            }
+        }
+        let (q, m2) = load(&dir).unwrap();
+        assert_eq!(m2.avg_bits, Some(3.625));
+        for (a, b) in q.tensors.iter().zip(&p.tensors) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // storage domain (the serve loader): per-blob widths survive
+        let (blobs, _) = load_packed(&dir).unwrap();
+        let mut k = 0;
+        for l in 0..c.layers {
+            for m in Module::ALL {
+                match &blobs[c.param_index(l, m)] {
+                    Blob::Packed(pr) => assert_eq!(pr.bits, widths[k], "layer {l} {m:?}"),
+                    Blob::Raw(_) => panic!("layer {l} {m:?} lost its packing"),
+                }
+                k += 1;
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

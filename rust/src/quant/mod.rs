@@ -15,14 +15,20 @@
 //!   packed on-disk format behind `rsq quantize --save` / `rsq eval
 //!   --artifact`, and the content-addressed Hessian cache that lets
 //!   repeat runs skip pass A entirely (DESIGN.md §9).
+//! - [`alloc`] — layer-adaptive mixed-precision bit allocation: per-module
+//!   widths from `PACK_BITS` solved under `--avg-bits` / `--budget-bytes`
+//!   by a deterministic greedy marginal-gain allocator over the pass-A
+//!   Hessian sensitivities (DESIGN.md §14).
 //! - [`vq`] — E8-derived codebook construction for Tab. 6.
 
+pub mod alloc;
 pub mod artifact;
 pub mod pipeline;
 pub mod sched;
 pub mod strategy;
 pub mod vq;
 
+pub use alloc::{Allocation, BitBudget};
 pub use pipeline::{quantize, LayerTiming, Method, QuantOptions, QuantReport};
 pub use sched::SchedMode;
 pub use strategy::Strategy;

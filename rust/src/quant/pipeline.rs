@@ -136,6 +136,11 @@ pub struct QuantOptions {
     /// `Backend::Reference` (the default) is bit-exact, `Backend::Simd`
     /// is tolerance-pinned (DESIGN.md §13)
     pub backend: Backend,
+    /// mixed-precision bit budget (`--avg-bits` / `--budget-bytes`,
+    /// DESIGN.md §14): per-module widths are allocated from the pass-A
+    /// Hessians and `bits` only sets the proxy/scoring width. None =
+    /// every module solves at the single global `bits`.
+    pub alloc: Option<super::alloc::BitBudget>,
     /// log per-layer reconstruction error to stderr
     pub verbose: bool,
 }
@@ -157,6 +162,7 @@ impl QuantOptions {
             sched: SchedMode::Pipelined,
             hess_cache: None,
             backend: Backend::Reference,
+            alloc: None,
             verbose: false,
         }
     }
@@ -231,6 +237,18 @@ pub struct QuantReport {
     pub hess_cache_misses: usize,
     /// layers whose Hessians were computed with caching disabled
     pub hess_cache_skips: usize,
+    /// per-(layer, `Module::ALL`) widths chosen by the mixed-precision
+    /// allocator, in `grids` order (DESIGN.md §14); empty for a
+    /// global-width run. `artifact::save` packs each weight at its slot's
+    /// width.
+    pub widths: Vec<u32>,
+    /// achieved numel-weighted average width (allocator runs only)
+    pub avg_bits: Option<f32>,
+    /// the budget spec that drove the allocator (`BitBudget::spec`)
+    pub budget: Option<String>,
+    /// total packed weight bytes under the allocation, per-row grids
+    /// included (allocator runs only)
+    pub packed_bytes: Option<u64>,
 }
 
 /// Quantize `params` with the given options; returns the quantized set and
@@ -260,6 +278,27 @@ pub fn quantize(
     let cfg = engine.config().clone();
     if !cfg.seq_lens.contains(&opts.seq_len) {
         bail!("seq_len {} not in artifact set {:?}", opts.seq_len, cfg.seq_lens);
+    }
+    if !crate::tensor::pack::PACK_BITS.contains(&opts.bits) {
+        bail!(
+            "unsupported bit width {} — the packed formats support {:?}",
+            opts.bits,
+            crate::tensor::pack::PACK_BITS
+        );
+    }
+    if opts.alloc.is_some() {
+        if opts.method == Method::Rtn {
+            bail!(
+                "--avg-bits/--budget-bytes need Hessian sensitivity scores and RTN is \
+                 data-free — use gptq, quarot, sq, or rsq"
+            );
+        }
+        if opts.method.vector_quant() {
+            bail!(
+                "--avg-bits/--budget-bytes need the affine-grid solver and the VQ codebook \
+                 methods are gridless — use gptq, quarot, sq, or rsq"
+            );
+        }
     }
     let pool = Pool::new(opts.jobs);
     let mut p = params.clone();
@@ -335,7 +374,7 @@ pub fn quantize(
     report.batches = batches.len();
     let freq = prepared.token_frequencies(cfg.vocab);
 
-    let ctx = sched::SchedCtx {
+    let mut ctx = sched::SchedCtx {
         engine,
         cfg: &cfg,
         opts,
@@ -351,8 +390,81 @@ pub fn quantize(
             None
         },
         needs_uniform,
-        collect_hessians: cache.is_some() && cached.is_none(),
+        // the allocator needs every layer's Hessians in hand regardless
+        // of caching (DESIGN.md §14)
+        collect_hessians: opts.alloc.is_some() || (cache.is_some() && cached.is_none()),
+        widths: None,
     };
+
+    // --- mixed-precision path (--avg-bits / --budget-bytes, DESIGN.md
+    // §14): obtain Hessians (warm hit, or a proxy pass at the single
+    // reference width opts.bits), allocate per-module widths, then
+    // re-solve the kept rotated full-precision params at those widths.
+    // The allocation is a pure function of the Hessians + weights +
+    // budget, so warm and cold runs — and every --jobs/--sched combo —
+    // produce bit-identical widths and output.
+    if let Some(budget) = opts.alloc.as_ref() {
+        let mut proxy_timings: Vec<LayerTiming> = Vec::new();
+        let hessians = match cached {
+            Some(h) => {
+                report.hess_cache_hits = cfg.layers;
+                h
+            }
+            None => {
+                // the proxy pass quantizes a throwaway clone exactly like
+                // a plain `--bits` run would, collecting the Hessians its
+                // pass A accumulates (which is why alloc does not enter
+                // the cache key: the Hessians are identical)
+                let mut proxy = p.clone();
+                let mut scratch = QuantReport::default();
+                let computed = sched::run_layers(&ctx, &mut proxy, &mut scratch)?;
+                proxy_timings = scratch.layer_timings;
+                match &cache {
+                    Some(c) => {
+                        report.hess_cache_misses = cfg.layers;
+                        if let Err(e) = c.store(&key, &computed) {
+                            eprintln!("[hess-cache] store failed (run unaffected): {e:#}");
+                        }
+                    }
+                    None => report.hess_cache_skips = cfg.layers,
+                }
+                computed
+            }
+        };
+        let a = super::alloc::allocate(&p, &hessians, opts, needs_uniform, &pool, budget)?;
+        if opts.verbose {
+            eprintln!(
+                "[alloc] {}: avg {:.3} bits, {} packed bytes",
+                a.budget, a.avg_bits, a.packed_bytes
+            );
+        }
+        report.widths = a.widths.clone();
+        report.avg_bits = Some(a.avg_bits);
+        report.budget = Some(a.budget);
+        report.packed_bytes = Some(a.packed_bytes);
+        ctx.widths = Some(a.widths);
+        ctx.collect_hessians = false;
+        sched::run_layers_cached(&ctx, &mut p, &mut report, hessians)?;
+        // fold the proxy pass's phase timings into the final solve's
+        // per-layer entries so the report keeps one entry per layer
+        for l in 0..proxy_timings.len().min(report.layer_timings.len()) {
+            let plt = proxy_timings[l];
+            let lt = &mut report.layer_timings[l];
+            lt.pass_a_seconds += plt.pass_a_seconds;
+            lt.pass_b_seconds += plt.pass_b_seconds;
+            lt.fused_seconds += plt.fused_seconds;
+            lt.solve_seconds += plt.solve_seconds;
+        }
+        for lt in &report.layer_timings {
+            report.pass_a_seconds += lt.pass_a_seconds;
+            report.solve_seconds += lt.solve_seconds;
+            report.pass_b_seconds += lt.pass_b_seconds;
+            report.fused_seconds += lt.fused_seconds;
+        }
+        report.wall_seconds = t0.elapsed().as_secs_f64();
+        return Ok((p, report));
+    }
+
     match cached {
         Some(hessians) => {
             // warm: pass A, pass B, and the embed sweep are all skipped

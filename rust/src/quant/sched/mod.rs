@@ -102,6 +102,26 @@ pub(crate) struct SchedCtx<'a> {
     /// populate the content-addressed cache (DESIGN.md §9); off when the
     /// cache is disabled to avoid holding every layer's Hessians at once
     pub collect_hessians: bool,
+    /// per-(layer, `Module::ALL`) solve widths from the mixed-precision
+    /// allocator (DESIGN.md §14), indexed `l * 7 + mi`; None = every
+    /// solve at the single global `opts.bits`
+    pub widths: Option<Vec<u32>>,
+}
+
+impl SchedCtx<'_> {
+    /// The bit width module `mi` of layer `l` solves at.
+    pub(crate) fn width(&self, l: usize, mi: usize) -> u32 {
+        match &self.widths {
+            Some(w) => w[l * crate::model::config::Module::ALL.len() + mi],
+            None => self.opts.bits,
+        }
+    }
+
+    /// Largest quantization level for that width (per-solve-task
+    /// counterpart of `QuantOptions::maxq`).
+    pub(crate) fn maxq(&self, l: usize, mi: usize) -> f32 {
+        ((1u64 << self.width(l, mi)) - 1) as f32
+    }
 }
 
 /// Drive every layer through pass A → solve → pass B in the configured

@@ -47,16 +47,20 @@ pub(crate) fn solve_layer(
         let w = p.weight(l, m);
         // the HLO solver fixes its grid from the pre-quant weight — mirror
         // it host-side so the artifact writer can recover exact codes
+        // the width is per solve task (mixed-precision allocation,
+        // DESIGN.md §14): maxq reaches the HLO solver as a runtime
+        // scalar, so a per-module width needs no extra kernels
+        let maxq = ctx.maxq(l, mi);
         let grid = if opts.method.vector_quant() {
             None
         } else {
-            let (scale, zero) = quantref::row_grid(w, opts.maxq());
+            let (scale, zero) = quantref::row_grid(w, maxq);
             Some(RowGrid { scale, zero })
         };
         let w_lit = runtime::tensor_literal(w)?;
         let h_lit = runtime::tensor_literal(h)?;
         let damp_lit = runtime::scalar_literal(opts.damp);
-        let maxq_lit = runtime::scalar_literal(opts.maxq());
+        let maxq_lit = runtime::scalar_literal(maxq);
         let outs = if opts.method.vector_quant() {
             ctx.engine.exec_ref(
                 &format!("ldlq_{o}x{i}"),

@@ -60,11 +60,20 @@ pub fn rtn(w: &Tensor, maxq: f32) -> Tensor {
 /// the Hessian-weighted loss tr((W-Q) H (W-Q)ᵀ), same contract as the HLO
 /// `gptq_*` modules.
 pub fn gptq(w: &Tensor, h: &Tensor, maxq: f32, damp: f32) -> (Tensor, f32) {
-    let (rows, din) = (w.rows(), w.cols());
-    assert_eq!(h.rows(), din);
     // the oracle stays single-threaded by design (no pool): it is the
     // fixed point the pool-parallel paths are tested against
     let u = hinv_cholesky_upper(h, damp, None);
+    gptq_with_factor(w, h, &u, maxq)
+}
+
+/// [`gptq`] with the Cholesky factor `u = hinv_cholesky_upper(h, damp)`
+/// supplied by the caller. The factor does not depend on the bit width,
+/// so multi-width scoring (`quant::alloc`) factors once per module and
+/// re-solves per width; `gptq(w, h, maxq, damp)` is exactly
+/// `gptq_with_factor(w, h, &hinv_cholesky_upper(h, damp, None), maxq)`.
+pub fn gptq_with_factor(w: &Tensor, h: &Tensor, u: &Tensor, maxq: f32) -> (Tensor, f32) {
+    let (rows, din) = (w.rows(), w.cols());
+    assert_eq!(h.rows(), din);
     let (scale, zero) = row_grid(w, maxq);
     let mut wc = w.clone();
     let mut q = Tensor::zeros(&[rows, din]);

@@ -12,7 +12,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::corpus::CorpusKind;
-use crate::quant::{quantize, Method, QuantOptions, SchedMode};
+use crate::eval::score_model;
+use crate::quant::{quantize, BitBudget, Method, QuantOptions, SchedMode};
 use crate::tensor::{kernels, Tensor};
 use crate::util::{json::Json, Args, Bench, Pcg, Pool};
 
@@ -307,6 +308,47 @@ pub fn perf(args: &Args) -> Result<()> {
         .set("cross_sched_hits", cross.hess_cache_hits)
         .set("key", warm.hess_key.as_str());
 
+    // Mixed-precision frontier (DESIGN.md §14): one quantize per budget
+    // point, every point sharing ONE Hessian cache entry — the allocator's
+    // proxy pass runs at the fixed reference width and the cache key
+    // ignores the budget, so the first point pays pass A once and every
+    // later point is score + solve only. This is the accuracy-vs-resident-
+    // bytes frontier the allocator exists to trace.
+    println!("\n--- mixed-precision frontier (--avg-bits sweep, one warm hess cache) ---");
+    let frontier_dir = std::path::Path::new("cache/perf-frontier");
+    std::fs::remove_dir_all(frontier_dir).ok(); // cold first point
+    let mut frontier_cells = Vec::new();
+    for avg in [2.0f32, 2.5, 3.0, 3.5, 4.0, 8.0] {
+        let mut o = QuantOptions::new(Method::Rsq, 3, t);
+        o.hess_cache = Some(frontier_dir.to_path_buf());
+        o.alloc = Some(BitBudget::AvgBits(avg));
+        let t0 = Instant::now();
+        let (q, rep) = quantize(&ctx.engine, &ctx.params, &calib, &o)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let score = score_model(&ctx.engine, &q, &ctx.eval, t, args.usize_or("probe-n", 8))?;
+        println!(
+            "avg-bits {avg:<4} -> achieved {:.3} bits  {:>9} packed B  PPL {:>8.3}  \
+             acc {:>5.1}%  {:>7.3}s  ({})",
+            rep.avg_bits.unwrap_or(f32::NAN),
+            rep.packed_bytes.unwrap_or(0),
+            score.ppl,
+            100.0 * score.mean_acc,
+            secs,
+            if rep.hess_cache_hits > 0 { "warm: score+solve only" } else { "cold: pass A + store" },
+        );
+        frontier_cells.push(
+            Json::obj()
+                .set("budget_avg_bits", avg)
+                .set("achieved_avg_bits", rep.avg_bits.unwrap_or(f32::NAN))
+                .set("packed_bytes", rep.packed_bytes.unwrap_or(0) as usize)
+                .set("ppl", score.ppl)
+                .set("mean_acc", score.mean_acc)
+                .set("seconds", secs)
+                .set("cache_hits", rep.hess_cache_hits),
+        );
+    }
+    std::fs::remove_dir_all(frontier_dir).ok();
+
     // Serving layer (DESIGN.md §11): packed-domain host decode from the
     // same trained params, RTN-packed at 3 bits host-side. Reports the
     // end-to-end tokens/s number the ROADMAP's serving goal asks for,
@@ -424,6 +466,7 @@ pub fn perf(args: &Args) -> Result<()> {
             .set("kernel_sweep", Json::Arr(kernel_results))
             .set("backend_sweep", Json::Arr(backend_results))
             .set("hess_cache", cache_record)
+            .set("frontier", Json::Arr(frontier_cells))
             .set("serve", serve_record),
     )
 }

@@ -12,14 +12,35 @@ pub struct Args {
     flags: Vec<String>,
 }
 
+/// Boolean flags every subcommand shares. [`Args::parse`] must never let
+/// one of these swallow the next token as a value — `rsq generate
+/// --verbose PROMPT` once recorded `verbose=PROMPT`, so `flag("verbose")`
+/// was false AND the positional vanished. Subcommands with extra boolean
+/// flags pass them through [`Args::parse_with_flags`], the same shape as
+/// `unknown_keys`/`missing_values`.
+pub const BOOL_FLAGS: &[&str] = &["verbose", "dry-run"];
+
 impl Args {
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Self {
+        Self::parse_with_flags(argv, BOOL_FLAGS)
+    }
+
+    /// Like [`Args::parse`], with extra known boolean flag names on top
+    /// of [`BOOL_FLAGS`]. A known boolean flag never consumes the next
+    /// token, so `--verbose PROMPT` keeps PROMPT positional; `--flag=true`
+    /// still works via the `=` form.
+    pub fn parse_with_flags(
+        argv: impl IntoIterator<Item = String>,
+        bool_flags: &[&str],
+    ) -> Self {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
         while let Some(a) = it.next() {
             if let Some(rest) = a.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
+                } else if BOOL_FLAGS.contains(&rest) || bool_flags.contains(&rest) {
+                    out.flags.push(rest.to_string());
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
@@ -39,6 +60,11 @@ impl Args {
 
     pub fn from_env() -> Self {
         Self::parse(std::env::args().skip(1))
+    }
+
+    /// [`Args::from_env`] with subcommand-specific boolean flags.
+    pub fn from_env_with_flags(bool_flags: &[&str]) -> Self {
+        Self::parse_with_flags(std::env::args().skip(1), bool_flags)
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -243,6 +269,40 @@ mod tests {
     fn trailing_flag() {
         let a = parse("--dry-run");
         assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn boolean_flag_never_swallows_a_positional() {
+        // the regression: `rsq generate --verbose PROMPT` used to record
+        // verbose=PROMPT, so flag("verbose") was false AND the positional
+        // vanished
+        let a = parse("generate --verbose 1,2,3");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["generate", "1,2,3"]);
+        assert_eq!(a.get("verbose"), None);
+        // same for a mid-line --dry-run before a value option
+        let b = parse("quantize --dry-run --bits 3");
+        assert!(b.flag("dry-run"));
+        assert_eq!(b.usize_or("bits", 0), 3);
+        // the = form still reaches flag() through the option path
+        let c = parse("generate --verbose=true 9");
+        assert!(c.flag("verbose"));
+        assert_eq!(c.positional, vec!["generate", "9"]);
+    }
+
+    #[test]
+    fn parse_with_flags_extends_the_shared_set() {
+        let argv = |s: &str| s.split_whitespace().map(String::from);
+        let a = Args::parse_with_flags(argv("bench --warm 7"), &["warm"]);
+        assert!(a.flag("warm"));
+        assert_eq!(a.positional, vec!["bench", "7"]);
+        // without the extra name the old value-option behavior remains
+        let b = Args::parse_with_flags(argv("bench --warm 7"), &[]);
+        assert_eq!(b.get("warm"), Some("7"));
+        // the shared BOOL_FLAGS set applies even with an empty extra set
+        let c = Args::parse_with_flags(argv("bench --verbose 7"), &[]);
+        assert!(c.flag("verbose"));
+        assert_eq!(c.positional, vec!["bench", "7"]);
     }
 
     #[test]

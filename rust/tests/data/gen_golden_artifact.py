@@ -9,6 +9,8 @@ can be pinned against bytes produced by an independent implementation:
   artifact_truncated/   weights.bin cut short -> "truncated" error
   artifact_badsum/      one blob byte flipped  -> "checksum mismatch" error
   artifact_badversion/  version=99             -> "unsupported ... version"
+  artifact_badshape/    packed3 claimed for 1-D l0.g1 -> "non-matrix shape"
+  artifact_badcodec/    codec=packed04 spelling -> "non-canonical" error
 
 Deterministic by construction (no RNG, no timestamps): re-running it must
 reproduce the committed files byte-for-byte.
@@ -116,6 +118,14 @@ def main():
     bad[wq_off + 3] ^= 0x20
     write("artifact_badsum", manifest, bytes(bad))
     write("artifact_badversion", manifest.replace("version=1", "version=99", 1), blobs)
+    # a packed codec claimed for the 1-D l0.g1 gain: the loader must reject
+    # it ("packed codec on non-matrix shape"), never index shape[1]
+    write("artifact_badshape",
+          manifest.replace("tensor=l0.g1|codec=raw|", "tensor=l0.g1|codec=packed3|", 1),
+          blobs)
+    # a non-canonical codec spelling ("packed04"): parse/render must stay a
+    # strict inverse, so one codec never has two on-disk spellings
+    write("artifact_badcodec", manifest.replace("codec=packed4", "codec=packed04", 1), blobs)
     print("golden artifact fixtures written under", HERE)
 
 

@@ -88,6 +88,24 @@ fn unknown_version_is_rejected_with_upgrade_hint() {
 }
 
 #[test]
+fn packed_codec_on_one_dim_tensor_is_rejected() {
+    // the headline regression: a manifest claiming `packed3` for the 1-D
+    // l0.g1 gain used to panic indexing shape[1]; it must be an error
+    // that names the tensor and the shape problem
+    let err = artifact::load(&fixture("artifact_badshape")).unwrap_err().to_string();
+    assert!(err.contains("packed codec on non-matrix shape"), "{err}");
+    assert!(err.contains("l0.g1"), "error must name the tensor: {err}");
+}
+
+#[test]
+fn non_canonical_codec_spelling_is_rejected() {
+    // "packed04" parses to the same bits as "packed4" under u32::from_str;
+    // the loader must reject it so every codec has exactly one spelling
+    let err = artifact::load(&fixture("artifact_badcodec")).unwrap_err().to_string();
+    assert!(err.contains("non-canonical codec spelling"), "{err}");
+}
+
+#[test]
 fn missing_directory_points_at_save() {
     let err = artifact::load(&fixture("no_such_artifact")).unwrap_err().to_string();
     assert!(err.contains("rsq quantize --save"), "{err}");

@@ -1,0 +1,187 @@
+//! Mixed-precision allocation integration on the tiny config (DESIGN.md
+//! §14): the allocator's widths must be invariant across every jobs ×
+//! sched combination and across warm-vs-cold Hessian cache runs, the
+//! saved artifact must respect the budget, and a mixed-width artifact
+//! must round-trip bit-identically through both consumers — `eval
+//! --artifact` and the serve/generate packed loader. Requires `make
+//! artifacts`.
+
+use std::path::PathBuf;
+
+use rsq::corpus::{CalibSet, CorpusKind};
+use rsq::eval::perplexity;
+use rsq::model::config::Module;
+use rsq::model::outliers::{inject_outliers, OutlierSpec};
+use rsq::model::ParamSet;
+use rsq::quant::{artifact, quantize, BitBudget, Method, QuantOptions, SchedMode};
+use rsq::runtime::Engine;
+use rsq::train::train_or_load;
+
+fn setup() -> (Engine, ParamSet, CalibSet) {
+    let eng = Engine::load("tiny").expect("run `make artifacts` first");
+    let cfg = eng.config().clone();
+    let (mut p, _) = train_or_load(&eng, 7, 150, false).unwrap();
+    inject_outliers(&mut p, OutlierSpec::default(), 7);
+    let calib = CalibSet::generate(cfg.vocab, CorpusKind::Wiki, 8, 64, 7, 1);
+    (eng, p, calib)
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("rsq_int_alloc_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn assert_bit_identical(a: &ParamSet, b: &ParamSet, label: &str) {
+    assert_eq!(a.tensors.len(), b.tensors.len(), "{label}");
+    for (i, (x, y)) in a.tensors.iter().zip(&b.tensors).enumerate() {
+        assert_eq!(x.shape, y.shape, "{label}: tensor {i} shape");
+        for (j, (va, vb)) in x.data.iter().zip(&y.data).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{label}: tensor {i} element {j}: {va} vs {vb}"
+            );
+        }
+    }
+}
+
+fn dir_bytes(dir: &PathBuf) -> (Vec<u8>, Vec<u8>) {
+    (
+        std::fs::read(dir.join(artifact::MANIFEST_FILE)).unwrap(),
+        std::fs::read(dir.join(artifact::BLOBS_FILE)).unwrap(),
+    )
+}
+
+/// The allocation — and the artifact bytes built from it — are a pure
+/// function of (weights, calibration, budget): every jobs × sched
+/// combination agrees, and a warm cache run (which skips the proxy pass
+/// entirely) reproduces the cold run byte-for-byte.
+#[test]
+fn allocation_is_invariant_across_jobs_sched_and_cache() {
+    let (eng, p, calib) = setup();
+    let cache_dir = tmpdir("alloc_cache");
+    let layers = eng.config().layers;
+    let mut baseline: Option<(Vec<u8>, Vec<u8>, Vec<u32>)> = None;
+    let mut first = true;
+    for jobs in [1usize, 4] {
+        for sched in [SchedMode::Staged, SchedMode::Pipelined] {
+            let mut opts = QuantOptions::new(Method::Rsq, 3, 64);
+            opts.alloc = Some(BitBudget::AvgBits(3.0));
+            opts.hess_cache = Some(cache_dir.clone());
+            opts.jobs = jobs;
+            opts.sched = sched;
+            let (q, report) = quantize(&eng, &p, &calib, &opts).unwrap();
+            let label = format!("jobs={jobs} sched={}", sched.name());
+
+            assert_eq!(report.widths.len(), layers * Module::ALL.len(), "{label}");
+            let avg = report.avg_bits.expect("allocator runs report avg bits");
+            assert!(avg <= 3.0 + 1e-5, "{label}: budget exceeded ({avg} bits)");
+            assert!(
+                report.widths.iter().all(|w| [2, 3, 4, 8].contains(w)),
+                "{label}: widths outside PACK_BITS: {:?}",
+                report.widths
+            );
+            if first {
+                assert_eq!(report.hess_cache_misses, layers, "first run is cold");
+            } else {
+                assert_eq!(report.hess_cache_hits, layers, "{label}: must reuse proxy Hessians");
+            }
+            first = false;
+
+            let dir = tmpdir(&format!("grid_{jobs}_{}", sched.name()));
+            artifact::save(&dir, &q, &report, &opts).unwrap();
+            let bytes = dir_bytes(&dir);
+            if let Some((man, blob, w0)) = &baseline {
+                assert_eq!(&report.widths, w0, "{label}: allocation must be invariant");
+                assert_eq!(&bytes.0, man, "{label}: manifest bytes");
+                assert_eq!(&bytes.1, blob, "{label}: blob bytes");
+            } else {
+                baseline = Some((bytes.0, bytes.1, report.widths.clone()));
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+    std::fs::remove_dir_all(&cache_dir).ok();
+}
+
+/// A mixed-width `--save` artifact records per-slot codecs + provenance
+/// and loads bit-identically through the eval path and the serve/generate
+/// packed loader.
+#[test]
+fn mixed_width_artifact_roundtrips_through_eval_and_serve() {
+    let (eng, p, calib) = setup();
+    let mut opts = QuantOptions::new(Method::Rsq, 3, 64);
+    opts.alloc = Some(BitBudget::AvgBits(3.0));
+    let (q, report) = quantize(&eng, &p, &calib, &opts).unwrap();
+    let dir = tmpdir("roundtrip");
+    let manifest = artifact::save(&dir, &q, &report, &opts).unwrap();
+
+    // manifest provenance + per-tensor codecs mirror the allocation
+    assert_eq!(manifest.budget.as_deref(), Some("avg-bits:3"));
+    assert_eq!(manifest.avg_bits, report.avg_bits);
+    let cfg = eng.config();
+    for l in 0..cfg.layers {
+        for (mi, m) in Module::ALL.into_iter().enumerate() {
+            let slot = l * Module::ALL.len() + mi;
+            assert_eq!(
+                manifest.tensors[cfg.param_index(l, m)].codec,
+                artifact::Codec::Packed { bits: report.widths[slot] },
+                "layer {l} {m:?} must pack at its allocated width"
+            );
+        }
+    }
+
+    // eval path: bit-identical params, bit-identical perplexity
+    let (loaded, _) = artifact::load(&dir).unwrap();
+    assert_bit_identical(&loaded, &q, "mixed-width load");
+    let eval = CalibSet::generate(cfg.vocab, CorpusKind::Wiki, 8, 64, 7, 2);
+    let ppl_mem = perplexity(&eng, &q, &eval, 64).unwrap();
+    let ppl_art = perplexity(&eng, &loaded, &eval, 64).unwrap();
+    assert_eq!(ppl_mem.to_bits(), ppl_art.to_bits(), "artifact-backed ppl");
+
+    // serve/generate path: the packed loader accepts mixed widths, keeps
+    // the provenance, and decodes deterministically
+    let (model, m2) = rsq::serve::PackedModel::load(&dir).unwrap();
+    assert_eq!(m2.avg_bits, manifest.avg_bits);
+    let prompt = vec![1i32, 2, 3, 4];
+    let a = rsq::serve::greedy_decode(&model, &prompt, 8, None).unwrap();
+    let b = rsq::serve::greedy_decode(&model, &prompt, 8, None).unwrap();
+    assert_eq!(a, b, "mixed-width decode is deterministic");
+    assert_eq!(a.len(), 8);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `--budget-bytes` caps the packed footprint, and the report's
+/// accounting equals the bytes actually written to disk.
+#[test]
+fn budget_bytes_caps_the_packed_footprint() {
+    let (eng, p, calib) = setup();
+    let cfg = eng.config().clone();
+    // a budget exactly equal to the uniform 3-bit footprint: feasible, and
+    // tight enough that the allocator has real choices to make
+    let budget: u64 = (0..cfg.layers)
+        .flat_map(|_| Module::ALL)
+        .map(|m| {
+            let (o, i) = cfg.weight_shape(m);
+            rsq::quant::alloc::packed_weight_bytes(o, i, 3)
+        })
+        .sum();
+    let mut opts = QuantOptions::new(Method::Rsq, 3, 64);
+    opts.alloc = Some(BitBudget::Bytes(budget));
+    let (q, report) = quantize(&eng, &p, &calib, &opts).unwrap();
+    let spent = report.packed_bytes.expect("allocator runs report packed bytes");
+    assert!(spent <= budget, "allocator overspent: {spent} > {budget}");
+
+    let dir = tmpdir("bytes");
+    let manifest = artifact::save(&dir, &q, &report, &opts).unwrap();
+    let on_disk: u64 = manifest
+        .tensors
+        .iter()
+        .filter(|t| matches!(t.codec, artifact::Codec::Packed { .. }))
+        .map(|t| t.len)
+        .sum();
+    assert_eq!(on_disk, spent, "accounting must match the bytes on disk");
+    assert_eq!(manifest.budget, Some(format!("budget-bytes:{budget}")));
+    std::fs::remove_dir_all(&dir).ok();
+}

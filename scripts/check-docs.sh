@@ -181,7 +181,30 @@ if [ -f rust/src/tensor/kernels/backend.rs ]; then
     done
 fi
 
-[ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler/artifact/kernel/serve/backend docs OK"
+# The mixed-precision allocator: if quant/alloc.rs exists, §14 must
+# document the budget flags, the two-phase proxy flow, the greedy solve
+# with its determinism tie-break, and the artifact provenance keys —
+# the contract integration_alloc.rs and the frontier sweep lean on.
+# Needles are grepped inside the §14 body only, same scoping rationale
+# as §9; `grep -qi --` so dash-leading needles are not parsed as options.
+if [ -f rust/src/quant/alloc.rs ]; then
+    if ! grep -qE "^## 14\." DESIGN.md; then
+        echo "check-docs: FAIL — rust/src/quant/alloc.rs exists but DESIGN.md has no '## 14.' section" >&2
+        fail=1
+    fi
+    sec14=$(awk '/^## 14\./{f=1; print; next} /^## /{f=0} f' DESIGN.md)
+    for needle in "quant/alloc" "--avg-bits" "--budget-bytes" "PACK_BITS" \
+                  "proxy pass" "greedy" "gptq_with_factor" "tie" \
+                  "Hessian-cache key" "avg_bits" "frontier" \
+                  "expected_len" "non-canonical" "Args::conflict"; do
+        if ! grep -qi -- "${needle}" <<< "${sec14}"; then
+            echo "check-docs: FAIL — DESIGN.md §14 never mentions \"${needle}\" (mixed-precision contract drift)" >&2
+            fail=1
+        fi
+    done
+fi
+
+[ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler/artifact/kernel/serve/backend/alloc docs OK"
 
 # --- 3+4. rustdoc + rustfmt ------------------------------------------------
 if [ "${CHECK_DOCS_SKIP_CARGO:-0}" = "1" ]; then

@@ -210,4 +210,65 @@ else
     echo "run-tests: backend smoke OK (NOTE — simd greedy tokens diverge from reference:)"
     printf 'reference: %s\nsimd     : %s\n' "${gen_ref_be}" "${gen_simd_be}"
 fi
+
+# Mixed-precision smoke (DESIGN.md §14): quantize the tiny config under
+# --avg-bits 3.0, assert the achieved average respects the budget, and
+# assert `rsq eval --artifact` on the resulting mixed-width artifact is
+# deterministic across two runs. Quantization needs the AOT artifact set
+# (`make artifacts`), so this leg gates on the tiny directory the same
+# way the cargo half gates on the toolchain.
+tiny_dir="${RSQ_ARTIFACTS:-artifacts}/tiny"
+if [ -d "${tiny_dir}" ]; then
+    echo "run-tests: mixed-precision smoke (rsq quantize --avg-bits 3.0)"
+    mp_log="$(mktemp)"
+    mp_tmp="$(mktemp -d)"
+    mp_dir="${mp_tmp}/mixed-artifact"
+    mp_out="$(cargo run --release --quiet -- quantize \
+        --config tiny --avg-bits 3.0 --calib-n 4 --calib-t 64 \
+        --hess-cache off --save "${mp_dir}" \
+        --backend "${backend}" 2>"${mp_log}")" || {
+        echo "run-tests: FAIL — mixed-precision quantize exited non-zero:" >&2
+        cat "${mp_log}" >&2
+        exit 1
+    }
+    avg="$(sed -n 's/^mixed bits   : avg \([0-9.]*\).*/\1/p' <<< "${mp_out}")"
+    if [ -z "${avg}" ]; then
+        echo "run-tests: FAIL — quantize printed no 'mixed bits' line:" >&2
+        printf '%s\n' "${mp_out}" >&2
+        exit 1
+    fi
+    if ! awk -v a="${avg}" 'BEGIN { exit !(a <= 3.0) }'; then
+        echo "run-tests: FAIL — achieved avg bits ${avg} exceeds the 3.0 budget" >&2
+        exit 1
+    fi
+    mp_eval() {
+        cargo run --release --quiet -- eval --artifact "${mp_dir}" \
+            --backend "${backend}" 2>"${mp_log}"
+    }
+    ev1="$(mp_eval)" || {
+        echo "run-tests: FAIL — eval --artifact on the mixed artifact exited non-zero:" >&2
+        cat "${mp_log}" >&2
+        exit 1
+    }
+    ev2="$(mp_eval)" || {
+        echo "run-tests: FAIL — mixed-precision eval second run exited non-zero:" >&2
+        cat "${mp_log}" >&2
+        exit 1
+    }
+    rm -f "${mp_log}"
+    if ! grep -q '^mixed bits' <<< "${ev1}"; then
+        echo "run-tests: FAIL — eval output has no 'mixed bits' provenance line:" >&2
+        printf '%s\n' "${ev1}" >&2
+        exit 1
+    fi
+    if [ "${ev1}" != "${ev2}" ]; then
+        echo "run-tests: FAIL — mixed-precision eval is not deterministic across runs" >&2
+        printf 'run 1:\n%s\nrun 2:\n%s\n' "${ev1}" "${ev2}" >&2
+        exit 1
+    fi
+    rm -rf "${mp_tmp}"
+    echo "run-tests: mixed-precision smoke OK (avg ${avg} <= 3.0, eval deterministic)"
+else
+    echo "run-tests: NOTE — ${tiny_dir} absent (run \`make artifacts\`), skipping mixed-precision smoke" >&2
+fi
 echo "run-tests: OK"

@@ -14,11 +14,14 @@
 //! token divergence vs the f32 oracle — and **asserts** the per-cell
 //! prompt-RNG re-seed holds across the kv axis (every kv cell decodes
 //! identical requests), the invariant that keeps rows comparable.
+//! A final §15 section times shared-prefix traffic through the prefix
+//! cache and speculative decoding against a 2-bit self-draft, asserting
+//! both leave the greedy tokens untouched (the determinism contract).
 
 use rsq::model::ParamSet;
 use rsq::serve::{
-    bench_model_config, greedy_decode, serve, token_divergence, KvFormat, PackedModel, PagePool,
-    ServeOptions, ServeRequest, KV_BITS,
+    bench_model_config, greedy_decode, serve, serve_with_draft, token_divergence, KvFormat,
+    PackedModel, PagePool, ServeOptions, ServeRequest, KV_BITS,
 };
 use rsq::tensor::kernels::{deq_gemv, gemm_bt};
 use rsq::tensor::pack::PACK_BITS;
@@ -176,6 +179,70 @@ fn main() -> anyhow::Result<()> {
             resident.0,
             resident.1,
             resident.1 as f64 / (resident.0.max(1)) as f64
+        );
+    }
+
+    println!("--- prefix cache + speculative decoding (DESIGN.md §15) ---");
+    // shared-prefix traffic through one slot: every admission after the
+    // first adopts the pages the first request donated — zero prefill
+    // forwards for the shared span
+    let shared: Vec<ServeRequest> = (0..4u64)
+        .map(|id| ServeRequest::new(id, baseline[0].prompt.clone(), max_new))
+        .collect();
+    let solo = greedy_decode(&model, &shared[0].prompt, max_new, Some(&pool))?;
+    // page = 2 puts a page boundary inside the 4-token prompt — the
+    // cache keys on page-aligned prefixes, so the default 16-position
+    // pages would never produce a donatable boundary here
+    let popts = ServeOptions { max_batch: 1, page: 2, prefix_cache: true, ..Default::default() };
+    let mut hit_stats = (0usize, 0usize, 0usize);
+    let s = Bench::new("serve/prefix_cache_shared_b1")
+        .warmup(1)
+        .samples(3)
+        .iter(|| {
+            let rep = serve(&model, &pool, shared.clone(), &popts).unwrap();
+            hit_stats = (rep.prefix_hits, rep.prefix_lookups, rep.prefill_skipped);
+            // the §15 determinism contract: hits change zero tokens
+            for r in &rep.requests {
+                assert_eq!(r.generated, solo, "prefix hit changed the greedy tokens");
+            }
+            rep
+        })
+        .report();
+    assert!(hit_stats.0 > 0, "shared-prefix traffic must hit the cache");
+    println!(
+        "    ~ {:.1} batches/s  hits {}/{} ({} prefill forwards skipped)",
+        1.0 / s,
+        hit_stats.0,
+        hit_stats.1,
+        hit_stats.2
+    );
+    // speculative self-decoding: a 2-bit RTN packing of the same weights
+    // drafts spec-k-token windows the 4-bit target verifies in one
+    // batched forward each
+    let draft = PackedModel::from_paramset_rtn(&p, 2)?;
+    for spec_k in [2usize, 4] {
+        let requests = cell_requests();
+        let sopts = ServeOptions { max_batch: batch, spec_k, ..Default::default() };
+        let mut acc = (0usize, 0usize);
+        let s = Bench::new(&format!("serve/spec_k{spec_k}_b{batch}"))
+            .warmup(1)
+            .samples(3)
+            .iter(|| {
+                let rep = serve_with_draft(&model, Some(&draft), &pool, requests.clone(), &sopts)
+                    .unwrap();
+                acc = (rep.draft_accepted, rep.draft_proposed);
+                // accept/correct reproduces plain greedy token-for-token
+                for (r, o) in rep.requests.iter().zip(&oracle) {
+                    assert_eq!(&r.generated, o, "speculation changed the greedy tokens");
+                }
+                rep
+            })
+            .report();
+        println!(
+            "    ~ spec-k={spec_k}: accepted {}/{} drafts (rate {:.2})",
+            acc.0,
+            acc.1,
+            acc.0 as f64 / (acc.1.max(1)) as f64
         );
     }
     Ok(())

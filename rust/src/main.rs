@@ -32,6 +32,7 @@ use rsq::tensor::kernels::Backend;
 use rsq::tensor::pack::PACK_BITS;
 use rsq::train::{train, TrainOptions};
 use rsq::util::cli::{parse_bytes, parse_duration_s};
+use rsq::util::json::Json;
 use rsq::util::{Args, Pcg, Pool};
 
 /// Parse and resolve `--backend reference|simd|auto` (DESIGN.md §13).
@@ -45,7 +46,9 @@ fn parse_backend(args: &Args) -> Result<Backend> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
+    // `--prefix-cache` is boolean (serve-side subcommands); registering
+    // it at parse time keeps it from swallowing the next token as a value
+    let args = Args::from_env_with_flags(&["prefix-cache"]);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "table1" => repro::tables::table1(&args)?,
@@ -295,11 +298,12 @@ fn check_flags(cmd: &str, args: &Args, known: &[&str], valued: &[&str]) -> Resul
 fn cmd_generate(args: &Args) -> Result<()> {
     const KNOWN: &[&str] = &[
         "artifact", "model", "config", "prompt", "prompt-len", "seed", "max-new", "kv-bits",
-        "jobs", "backend", "verbose",
+        "jobs", "backend", "verbose", "prompts", "max-batch", "kv-page", "prefix-cache",
+        "spec-k", "draft-artifact",
     ];
     const VALUED: &[&str] = &[
         "artifact", "model", "config", "prompt", "prompt-len", "seed", "max-new", "kv-bits",
-        "jobs", "backend",
+        "jobs", "backend", "prompts", "max-batch", "kv-page", "spec-k", "draft-artifact",
     ];
     check_flags("generate", args, KNOWN, VALUED)?;
     let kv = serve::KvFormat::from_bits(args.kv_bits()).ok_or_else(|| {
@@ -360,10 +364,84 @@ fn cmd_generate(args: &Args) -> Result<()> {
         );
     }
     let max_new = args.usize_or("max-new", 16);
+    let join = |ts: &[i32]| ts.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ");
+    // serve mode (`--prompts N` and friends): N copies of the prompt run
+    // through the continuous-batching scheduler — the CLI surface for the
+    // prefix cache and speculative decoding (DESIGN.md §15). Token output
+    // is identical to the single-prompt path by the determinism contract,
+    // which CI's shared-prefix smoke pins byte-for-byte.
+    let serve_keys = ["prompts", "max-batch", "kv-page", "spec-k", "draft-artifact"];
+    let serve_mode = serve_keys.iter().any(|k| args.get(k).is_some()) || args.flag("prefix-cache");
+    if serve_mode {
+        let spec_k = args.usize_or("spec-k", 0);
+        let draft = match args.get("draft-artifact") {
+            Some(dir) => {
+                if spec_k == 0 {
+                    bail!("--draft-artifact needs --spec-k K >= 1 (the speculative window)");
+                }
+                let (mut d, manifest) = serve::PackedModel::load(Path::new(dir))?;
+                d.set_backend(backend);
+                eprintln!("[generate] draft artifact {dir}: {}bit", manifest.bits);
+                Some(d)
+            }
+            None => {
+                if spec_k > 0 {
+                    bail!("--spec-k {spec_k} needs --draft-artifact DIR (the proposal model)");
+                }
+                None
+            }
+        };
+        let n = args.usize_or("prompts", 1).max(1);
+        let mut requests = Vec::with_capacity(n);
+        for id in 0..n as u64 {
+            requests.push(serve::ServeRequest::new(id, prompt.clone(), max_new));
+        }
+        let opts = serve::ServeOptions {
+            max_batch: args.usize_or("max-batch", 1).max(1),
+            page: args.usize_or("kv-page", 0),
+            kv,
+            prefix_cache: args.flag("prefix-cache"),
+            spec_k,
+            ..Default::default()
+        };
+        let rep = serve::serve_with_draft(&model, draft.as_ref(), &pool, requests, &opts)?;
+        println!("prompt       : {}", join(&prompt));
+        for r in &rep.requests {
+            println!("generated[{:>2}]: {}", r.id, join(&r.generated));
+        }
+        eprintln!(
+            "[generate] served {n} request(s) in {:.3}s ({:.1} tok/s, kv-bits={kv}, \
+             max-batch={}, jobs={}, backend={})",
+            rep.wall_s,
+            rep.tokens_per_s,
+            opts.max_batch,
+            pool.jobs(),
+            model.backend().name()
+        );
+        if opts.prefix_cache {
+            eprintln!(
+                "[generate] prefix cache: {}/{} hits (hit-rate {:.2}), \
+                 {} prefill forwards skipped",
+                rep.prefix_hits,
+                rep.prefix_lookups,
+                rep.prefix_hit_rate,
+                rep.prefill_skipped
+            );
+        }
+        if spec_k > 0 {
+            eprintln!(
+                "[generate] speculative: spec-k={spec_k}, accepted {}/{} drafts \
+                 (accept-rate {:.2})",
+                rep.draft_accepted,
+                rep.draft_proposed,
+                rep.draft_accept_rate
+            );
+        }
+        return Ok(());
+    }
     let t0 = Instant::now();
     let gen = serve::greedy_decode_kv(&model, &prompt, max_new, kv, Some(&pool))?;
     let dt = t0.elapsed().as_secs_f64();
-    let join = |ts: &[i32]| ts.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ");
     println!("prompt       : {}", join(&prompt));
     println!("generated    : {}", join(&gen));
     eprintln!(
@@ -376,22 +454,73 @@ fn cmd_generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Mean time-to-first-token across a report's requests (0.0 when nothing
+/// recorded one) — the latency column of the `serve-bench --json` cells.
+fn mean_ttft(rep: &serve::ServeReport) -> f64 {
+    let ts: Vec<f64> = rep.requests.iter().filter_map(|r| r.ttft_s).collect();
+    if ts.is_empty() {
+        0.0
+    } else {
+        ts.iter().sum::<f64>() / ts.len() as f64
+    }
+}
+
+/// One machine-readable `serve-bench --json` cell record: the row behind
+/// the human-readable grid line (tokens/s, TTFT, prefix-hit rate,
+/// draft-acceptance rate), tagged with its sweep axis.
+fn bench_cell(
+    axis: &str,
+    bits: u32,
+    batch: usize,
+    ctx: usize,
+    jobs: usize,
+    rep: &serve::ServeReport,
+    ttft: f64,
+) -> Json {
+    Json::obj()
+        .set("axis", axis)
+        .set("bits", bits as usize)
+        .set("batch", batch)
+        .set("ctx", ctx)
+        .set("jobs", jobs)
+        .set("kv_bits", rep.kv_bits as usize)
+        .set("spec_k", rep.spec_k)
+        .set("tok_per_s", rep.tokens_per_s)
+        .set("ttft_s", ttft)
+        .set("generated_tokens", rep.generated_tokens)
+        .set("peak_active", rep.peak_active)
+        .set("kv_peak_pages", rep.kv_peak_pages)
+        .set("prefix_lookups", rep.prefix_lookups)
+        .set("prefix_hits", rep.prefix_hits)
+        .set("prefix_hit_rate", rep.prefix_hit_rate)
+        .set("prefill_skipped", rep.prefill_skipped)
+        .set("draft_proposed", rep.draft_proposed)
+        .set("draft_accepted", rep.draft_accepted)
+        .set("draft_accept_rate", rep.draft_accept_rate)
+}
+
 /// `rsq serve-bench` — serving throughput sweep: batch × context × jobs
 /// (× bits when no artifact pins them), printing tokens/s and the
 /// packed-vs-f32 resident-bytes ratio (DESIGN.md §11), then a kv-bits
 /// axis (§12): each `--kv-bits` cell re-decodes the same prompts under a
 /// shared KV byte budget and reports the KV resident-bytes ratio, peak
 /// occupancy / page usage, and greedy-token divergence vs the f32 solo
-/// oracle. Without `--artifact` it builds its own host-side RTN-packed
+/// oracle. `--traffic shared` switches every cell to a shared-prefix
+/// traffic pattern (all requests decode one prompt, twice as many
+/// requests as slots) with the prefix cache on, reporting hit rate and
+/// prefill forwards eliminated; `--spec-k A,B` adds a speculative axis
+/// (§15) against a 2-bit draft of the same weights (or
+/// `--draft-artifact`). `--json PATH` dumps machine-readable per-cell
+/// records. Without `--artifact` it builds its own host-side RTN-packed
 /// synthetic model, so it runs anywhere — no artifacts, no XLA.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     const KNOWN: &[&str] = &[
         "artifact", "bits", "batches", "contexts", "jobs-sweep", "kv-bits", "prompt-len", "seed",
-        "backend", "verbose",
+        "backend", "verbose", "traffic", "spec-k", "kv-page", "json", "draft-artifact",
     ];
     const VALUED: &[&str] = &[
         "artifact", "bits", "batches", "contexts", "jobs-sweep", "kv-bits", "prompt-len", "seed",
-        "backend",
+        "backend", "traffic", "spec-k", "kv-page", "json", "draft-artifact",
     ];
     check_flags("serve-bench", args, KNOWN, VALUED)?;
     let backend = parse_backend(args)?;
@@ -413,12 +542,24 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         })
         .collect::<Result<Vec<_>>>()?;
     let prompt_len = args.usize_or("prompt-len", 4).max(1);
+    let traffic = args.str_or("traffic", "unique");
+    let shared = match traffic.as_str() {
+        "unique" => false,
+        "shared" => true,
+        other => bail!("--traffic: unsupported pattern {other:?} (unique|shared)"),
+    };
+    let spec_ks = parse_list("spec-k", &["0"])?;
+    // shared traffic needs a page boundary inside the prompt for the
+    // prefix cache to key on — default the page size down to half the
+    // prompt unless --kv-page pins it
+    let page_default = if shared { (prompt_len / 2).max(1) } else { 0 };
+    let page = args.usize_or("kv-page", page_default);
 
     println!("=== serve-bench: packed-domain host decode (DESIGN.md §11) ===");
-    let (mut models, source): (Vec<(u32, serve::PackedModel)>, String) =
+    let (mut models, source, synth): (Vec<(u32, serve::PackedModel)>, String, _) =
         if let Some(dir) = args.get("artifact") {
             let (m, manifest) = serve::PackedModel::load(Path::new(dir))?;
-            (vec![(manifest.bits, m)], format!("artifact {dir}"))
+            (vec![(manifest.bits, m)], format!("artifact {dir}"), None)
         } else {
             // shared with benches/bench_serve.rs so the grids compare
             let cfg = serve::bench_model_config();
@@ -428,13 +569,54 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 .into_iter()
                 .map(|b| Ok((b as u32, serve::PackedModel::from_paramset_rtn(&p, b as u32)?)))
                 .collect::<Result<_>>()?;
-            (ms, "synthetic d=64 L=2 vocab=256 (host RTN)".to_string())
+            (ms, "synthetic d=64 L=2 vocab=256 (host RTN)".to_string(), Some(p))
         };
     println!("model        : {source}");
     for (_, m) in models.iter_mut() {
         m.set_backend(backend);
     }
     println!("backend      : {}", backend.name());
+    println!("traffic      : {traffic}");
+    // speculative axis draft: an explicit artifact, or (synthetic mode) a
+    // 2-bit RTN packing of the SAME weights — the §15 self-drafting setup
+    let draft: Option<(u32, serve::PackedModel)> = if spec_ks.iter().any(|&k| k > 0) {
+        let (bits, mut d) = match (args.get("draft-artifact"), &synth) {
+            (Some(dir), _) => {
+                let (d, manifest) = serve::PackedModel::load(Path::new(dir))?;
+                (manifest.bits, d)
+            }
+            (None, Some(p)) => (2, serve::PackedModel::from_paramset_rtn(p, 2)?),
+            (None, None) => {
+                bail!("--spec-k with --artifact needs --draft-artifact DIR (the proposal model)")
+            }
+        };
+        d.set_backend(backend);
+        Some((bits, d))
+    } else {
+        None
+    };
+    // per-cell request builder: re-seeded so every cell decodes identical
+    // prompts (rows stay comparable along any sweep axis — the invariant
+    // benches/bench_serve.rs asserts); shared traffic reuses one prompt so
+    // later admissions can hit the prefix cache
+    let make_requests = |vocab: usize, n: usize, max_new: usize| -> Vec<serve::ServeRequest> {
+        let mut rng = Pcg::new(args.u64_or("seed", 3));
+        let first: Vec<i32> = (0..prompt_len).map(|_| rng.below(vocab) as i32).collect();
+        (0..n as u64)
+            .map(|id| {
+                let prompt = if shared || id == 0 {
+                    first.clone()
+                } else {
+                    (0..prompt_len).map(|_| rng.below(vocab) as i32).collect()
+                };
+                serve::ServeRequest::new(id, prompt, max_new)
+            })
+            .collect()
+    };
+    // shared-prefix traffic oversubscribes the slots 2x, so the second
+    // wave admits against prefixes the first wave donated
+    let cell_n = |batch: usize| if shared { batch * 2 } else { batch };
+    let mut cells: Vec<Json> = Vec::new();
     for (bits, model) in &models {
         let (packed, dense) = model.resident_bytes();
         println!(
@@ -450,24 +632,29 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             for &batch in &batches {
                 for &jobs in &jobs_sweep {
                     let pool = Pool::new(jobs);
-                    // re-seeded per cell so every cell decodes identical
-                    // prompts — rows stay comparable along any sweep axis
-                    let mut rng = Pcg::new(args.u64_or("seed", 3));
-                    let requests: Vec<serve::ServeRequest> = (0..batch.max(1) as u64)
-                        .map(|id| {
-                            let prompt =
-                                (0..prompt_len).map(|_| rng.below(cfg.vocab) as i32).collect();
-                            serve::ServeRequest::new(id, prompt, max_new)
-                        })
-                        .collect();
-                    let opts =
-                        serve::ServeOptions { max_batch: batch.max(1), ..Default::default() };
+                    let requests = make_requests(cfg.vocab, cell_n(batch.max(1)), max_new);
+                    let opts = serve::ServeOptions {
+                        max_batch: batch.max(1),
+                        page,
+                        prefix_cache: shared,
+                        ..Default::default()
+                    };
                     let rep = serve::serve(model, &pool, requests, &opts)?;
+                    let hit_note = if shared {
+                        format!(
+                            ", hits {}/{} ({} prefills skipped)",
+                            rep.prefix_hits, rep.prefix_lookups, rep.prefill_skipped
+                        )
+                    } else {
+                        String::new()
+                    };
                     println!(
                         "  batch={batch:<3} ctx={ctx:<4} jobs={jobs:<3} {:>9.1} tok/s  \
-                         ({} tokens, {} steps, peak {})",
+                         ({} tokens, {} steps, peak {}{hit_note})",
                         rep.tokens_per_s, rep.generated_tokens, rep.steps, rep.peak_active
                     );
+                    let ttft = mean_ttft(&rep);
+                    cells.push(bench_cell("grid", *bits, batch, ctx, jobs, &rep, ttft));
                 }
             }
         }
@@ -492,13 +679,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         );
         for kv in &kv_formats {
             // re-seeded per kv cell: identical prompts along the axis
-            let mut rng = Pcg::new(args.u64_or("seed", 3));
-            let requests: Vec<serve::ServeRequest> = (0..kv_batch as u64)
-                .map(|id| {
-                    let prompt = (0..prompt_len).map(|_| rng.below(cfg.vocab) as i32).collect();
-                    serve::ServeRequest::new(id, prompt, max_new)
-                })
-                .collect();
+            let requests = make_requests(cfg.vocab, cell_n(kv_batch), max_new);
             let oracle: Vec<Vec<i32>> = requests
                 .iter()
                 .map(|r| serve::greedy_decode(model, &r.prompt, r.max_new, Some(&pool)))
@@ -507,6 +688,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 max_batch: kv_batch,
                 pool_bytes: budget,
                 kv: *kv,
+                page,
                 ..Default::default()
             };
             let rep = serve::serve(model, &pool, requests, &opts)?;
@@ -527,7 +709,52 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 rep.peak_active,
                 rep.kv_peak_pages,
             );
+            let ttft = mean_ttft(&rep);
+            cells.push(bench_cell("kv", *bits, kv_batch, ctx, jobs, &rep, ttft));
         }
+        // speculative axis (DESIGN.md §15): same cell shape, the draft
+        // proposes spec-k-token windows the serving model verifies in
+        // batched forwards. spec-k=0 rows are the plain baseline; output
+        // is token-identical across the whole axis by construction.
+        if let Some((dbits, d)) = &draft {
+            println!(
+                "  spec-k axis: batch={kv_batch} ctx={ctx} jobs={jobs}, {dbits}bit draft, \
+                 acceptance = verified proposals"
+            );
+            for &k in &spec_ks {
+                let requests = make_requests(cfg.vocab, cell_n(kv_batch), max_new);
+                let opts = serve::ServeOptions {
+                    max_batch: kv_batch,
+                    page,
+                    prefix_cache: shared,
+                    spec_k: k,
+                    ..Default::default()
+                };
+                let rep =
+                    serve::serve_with_draft(model, (k > 0).then_some(d), &pool, requests, &opts)?;
+                println!(
+                    "  spec-k={k:<2} {:>9.1} tok/s  accepted {}/{} drafts (rate {:.2}), \
+                     {} steps",
+                    rep.tokens_per_s,
+                    rep.draft_accepted,
+                    rep.draft_proposed,
+                    rep.draft_accept_rate,
+                    rep.steps,
+                );
+                let ttft = mean_ttft(&rep);
+                cells.push(bench_cell("spec", *bits, kv_batch, ctx, jobs, &rep, ttft));
+            }
+        }
+    }
+    if let Some(path) = args.get("json") {
+        let n = cells.len();
+        let doc = Json::obj()
+            .set("source", source.as_str())
+            .set("backend", backend.name())
+            .set("traffic", traffic.as_str())
+            .set("cells", Json::Arr(cells));
+        std::fs::write(path, doc.to_string() + "\n")?;
+        eprintln!("[serve-bench] wrote {n} cell records to {path}");
     }
     Ok(())
 }
@@ -733,6 +960,21 @@ fn print_help() {
            --max-new N      tokens to generate (default 16)\n\
            --kv-bits W      KV-cache storage width 32|8|2 (default 32 =\n\
                             exact f32; 8 = linear, 2 = log codec)\n\
+           --prompts N      serve N copies of the prompt through the\n\
+                            batching scheduler (token output identical\n\
+                            to the single-prompt path)\n\
+           --max-batch B    serve mode: concurrent slots (default 1)\n\
+           --kv-page P      serve mode: KV page size in positions\n\
+                            (default 16)\n\
+           --prefix-cache   serve mode: content-addressed prompt-prefix\n\
+                            cache — repeat prompts admit with zero\n\
+                            prefill forwards (DESIGN.md 15)\n\
+           --spec-k K       serve mode: speculative window — the draft\n\
+                            proposes K-token windows, the serving model\n\
+                            verifies them in one batched forward; greedy\n\
+                            output is token-identical (DESIGN.md 15)\n\
+           --draft-artifact DIR  low-bit draft of the same weights that\n\
+                            proposes the speculative windows\n\
          \n\
          serve-bench flags:\n\
            --batches A,B    batch sizes to sweep (default 1,4)\n\
@@ -742,6 +984,16 @@ fn print_help() {
            --kv-bits A,B    KV widths for the kv axis (default 32,8,2);\n\
                             each cell reports the KV resident-bytes\n\
                             ratio + token divergence vs the f32 oracle\n\
+           --traffic T      unique|shared request pattern (default\n\
+                            unique); shared = every request decodes one\n\
+                            prompt, 2x oversubscribed, prefix cache on —\n\
+                            rows add hit rate + prefills skipped\n\
+           --spec-k A,B     speculative axis (default 0 = off): window\n\
+                            sizes vs a 2-bit draft of the same weights\n\
+                            (or --draft-artifact DIR with --artifact)\n\
+           --kv-page P      KV page size in positions (default 16)\n\
+           --json PATH      write machine-readable per-cell records\n\
+                            (tok/s, TTFT, hit rate, acceptance rate)\n\
          \n\
          cache gc flags:\n\
            --max-age D      evict entries older than D (90, 45m, 12h, 30d)\n\

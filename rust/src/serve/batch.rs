@@ -22,7 +22,35 @@
 //! retired with `deadline_missed` set, surfaced per request in the
 //! report.
 //!
+//! **Prefix cache (`--prefix-cache`, DESIGN.md §15).** With the cache on,
+//! every admission probes a content-addressed [`PrefixCache`] keyed by
+//! `(model content key, kv format, page size, prompt-prefix tokens)`. A
+//! hit adopts the cached read-only pages ([`PagePool::try_adopt`]) and
+//! starts the decoder **past** the adopted span — those prompt positions
+//! cost zero prefill forwards. Every request that fully consumes its
+//! prompt donates its page-aligned prefix back (in place, no copy), and
+//! admission pressure evicts cache entries oldest-first, so the cache can
+//! never wedge the scheduler. Adoption changes which physical pages back
+//! a sequence, never their decoded bytes, so generated tokens stay
+//! identical to the cold path bit for bit.
+//!
+//! **Speculative self-decoding (`--spec-k` + a draft model, §15).** Past
+//! its prompt, a sequence lets a low-bit draft of the same artifact
+//! propose `spec_k - 1` tokens, then verifies the whole window in **one**
+//! batched target forward ([`Decoder::step_many`]) instead of `spec_k`
+//! sequential steps. The accept rule emits target argmaxes while they
+//! agree with the draft's proposals and stops at the first disagreement
+//! (whose target argmax is the correction), then rewinds both decoders to
+//! the canonical consumed length — greedy output is **token-identical**
+//! to the non-speculative path by construction, because every verified
+//! row is bit-equal to the sequential step's logits. The draft runs in
+//! lockstep from its own page pool; acceptance rate is surfaced per
+//! request and in aggregate.
+//!
 //! [`PagePool`]: super::kv::PagePool
+//! [`PagePool::try_adopt`]: super::kv::PagePool::try_adopt
+//! [`PrefixCache`]: super::prefix::PrefixCache
+//! [`Decoder::step_many`]: super::model::Decoder::step_many
 //! [`greedy_decode`]: super::model::greedy_decode
 
 use std::collections::VecDeque;
@@ -34,6 +62,7 @@ use anyhow::{bail, Result};
 use super::kv::PagePool;
 use super::kvq::KvFormat;
 use super::model::{Decoder, PackedModel};
+use super::prefix::PrefixCache;
 use crate::eval::argmax;
 use crate::util::Pool;
 
@@ -73,11 +102,26 @@ pub struct ServeOptions {
     pub pool_bytes: usize,
     /// KV storage format (`--kv-bits`; default f32 = the exact path)
     pub kv: KvFormat,
+    /// content-addressed prompt-prefix cache (`--prefix-cache`): admit
+    /// prefix-hit requests with zero prefill forwards over the hit span
+    pub prefix_cache: bool,
+    /// speculative window: tokens verified per scheduler step once a
+    /// sequence is past its prompt (`--spec-k`; 0 = off). Requires a
+    /// draft model ([`serve_with_draft`]).
+    pub spec_k: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { max_batch: 4, page: 0, pages: 0, pool_bytes: 0, kv: KvFormat::F32 }
+        ServeOptions {
+            max_batch: 4,
+            page: 0,
+            pages: 0,
+            pool_bytes: 0,
+            kv: KvFormat::F32,
+            prefix_cache: false,
+            spec_k: 0,
+        }
     }
 }
 
@@ -97,6 +141,12 @@ pub struct RequestStats {
     pub ttft_s: Option<f64>,
     /// admission → retire, seconds
     pub wall_s: f64,
+    /// prompt positions adopted from the prefix cache (0 = cold)
+    pub prefix_adopted: usize,
+    /// draft tokens proposed for this request (0 without speculation)
+    pub draft_proposed: usize,
+    /// proposed tokens the target verified and accepted
+    pub draft_accepted: usize,
 }
 
 /// Aggregate serving outcome.
@@ -122,12 +172,33 @@ pub struct ServeReport {
     /// kernel backend the forward passes ran on (`--backend` after
     /// resolution: "reference" or "simd", DESIGN.md §13)
     pub backend: String,
+    /// prefix-cache probes at admission (0 with the cache off)
+    pub prefix_lookups: usize,
+    /// admissions that adopted a cached prefix
+    pub prefix_hits: usize,
+    /// `prefix_hits / prefix_lookups` (0 when nothing was probed)
+    pub prefix_hit_rate: f64,
+    /// prompt positions adopted across all requests — prefill forwards
+    /// eliminated by the cache
+    pub prefill_skipped: usize,
+    /// speculative window served with (`--spec-k`; 0 = off)
+    pub spec_k: usize,
+    /// draft tokens proposed across all requests
+    pub draft_proposed: usize,
+    /// proposed tokens accepted by the target's verify forwards
+    pub draft_accepted: usize,
+    /// `draft_accepted / draft_proposed` (0 when nothing was proposed)
+    pub draft_accept_rate: f64,
 }
 
 /// One in-flight sequence.
 struct Active<'m> {
     req: ServeRequest,
     decoder: Decoder<'m>,
+    /// draft-model decoder in lockstep with `decoder` (speculation only)
+    draft: Option<Decoder<'m>>,
+    /// speculative window (0 = plain one-token steps)
+    spec_k: usize,
     consumed: usize,
     generated: Vec<i32>,
     admitted_at: Instant,
@@ -135,12 +206,19 @@ struct Active<'m> {
     ttft_s: Option<f64>,
     deadline_missed: bool,
     done: bool,
+    /// prompt positions adopted from the prefix cache at admission
+    adopted: usize,
+    /// whether this sequence has donated its prefix to the cache yet
+    inserted: bool,
+    draft_proposed: usize,
+    draft_accepted: usize,
 }
 
 impl<'m> Active<'m> {
-    /// Advance one position: consume the next prompt token or the last
-    /// generated one, and (once past the prompt) greedily emit the next
-    /// token. Deadline is checked before spending any compute.
+    /// Advance one scheduler step: consume the next prompt token, or
+    /// (once past the prompt) greedily emit — one token per step on the
+    /// plain path, up to `spec_k` on the speculative path. Deadline is
+    /// checked before spending any compute.
     fn advance(&mut self, pool: Option<&Pool>) {
         if self.done {
             return;
@@ -152,27 +230,36 @@ impl<'m> Active<'m> {
                 return;
             }
         }
-        let tok = if self.consumed < self.req.prompt.len() {
-            self.req.prompt[self.consumed]
-        } else {
-            *self.generated.last().expect("past the prompt, so a token was generated")
-        };
-        // logits are only needed once this position's output token will
-        // actually be kept; earlier prompt positions prefill the KV
-        // cache without paying the head projection
-        let wants_token = self.consumed + 1 >= self.req.prompt.len()
-            && self.generated.len() < self.req.max_new;
-        if wants_token {
-            let logp = self.decoder.step(tok, pool);
-            let next = argmax(&logp) as i32;
-            self.generated.push(next);
-            if self.ttft_s.is_none() {
-                self.ttft_s = Some(self.admitted_at.elapsed().as_secs_f64());
+        if self.consumed < self.req.prompt.len() {
+            // prompt phase; the draft prefills the same token in
+            // lockstep so speculation can start the moment the prompt
+            // ends. Logits are only needed once this position's output
+            // token will actually be kept (last prompt position).
+            let tok = self.req.prompt[self.consumed];
+            if let Some(d) = self.draft.as_mut() {
+                d.prefill(tok, pool);
             }
+            let wants_token = self.consumed + 1 >= self.req.prompt.len()
+                && self.generated.len() < self.req.max_new;
+            if wants_token {
+                let logp = self.decoder.step(tok, pool);
+                let next = argmax(&logp) as i32;
+                self.generated.push(next);
+                if self.ttft_s.is_none() {
+                    self.ttft_s = Some(self.admitted_at.elapsed().as_secs_f64());
+                }
+            } else {
+                self.decoder.prefill(tok, pool);
+            }
+            self.consumed += 1;
+        } else if self.spec_k > 0 && self.draft.is_some() {
+            self.spec_step(pool);
         } else {
-            self.decoder.prefill(tok, pool);
+            let tok = *self.generated.last().expect("past the prompt, so a token was generated");
+            let logp = self.decoder.step(tok, pool);
+            self.generated.push(argmax(&logp) as i32);
+            self.consumed += 1;
         }
-        self.consumed += 1;
         if self.generated.len() >= self.req.max_new
             || self.decoder.positions() >= self.decoder.capacity()
         {
@@ -180,7 +267,62 @@ impl<'m> Active<'m> {
         }
     }
 
-    fn finish(self, finished_step: usize) -> (RequestStats, Decoder<'m>) {
+    /// One speculative window: the draft proposes up to `spec_k - 1`
+    /// tokens past the pending one, the target verifies the whole window
+    /// in one batched forward, and the longest agreeing run is emitted
+    /// (the first disagreement's target argmax is the correction). Both
+    /// decoders are rewound to the canonical consumed length, so the
+    /// emitted tokens equal plain greedy's exactly (module docs).
+    fn spec_step(&mut self, pool: Option<&Pool>) {
+        let draft = self.draft.as_mut().expect("spec_step requires a draft");
+        // lockstep catch-up: after a fully-accepted window the draft sits
+        // one canonical token behind the target
+        while draft.positions() < self.decoder.positions() {
+            let pos = draft.positions();
+            let tok = if pos < self.req.prompt.len() {
+                self.req.prompt[pos]
+            } else {
+                self.generated[pos - self.req.prompt.len()]
+            };
+            draft.prefill(tok, pool);
+        }
+        let t = self.decoder.positions();
+        let remaining = self.req.max_new - self.generated.len();
+        let cap = self.decoder.capacity() - t;
+        let k = self.spec_k.min(remaining).min(cap).max(1);
+        // window = the pending token + the draft's k-1 proposals
+        let mut inputs = Vec::with_capacity(k);
+        inputs.push(*self.generated.last().expect("generation phase"));
+        for i in 1..k {
+            let lp = draft.step(inputs[i - 1], pool);
+            inputs.push(argmax(&lp) as i32);
+        }
+        self.draft_proposed += k - 1;
+        // one batched verify forward over all k window positions; row i
+        // is bit-identical to the i-th sequential step's logits
+        let logits = self.decoder.step_many(&inputs, pool);
+        let mut emitted = 0usize;
+        for i in 0..k {
+            let g = argmax(logits.row(i)) as i32;
+            self.generated.push(g);
+            emitted += 1;
+            if i + 1 < k && g != inputs[i + 1] {
+                break; // g corrects the rejected proposal
+            }
+        }
+        // every emitted token after the first certified one proposal
+        self.draft_accepted += emitted - 1;
+        // rewind to the canonical consumed length; rejected positions'
+        // KV rows are overwritten by later writes
+        self.decoder.truncate(t + emitted);
+        let draft = self.draft.as_mut().expect("borrow ended above");
+        if draft.positions() > t + emitted {
+            draft.truncate(t + emitted);
+        }
+        self.consumed = t + emitted;
+    }
+
+    fn finish(self, finished_step: usize) -> (RequestStats, Decoder<'m>, Option<Decoder<'m>>) {
         let stats = RequestStats {
             id: self.req.id,
             prompt_len: self.req.prompt.len(),
@@ -190,16 +332,35 @@ impl<'m> Active<'m> {
             finished_step,
             ttft_s: self.ttft_s,
             wall_s: self.admitted_at.elapsed().as_secs_f64(),
+            prefix_adopted: self.adopted,
+            draft_proposed: self.draft_proposed,
+            draft_accepted: self.draft_accepted,
         };
-        (stats, self.decoder)
+        (stats, self.decoder, self.draft)
     }
 }
 
 /// Run `requests` to completion through the continuous-batching loop.
 /// Requests are admitted in the given order (FIFO) as slots and KV pages
-/// free up.
+/// free up. Plain serving — no draft model; [`ServeOptions::spec_k`]
+/// must be 0 (use [`serve_with_draft`] for speculation).
 pub fn serve(
     model: &PackedModel,
+    pool: &Pool,
+    requests: Vec<ServeRequest>,
+    opts: &ServeOptions,
+) -> Result<ServeReport> {
+    serve_with_draft(model, None, pool, requests, opts)
+}
+
+/// [`serve`] with an optional draft model for speculative self-decoding
+/// (`--draft-artifact` + `--spec-k`): a low-bit packing of the same
+/// artifact proposes tokens that the serving-width `model` verifies in
+/// batched forwards (module docs). The draft is ignored when
+/// `opts.spec_k == 0`; `spec_k > 0` without a draft is an error.
+pub fn serve_with_draft(
+    model: &PackedModel,
+    draft: Option<&PackedModel>,
     pool: &Pool,
     requests: Vec<ServeRequest>,
     opts: &ServeOptions,
@@ -207,6 +368,23 @@ pub fn serve(
     let cfg = &model.cfg;
     if opts.max_batch == 0 {
         bail!("serve needs max_batch >= 1");
+    }
+    if opts.spec_k > 0 && draft.is_none() {
+        bail!("spec_k = {} needs a draft model (--draft-artifact)", opts.spec_k);
+    }
+    // a draft without a speculative window would only burn prefills
+    let draft = if opts.spec_k > 0 { draft } else { None };
+    if let Some(d) = draft {
+        if d.cfg.vocab != cfg.vocab || d.cfg.max_seq != cfg.max_seq {
+            bail!(
+                "draft model must share the target's vocab and max_seq \
+                 (vocab {} vs {}, max_seq {} vs {})",
+                d.cfg.vocab,
+                cfg.vocab,
+                d.cfg.max_seq,
+                cfg.max_seq
+            );
+        }
     }
     for r in &requests {
         if r.prompt.is_empty() {
@@ -244,6 +422,24 @@ pub fn serve(
         );
     }
     let page_pool = PagePool::with_format(opts.kv, cfg.layers, cfg.d, opts.page, pages);
+    // the draft decodes from its own pool, auto-sized for max_batch
+    // worst-case reservations (the cache-eviction path below keeps it
+    // live even when draft prefix entries hold pages)
+    let draft_pool = draft.map(|d| {
+        let dprobe = PagePool::with_format(opts.kv, d.cfg.layers, d.cfg.d, opts.page, 0);
+        let dmax = requests.iter().map(|r| dprobe.pages_for(worst(r))).max().unwrap_or(0);
+        PagePool::with_format(opts.kv, d.cfg.layers, d.cfg.d, opts.page, opts.max_batch * dmax)
+    });
+    let ppos = page_pool.page_positions();
+    // content-addressed prefix caches; target and draft pages live in
+    // different pools (and differ in content), so they key and evict
+    // independently — a hit requires both sides to cover the same span
+    let mut tcache =
+        opts.prefix_cache.then(|| PrefixCache::new(model.content_key(), opts.kv.bits(), ppos));
+    let mut dcache = match (opts.prefix_cache, draft) {
+        (true, Some(d)) => Some(PrefixCache::new(d.content_key(), opts.kv.bits(), ppos)),
+        _ => None,
+    };
 
     let t0 = Instant::now();
     let mut pending: VecDeque<ServeRequest> = requests.into();
@@ -253,27 +449,94 @@ pub fn serve(
     let mut peak_active = 0usize;
     let mut kv_peak_pages = 0usize;
     while !pending.is_empty() || !active.is_empty() {
-        // admit while a slot and a full KV reservation are available
+        // admit while a slot and a full KV reservation are available;
+        // admission pressure evicts prefix-cache entries oldest-first
+        // before giving up, so cached pages can never starve admissions
         while active.len() < opts.max_batch {
             let Some(front) = pending.front() else { break };
-            let Some(kv) = page_pool.try_alloc(worst(front)) else { break };
+            let need = worst(front);
+            let t_hit = tcache.as_ref().and_then(|c| c.lookup(&front.prompt));
+            let d_hit = dcache.as_ref().and_then(|c| c.lookup(&front.prompt));
+            let covered = match (dcache.is_some(), &t_hit, &d_hit) {
+                (false, Some(t), _) => t.covered,
+                (true, Some(t), Some(d)) => t.covered.min(d.covered),
+                _ => 0,
+            };
+            let kv = loop {
+                let got = if covered > 0 {
+                    let p = t_hit.as_ref().expect("covered > 0").prefix.truncated(covered / ppos);
+                    page_pool.try_adopt(need, &p, 0)
+                } else {
+                    page_pool.try_alloc(need)
+                };
+                if got.is_some() {
+                    break got;
+                }
+                if !tcache.as_mut().is_some_and(|c| c.evict_oldest(&page_pool)) {
+                    break None;
+                }
+            };
+            let Some(kv) = kv else { break };
+            let dkv = match (draft, &draft_pool) {
+                (Some(_), Some(dp)) => {
+                    let got = loop {
+                        let got = if covered > 0 {
+                            let p = d_hit
+                                .as_ref()
+                                .expect("covered > 0 implies a draft hit")
+                                .prefix
+                                .truncated(covered / ppos);
+                            dp.try_adopt(need, &p, 0)
+                        } else {
+                            dp.try_alloc(need)
+                        };
+                        if got.is_some() {
+                            break got;
+                        }
+                        if !dcache.as_mut().is_some_and(|c| c.evict_oldest(dp)) {
+                            break None;
+                        }
+                    };
+                    match got {
+                        Some(k) => Some(k),
+                        None => {
+                            // target pages go back; this admission waits
+                            // for a retire to free draft pages
+                            page_pool.release(kv);
+                            break;
+                        }
+                    }
+                }
+                _ => None,
+            };
+            if let Some(c) = tcache.as_mut() {
+                c.record((covered > 0).then_some(covered));
+            }
             let req = pending.pop_front().expect("front() was Some");
             active.push(Mutex::new(Active {
-                decoder: Decoder::new(model, kv),
-                consumed: 0,
+                decoder: Decoder::resume(model, kv, covered),
+                draft: draft.map(|d| {
+                    Decoder::resume(d, dkv.expect("draft kv reserved above"), covered)
+                }),
+                spec_k: opts.spec_k,
+                consumed: covered,
                 generated: Vec::with_capacity(req.max_new),
                 admitted_at: Instant::now(),
                 admitted_step: steps,
                 ttft_s: None,
                 deadline_missed: false,
                 done: false,
+                adopted: covered,
+                inserted: false,
+                draft_proposed: 0,
+                draft_accepted: 0,
                 req,
             }));
         }
         peak_active = peak_active.max(active.len());
         kv_peak_pages = kv_peak_pages.max(page_pool.total_pages() - page_pool.free_pages());
-        // one position per active sequence; the pool fans out across
-        // sequences — with a single sequence it accelerates the
+        // one scheduler step per active sequence; the pool fans out
+        // across sequences — with a single sequence it accelerates the
         // projections inside the step instead
         if active.len() > 1 {
             pool.run(active.len(), |i| active[i].lock().unwrap().advance(None));
@@ -281,22 +544,59 @@ pub fn serve(
             only.lock().unwrap().advance(Some(pool));
         }
         steps += 1;
-        // retire finished sequences, returning their pages
+        // donate freshly completed prompt prefixes (in place — the donor
+        // keeps reading the same pages), then retire finished sequences
         let mut i = 0;
         while i < active.len() {
-            if active[i].get_mut().unwrap().done {
+            let finished = {
+                let a = active[i].get_mut().unwrap();
+                if tcache.is_some() && !a.inserted && a.consumed >= a.req.prompt.len() {
+                    a.inserted = true;
+                    let full = a.req.prompt.len() / ppos;
+                    if full >= 1 {
+                        if let Some(c) = tcache.as_mut() {
+                            c.insert(&a.req.prompt, &a.decoder.share_prefix(full * ppos));
+                        }
+                        if let (Some(c), Some(d)) = (dcache.as_mut(), a.draft.as_mut()) {
+                            c.insert(&a.req.prompt, &d.share_prefix(full * ppos));
+                        }
+                    }
+                }
+                a.done
+            };
+            if finished {
                 let a = active.swap_remove(i).into_inner().unwrap();
-                let (stats, decoder) = a.finish(steps);
+                let (stats, decoder, dft) = a.finish(steps);
                 page_pool.release(decoder.into_kv());
+                if let (Some(dp), Some(d)) = (&draft_pool, dft) {
+                    dp.release(d.into_kv());
+                }
                 done.push(stats);
             } else {
                 i += 1;
             }
         }
     }
+    // drop the caches' page references; with no live sequences every
+    // page must come home exactly once (the §15 refcount invariant)
+    if let Some(c) = tcache.as_mut() {
+        c.drain(&page_pool);
+    }
+    if let (Some(c), Some(dp)) = (dcache.as_mut(), &draft_pool) {
+        c.drain(dp);
+    }
+    debug_assert_eq!(page_pool.free_pages(), page_pool.total_pages());
+    if let Some(dp) = &draft_pool {
+        debug_assert_eq!(dp.free_pages(), dp.total_pages());
+    }
     done.sort_by_key(|r| r.id);
     let wall_s = t0.elapsed().as_secs_f64();
     let generated_tokens: usize = done.iter().map(|r| r.generated.len()).sum();
+    let (lookups, hits, skipped) =
+        tcache.as_ref().map_or((0, 0, 0), |c| (c.lookups(), c.hits(), c.hit_positions()));
+    let hit_rate = tcache.as_ref().map_or(0.0, |c| c.hit_rate());
+    let draft_proposed: usize = done.iter().map(|r| r.draft_proposed).sum();
+    let draft_accepted: usize = done.iter().map(|r| r.draft_accepted).sum();
     Ok(ServeReport {
         steps,
         peak_active,
@@ -308,6 +608,18 @@ pub fn serve(
         kv_resident_bytes: kv_peak_pages * page_pool.page_bytes(),
         kv_resident_f32_bytes: kv_peak_pages * page_pool.page_bytes_f32(),
         backend: model.backend().name().to_string(),
+        prefix_lookups: lookups,
+        prefix_hits: hits,
+        prefix_hit_rate: hit_rate,
+        prefill_skipped: skipped,
+        spec_k: opts.spec_k,
+        draft_proposed,
+        draft_accepted,
+        draft_accept_rate: if draft_proposed == 0 {
+            0.0
+        } else {
+            draft_accepted as f64 / draft_proposed as f64
+        },
         requests: done,
     })
 }
@@ -320,7 +632,7 @@ mod tests {
     use crate::serve::model::greedy_decode;
     use crate::serve::PackedModel;
 
-    fn model() -> PackedModel {
+    fn model_bits(bits: u32) -> PackedModel {
         let cfg = ModelConfig {
             name: "serve-batch-test".into(),
             d: 16,
@@ -334,7 +646,11 @@ mod tests {
             ldlq_k: 64,
             ldlq_g: 4,
         };
-        PackedModel::from_paramset_rtn(&ParamSet::init(&cfg, 13), 4).unwrap()
+        PackedModel::from_paramset_rtn(&ParamSet::init(&cfg, 13), bits).unwrap()
+    }
+
+    fn model() -> PackedModel {
+        model_bits(4)
     }
 
     fn reqs(n: u64) -> Vec<ServeRequest> {
@@ -502,6 +818,142 @@ mod tests {
         let starved = ServeOptions { pages: 1, ..Default::default() };
         let err = serve(&m, &pool, reqs(1), &starved).unwrap_err().to_string();
         assert!(err.contains("page pool"), "{err}");
+    }
+
+    #[test]
+    fn prefix_hits_skip_prefill_and_keep_tokens_identical() {
+        let m = model();
+        let pool = Pool::new(2);
+        // shared 6-token prompt, page = 4 → hits adopt 4 positions;
+        // max_batch 1 so the donor retires before the next admission
+        let prompt = vec![1i32, 2, 5, 7, 3, 4];
+        let shared: Vec<ServeRequest> =
+            (0..3).map(|i| ServeRequest::new(i, prompt.clone(), 5)).collect();
+        let base = ServeOptions { max_batch: 1, page: 4, ..Default::default() };
+        let cold = serve(&m, &pool, shared.clone(), &base).unwrap();
+        assert_eq!((cold.prefix_lookups, cold.prefix_hits, cold.prefill_skipped), (0, 0, 0));
+        let warm_opts = ServeOptions { prefix_cache: true, ..base.clone() };
+        let warm = serve(&m, &pool, shared, &warm_opts).unwrap();
+        for (c, w) in cold.requests.iter().zip(&warm.requests) {
+            assert_eq!(c.generated, w.generated, "id={}: warm must equal cold", c.id);
+        }
+        assert_eq!(warm.prefix_lookups, 3);
+        assert_eq!(warm.prefix_hits, 2, "first admission is cold, the rest hit");
+        assert_eq!(warm.prefill_skipped, 2 * 4, "one adopted page per hit");
+        assert!((warm.prefix_hit_rate - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(warm.requests[0].prefix_adopted, 0);
+        assert_eq!(warm.requests[2].prefix_adopted, 4);
+        // a diverging prompt misses but still decodes correctly
+        let other = vec![ServeRequest::new(9, vec![8, 8, 8, 8, 8, 8], 4)];
+        let rep = serve(&m, &pool, other, &warm_opts).unwrap();
+        assert_eq!(rep.prefix_hits, 0);
+        assert_eq!(rep.requests[0].generated, greedy_decode(&m, &[8; 6], 4, None).unwrap());
+    }
+
+    #[test]
+    fn prefix_cache_matches_cold_at_quantized_kv_too() {
+        let m = model();
+        let pool = Pool::new(2);
+        let prompt = vec![3i32, 1, 4, 1, 5, 9, 2, 6];
+        let reqs: Vec<ServeRequest> =
+            (0..3).map(|i| ServeRequest::new(i, prompt.clone(), 6)).collect();
+        let base =
+            ServeOptions { max_batch: 1, page: 4, kv: KvFormat::Linear8, ..Default::default() };
+        let cold = serve(&m, &pool, reqs.clone(), &base).unwrap();
+        let warm = serve(&m, &pool, reqs, &ServeOptions { prefix_cache: true, ..base }).unwrap();
+        assert!(warm.prefix_hits > 0);
+        for (c, w) in cold.requests.iter().zip(&warm.requests) {
+            assert_eq!(c.generated, w.generated, "id={}: quantized warm must equal cold", c.id);
+        }
+    }
+
+    #[test]
+    fn speculative_serve_is_token_identical_and_reports_acceptance() {
+        let m = model();
+        let draft = model_bits(2);
+        let pool = Pool::new(2);
+        let plain = serve(&m, &pool, reqs(4), &ServeOptions::default()).unwrap();
+        for spec_k in [1usize, 2, 4] {
+            for max_batch in [1usize, 3] {
+                let opts = ServeOptions { spec_k, max_batch, ..Default::default() };
+                let rep = serve_with_draft(&m, Some(&draft), &pool, reqs(4), &opts).unwrap();
+                for (p, s) in plain.requests.iter().zip(&rep.requests) {
+                    assert_eq!(
+                        p.generated,
+                        s.generated,
+                        "id={}: spec_k={spec_k} batch={max_batch} must match plain greedy",
+                        p.id
+                    );
+                }
+                assert_eq!(rep.spec_k, spec_k);
+                assert!(rep.draft_accepted <= rep.draft_proposed);
+                if spec_k >= 2 {
+                    assert!(rep.draft_proposed > 0, "spec_k={spec_k} must propose");
+                }
+                assert!((0.0..=1.0).contains(&rep.draft_accept_rate));
+            }
+        }
+        // self-drafting (draft == target) must accept every proposal —
+        // the determinism oracle for the accept rule
+        let opts = ServeOptions { spec_k: 4, ..Default::default() };
+        let rep = serve_with_draft(&m, Some(&m), &pool, reqs(4), &opts).unwrap();
+        assert!(rep.draft_proposed > 0);
+        assert_eq!(rep.draft_accepted, rep.draft_proposed, "self-draft accepts everything");
+        assert_eq!(rep.draft_accept_rate, 1.0);
+        for (p, s) in plain.requests.iter().zip(&rep.requests) {
+            assert_eq!(p.generated, s.generated, "id={}", p.id);
+        }
+    }
+
+    #[test]
+    fn prefix_cache_and_speculation_compose() {
+        let m = model();
+        let draft = model_bits(2);
+        let pool = Pool::new(2);
+        let prompt = vec![1i32, 2, 5, 7, 3, 4];
+        let reqs: Vec<ServeRequest> =
+            (0..3).map(|i| ServeRequest::new(i, prompt.clone(), 6)).collect();
+        let base = ServeOptions { max_batch: 1, page: 4, ..Default::default() };
+        let cold = serve(&m, &pool, reqs.clone(), &base).unwrap();
+        let opts = ServeOptions { prefix_cache: true, spec_k: 3, ..base };
+        let rep = serve_with_draft(&m, Some(&draft), &pool, reqs, &opts).unwrap();
+        for (c, w) in cold.requests.iter().zip(&rep.requests) {
+            assert_eq!(c.generated, w.generated, "id={}: both features on must stay exact", c.id);
+        }
+        assert!(rep.prefix_hits > 0, "draft-side cache must not block target hits");
+        assert!(rep.draft_proposed > 0);
+    }
+
+    #[test]
+    fn cache_pressure_evicts_instead_of_wedging() {
+        let m = model();
+        let pool = Pool::new(2);
+        // pool sized for exactly one worst-case request: the cached
+        // prefix must be evicted to admit the diverging third request
+        let probe = super::PagePool::new(m.cfg.layers, m.cfg.d, 4, 0);
+        let pages = probe.pages_for(6 + 4);
+        let shared = vec![1i32, 2, 5, 7, 3, 4];
+        let other = vec![8i32, 8, 8, 8, 8, 8];
+        let reqs = vec![
+            ServeRequest::new(0, shared.clone(), 4),
+            ServeRequest::new(1, shared.clone(), 4),
+            ServeRequest::new(2, other.clone(), 4),
+        ];
+        let mut opts = ServeOptions { max_batch: 1, page: 4, pages, ..Default::default() };
+        opts.prefix_cache = true;
+        let rep = serve(&m, &pool, reqs, &opts).unwrap();
+        assert_eq!(rep.requests.len(), 3, "eviction must unblock the cold admission");
+        assert_eq!(rep.prefix_hits, 1, "second shared request hits before the eviction");
+        assert_eq!(rep.requests[2].generated, greedy_decode(&m, &other, 4, None).unwrap());
+    }
+
+    #[test]
+    fn spec_k_without_draft_fails_fast() {
+        let m = model();
+        let pool = Pool::new(1);
+        let opts = ServeOptions { spec_k: 2, ..Default::default() };
+        let err = serve(&m, &pool, reqs(1), &opts).unwrap_err().to_string();
+        assert!(err.contains("draft"), "{err}");
     }
 
     #[test]

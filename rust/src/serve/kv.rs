@@ -1,4 +1,4 @@
-//! Paged KV cache (DESIGN.md §11, §12).
+//! Paged KV cache (DESIGN.md §11, §12, §15).
 //!
 //! Decoding token t attends over every previous position's per-layer
 //! key/value projections. Recomputing them each step is the full-context
@@ -17,21 +17,46 @@
 //!   which is what lets the batch scheduler (`serve::batch`) admit new
 //!   requests mid-flight under a bounded memory budget.
 //!
+//! **Shared pages (prefix cache, §15).** A page-table slot is either
+//! `Owned` (a page moved out of the pool, the exclusive case) or
+//! `Shared` (an `Arc<KvPage>` — a read-only page whose contents are a
+//! fully-written prompt prefix). The `Arc` strong count **is** the
+//! per-page refcount: a donor sequence freezes its written prefix pages
+//! in place ([`SeqKv::share_prefix`]), the prefix cache holds one
+//! reference, and any number of later sequences adopt the same pages
+//! ([`PagePool::try_adopt`]) without re-running prefill. A page returns
+//! to the pool's free list exactly when its **last** reference drops
+//! ([`PagePool::release`] / [`PagePool::reclaim`] unwrap the `Arc`), so
+//! releases cannot double-free by construction — ownership moves, it is
+//! never duplicated.
+//!
+//! **Copy-on-write.** Adoption is page-aligned, so the scheduler's first
+//! write past an adopted prefix always lands in the sequence's own first
+//! `Owned` page. Writing *into* a shared page (a non-aligned adopter)
+//! forks it first: the write pops a COW spare page reserved at adoption
+//! time, copies the shared page's stored bytes into it, and swaps the
+//! slot to `Owned` — the donor and every other adopter keep reading the
+//! original. A write into a shared page with no spare reserved panics
+//! rather than corrupting a neighbour.
+//!
 //! **Storage format.** Every page in a pool shares one [`KvFormat`]
 //! (`--kv-bits`): f32 rows stored verbatim (the exact path), or packed
 //! low-bit codes plus per-position-row scale state, quantized on write
 //! through `serve::kvq` and decoded row-at-a-time on read. A position is
-//! written exactly once (its own decode step), so per-row scale state
-//! never has to be revised by later writes, and a row's decoded value is
-//! independent of page size and of everything written after it.
+//! written at most once per decode pass (a speculative rewind re-encodes
+//! the row in place — `encode_row` clears the slot's code bytes first),
+//! so a row's decoded value is independent of page size and of
+//! everything written after it.
 //!
 //! **Determinism.** Page identity carries no information — a sequence's
 //! contents are addressed purely through its own page table — so which
 //! physical pages a sequence happens to receive (an artifact of admission
-//! order) cannot affect any decoded value. Quantized rows keep that
-//! property: encode and decode are pure per-row functions.
+//! order) cannot affect any decoded value. Shared pages keep that
+//! property: a frozen page stores exactly the bytes the adopter's own
+//! prefill would have written (encode is a pure per-row function of the
+//! same k/v rows), so a prefix-hit decode is bit-identical to a cold one.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::kvq::{decode_row, encode_row, KvFormat, RowSource};
 
@@ -87,11 +112,28 @@ impl PageHalf {
             }
         }
     }
+
+    /// Overwrite with `src`'s stored bytes (the COW fork): storage-domain
+    /// copy, so quantized pages fork without a decode/re-encode round trip.
+    fn copy_from(&mut self, src: &PageHalf) {
+        match (self, src) {
+            (PageHalf::F32(d), PageHalf::F32(s)) => d.copy_from_slice(s),
+            (
+                PageHalf::Packed { codes, s0, s1 },
+                PageHalf::Packed { codes: sc, s0: ss0, s1: ss1 },
+            ) => {
+                codes.copy_from_slice(sc);
+                s0.copy_from_slice(ss0);
+                s1.copy_from_slice(ss1);
+            }
+            _ => panic!("COW fork across page storage formats"),
+        }
+    }
 }
 
 /// One page: `page` positions of one layer's k and v rows.
 #[derive(Debug)]
-struct KvPage {
+pub struct KvPage {
     k: PageHalf,
     v: PageHalf,
 }
@@ -99,6 +141,63 @@ struct KvPage {
 impl KvPage {
     fn new(fmt: KvFormat, page: usize, d: usize) -> KvPage {
         KvPage { k: PageHalf::new(fmt, page, d), v: PageHalf::new(fmt, page, d) }
+    }
+
+    /// Zero-capacity placeholder used only while a slot's page is being
+    /// moved into an `Arc` (never read).
+    fn placeholder() -> KvPage {
+        KvPage { k: PageHalf::F32(Vec::new()), v: PageHalf::F32(Vec::new()) }
+    }
+
+    fn copy_from(&mut self, src: &KvPage) {
+        self.k.copy_from(&src.k);
+        self.v.copy_from(&src.v);
+    }
+}
+
+/// One page-table slot: exclusively owned, or a refcounted read-only
+/// share of a frozen prefix page (module docs).
+enum SeqPage {
+    Owned(KvPage),
+    Shared(Arc<KvPage>),
+}
+
+/// A frozen, refcounted prompt prefix: `pages[layer][pi]` covers
+/// positions `0..positions` (page-aligned), every row fully written.
+/// Cloning is cheap (`Arc` bumps); the prefix cache stores one of these
+/// per content key and [`PagePool::try_adopt`] splices it into new
+/// sequences.
+#[derive(Clone)]
+pub struct SharedPrefix {
+    fmt: KvFormat,
+    d: usize,
+    page: usize,
+    positions: usize,
+    pages: Vec<Vec<Arc<KvPage>>>,
+}
+
+impl SharedPrefix {
+    /// Positions these pages cover (a multiple of the page size).
+    pub fn positions(&self) -> usize {
+        self.positions
+    }
+
+    pub fn pages_per_layer(&self) -> usize {
+        self.pages.first().map_or(0, Vec::len)
+    }
+
+    /// The same prefix truncated to its first `n_pages` pages — shares
+    /// the underlying `Arc`s, so boundary-granular cache entries alias
+    /// the same physical pages.
+    pub fn truncated(&self, n_pages: usize) -> SharedPrefix {
+        assert!(n_pages >= 1 && n_pages <= self.pages_per_layer(), "truncate to {n_pages} pages");
+        SharedPrefix {
+            fmt: self.fmt,
+            d: self.d,
+            page: self.page,
+            positions: n_pages * self.page,
+            pages: self.pages.iter().map(|l| l[..n_pages].to_vec()).collect(),
+        }
     }
 }
 
@@ -162,6 +261,14 @@ impl PagePool {
         self.layers * positions.div_ceil(self.page).max(1)
     }
 
+    /// Pages the same reservation needs when `covered` positions
+    /// (page-aligned) adopt shared prefix pages instead of owned ones.
+    pub fn pages_for_adopted(&self, positions: usize, covered: usize) -> usize {
+        let per_layer = positions.div_ceil(self.page).max(1);
+        let shared = (covered / self.page).min(per_layer);
+        self.layers * (per_layer - shared)
+    }
+
     pub fn total_pages(&self) -> usize {
         self.total
     }
@@ -182,28 +289,103 @@ impl PagePool {
         }
         let mut layers = Vec::with_capacity(self.layers);
         for _ in 0..self.layers {
-            layers.push(free.split_off(free.len() - per_layer));
+            let pages = free.split_off(free.len() - per_layer);
+            layers.push(pages.into_iter().map(SeqPage::Owned).collect());
         }
-        Some(SeqKv { fmt: self.fmt, d: self.d, page: self.page, layers })
+        Some(SeqKv { fmt: self.fmt, d: self.d, page: self.page, layers, spares: Vec::new() })
     }
 
-    /// Return a retired sequence's pages to the arena.
+    /// Reserve `positions` with the first `prefix.positions()` adopted
+    /// read-only from `prefix` (zero prefill forwards for the adopter):
+    /// only the remaining page slots draw owned pages from the pool,
+    /// plus `cow_spares` extra pages per layer as fork targets for
+    /// writes **into** the shared span. Page-aligned adopters (the batch
+    /// scheduler) pass 0 — their first write past the prefix lands in an
+    /// owned page. `None` when the pool cannot cover the owned part.
+    pub fn try_adopt(
+        &self,
+        positions: usize,
+        prefix: &SharedPrefix,
+        cow_spares: usize,
+    ) -> Option<SeqKv> {
+        assert_eq!(prefix.pages.len(), self.layers, "prefix layer count");
+        assert_eq!(prefix.fmt, self.fmt, "prefix storage format");
+        assert_eq!(prefix.d, self.d, "prefix model dim");
+        assert_eq!(prefix.page, self.page, "prefix page size");
+        assert!(prefix.positions <= positions, "prefix longer than the reservation");
+        let per_layer = positions.div_ceil(self.page).max(1);
+        let shared = prefix.positions / self.page;
+        assert!(shared <= per_layer);
+        let own_per_layer = per_layer - shared;
+        let needed = self.layers * own_per_layer + cow_spares * self.layers;
+        let mut free = self.free.lock().unwrap();
+        if free.len() < needed {
+            return None;
+        }
+        let mut layers = Vec::with_capacity(self.layers);
+        for l in 0..self.layers {
+            let mut slots: Vec<SeqPage> =
+                prefix.pages[l].iter().map(|p| SeqPage::Shared(p.clone())).collect();
+            for _ in 0..own_per_layer {
+                slots.push(SeqPage::Owned(free.pop().expect("count checked above")));
+            }
+            layers.push(slots);
+        }
+        let spares = (0..cow_spares * self.layers)
+            .map(|_| free.pop().expect("count checked above"))
+            .collect();
+        Some(SeqKv { fmt: self.fmt, d: self.d, page: self.page, layers, spares })
+    }
+
+    /// Return a retired sequence's pages to the arena. Owned pages (and
+    /// unused COW spares) go straight back; a shared page goes back only
+    /// if this sequence held its **last** reference — otherwise the
+    /// dropped `Arc` just decrements the refcount and the final holder
+    /// (another sequence, or the prefix cache via [`PagePool::reclaim`])
+    /// returns it. Each physical page is pushed exactly once, ever.
     pub fn release(&self, seq: SeqKv) {
         let mut free = self.free.lock().unwrap();
-        for pages in seq.layers {
-            free.extend(pages);
+        for slots in seq.layers {
+            for slot in slots {
+                match slot {
+                    SeqPage::Owned(p) => free.push(p),
+                    SeqPage::Shared(arc) => {
+                        if let Ok(p) = Arc::try_unwrap(arc) {
+                            free.push(p);
+                        }
+                    }
+                }
+            }
+        }
+        free.extend(seq.spares);
+    }
+
+    /// Drop the prefix cache's reference to a frozen prefix, returning
+    /// any page no sequence still shares (cache eviction; see
+    /// [`PagePool::release`] for the refcount rule).
+    pub fn reclaim(&self, prefix: SharedPrefix) {
+        let mut free = self.free.lock().unwrap();
+        for pages in prefix.pages {
+            for arc in pages {
+                if let Ok(p) = Arc::try_unwrap(arc) {
+                    free.push(p);
+                }
+            }
         }
     }
 }
 
 /// One sequence's KV cache: a per-layer page table. Positions are written
 /// once (during that position's decode step) and read by every later
-/// step's attention.
+/// step's attention; adopted prefix positions are never written at all.
 pub struct SeqKv {
     fmt: KvFormat,
     d: usize,
     page: usize,
-    layers: Vec<Vec<KvPage>>,
+    layers: Vec<Vec<SeqPage>>,
+    /// COW fork targets for writes into shared pages (pool-allocated at
+    /// adoption; returned with the sequence)
+    spares: Vec<KvPage>,
 }
 
 impl SeqKv {
@@ -218,9 +400,9 @@ impl SeqKv {
         let page = PAGE_POSITIONS;
         let per_layer = capacity.div_ceil(page).max(1);
         let layers = (0..layers)
-            .map(|_| (0..per_layer).map(|_| KvPage::new(fmt, page, d)).collect())
+            .map(|_| (0..per_layer).map(|_| SeqPage::Owned(KvPage::new(fmt, page, d))).collect())
             .collect();
-        SeqKv { fmt, d, page, layers }
+        SeqKv { fmt, d, page, layers, spares: Vec::new() }
     }
 
     /// Storage format of this cache's pages.
@@ -242,16 +424,62 @@ impl SeqKv {
         self.layers.first().map_or(0, |pages| pages.len() * self.page)
     }
 
+    /// COW spare pages still unused (drops by one per shared-page fork).
+    pub fn cow_spares(&self) -> usize {
+        self.spares.len()
+    }
+
     /// Store position `pos`'s k and v rows for `layer` — quantizing on
-    /// write when the format is lossy.
+    /// write when the format is lossy. A write into a **shared** page
+    /// forks it first (copy-on-write): the page's stored bytes are copied
+    /// into a spare reserved at adoption and the slot becomes owned, so
+    /// the donor and other adopters never observe the write. Panics if no
+    /// spare was reserved — page-aligned adopters never write into the
+    /// shared span, so the scheduler runs spare-free.
     pub fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         assert!(pos < self.capacity(), "kv write past capacity: {pos}");
         assert_eq!(k.len(), self.d);
         assert_eq!(v.len(), self.d);
         let (pi, r) = (pos / self.page, pos % self.page);
-        let p = &mut self.layers[layer][pi];
+        let slot = &mut self.layers[layer][pi];
+        if let SeqPage::Shared(src) = slot {
+            let mut fork = self
+                .spares
+                .pop()
+                .expect("write into a shared prefix page with no COW spare reserved");
+            fork.copy_from(src);
+            *slot = SeqPage::Owned(fork);
+        }
+        let SeqPage::Owned(p) = slot else { unreachable!("shared slot forked above") };
         p.k.write(self.fmt, r, self.d, k);
         p.v.write(self.fmt, r, self.d, v);
+    }
+
+    /// Freeze the first `positions` (a page multiple, fully written) into
+    /// a refcounted [`SharedPrefix`] — the prefix-cache donation. Owned
+    /// pages are moved into `Arc`s **in place**: this sequence keeps
+    /// reading them through `Shared` slots (no copy, no extra pool
+    /// pages), and slots that are already shared (this sequence itself
+    /// adopted them) just bump their refcount.
+    pub fn share_prefix(&mut self, positions: usize) -> SharedPrefix {
+        assert!(positions > 0, "share_prefix needs at least one page");
+        assert_eq!(positions % self.page, 0, "share_prefix is page-granular");
+        let n = positions / self.page;
+        assert!(n * self.page <= self.capacity(), "share_prefix past capacity");
+        let mut pages = Vec::with_capacity(self.layers.len());
+        for slots in &mut self.layers {
+            let mut row = Vec::with_capacity(n);
+            for slot in slots.iter_mut().take(n) {
+                let arc = match std::mem::replace(slot, SeqPage::Owned(KvPage::placeholder())) {
+                    SeqPage::Owned(p) => Arc::new(p),
+                    SeqPage::Shared(a) => a,
+                };
+                *slot = SeqPage::Shared(arc.clone());
+                row.push(arc);
+            }
+            pages.push(row);
+        }
+        SharedPrefix { fmt: self.fmt, d: self.d, page: self.page, positions, pages }
     }
 
     /// `layer`'s key rows as a [`RowSource`] for `attn_row` — the f32
@@ -269,19 +497,25 @@ impl SeqKv {
     }
 }
 
-/// [`RowSource`] view over one layer's k **or** v rows of a [`SeqKv`].
+/// [`RowSource`] view over one layer's k **or** v rows of a [`SeqKv`] —
+/// owned and shared pages read identically (shared pages are just pages
+/// behind an `Arc`).
 pub struct KvHalfRows<'s> {
     fmt: KvFormat,
     d: usize,
     page: usize,
-    pages: &'s [KvPage],
+    pages: &'s [SeqPage],
     v: bool,
 }
 
 impl RowSource for KvHalfRows<'_> {
     fn row<'a>(&'a self, s: usize, scratch: &'a mut [f32]) -> &'a [f32] {
         let (pi, r) = (s / self.page, s % self.page);
-        let half = if self.v { &self.pages[pi].v } else { &self.pages[pi].k };
+        let page: &KvPage = match &self.pages[pi] {
+            SeqPage::Owned(p) => p,
+            SeqPage::Shared(a) => a,
+        };
+        let half = if self.v { &page.v } else { &page.k };
         half.row(self.fmt, r, self.d, scratch)
     }
 }
@@ -407,5 +641,106 @@ mod tests {
         assert_eq!(kv.capacity(), 4);
         assert_eq!(pool.free_pages(), pool.total_pages() - pool.pages_for(0));
         pool.release(kv);
+    }
+
+    /// Write `positions` deterministic rows into every layer of `kv`.
+    fn fill(kv: &mut SeqKv, positions: usize, tag: f32) {
+        for pos in 0..positions {
+            for layer in 0..kv.num_layers() {
+                let base = tag + (layer * 100 + pos) as f32;
+                kv.write(layer, pos, &[base, base + 1.0], &[-base, -base - 1.0]);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_prefix_adoption_reads_donor_rows_and_refcounts_release() {
+        // 1 layer, page = 4: donor writes 8 positions, freezes both pages
+        let pool = PagePool::new(1, 2, 4, 8);
+        let mut donor = pool.try_alloc(8).unwrap();
+        fill(&mut donor, 8, 0.0);
+        let prefix = donor.share_prefix(8);
+        assert_eq!(prefix.positions(), 8);
+        assert_eq!(prefix.pages_per_layer(), 2);
+        // the donor keeps reading its frozen pages
+        assert_eq!(read(&donor, 0, 5, false), &[5.0, 6.0]);
+        // adoption needs only the owned tail: 12 positions = 3 pages, 2 shared
+        assert_eq!(pool.pages_for_adopted(12, 8), 1);
+        let free_before = pool.free_pages();
+        let mut adopter = pool.try_adopt(12, &prefix, 0).unwrap();
+        assert_eq!(pool.free_pages(), free_before - 1, "only the tail page is drawn");
+        // adopted rows are the donor's bytes
+        assert_eq!(read(&adopter, 0, 0, false), &[0.0, 1.0]);
+        assert_eq!(read(&adopter, 0, 7, true), &[-7.0, -8.0]);
+        // the adopter writes past the prefix into its own page
+        adopter.write(0, 8, &[50.0, 51.0], &[52.0, 53.0]);
+        assert_eq!(read(&adopter, 0, 8, false), &[50.0, 51.0]);
+        assert_eq!(read(&donor, 0, 5, false), &[5.0, 6.0], "donor unaffected");
+        // release order: donor first (pages still shared by adopter+prefix)
+        pool.release(donor);
+        let after_donor = pool.free_pages();
+        pool.release(adopter);
+        assert!(pool.free_pages() <= pool.total_pages(), "never over-free");
+        assert!(pool.free_pages() > after_donor, "owned tail page returned");
+        // the cache reference is last: reclaim returns the shared pages
+        pool.reclaim(prefix);
+        assert_eq!(pool.free_pages(), pool.total_pages(), "every page home exactly once");
+    }
+
+    #[test]
+    fn cow_fork_leaves_donor_and_other_adopters_untouched() {
+        let pool = PagePool::new(1, 2, 4, 8);
+        let mut donor = pool.try_alloc(4).unwrap();
+        fill(&mut donor, 4, 0.0);
+        let prefix = donor.share_prefix(4);
+        // non-aligned use: the adopter reserves one COW spare per layer
+        let mut a = pool.try_adopt(8, &prefix, 1).unwrap();
+        let b = pool.try_adopt(8, &prefix, 0).unwrap();
+        assert_eq!(a.cow_spares(), 1);
+        // writing INTO the shared span forks the page copy-on-write
+        a.write(0, 1, &[99.0, 98.0], &[97.0, 96.0]);
+        assert_eq!(a.cow_spares(), 0, "fork consumed the spare");
+        assert_eq!(read(&a, 0, 1, false), &[99.0, 98.0]);
+        // untouched rows of the forked page keep the donor's bytes
+        assert_eq!(read(&a, 0, 2, false), &[2.0, 3.0]);
+        // donor and the other adopter still read the original
+        assert_eq!(read(&donor, 0, 1, false), &[1.0, 2.0]);
+        assert_eq!(read(&b, 0, 1, false), &[1.0, 2.0]);
+        pool.release(donor);
+        pool.release(a);
+        pool.release(b);
+        pool.reclaim(prefix);
+        assert_eq!(pool.free_pages(), pool.total_pages());
+    }
+
+    #[test]
+    #[should_panic(expected = "no COW spare reserved")]
+    fn shared_write_without_spare_panics() {
+        let pool = PagePool::new(1, 2, 4, 8);
+        let mut donor = pool.try_alloc(4).unwrap();
+        fill(&mut donor, 4, 0.0);
+        let prefix = donor.share_prefix(4);
+        let mut a = pool.try_adopt(8, &prefix, 0).unwrap();
+        a.write(0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn truncated_prefix_aliases_the_same_pages() {
+        let pool = PagePool::new(2, 2, 4, 12);
+        let mut donor = pool.try_alloc(8).unwrap();
+        fill(&mut donor, 8, 0.0);
+        let full = donor.share_prefix(8);
+        let short = full.truncated(1);
+        assert_eq!(short.positions(), 4);
+        let adopter = pool.try_adopt(8, &short, 0).unwrap();
+        assert_eq!(read(&adopter, 1, 3, false), &[103.0, 104.0]);
+        pool.release(donor);
+        pool.release(adopter);
+        // reclaiming the short alias leaves pages live for the full one
+        pool.reclaim(short);
+        let missing = pool.total_pages() - pool.free_pages();
+        assert_eq!(missing, full.pages_per_layer() * 2, "full prefix still holds its pages");
+        pool.reclaim(full);
+        assert_eq!(pool.free_pages(), pool.total_pages());
     }
 }

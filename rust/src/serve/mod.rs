@@ -18,25 +18,38 @@
 //!   every lossy path against the f32 oracle;
 //! - [`batch`] — the continuous-batching scheduler on `util::Pool`:
 //!   padded-free token-level steps, mid-flight admit/retire, per-request
-//!   deadlines, all surfaced in a [`ServeReport`].
+//!   deadlines, all surfaced in a [`ServeReport`];
+//! - [`prefix`] — the content-addressed prefix cache (§15): frozen,
+//!   refcounted prompt-prefix KV pages keyed by
+//!   `(model content key, kv format, page size, prefix tokens)`, so a
+//!   prefix-hit admission adopts shared pages with **zero** prefill
+//!   forwards (`--prefix-cache`). Speculative self-decoding
+//!   (`--draft-artifact` + `--spec-k`, §15) lives in [`batch`] and
+//!   [`model`]: a low-bit draft of the same artifact proposes k tokens
+//!   and the serving model verifies them in one batched forward.
 //!
 //! Determinism contract: generated tokens are a pure function of (model,
 //! prompt, max_new, kv format) — invariant to `--jobs`, batch size, page
-//! size, and co-scheduled requests. `tests/prop_serve.rs` pins the
-//! host-side guarantees (including bit-identity of the fused kernels
-//! against `unpack()` + `gemm`, and of `--kv-bits 32` against the
-//! full-context recompute); `tests/integration_serve.rs` pins greedy
-//! token-identity against the XLA engine's full-context recompute.
+//! size, co-scheduled requests, prefix-cache hits, and speculation
+//! (greedy accept/correct reproduces plain greedy token-for-token).
+//! `tests/prop_serve.rs` pins the host-side guarantees (including
+//! bit-identity of the fused kernels against `unpack()` + `gemm`, of
+//! `--kv-bits 32` against the full-context recompute, of prefix-hit vs
+//! cold decodes, and of speculative vs plain greedy);
+//! `tests/integration_serve.rs` pins greedy token-identity against the
+//! XLA engine's full-context recompute.
 
 pub mod batch;
 pub mod kv;
 pub mod kvq;
 pub mod model;
+pub mod prefix;
 
-pub use batch::{serve, RequestStats, ServeOptions, ServeReport, ServeRequest};
-pub use kv::{PagePool, SeqKv, PAGE_POSITIONS};
+pub use batch::{serve, serve_with_draft, RequestStats, ServeOptions, ServeReport, ServeRequest};
+pub use kv::{PagePool, SeqKv, SharedPrefix, PAGE_POSITIONS};
 pub use kvq::{token_divergence, KvFormat, KV_BITS};
 pub use model::{greedy_decode, greedy_decode_kv, Decoder, HostWeight, PackedModel};
+pub use prefix::{PrefixCache, PrefixHit};
 
 /// The synthetic model config `rsq serve-bench` and
 /// `benches/bench_serve.rs` both build when no artifact is given — one

@@ -30,16 +30,18 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::kv::SeqKv;
+use super::kv::{SeqKv, SharedPrefix};
 use super::kvq::{KvFormat, RowSource};
 use crate::eval::argmax;
 use crate::model::config::ModelConfig;
 use crate::model::ParamSet;
 use crate::quant::artifact::{self, ArtifactManifest, Blob};
 use crate::quantref;
+use crate::runtime::manifest::config_to_kv;
 use crate::tensor::kernels::Backend;
 use crate::tensor::pack::{PackedRows, RowGrid, PACK_BITS};
 use crate::tensor::Tensor;
+use crate::util::hash::{Fnv1a64, FNV_BASIS};
 use crate::util::Pool;
 
 /// RMSNorm epsilon — must match python/compile/model.py.
@@ -82,6 +84,25 @@ impl HostWeight {
         }
     }
 
+    /// `y = a · Wᵀ` with every output row **bit-identical** to the
+    /// single-row [`HostWeight::matvec`] path on the same backend — the
+    /// projection the speculative verify forward ([`Decoder::step_many`])
+    /// uses so its logits match sequential [`Decoder::step`] calls
+    /// exactly. Dispatches to the batched kernel when the backend is
+    /// row-exact ([`Backend::fused_rows_exact`]); otherwise (AVX2 simd,
+    /// whose batched kernels reduce column-major) it loops the GEMV
+    /// kernel per row — same results, less decode amortization.
+    pub fn matmul_bt_rowexact(&self, a: &Tensor, pool: Option<&Pool>, backend: Backend) -> Tensor {
+        if backend.fused_rows_exact() {
+            return self.matmul_bt(a, pool, backend);
+        }
+        let mut out = Tensor::zeros(&[a.rows(), self.out_dim()]);
+        for i in 0..a.rows() {
+            out.row_mut(i).copy_from_slice(&self.matvec(a.row(i), pool, backend));
+        }
+        out
+    }
+
     /// Single-row `y = x · Wᵀ` (the per-token decode path).
     pub fn matvec(&self, x: &[f32], pool: Option<&Pool>, backend: Backend) -> Vec<f32> {
         match self {
@@ -104,6 +125,29 @@ impl HostWeight {
     /// Bytes the dequantized f32 equivalent would keep resident.
     pub fn dense_bytes(&self) -> usize {
         4 * self.out_dim() * self.in_dim()
+    }
+
+    /// Feed this weight's full storage-domain identity into a key stream
+    /// (see [`PackedModel::content_key`]).
+    fn hash_into(&self, h: &mut Fnv1a64) {
+        match self {
+            HostWeight::Packed(p) => {
+                h.write_str("packed");
+                h.write_u32(p.bits);
+                h.write_usize(p.rows);
+                h.write_usize(p.cols);
+                h.write_f32s(&p.grid.scale);
+                h.write_f32s(&p.grid.zero);
+                h.write_usize(p.data.len());
+                h.write(&p.data);
+            }
+            HostWeight::Dense(t) => {
+                h.write_str("dense");
+                h.write_usize(t.rows());
+                h.write_usize(t.cols());
+                h.write_f32s(&t.data);
+            }
+        }
     }
 }
 
@@ -304,6 +348,42 @@ impl PackedModel {
             dense += w.dense_bytes();
         }
         (packed, dense)
+    }
+
+    /// 128-bit content address of everything that determines this
+    /// model's forward-pass outputs: config, resolved kernel backend
+    /// (AVX reductions are tolerance-pinned, not bit-equal, so KV bytes
+    /// differ across backends), and every tensor's storage-domain bytes.
+    /// Two loads of the same artifact on the same backend share a key;
+    /// any weight, bit-width, or backend difference separates them. This
+    /// is the `hash(artifact id, …)` component of the prefix-cache key
+    /// (`serve::prefix`, DESIGN.md §15), derived with the Hessian cache's
+    /// dual-stream FNV discipline (`quant::artifact::cache`).
+    pub fn content_key(&self) -> [u8; 16] {
+        let mut a = Fnv1a64::with_basis(FNV_BASIS);
+        let mut b = Fnv1a64::with_basis(FNV_BASIS ^ 0x9E37_79B9_7F4A_7C15);
+        for h in [&mut a, &mut b] {
+            // the field list IS the key contract — bump the version when
+            // it changes shape
+            h.write_u32(1);
+            h.write_str(self.backend.name());
+            h.write_str(&config_to_kv(&self.cfg));
+            h.write_f32s(&self.emb.data);
+            h.write_f32s(&self.pos.data);
+            for l in &self.layers {
+                h.write_f32s(&l.g1);
+                h.write_f32s(&l.g2);
+                for w in [&l.wq, &l.wk, &l.wv, &l.wo, &l.wup, &l.wgate, &l.wdown] {
+                    w.hash_into(&mut *h);
+                }
+            }
+            h.write_f32s(&self.gf);
+            self.head.hash_into(&mut *h);
+        }
+        let mut key = [0u8; 16];
+        key[..8].copy_from_slice(&a.finish().to_le_bytes());
+        key[8..].copy_from_slice(&b.finish().to_le_bytes());
+        key
     }
 
     /// Embedding row for `token` at absolute position `pos`.
@@ -524,6 +604,30 @@ impl<'m> Decoder<'m> {
         Decoder { model, kv, t: 0 }
     }
 
+    /// [`Decoder::new`] over a cache whose first `positions` rows are
+    /// already written — the prefix-cache adoption path (`serve::prefix`):
+    /// the decoder starts past the adopted prefix and never re-runs its
+    /// prefill forwards. The caller guarantees the rows really are the
+    /// ones this model + backend + KV format would have written (the
+    /// content key pins that).
+    pub fn resume(model: &'m PackedModel, kv: SeqKv, positions: usize) -> Decoder<'m> {
+        let mut dec = Decoder::new(model, kv);
+        assert!(positions <= dec.capacity(), "resume past capacity {}", dec.capacity());
+        dec.t = positions;
+        dec
+    }
+
+    /// Rewind to `positions` consumed — the speculative-reject path:
+    /// positions past the accepted run are simply re-written by later
+    /// steps (KV writes are overwrite-safe; `serve::kv` module docs).
+    /// Never rewind into an adopted shared prefix without COW spares —
+    /// the scheduler only speculates past the prompt, which adoption
+    /// covers page-aligned, so its rewinds always land in owned pages.
+    pub fn truncate(&mut self, positions: usize) {
+        assert!(positions <= self.t, "truncate only rewinds ({positions} > {})", self.t);
+        self.t = positions;
+    }
+
     /// Positions consumed so far.
     pub fn positions(&self) -> usize {
         self.t
@@ -592,6 +696,96 @@ impl<'m> Decoder<'m> {
         let mut logits = model.head.matvec(&h, pool, be);
         log_softmax_in_place(&mut logits);
         Some(logits)
+    }
+
+    /// Consume `tokens` at the next `tokens.len()` positions in **one**
+    /// batched forward and return their next-token log-probabilities
+    /// (`[tokens.len(), vocab]`) — the speculative verify pass: the
+    /// target model scores every draft candidate in a single sweep
+    /// instead of `k` sequential steps, amortizing each layer's weight
+    /// decode across the candidate rows.
+    ///
+    /// Row `i` is **bit-identical** to what the `i`-th sequential
+    /// [`Decoder::step`] call would return: every projection goes through
+    /// [`HostWeight::matmul_bt_rowexact`] (per-row bit-equal to the
+    /// matvec path on every backend), the per-row helpers are the shared
+    /// ones, and attention at position `t+i` reads exactly rows
+    /// `0..=t+i` — later candidates' KV rows are already written but
+    /// masked out by `total_t`, contributing nothing. That identity is
+    /// what makes greedy speculative decoding token-identical to plain
+    /// greedy by construction (DESIGN.md §15); `step_many` vs sequential
+    /// steps is pinned bitwise in this module's tests.
+    ///
+    /// On reject, [`Decoder::truncate`] rewinds past the unaccepted
+    /// positions; their stale KV rows are overwritten by later writes.
+    pub fn step_many(&mut self, tokens: &[i32], pool: Option<&Pool>) -> Tensor {
+        let n = tokens.len();
+        assert!(n >= 1, "step_many needs at least one token");
+        let t0 = self.t;
+        assert!(t0 + n <= self.capacity(), "decode past capacity {}", self.capacity());
+        if n == 1 {
+            let lp = self.step(tokens[0], pool);
+            return Tensor::from_vec(&[1, lp.len()], lp);
+        }
+        let model = self.model;
+        let cfg = &model.cfg;
+        let (d, heads, hd) = (cfg.d, cfg.heads, cfg.head_dim());
+        let be = model.backend;
+        let mut z = Tensor::zeros(&[n, d]);
+        for (i, &tok) in tokens.iter().enumerate() {
+            z.row_mut(i).copy_from_slice(&model.embed_row(tok, t0 + i));
+        }
+        let rows = |src: &Tensor, g: &[f32]| -> Tensor {
+            let mut out = Tensor::zeros(&[n, src.cols()]);
+            for i in 0..n {
+                out.row_mut(i).copy_from_slice(&rmsnorm_gain(src.row(i), g));
+            }
+            out
+        };
+        for (l, layer) in model.layers.iter().enumerate() {
+            let xa = rows(&z, &layer.g1);
+            let q = layer.wq.matmul_bt_rowexact(&xa, pool, be);
+            let kp = layer.wk.matmul_bt_rowexact(&xa, pool, be);
+            let vp = layer.wv.matmul_bt_rowexact(&xa, pool, be);
+            for i in 0..n {
+                self.kv.write(l, t0 + i, kp.row(i), vp.row(i));
+            }
+            let mut xo = Tensor::zeros(&[n, d]);
+            for i in 0..n {
+                let (kr, vr) = (self.kv.k_rows(l), self.kv.v_rows(l));
+                let row = attn_row(q.row(i), heads, hd, (t0 + i, t0 + i + 1), &kr, &vr, be);
+                xo.row_mut(i).copy_from_slice(&row);
+            }
+            z.add_in_place(&layer.wo.matmul_bt_rowexact(&xo, pool, be));
+            let xf = rows(&z, &layer.g2);
+            let gate = layer.wgate.matmul_bt_rowexact(&xf, pool, be);
+            let up = layer.wup.matmul_bt_rowexact(&xf, pool, be);
+            let mut xd = Tensor::zeros(&[n, cfg.ff]);
+            for i in 0..n {
+                xd.row_mut(i).copy_from_slice(&swiglu_row(gate.row(i), up.row(i)));
+            }
+            z.add_in_place(&layer.wdown.matmul_bt_rowexact(&xd, pool, be));
+        }
+        self.t = t0 + n;
+        let h = rows(&z, &model.gf);
+        let mut logits = model.head.matmul_bt_rowexact(&h, pool, be);
+        for i in 0..n {
+            log_softmax_in_place(logits.row_mut(i));
+        }
+        logits
+    }
+
+    /// Freeze the first `positions` consumed positions into a refcounted
+    /// [`SharedPrefix`] (the prefix-cache donation; `SeqKv::share_prefix`
+    /// owns the page mechanics). Only already-consumed positions may be
+    /// shared — their KV rows are fully written.
+    pub fn share_prefix(&mut self, positions: usize) -> SharedPrefix {
+        assert!(
+            positions <= self.t,
+            "can only share consumed positions ({positions} > {})",
+            self.t
+        );
+        self.kv.share_prefix(positions)
     }
 
     /// Hand the KV cache back (the batch scheduler returns it to the
@@ -797,6 +991,122 @@ mod tests {
             let b = greedy_decode_kv(&model, &prompt, 8, fmt, None).unwrap();
             assert_eq!(a, b, "{fmt:?}: lossy decode must still be deterministic");
         }
+    }
+
+    #[test]
+    fn step_many_is_bitwise_identical_to_sequential_steps() {
+        // the speculative verify forward must reproduce the sequential
+        // decode exactly, on the row-exact path AND the simd fallback
+        let p = ParamSet::init(&cfg(), 7);
+        for backend in [Backend::Reference, Backend::Simd] {
+            let mut model = PackedModel::from_paramset_rtn(&p, 4).unwrap();
+            model.set_backend(backend);
+            let toks = [3i32, 1, 4, 1, 5, 9, 2, 6];
+            let kv = SeqKv::standalone(model.cfg.layers, model.cfg.d, 16);
+            let mut seq = Decoder::new(&model, kv);
+            let rows: Vec<Vec<f32>> = toks.iter().map(|&tk| seq.step(tk, None)).collect();
+            let kv = SeqKv::standalone(model.cfg.layers, model.cfg.d, 16);
+            let mut dec = Decoder::new(&model, kv);
+            for &tk in &toks[..3] {
+                dec.prefill(tk, None);
+            }
+            let many = dec.step_many(&toks[3..], None);
+            assert_eq!(dec.positions(), toks.len());
+            assert_eq!(many.shape, vec![toks.len() - 3, model.cfg.vocab]);
+            for i in 0..toks.len() - 3 {
+                for (a, b) in many.row(i).iter().zip(&rows[3 + i]) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{backend:?} row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncate_rewinds_and_overwrites_cleanly() {
+        // speculative reject: rewind past unaccepted positions, then
+        // decode a different continuation — must match a fresh decode of
+        // the same accepted sequence bit-for-bit (stale KV rows of the
+        // rejected candidates are simply overwritten)
+        let p = ParamSet::init(&cfg(), 13);
+        let model = PackedModel::from_paramset_rtn(&p, 4).unwrap();
+        for fmt in [KvFormat::F32, KvFormat::Linear8] {
+            let kv = SeqKv::standalone_fmt(fmt, model.cfg.layers, model.cfg.d, 16);
+            let mut dec = Decoder::new(&model, kv);
+            for tk in [1i32, 2, 3] {
+                dec.prefill(tk, None);
+            }
+            let _ = dec.step_many(&[7, 8, 9], None);
+            dec.truncate(4); // keep 1,2,3,7 — reject 8,9
+            let got = dec.step(5, None);
+            let kv = SeqKv::standalone_fmt(fmt, model.cfg.layers, model.cfg.d, 16);
+            let mut fresh = Decoder::new(&model, kv);
+            for tk in [1i32, 2, 3, 7] {
+                fresh.prefill(tk, None);
+            }
+            let want = fresh.step(5, None);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{fmt:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn resume_over_adopted_prefix_matches_cold_decode_bitwise() {
+        use crate::serve::kv::PagePool;
+        let p = ParamSet::init(&cfg(), 17);
+        let model = PackedModel::from_paramset_rtn(&p, 4).unwrap();
+        let prompt = [3i32, 1, 4, 1, 5, 9];
+        for fmt in [KvFormat::F32, KvFormat::Linear8] {
+            let pool = PagePool::with_format(fmt, model.cfg.layers, model.cfg.d, 4, 16);
+            // donor: cold decode of the prompt, freeze the first page
+            let mut donor = Decoder::new(&model, pool.try_alloc(8).unwrap());
+            for &tk in &prompt {
+                donor.prefill(tk, None);
+            }
+            let mut donor_kv = donor.into_kv();
+            let prefix = donor_kv.share_prefix(4);
+            // adopter: resume past the adopted page, run only the tail
+            let kv = pool.try_adopt(8, &prefix, 0).unwrap();
+            let mut warm = Decoder::resume(&model, kv, 4);
+            assert_eq!(warm.positions(), 4);
+            warm.prefill(prompt[4], None);
+            let got = warm.step(prompt[5], None);
+            // cold reference over the full prompt
+            let mut cold = Decoder::new(&model, pool.try_alloc(8).unwrap());
+            for &tk in &prompt[..5] {
+                cold.prefill(tk, None);
+            }
+            let want = cold.step(prompt[5], None);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{fmt:?}: warm must equal cold");
+            }
+            pool.release(donor_kv);
+            pool.release(warm.into_kv());
+            pool.release(cold.into_kv());
+            pool.reclaim(prefix);
+            assert_eq!(pool.free_pages(), pool.total_pages());
+        }
+    }
+
+    #[test]
+    fn content_key_separates_everything_that_changes_outputs() {
+        let p = ParamSet::init(&cfg(), 3);
+        let m4 = PackedModel::from_paramset_rtn(&p, 4).unwrap();
+        assert_eq!(
+            m4.content_key(),
+            PackedModel::from_paramset_rtn(&p, 4).unwrap().content_key(),
+            "same weights, same backend → same key"
+        );
+        let m2 = PackedModel::from_paramset_rtn(&p, 2).unwrap();
+        assert_ne!(m4.content_key(), m2.content_key(), "bit width changes the key");
+        let dense = PackedModel::from_paramset_dense(&p).unwrap();
+        assert_ne!(m4.content_key(), dense.content_key(), "storage domain changes the key");
+        let mut simd = PackedModel::from_paramset_rtn(&p, 4).unwrap();
+        simd.set_backend(Backend::Simd);
+        assert_ne!(m4.content_key(), simd.content_key(), "kernel backend changes the key");
+        let other = ParamSet::init(&cfg(), 4);
+        let mo = PackedModel::from_paramset_rtn(&other, 4).unwrap();
+        assert_ne!(m4.content_key(), mo.content_key(), "weights change the key");
     }
 
     #[test]

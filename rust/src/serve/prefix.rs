@@ -1,0 +1,311 @@
+//! Content-addressed prefix cache (DESIGN.md §15).
+//!
+//! Thousands of serving requests share a prompt prefix (a system prompt,
+//! a few-shot template); re-running prefill for each one is pure waste —
+//! the KV rows a prefix produces are a deterministic function of
+//! `(model, kernel backend, kv format, prefix tokens)`. This cache keys
+//! frozen prefix pages ([`SharedPrefix`], `serve::kv`) by exactly that
+//! determining set, with the same keying discipline as the Hessian cache
+//! (`quant::artifact::cache`): two independent FNV-1a 64 streams over a
+//! versioned field list → a 128-bit content address. Jobs, batch shape,
+//! and scheduling order are deliberately **not** hashed — they cannot
+//! change a KV bit (DESIGN.md §11).
+//!
+//! **Granularity.** Entries live at page-aligned prompt boundaries: a
+//! donor whose prompt spans n full pages inserts n entries (1 page, 2
+//! pages, …, n pages), all aliasing the same refcounted physical pages.
+//! A lookup probes its own prompt's boundaries longest-first and takes
+//! the deepest hit, capped at `prompt_len - 1` positions — the last
+//! prompt position must still run in the adopter to produce the
+//! first-token logits. The stored token slice is compared on every hit
+//! (cheap; prompts are short), so even a 128-bit collision cannot serve
+//! wrong pages.
+//!
+//! **Memory.** Cached pages stay charged to the [`PagePool`] they came
+//! from. Under admission pressure the scheduler evicts oldest-first
+//! ([`PrefixCache::evict_oldest`]): eviction drops the cache's
+//! references, and each physical page returns to the pool's free list
+//! when its last reference (cache alias or live sequence) is dropped —
+//! the per-page refcount rule of `serve::kv`.
+
+use std::collections::{HashMap, VecDeque};
+
+use super::kv::{PagePool, SharedPrefix};
+use crate::util::hash::{Fnv1a64, FNV_BASIS};
+
+/// Bump when the key derivation below changes shape.
+const PREFIX_KEY_VERSION: u32 = 1;
+
+/// Second-stream basis — the same derivation as the Hessian cache's
+/// `KeyHasher`, giving 128 collision-safe bits from one traversal.
+const FNV_BASIS_B: u64 = FNV_BASIS ^ 0x9E37_79B9_7F4A_7C15;
+
+struct Entry {
+    /// exact tokens the pages cover — verified on hit (collision guard)
+    tokens: Vec<i32>,
+    prefix: SharedPrefix,
+}
+
+/// Outcome of a [`PrefixCache::lookup`] probe.
+pub struct PrefixHit {
+    /// frozen pages to adopt via [`PagePool::try_adopt`]
+    pub prefix: SharedPrefix,
+    /// prompt positions the adopter skips (= prefill forwards eliminated)
+    pub covered: usize,
+}
+
+/// In-process, content-addressed cache of frozen prompt-prefix KV pages.
+/// One cache serves one `(model, backend, kv format, page size)` tuple —
+/// the model's 128-bit content key is baked into every entry key, so two
+/// caches can never alias each other's pages even if their maps merged.
+pub struct PrefixCache {
+    model_key: [u8; 16],
+    kv_bits: u32,
+    page: usize,
+    entries: HashMap<[u8; 16], Entry>,
+    /// insertion order, oldest first (pressure-eviction order)
+    order: VecDeque<[u8; 16]>,
+    lookups: usize,
+    hits: usize,
+    hit_positions: usize,
+}
+
+impl PrefixCache {
+    /// `model_key` is the serving model's content address
+    /// (`PackedModel::content_key` — config + backend + weight bytes);
+    /// `kv_bits` and `page` pin the storage format and page geometry the
+    /// frozen pages were written at.
+    pub fn new(model_key: [u8; 16], kv_bits: u32, page: usize) -> PrefixCache {
+        assert!(page > 0, "page size must be positive");
+        PrefixCache {
+            model_key,
+            kv_bits,
+            page,
+            entries: HashMap::new(),
+            order: VecDeque::new(),
+            lookups: 0,
+            hits: 0,
+            hit_positions: 0,
+        }
+    }
+
+    /// 128-bit keys for every page-aligned prefix of `tokens` up to
+    /// `max_pages` boundaries — one incremental pass over the tokens,
+    /// snapshotting both FNV streams at each boundary (the same
+    /// two-stream discipline as the Hessian cache key).
+    fn boundary_keys(&self, tokens: &[i32], max_pages: usize) -> Vec<[u8; 16]> {
+        let mut a = Fnv1a64::with_basis(FNV_BASIS);
+        let mut b = Fnv1a64::with_basis(FNV_BASIS_B);
+        for s in [&mut a, &mut b] {
+            s.write_u32(PREFIX_KEY_VERSION);
+            s.write(&self.model_key);
+            s.write_u32(self.kv_bits);
+            s.write_usize(self.page);
+        }
+        let mut keys = Vec::with_capacity(max_pages);
+        for (i, &t) in tokens.iter().take(max_pages * self.page).enumerate() {
+            a.write(&t.to_le_bytes());
+            b.write(&t.to_le_bytes());
+            if (i + 1) % self.page == 0 {
+                // finalize a snapshot with the length suffix so the key
+                // commits to how many tokens it covers
+                let (mut fa, mut fb) = (a.clone(), b.clone());
+                fa.write_usize(i + 1);
+                fb.write_usize(i + 1);
+                let mut key = [0u8; 16];
+                key[..8].copy_from_slice(&fa.finish().to_le_bytes());
+                key[8..].copy_from_slice(&fb.finish().to_le_bytes());
+                keys.push(key);
+            }
+        }
+        keys
+    }
+
+    /// Probe for the deepest cached page-aligned prefix of `prompt`,
+    /// capped at `prompt.len() - 1` positions (the adopter must run the
+    /// last prompt position itself for its first logits). Pure — stats
+    /// are recorded by [`PrefixCache::record`] at actual admission, so a
+    /// deferred admission retried later is not double-counted.
+    pub fn lookup(&self, prompt: &[i32]) -> Option<PrefixHit> {
+        let max_pages = prompt.len().saturating_sub(1) / self.page;
+        let keys = self.boundary_keys(prompt, max_pages);
+        for n in (1..=keys.len()).rev() {
+            if let Some(e) = self.entries.get(&keys[n - 1]) {
+                if e.tokens == prompt[..n * self.page] {
+                    return Some(PrefixHit { prefix: e.prefix.clone(), covered: n * self.page });
+                }
+            }
+        }
+        None
+    }
+
+    /// Record one admission outcome: `covered` is `Some(positions)` for a
+    /// prefix-hit admission, `None` for a cold one.
+    pub fn record(&mut self, covered: Option<usize>) {
+        self.lookups += 1;
+        if let Some(c) = covered {
+            self.hits += 1;
+            self.hit_positions += c;
+        }
+    }
+
+    /// Insert entries for every page boundary `prefix` covers, keyed by
+    /// the corresponding token prefix of `tokens`. Boundary entries alias
+    /// the same refcounted pages ([`SharedPrefix::truncated`]); already
+    /// present boundaries are left untouched.
+    pub fn insert(&mut self, tokens: &[i32], prefix: &SharedPrefix) {
+        let n = prefix.pages_per_layer();
+        assert!(tokens.len() >= n * self.page, "token slice shorter than the frozen pages");
+        let keys = self.boundary_keys(tokens, n);
+        for (b, key) in keys.iter().enumerate() {
+            if self.entries.contains_key(key) {
+                continue;
+            }
+            let pages = b + 1;
+            self.entries.insert(
+                *key,
+                Entry {
+                    tokens: tokens[..pages * self.page].to_vec(),
+                    prefix: prefix.truncated(pages),
+                },
+            );
+            self.order.push_back(*key);
+        }
+    }
+
+    /// Evict the oldest entry, handing its page references back to
+    /// `pool` (pages still shared by live sequences or deeper aliases
+    /// return later, when their last reference drops). Returns false
+    /// when the cache is already empty.
+    pub fn evict_oldest(&mut self, pool: &PagePool) -> bool {
+        let Some(key) = self.order.pop_front() else { return false };
+        let e = self.entries.remove(&key).expect("order and entries stay in sync");
+        pool.reclaim(e.prefix);
+        true
+    }
+
+    /// Evict everything (end-of-serve teardown / tests).
+    pub fn drain(&mut self, pool: &PagePool) {
+        while self.evict_oldest(pool) {}
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Admissions probed while the cache was on.
+    pub fn lookups(&self) -> usize {
+        self.lookups
+    }
+
+    /// Admissions that adopted a cached prefix.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Total prompt positions adopted — prefill forwards eliminated.
+    pub fn hit_positions(&self) -> usize {
+        self.hit_positions
+    }
+
+    /// `hits / lookups` (0 when nothing was probed).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::kvq::KvFormat;
+
+    /// Donor pool + frozen 2-page prefix over `tokens[..8]` (page = 4).
+    fn frozen(pool: &PagePool, tokens: &[i32]) -> SharedPrefix {
+        let mut kv = pool.try_alloc(tokens.len()).unwrap();
+        for (pos, _) in tokens.iter().enumerate() {
+            kv.write(0, pos, &[pos as f32, 0.0], &[0.0, pos as f32]);
+        }
+        let p = kv.share_prefix(8);
+        pool.release(kv);
+        p
+    }
+
+    #[test]
+    fn deepest_boundary_wins_and_stats_track_admissions() {
+        let pool = PagePool::new(1, 2, 4, 16);
+        let toks: Vec<i32> = (1..=10).collect();
+        let prefix = frozen(&pool, &toks);
+        let mut cache = PrefixCache::new([7u8; 16], 32, 4);
+        assert!(cache.is_empty());
+        cache.insert(&toks, &prefix);
+        assert_eq!(cache.len(), 2, "one entry per page boundary");
+        // same first 8 tokens, different tail → deepest boundary (8)
+        let hit = cache.lookup(&[1, 2, 3, 4, 5, 6, 7, 8, 99, 98]).unwrap();
+        assert_eq!(hit.covered, 8);
+        // 8-token prompt: capped at len-1 = 7 → only the 4-boundary fits
+        let hit = cache.lookup(&toks[..8]).unwrap();
+        assert_eq!(hit.covered, 4, "last prompt position must stay uncached");
+        // diverging within the first page → miss
+        assert!(cache.lookup(&[9, 2, 3, 4, 5, 6]).is_none());
+        // too short for any boundary → miss
+        assert!(cache.lookup(&[1, 2, 3]).is_none());
+        cache.record(Some(8));
+        cache.record(None);
+        assert_eq!((cache.lookups(), cache.hits(), cache.hit_positions()), (2, 1, 8));
+        assert!((cache.hit_rate() - 0.5).abs() < 1e-12);
+        cache.drain(&pool);
+        pool.reclaim(prefix);
+        assert_eq!(pool.free_pages(), pool.total_pages());
+    }
+
+    #[test]
+    fn key_is_sensitive_to_model_format_and_page() {
+        let pool = PagePool::new(1, 2, 4, 16);
+        let toks: Vec<i32> = (1..=9).collect();
+        let prefix = frozen(&pool, &toks);
+        let mut base = PrefixCache::new([1u8; 16], 32, 4);
+        base.insert(&toks, &prefix);
+        assert!(base.lookup(&toks).is_some());
+        // a different model key, kv width, or page size must never hit
+        for mut other in [PrefixCache::new([2u8; 16], 32, 4), PrefixCache::new([1u8; 16], 8, 4)] {
+            other.insert(&toks, &prefix);
+            let k_base = base.boundary_keys(&toks, 2);
+            let k_other = other.boundary_keys(&toks, 2);
+            assert_ne!(k_base, k_other, "keys must differ across caches");
+            other.drain(&pool);
+        }
+        base.drain(&pool);
+        pool.reclaim(prefix);
+        assert_eq!(pool.free_pages(), pool.total_pages());
+    }
+
+    #[test]
+    fn eviction_is_oldest_first_and_returns_pages() {
+        let pool = PagePool::with_format(KvFormat::F32, 1, 2, 4, 16);
+        let t1: Vec<i32> = (1..=9).collect();
+        let t2: Vec<i32> = (21..=29).collect();
+        let p1 = frozen(&pool, &t1);
+        let p2 = frozen(&pool, &t2);
+        let mut cache = PrefixCache::new([3u8; 16], 32, 4);
+        cache.insert(&t1, &p1);
+        cache.insert(&t2, &p2);
+        drop(p1);
+        drop(p2);
+        let free_before = pool.free_pages();
+        assert!(cache.evict_oldest(&pool), "evicts t1's 1-page boundary");
+        assert!(pool.free_pages() >= free_before, "never loses pages");
+        // t1's 2-page boundary still aliases page 0, so lookups still hit
+        assert!(cache.lookup(&t1).is_some() || cache.lookup(&t2).is_some());
+        cache.drain(&pool);
+        assert!(!cache.evict_oldest(&pool), "empty cache has nothing to evict");
+        assert_eq!(pool.free_pages(), pool.total_pages(), "all pages home after drain");
+    }
+}

@@ -193,6 +193,26 @@ impl Backend {
         self.ops().name()
     }
 
+    /// Whether this backend's **batched** `gemm_bt`/`deq_gemm_bt` produce
+    /// each output row bit-identically to its own single-row
+    /// `matvec`/`deq_gemv` path. True for [`Backend::Reference`] by the
+    /// `gemv.rs` contract (the batched kernels are per-row-independent
+    /// k-ascending reductions, `dot_row == column`'s m = 1 case). False
+    /// for [`Backend::Simd`] when AVX2 is actually in use: the AVX
+    /// batched kernels reduce column-major (amortized decode) while the
+    /// GEMV kernels reduce row-at-a-time, so the same row comes out of
+    /// the two paths with different float associativity. The speculative
+    /// verify forward (`Decoder::step_many`) keys off this to stay
+    /// token-identical to the sequential decode on every backend.
+    pub fn fused_rows_exact(self) -> bool {
+        match self {
+            Backend::Reference => true,
+            // off-AVX2 the simd entry points fall back to the reference
+            // scalar kernels, which are row-exact
+            Backend::Simd => !simd::simd_available(),
+        }
+    }
+
     /// The trait object for generic call sites.
     pub fn ops(self) -> &'static dyn KernelBackend {
         match self {
@@ -284,6 +304,14 @@ mod tests {
         assert_eq!(Backend::Simd.name(), "simd");
         assert_eq!(ReferenceKernels.name(), "reference");
         assert_eq!(SimdKernels.name(), "simd");
+    }
+
+    #[test]
+    fn fused_rows_exact_tracks_the_dispatch() {
+        assert!(Backend::Reference.fused_rows_exact(), "reference is the row-exact oracle");
+        // Simd is row-exact exactly when it degrades to the reference
+        // scalar kernels (no AVX2+FMA on this host)
+        assert_eq!(Backend::Simd.fused_rows_exact(), !simd::simd_available());
     }
 
     #[test]

@@ -11,16 +11,22 @@
 //!   are bit-identical);
 //! - continuous batching returns exactly the solo-decode tokens for
 //!   every (batch, jobs) combination, under page-pool pressure, and
-//!   surfaces missed deadlines.
+//!   surfaces missed deadlines;
+//! - a prefix-cache hit decodes identically to the cold path at every
+//!   (kv format, jobs, batch) combination (DESIGN.md §15);
+//! - speculative decoding is token-identical to plain greedy at every
+//!   (spec-k, backend) combination;
+//! - refcounted prefix pages survive mid-flight retire under page
+//!   pressure — every physical page returns to the pool exactly once.
 
 use rsq::model::config::ModelConfig;
 use rsq::model::ParamSet;
 use rsq::quantref;
 use rsq::serve::{
-    greedy_decode, greedy_decode_kv, serve, token_divergence, Decoder, KvFormat, PackedModel,
-    SeqKv, ServeOptions, ServeRequest,
+    greedy_decode, greedy_decode_kv, serve, serve_with_draft, token_divergence, Decoder, KvFormat,
+    PackedModel, SeqKv, ServeOptions, ServeRequest,
 };
-use rsq::tensor::kernels::{deq_gemm_bt, deq_gemv, gemm_bt};
+use rsq::tensor::kernels::{deq_gemm_bt, deq_gemv, gemm_bt, Backend};
 use rsq::tensor::pack::{PackedRows, RowGrid, PACK_BITS};
 use rsq::tensor::Tensor;
 use rsq::util::{Pcg, Pool};
@@ -316,6 +322,124 @@ fn page_pool_pressure_admits_mid_flight_without_changing_tokens() {
     assert_eq!(rep.peak_active, 1);
     for (r, want) in rep.requests.iter().zip(&solo) {
         assert_eq!(&r.generated, want, "id={}", r.id);
+    }
+}
+
+#[test]
+fn prefix_cache_decode_is_identical_to_cold_at_every_kv_width() {
+    // the §15 determinism pin: adopting frozen prefix pages must change
+    // ZERO output tokens vs the cold decode, at the exact f32 format AND
+    // the lossy 8-bit codec, across jobs and batch widths. max_batch 2
+    // also covers the concurrent-donor path (two identical prompts both
+    // freeze their prefix; the second insert dedups and its pages still
+    // come home).
+    let p = ParamSet::init(&host_cfg(), 48);
+    let model = PackedModel::from_paramset_rtn(&p, 4).unwrap();
+    let prompt = vec![3i32, 1, 4, 1, 5, 9];
+    let requests: Vec<ServeRequest> =
+        (0..4u64).map(|i| ServeRequest::new(i, prompt.clone(), 6)).collect();
+    for fmt in [KvFormat::F32, KvFormat::Linear8] {
+        for jobs in [1usize, 4] {
+            for batch in [1usize, 2] {
+                let pool = Pool::new(jobs);
+                let base =
+                    ServeOptions { max_batch: batch, page: 4, kv: fmt, ..Default::default() };
+                let cold = serve(&model, &pool, requests.clone(), &base).unwrap();
+                assert_eq!(cold.prefix_lookups, 0, "cache off probes nothing");
+                let warm_opts = ServeOptions { prefix_cache: true, ..base };
+                let warm = serve(&model, &pool, requests.clone(), &warm_opts).unwrap();
+                assert!(warm.prefix_hits > 0, "fmt={fmt:?} jobs={jobs} batch={batch}");
+                assert!(warm.prefill_skipped > 0, "hits must eliminate prefill forwards");
+                for (c, w) in cold.requests.iter().zip(&warm.requests) {
+                    assert_eq!(
+                        c.generated,
+                        w.generated,
+                        "fmt={fmt:?} jobs={jobs} batch={batch} id={}: warm diverged from cold",
+                        c.id
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn speculative_decode_is_token_identical_across_spec_k_and_backends() {
+    // greedy accept/correct must reproduce plain greedy token-for-token
+    // at EVERY window size, on the reference backend and on simd (where
+    // the row-exact verify fallback keeps batched rows bitwise equal to
+    // sequential steps — tensor::kernels::Backend::fused_rows_exact)
+    let p = ParamSet::init(&host_cfg(), 49);
+    let mut model = PackedModel::from_paramset_rtn(&p, 4).unwrap();
+    let mut draft = PackedModel::from_paramset_rtn(&p, 2).unwrap();
+    let requests: Vec<ServeRequest> = (0..4u64)
+        .map(|i| ServeRequest::new(i, vec![(i as i32) + 2, 7, 11], 6 + (i as usize) % 3))
+        .collect();
+    for backend in [Backend::Reference, Backend::Simd] {
+        model.set_backend(backend);
+        draft.set_backend(backend);
+        let plain =
+            serve(&model, &Pool::new(2), requests.clone(), &ServeOptions::default()).unwrap();
+        for spec_k in [1usize, 2, 3, 5] {
+            let opts = ServeOptions { spec_k, ..Default::default() };
+            let rep =
+                serve_with_draft(&model, Some(&draft), &Pool::new(2), requests.clone(), &opts)
+                    .unwrap();
+            for (a, b) in plain.requests.iter().zip(&rep.requests) {
+                assert_eq!(
+                    a.generated,
+                    b.generated,
+                    "spec_k={spec_k} backend={} id={}: speculation changed the output",
+                    backend.name(),
+                    a.id
+                );
+            }
+            assert!(rep.draft_accepted <= rep.draft_proposed, "spec_k={spec_k}");
+            if spec_k >= 2 {
+                assert!(rep.draft_proposed > 0, "spec_k={spec_k} proposed nothing");
+            }
+        }
+    }
+}
+
+#[test]
+fn refcounted_prefix_pages_survive_mid_flight_retire_under_pressure() {
+    // staggered max_new makes donors retire while later admissions still
+    // read the frozen prefix pages they donated, and a tight pool forces
+    // admissions to serialize through release/adopt cycles. The §15
+    // refcount invariant — every physical page comes home exactly once,
+    // never twice — is enforced by the serve loop's end-of-run
+    // free == total debug_assert (live in test builds); tokens must
+    // still equal the solo decode for every request.
+    let p = ParamSet::init(&host_cfg(), 50);
+    let model = PackedModel::from_paramset_rtn(&p, 4).unwrap();
+    let shared_prompt = vec![2i32, 7, 1, 8, 2, 8];
+    let mut requests: Vec<ServeRequest> = (0..5u64)
+        .map(|i| ServeRequest::new(i, shared_prompt.clone(), 3 + (i as usize) * 2))
+        .collect();
+    // a diverging prompt at the tail exercises eviction under pressure
+    requests.push(ServeRequest::new(9, vec![5, 5, 5, 5, 5, 5], 4));
+    let solo: Vec<Vec<i32>> = requests
+        .iter()
+        .map(|r| greedy_decode(&model, &r.prompt, r.max_new, None).unwrap())
+        .collect();
+    let probe = rsq::serve::PagePool::new(model.cfg.layers, model.cfg.d, 4, 0);
+    let need = |r: &ServeRequest| probe.pages_for(r.prompt.len() + r.max_new);
+    let worst = requests.iter().map(need).max().unwrap();
+    for slack in [0usize, 4] {
+        let opts = ServeOptions {
+            max_batch: 3,
+            page: 4,
+            pages: worst + slack,
+            prefix_cache: true,
+            ..Default::default()
+        };
+        let rep = serve(&model, &Pool::new(2), requests.clone(), &opts).unwrap();
+        assert_eq!(rep.requests.len(), requests.len(), "slack={slack}");
+        assert!(rep.prefix_hits > 0, "slack={slack}: staggered retires must still hit");
+        for (r, want) in rep.requests.iter().zip(&solo) {
+            assert_eq!(&r.generated, want, "slack={slack} id={}", r.id);
+        }
     }
 }
 

@@ -204,7 +204,33 @@ if [ -f rust/src/quant/alloc.rs ]; then
     done
 fi
 
-[ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler/artifact/kernel/serve/backend/alloc docs OK"
+# The prefix cache + speculative decoding layer: if serve/prefix.rs
+# exists, §15 must document the content-addressed keying, the
+# donate/adopt/refcount/pressure lifecycle, the step_many verify path
+# with its row-exactness gate, and the reporting surface — the contract
+# the prefix smoke, bench_serve §15 section, and prop_serve pins lean
+# on. Needles are grepped inside the §15 body only, same scoping
+# rationale as §9; `grep -qi --` so dash-leading needles are not parsed
+# as options.
+if [ -f rust/src/serve/prefix.rs ]; then
+    if ! grep -qE "^## 15\." DESIGN.md; then
+        echo "check-docs: FAIL — rust/src/serve/prefix.rs exists but DESIGN.md has no '## 15.' section" >&2
+        fail=1
+    fi
+    sec15=$(awk '/^## 15\./{f=1; print; next} /^## /{f=0} f' DESIGN.md)
+    for needle in "serve/prefix" "--prefix-cache" "content_key" "FNV" \
+                  "share_prefix" "try_adopt" "prefill_skipped" \
+                  "oldest-first" "--spec-k" "--draft-artifact" \
+                  "step_many" "fused_rows_exact" "draft_accepted" \
+                  "token-identical" "prop_serve"; do
+        if ! grep -qi -- "${needle}" <<< "${sec15}"; then
+            echo "check-docs: FAIL — DESIGN.md §15 never mentions \"${needle}\" (prefix/speculation contract drift)" >&2
+            fail=1
+        fi
+    done
+fi
+
+[ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler/artifact/kernel/serve/backend/alloc/prefix docs OK"
 
 # --- 3+4. rustdoc + rustfmt ------------------------------------------------
 if [ "${CHECK_DOCS_SKIP_CARGO:-0}" = "1" ]; then

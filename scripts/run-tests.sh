@@ -211,6 +211,49 @@ else
     printf 'reference: %s\nsimd     : %s\n' "${gen_ref_be}" "${gen_simd_be}"
 fi
 
+# Prefix-cache smoke (DESIGN.md §15): serve the golden fixture through
+# the batching path (--prompts 2, one slot, 2-position pages so the
+# 3-token prompt crosses a page boundary). The warm (--prefix-cache)
+# run must be byte-identical on stdout to the cold run — prefix hits
+# change ZERO tokens — and its stderr must report a non-zero hit count
+# (prefill forwards actually eliminated).
+echo "run-tests: prefix smoke (rsq generate --prompts 2 --prefix-cache)"
+px_log="$(mktemp)"
+px_smoke() {
+    cargo run --release --quiet -- generate \
+        --artifact tests/data/artifact_ok --prompt 1,2,5 --max-new 5 \
+        --prompts 2 --max-batch 1 --kv-page 2 \
+        --backend "${backend}" "$@" 2>"${px_log}"
+}
+px_cold="$(px_smoke)" || {
+    echo "run-tests: FAIL — prefix smoke cold run exited non-zero:" >&2
+    cat "${px_log}" >&2
+    exit 1
+}
+px_warm="$(px_smoke --prefix-cache)" || {
+    echo "run-tests: FAIL — prefix smoke warm run exited non-zero:" >&2
+    cat "${px_log}" >&2
+    exit 1
+}
+if [ -z "${px_cold}" ] || ! grep -q '^generated' <<< "${px_cold}"; then
+    echo "run-tests: FAIL — prefix smoke cold run produced no generated lines:" >&2
+    printf '%s\n' "${px_cold}" >&2
+    exit 1
+fi
+if [ "${px_cold}" != "${px_warm}" ]; then
+    echo "run-tests: FAIL — prefix-cache hits changed the served tokens:" >&2
+    printf 'cold:\n%s\nwarm:\n%s\n' "${px_cold}" "${px_warm}" >&2
+    exit 1
+fi
+px_hits="$(sed -n 's/.*prefix cache: \([0-9][0-9]*\)\/.*/\1/p' "${px_log}")"
+if [ -z "${px_hits}" ] || [ "${px_hits}" -eq 0 ]; then
+    echo "run-tests: FAIL — warm run reported no prefix-cache hits:" >&2
+    cat "${px_log}" >&2
+    exit 1
+fi
+rm -f "${px_log}"
+echo "run-tests: prefix smoke OK (${px_hits} hit(s), stdout identical to cold)"
+
 # Mixed-precision smoke (DESIGN.md §14): quantize the tiny config under
 # --avg-bits 3.0, assert the achieved average respects the budget, and
 # assert `rsq eval --artifact` on the resulting mixed-width artifact is

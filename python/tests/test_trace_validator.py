@@ -1,0 +1,162 @@
+"""Tests for the toolchain-free trace/metrics validator
+(scripts/validate_trace.py) on synthetic good and bad documents — the
+same checks CI's trace smoke runs on real `rsq --trace` output."""
+
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "scripts", "validate_trace.py")
+
+spec = importlib.util.spec_from_file_location("validate_trace", _PATH)
+vt = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(vt)
+
+
+def _meta(tid, name="worker"):
+    return {
+        "ph": "M",
+        "name": "thread_name",
+        "pid": 1,
+        "tid": tid,
+        "args": {"name": name},
+    }
+
+
+def _span(name, ts, dur, tid=0):
+    return {"name": name, "cat": "t", "ph": "X", "ts": ts, "dur": dur, "pid": 1, "tid": tid}
+
+
+def _instant(name, ts, tid=0):
+    return {"name": name, "cat": "t", "ph": "i", "s": "t", "ts": ts, "pid": 1, "tid": tid}
+
+
+def _good_trace():
+    return {
+        "traceEvents": [
+            _meta(0, "main"),
+            _meta(1),
+            _span("sched.pass_a", 0, 100),
+            _span("sched.pass_b", 100, 50),
+            _instant("hess_cache.miss", 120),
+            _span("pool.task", 5, 10, tid=1),
+        ],
+        "displayTimeUnit": "ms",
+    }
+
+
+def _good_metrics():
+    return {
+        "cmd": "quantize",
+        "counters": {"hess_cache.miss": 2},
+        "gauges": {"quant.layer_err.l000": 0.25},
+        "hists": {
+            "pool.task_wait_us": {
+                "count": 4,
+                "min": 1,
+                "max": 90,
+                "mean": 30.0,
+                "p50": 16,
+                "p90": 63,
+                "p95": 90,
+                "p99": 90,
+            }
+        },
+    }
+
+
+def test_good_trace_passes():
+    assert vt.validate_trace(_good_trace()) == []
+
+
+def test_required_span_names_enforced():
+    assert vt.validate_trace(_good_trace(), require=["sched.pass_a"]) == []
+    errs = vt.validate_trace(_good_trace(), require=["serve.decode"])
+    assert any("serve.decode" in e for e in errs)
+
+
+def test_trace_rejects_bad_pid_and_tid():
+    doc = _good_trace()
+    doc["traceEvents"][2]["pid"] = 7
+    assert any("pid" in e for e in vt.validate_trace(doc))
+    doc = _good_trace()
+    doc["traceEvents"][2]["tid"] = -1
+    assert any("tid" in e for e in vt.validate_trace(doc))
+
+
+def test_trace_rejects_backwards_timestamps_per_tid():
+    doc = _good_trace()
+    doc["traceEvents"].append(_span("late", 10, 1))  # tid 0 was already at ts 120
+    errs = vt.validate_trace(doc)
+    assert any("backwards" in e for e in errs)
+    # a fresh tid restarting at a small ts is fine (per-tid monotonicity);
+    # it only needs its own thread_name row
+    doc = _good_trace()
+    doc["traceEvents"] += [_meta(2), _span("other-row", 3, 1, tid=2)]
+    assert vt.validate_trace(doc) == []
+
+
+def test_trace_rejects_missing_thread_name_row():
+    doc = _good_trace()
+    doc["traceEvents"] = [e for e in doc["traceEvents"] if e["ph"] != "M" or e["tid"] != 1]
+    errs = vt.validate_trace(doc)
+    assert any("thread_name" in e for e in errs)
+
+
+def test_trace_rejects_malformed_root_and_rows():
+    assert vt.validate_trace([]) != []
+    assert vt.validate_trace({"traceEvents": 3}) != []
+    doc = _good_trace()
+    doc["traceEvents"].append({"ph": "Q", "pid": 1, "tid": 0})
+    assert any("ph" in e for e in vt.validate_trace(doc))
+    doc = _good_trace()
+    doc["traceEvents"].append(_span("nodur", 130, 1))
+    del doc["traceEvents"][-1]["dur"]
+    assert any("dur" in e for e in vt.validate_trace(doc))
+
+
+def test_good_metrics_pass():
+    assert vt.validate_metrics(_good_metrics()) == []
+
+
+def test_metrics_reject_missing_sections_and_disorder():
+    doc = _good_metrics()
+    del doc["counters"]
+    assert any("counters" in e for e in vt.validate_metrics(doc))
+    doc = _good_metrics()
+    doc["hists"]["pool.task_wait_us"]["p50"] = 1000  # > p90
+    assert any("out of order" in e for e in vt.validate_metrics(doc))
+    doc = _good_metrics()
+    del doc["hists"]["pool.task_wait_us"]["p95"]
+    assert any("p95" in e for e in vt.validate_metrics(doc))
+
+
+def test_cli_round_trip(tmp_path):
+    tr = tmp_path / "t.json"
+    mt = tmp_path / "m.json"
+    tr.write_text(json.dumps(_good_trace()))
+    mt.write_text(json.dumps(_good_metrics()))
+    ok = subprocess.run(
+        [
+            sys.executable,
+            _PATH,
+            "--trace",
+            str(tr),
+            "--metrics",
+            str(mt),
+            "--require",
+            "sched.pass_a",
+        ],
+        capture_output=True,
+        text=True,
+    )
+    assert ok.returncode == 0, ok.stderr
+    bad = subprocess.run(
+        [sys.executable, _PATH, "--trace", str(tr), "--require", "serve.decode"],
+        capture_output=True,
+        text=True,
+    )
+    assert bad.returncode == 1
+    assert "serve.decode" in bad.stderr

@@ -197,6 +197,36 @@ fn bench_backends() {
     }
 }
 
+/// Observability off-path cost (DESIGN.md §16): a disabled span is one
+/// relaxed atomic load and a branch, and an instrumented kernel must
+/// time the same with the tracer off as it always did. Runs LAST:
+/// enabling the tracer is monotonic and process-global, so everything
+/// after `trace::enable()` records — the disabled-path rows above it
+/// are only honest while nothing has enabled it yet.
+fn bench_obs_overhead() {
+    use rsq::obs::trace;
+    println!("--- observability overhead (disabled vs enabled, DESIGN.md 16) ---");
+    assert!(!trace::on(), "obs bench must run before anything enables the tracer");
+    let mut rng = Pcg::new(11);
+    let d = 64usize;
+    let a = Tensor::randn(&[d, d], 1.0, &mut rng);
+    let b = Tensor::randn(&[d, d], 1.0, &mut rng);
+    Bench::new("obs/span_disabled")
+        .iter(|| trace::span("bench", "obs_bench_probe"))
+        .report();
+    let off = Bench::new(&format!("obs/gemm_{d}x{d}_trace_off"))
+        .iter(|| kernels::gemm(&a, &b, None))
+        .report();
+    trace::enable();
+    let on = Bench::new(&format!("obs/gemm_{d}x{d}_trace_on"))
+        .iter(|| kernels::gemm(&a, &b, None))
+        .report();
+    println!("    traced/untraced wall ratio: {:.3} (one kernel span per call)", on / off.max(1e-12));
+    // drain what the traced leg recorded instead of leaving it in TLS
+    let n = trace::take_events().len();
+    println!("    traced leg recorded {n} events");
+}
+
 fn main() -> anyhow::Result<()> {
     println!("=== kernel/module micro-benchmarks ===");
     bench_host_kernels();
@@ -204,5 +234,6 @@ fn main() -> anyhow::Result<()> {
     for config in ["tiny", "small"] {
         bench_config(config)?;
     }
+    bench_obs_overhead();
     Ok(())
 }

@@ -33,11 +33,15 @@
 //!                  probe families.
 //! - [`train`]    — Adam training loop over the `train_step` artifact
 //!                  (used by the end-to-end example).
+//! - [`obs`]      — zero-dependency observability: span tracer + metrics
+//!                  registry (`--trace`/`--metrics` Chrome-trace and run-
+//!                  record exporters) and the leveled log facade.
 //! - [`repro`]    — one driver per paper table/figure.
 
 pub mod corpus;
 pub mod eval;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod quantref;
 pub mod repro;

@@ -50,6 +50,17 @@ fn main() -> Result<()> {
     // it at parse time keeps it from swallowing the next token as a value
     let args = Args::from_env_with_flags(&["prefix-cache"]);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    // Observability is armed before dispatch and exported after it, so
+    // every subcommand records through one switch (DESIGN.md §16). The
+    // export notices go to stderr: stdout — and every artifact a
+    // subcommand writes — is byte-identical with tracing on or off.
+    if args.get("trace").is_some() {
+        rsq::obs::trace::enable();
+    }
+    if args.get("metrics").is_some() {
+        rsq::obs::metrics::enable();
+    }
+    rsq::obs::log::set_verbose(args.flag("verbose"));
     match cmd {
         "table1" => repro::tables::table1(&args)?,
         "table2" => repro::tables::table2(&args)?,
@@ -76,6 +87,14 @@ fn main() -> Result<()> {
         "all" => cmd_all(&args)?,
         "help" | "--help" | "-h" => print_help(),
         other => bail!("unknown command {other:?} — try `rsq help`"),
+    }
+    if let Some(path) = args.get("trace") {
+        rsq::obs::trace::export(path)?;
+        eprintln!("[trace] wrote Chrome trace to {path} (load in Perfetto / chrome://tracing)");
+    }
+    if let Some(path) = args.get("metrics") {
+        rsq::obs::metrics::export(path, cmd)?;
+        eprintln!("[metrics] wrote run record to {path}");
     }
     Ok(())
 }
@@ -299,11 +318,12 @@ fn cmd_generate(args: &Args) -> Result<()> {
     const KNOWN: &[&str] = &[
         "artifact", "model", "config", "prompt", "prompt-len", "seed", "max-new", "kv-bits",
         "jobs", "backend", "verbose", "prompts", "max-batch", "kv-page", "prefix-cache",
-        "spec-k", "draft-artifact",
+        "spec-k", "draft-artifact", "trace", "metrics",
     ];
     const VALUED: &[&str] = &[
         "artifact", "model", "config", "prompt", "prompt-len", "seed", "max-new", "kv-bits",
         "jobs", "backend", "prompts", "max-batch", "kv-page", "spec-k", "draft-artifact",
+        "trace", "metrics",
     ];
     check_flags("generate", args, KNOWN, VALUED)?;
     let kv = serve::KvFormat::from_bits(args.kv_bits()).ok_or_else(|| {
@@ -316,7 +336,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let pool = Pool::new(args.jobs());
     let mut model = if let Some(dir) = args.get("artifact") {
         let (m, manifest) = serve::PackedModel::load(Path::new(dir))?;
-        eprintln!(
+        rsq::obs_info!(
             "[generate] artifact {dir}: {} / {} / {}bit, {} packed weights",
             manifest.method,
             manifest.strategy,
@@ -328,7 +348,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         let config = args.str_or("config", "small");
         let manifest = rsq::runtime::Manifest::load(&rsq::artifacts_dir(&config))?;
         let p = rsq::model::ParamSet::load(&manifest.config, Path::new(path))?;
-        eprintln!("[generate] checkpoint {path} (config {config}, served dense)");
+        rsq::obs_info!("[generate] checkpoint {path} (config {config}, served dense)");
         serve::PackedModel::from_paramset_dense(&p)?
     } else {
         bail!("rsq generate needs --artifact DIR (packed artifact) or --model PATH (checkpoint)");
@@ -381,7 +401,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
                 }
                 let (mut d, manifest) = serve::PackedModel::load(Path::new(dir))?;
                 d.set_backend(backend);
-                eprintln!("[generate] draft artifact {dir}: {}bit", manifest.bits);
+                rsq::obs_info!("[generate] draft artifact {dir}: {}bit", manifest.bits);
                 Some(d)
             }
             None => {
@@ -409,7 +429,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         for r in &rep.requests {
             println!("generated[{:>2}]: {}", r.id, join(&r.generated));
         }
-        eprintln!(
+        rsq::obs_info!(
             "[generate] served {n} request(s) in {:.3}s ({:.1} tok/s, kv-bits={kv}, \
              max-batch={}, jobs={}, backend={})",
             rep.wall_s,
@@ -418,8 +438,21 @@ fn cmd_generate(args: &Args) -> Result<()> {
             pool.jobs(),
             model.backend().name()
         );
+        // latency distribution (DESIGN.md §16), debug level so the
+        // default stderr stays as it was before percentiles existed
+        rsq::obs_debug!(
+            "[generate] latency: ttft p50/p95/p99 {:.4}/{:.4}/{:.4}s, \
+             inter-token p50/p95/p99 {:.4}/{:.4}/{:.4}s, deadline missed {}",
+            rep.ttft_p50_s,
+            rep.ttft_p95_s,
+            rep.ttft_p99_s,
+            rep.itl_p50_s,
+            rep.itl_p95_s,
+            rep.itl_p99_s,
+            rep.deadline_missed
+        );
         if opts.prefix_cache {
-            eprintln!(
+            rsq::obs_info!(
                 "[generate] prefix cache: {}/{} hits (hit-rate {:.2}), \
                  {} prefill forwards skipped",
                 rep.prefix_hits,
@@ -429,7 +462,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
             );
         }
         if spec_k > 0 {
-            eprintln!(
+            rsq::obs_info!(
                 "[generate] speculative: spec-k={spec_k}, accepted {}/{} drafts \
                  (accept-rate {:.2})",
                 rep.draft_accepted,
@@ -444,7 +477,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let dt = t0.elapsed().as_secs_f64();
     println!("prompt       : {}", join(&prompt));
     println!("generated    : {}", join(&gen));
-    eprintln!(
+    rsq::obs_info!(
         "[generate] {} tokens in {dt:.3}s ({:.1} tok/s, kv-bits={kv}, jobs={}, backend={})",
         gen.len(),
         gen.len() as f64 / dt.max(1e-12),
@@ -487,6 +520,13 @@ fn bench_cell(
         .set("spec_k", rep.spec_k)
         .set("tok_per_s", rep.tokens_per_s)
         .set("ttft_s", ttft)
+        .set("ttft_p50_s", rep.ttft_p50_s)
+        .set("ttft_p95_s", rep.ttft_p95_s)
+        .set("ttft_p99_s", rep.ttft_p99_s)
+        .set("itl_p50_s", rep.itl_p50_s)
+        .set("itl_p95_s", rep.itl_p95_s)
+        .set("itl_p99_s", rep.itl_p99_s)
+        .set("deadline_missed", rep.deadline_missed)
         .set("generated_tokens", rep.generated_tokens)
         .set("peak_active", rep.peak_active)
         .set("kv_peak_pages", rep.kv_peak_pages)
@@ -517,10 +557,11 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     const KNOWN: &[&str] = &[
         "artifact", "bits", "batches", "contexts", "jobs-sweep", "kv-bits", "prompt-len", "seed",
         "backend", "verbose", "traffic", "spec-k", "kv-page", "json", "draft-artifact",
+        "trace", "metrics",
     ];
     const VALUED: &[&str] = &[
         "artifact", "bits", "batches", "contexts", "jobs-sweep", "kv-bits", "prompt-len", "seed",
-        "backend", "traffic", "spec-k", "kv-page", "json", "draft-artifact",
+        "backend", "traffic", "spec-k", "kv-page", "json", "draft-artifact", "trace", "metrics",
     ];
     check_flags("serve-bench", args, KNOWN, VALUED)?;
     let backend = parse_backend(args)?;
@@ -650,8 +691,16 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                     };
                     println!(
                         "  batch={batch:<3} ctx={ctx:<4} jobs={jobs:<3} {:>9.1} tok/s  \
-                         ({} tokens, {} steps, peak {}{hit_note})",
-                        rep.tokens_per_s, rep.generated_tokens, rep.steps, rep.peak_active
+                         ttft p50/p95/p99 {:.4}/{:.4}/{:.4}s  \
+                         ({} tokens, {} steps, peak {}, missed {}{hit_note})",
+                        rep.tokens_per_s,
+                        rep.ttft_p50_s,
+                        rep.ttft_p95_s,
+                        rep.ttft_p99_s,
+                        rep.generated_tokens,
+                        rep.steps,
+                        rep.peak_active,
+                        rep.deadline_missed
                     );
                     let ttft = mean_ttft(&rep);
                     cells.push(bench_cell("grid", *bits, batch, ctx, jobs, &rep, ttft));
@@ -754,7 +803,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             .set("traffic", traffic.as_str())
             .set("cells", Json::Arr(cells));
         std::fs::write(path, doc.to_string() + "\n")?;
-        eprintln!("[serve-bench] wrote {n} cell records to {path}");
+        rsq::obs_info!("[serve-bench] wrote {n} cell records to {path}");
     }
     Ok(())
 }
@@ -764,8 +813,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 /// age then by total size (oldest first). Eviction is always safe —
 /// content addressing turns a deleted entry into a future recompute.
 fn cmd_cache(args: &Args) -> Result<()> {
-    const KNOWN: &[&str] = &["hess-cache", "max-age", "max-bytes", "verbose"];
-    check_flags("cache", args, KNOWN, &["hess-cache", "max-age", "max-bytes"])?;
+    const KNOWN: &[&str] = &["hess-cache", "max-age", "max-bytes", "verbose", "trace", "metrics"];
+    check_flags("cache", args, KNOWN, &["hess-cache", "max-age", "max-bytes", "trace", "metrics"])?;
     let Some(dir) = args.hess_cache() else {
         bail!("--hess-cache off leaves no cache to manage");
     };
@@ -864,7 +913,7 @@ fn cmd_all(_args: &Args) -> Result<()> {
         "table1", "table2", "table3", "table4", "table5", "table6", "table7",
         "fig2", "fig3", "fig4", "fig5", "fig7", "fig8", "fig9", "scores",
     ] {
-        eprintln!("[all] running {cmd} ...");
+        rsq::obs_info!("[all] running {cmd} ...");
         let status = std::process::Command::new(&exe).arg(cmd).args(&fwd).status()?;
         if !status.success() {
             bail!("driver {cmd} failed with {status}");
@@ -952,6 +1001,15 @@ fn print_help() {
            --bench-samples N  perf: samples per micro-bench\n\
            --samples N      scores: sequences per importance series\n\
            --verbose        chatty pipeline logging\n\
+           --trace PATH     write a Chrome trace-event file (load in\n\
+                            Perfetto / chrome://tracing): scheduler\n\
+                            phases, pool tasks, kernel calls, and the\n\
+                            serve loop's KV/prefix/speculative events;\n\
+                            stdout and every artifact stay byte-identical\n\
+                            with tracing on or off (DESIGN.md 16)\n\
+           --metrics PATH   write a machine-readable run record from the\n\
+                            same instrumentation: counters, gauges, and\n\
+                            histogram summaries (p50/p90/p95/p99)\n\
          \n\
          generate flags (unknown flags fail fast):\n\
            --prompt T1,T2   explicit prompt token ids\n\

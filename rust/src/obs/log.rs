@@ -1,0 +1,61 @@
+//! Leveled log facade for CLI diagnostics (DESIGN.md §16).
+//!
+//! Two levels, both to stderr (stdout is reserved for machine-consumed
+//! command output — token lines, report tables):
+//!
+//! - [`obs_info!`](crate::obs_info) — always prints, with formatting
+//!   identical to the bare `eprintln!` it replaced; the default output of
+//!   every command stays byte-for-byte what it was before the facade
+//!   (pinned by the `run-tests.sh` smokes).
+//! - [`obs_debug!`](crate::obs_debug) — prints only when `--verbose` set
+//!   the global flag via [`set_verbose`].
+//!
+//! The flag is a process-global relaxed atomic: the CLI sets it once at
+//! startup, before any worker threads exist.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static VERBOSE: AtomicBool = AtomicBool::new(false);
+
+/// Set the global `--verbose` flag (CLI startup, before dispatch).
+pub fn set_verbose(v: bool) {
+    VERBOSE.store(v, Ordering::Relaxed);
+}
+
+/// Whether `obs_debug!` lines print.
+#[inline]
+pub fn verbose() -> bool {
+    VERBOSE.load(Ordering::Relaxed)
+}
+
+/// Always-on diagnostic line to stderr — `eprintln!` routed through the
+/// facade so every CLI diagnostic shares one chokepoint.
+#[macro_export]
+macro_rules! obs_info {
+    ($($arg:tt)*) => {
+        eprintln!($($arg)*)
+    };
+}
+
+/// Verbose-gated diagnostic line to stderr; prints only after
+/// `obs::log::set_verbose(true)` (the `--verbose` flag).
+#[macro_export]
+macro_rules! obs_debug {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::verbose() {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn verbose_flag_round_trips() {
+        // process-global: restore the default so other tests see it off
+        super::set_verbose(true);
+        assert!(super::verbose());
+        super::set_verbose(false);
+        assert!(!super::verbose());
+    }
+}

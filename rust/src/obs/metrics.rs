@@ -1,0 +1,360 @@
+//! Named counter/gauge/histogram registry with a run-record exporter
+//! (DESIGN.md §16).
+//!
+//! Counters and histograms record into a `thread_local!` registry (no
+//! shared lock on the hot path); a thread's registry merges into the
+//! global sink through its TLS destructor when the thread exits — pool
+//! workers are scoped per `Pool::run` call, so by the time the
+//! coordinator exports, every worker has already merged. Merging is
+//! commutative (u64 adds, bucket-count adds, min/max), so the merged
+//! totals are independent of worker scheduling. Gauges are last-write
+//! values; by convention only the coordinator sets them.
+//!
+//! [`Hist`] is the fixed-bucket log2 histogram the ISSUE's latency and
+//! shape distributions use: values 0–15 are exact, then every power-of-two
+//! range splits into 16 linear sub-buckets (≤ ~6 % relative error). It is
+//! `pub` because `serve::batch` computes the `ServeReport` TTFT /
+//! inter-token percentiles with it directly.
+//!
+//! Disabled (the default), every probe is one relaxed atomic load.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<Registry>> = Mutex::new(None);
+
+/// Linear sub-buckets per power of two.
+const SUB: usize = 16;
+/// 16 exact values + 60 sub-bucketed exponents (2^4 … 2^63).
+const BUCKETS: usize = SUB + (64 - 4) * SUB;
+
+/// Fixed-bucket log2 histogram over `u64` values (µs, bytes, shapes …).
+#[derive(Debug, Clone)]
+pub struct Hist {
+    counts: Vec<u64>,
+    n: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist { counts: vec![0; BUCKETS], n: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    fn bucket(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let e = 63 - v.leading_zeros() as usize; // 2^e <= v < 2^(e+1), e >= 4
+        let sub = ((v >> (e - 4)) & 15) as usize;
+        SUB + (e - 4) * SUB + sub
+    }
+
+    /// Lower bound of bucket `idx` — the value [`Hist::percentile`]
+    /// reports for ranks landing in that bucket.
+    fn bucket_floor(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64;
+        }
+        let e = (idx - SUB) / SUB + 4;
+        let sub = (idx % SUB) as u64;
+        (1u64 << e) + (sub << (e - 4))
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Hist::bucket(v)] += 1;
+        self.n += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.n == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.n as f64
+        }
+    }
+
+    /// Value at percentile `p` ∈ [0, 100]: the highest value representable
+    /// by the bucket holding the rank-⌈p·n/100⌉ sample (the HdrHistogram
+    /// convention), clamped into `[min, max]` so degenerate distributions
+    /// report exact values. 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.n == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let hi = if idx + 1 < BUCKETS {
+                    Hist::bucket_floor(idx + 1) - 1
+                } else {
+                    u64::MAX
+                };
+                return hi.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// `{count, min, max, mean, p50, p90, p95, p99}` for the run record.
+    pub fn summary_json(&self) -> Json {
+        Json::obj()
+            .set("count", self.n as f64)
+            .set("min", self.min() as f64)
+            .set("max", self.max as f64)
+            .set("mean", self.mean())
+            .set("p50", self.percentile(50.0) as f64)
+            .set("p90", self.percentile(90.0) as f64)
+            .set("p95", self.percentile(95.0) as f64)
+            .set("p99", self.percentile(99.0) as f64)
+    }
+}
+
+/// A merged view of every thread's recordings, drained by [`snapshot`] /
+/// [`export`].
+#[derive(Debug, Default)]
+pub struct Registry {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub hists: BTreeMap<String, Hist>,
+}
+
+impl Registry {
+    fn merge(&mut self, other: Registry) {
+        for (k, v) in other.counters {
+            *self.counters.entry(k).or_insert(0) += v;
+        }
+        for (k, v) in other.gauges {
+            self.gauges.insert(k, v);
+        }
+        for (k, h) in other.hists {
+            match self.hists.get_mut(&k) {
+                Some(mine) => mine.merge(&h),
+                None => {
+                    self.hists.insert(k, h);
+                }
+            }
+        }
+    }
+}
+
+/// TLS wrapper whose destructor merges the thread's registry into the
+/// global sink (the "merged across workers at flush" discipline).
+struct TlsReg(Registry);
+
+impl Drop for TlsReg {
+    fn drop(&mut self) {
+        let mine = std::mem::take(&mut self.0);
+        let mut sink = SINK.lock().unwrap();
+        sink.get_or_insert_with(Registry::default).merge(mine);
+    }
+}
+
+thread_local! {
+    static REG: RefCell<TlsReg> = RefCell::new(TlsReg(Registry::default()));
+}
+
+/// Turn the registry on (idempotent).
+pub fn enable() {
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Whether metrics are being recorded — the one-branch hot-path gate.
+#[inline]
+pub fn on() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Add `n` to counter `name`.
+#[inline]
+pub fn add(name: &str, n: u64) {
+    if on() {
+        REG.with(|r| *r.borrow_mut().0.counters.entry(name.to_string()).or_insert(0) += n);
+    }
+}
+
+/// Set gauge `name` (last write wins; coordinator-thread use).
+#[inline]
+pub fn gauge(name: &str, v: f64) {
+    if on() {
+        REG.with(|r| {
+            r.borrow_mut().0.gauges.insert(name.to_string(), v);
+        });
+    }
+}
+
+/// Record one value into histogram `name`.
+#[inline]
+pub fn hist(name: &str, v: u64) {
+    if on() {
+        REG.with(|r| r.borrow_mut().0.hists.entry(name.to_string()).or_default().record(v));
+    }
+}
+
+/// Bulk-record into histogram `name` (one map lookup for the batch); the
+/// iterator is consumed only while metrics are on.
+#[inline]
+pub fn hist_many(name: &str, vals: impl IntoIterator<Item = u64>) {
+    if on() {
+        REG.with(|r| {
+            let mut b = r.borrow_mut();
+            let h = b.0.hists.entry(name.to_string()).or_default();
+            for v in vals {
+                h.record(v);
+            }
+        });
+    }
+}
+
+/// Drain and merge every recorded value: the exited-worker sink plus the
+/// calling thread's live registry.
+pub fn snapshot() -> Registry {
+    let mut r = SINK.lock().unwrap().take().unwrap_or_default();
+    REG.with(|t| r.merge(std::mem::take(&mut t.borrow_mut().0)));
+    r
+}
+
+/// Write the machine-readable run record
+/// `{cmd, counters, gauges, hists}` and drain the registry.
+pub fn export(path: &str, cmd: &str) -> std::io::Result<()> {
+    let r = snapshot();
+    let mut counters = Json::obj();
+    for (k, v) in &r.counters {
+        counters = counters.set(k, *v as f64);
+    }
+    let mut gauges = Json::obj();
+    for (k, v) in &r.gauges {
+        gauges = gauges.set(k, *v);
+    }
+    let mut hists = Json::obj();
+    for (k, h) in &r.hists {
+        hists = hists.set(k, h.summary_json());
+    }
+    let root = Json::obj()
+        .set("cmd", cmd)
+        .set("counters", counters)
+        .set("gauges", gauges)
+        .set("hists", hists);
+    std::fs::write(path, root.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; tests use unique names and never
+    // assume exclusive ownership of the sink.
+
+    #[test]
+    fn hist_buckets_are_exact_then_log2() {
+        for v in 0..16u64 {
+            assert_eq!(Hist::bucket_floor(Hist::bucket(v)), v, "small values exact");
+        }
+        for v in [16u64, 17, 31, 32, 100, 1000, 1 << 20, u64::MAX] {
+            let idx = Hist::bucket(v);
+            let lo = Hist::bucket_floor(idx);
+            assert!(lo <= v, "floor {lo} over {v}");
+            // next bucket's floor bounds the relative error at ~1/16
+            if idx + 1 < BUCKETS {
+                let hi = Hist::bucket_floor(idx + 1);
+                assert!(v < hi, "value {v} past bucket [{lo}, {hi})");
+            }
+        }
+    }
+
+    #[test]
+    fn percentiles_order_and_clamp() {
+        let mut h = Hist::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let (p50, p95, p99) = (h.percentile(50.0), h.percentile(95.0), h.percentile(99.0));
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!((450..=550).contains(&p50), "p50 ~500, got {p50}");
+        assert!((900..=1000).contains(&p99), "p99 ~990, got {p99}");
+        assert_eq!(h.percentile(100.0), 1000);
+        assert_eq!(h.count(), 1000);
+        let mut single = Hist::new();
+        single.record(777);
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(single.percentile(p), 777, "degenerate hist reports the value");
+        }
+        assert_eq!(Hist::new().percentile(50.0), 0, "empty hist");
+    }
+
+    #[test]
+    fn merge_is_a_sum() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        let mut whole = Hist::new();
+        for v in 0..100u64 {
+            if v % 2 == 0 { a.record(v) } else { b.record(v) }
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!((a.min(), a.max()), (whole.min(), whole.max()));
+        assert_eq!(a.percentile(50.0), whole.percentile(50.0));
+    }
+
+    #[test]
+    fn workers_merge_at_thread_exit() {
+        enable();
+        crate::util::Pool::new(3).run(9, |i| {
+            add("metrics_test.tasks", 1);
+            hist("metrics_test.idx", i as u64);
+            i
+        });
+        gauge("metrics_test.done", 1.0);
+        let r = snapshot();
+        assert_eq!(r.counters.get("metrics_test.tasks"), Some(&9));
+        assert_eq!(r.hists.get("metrics_test.idx").map(|h| h.count()), Some(9));
+        assert_eq!(r.gauges.get("metrics_test.done"), Some(&1.0));
+        // put unrelated concurrent state back
+        SINK.lock().unwrap().get_or_insert_with(Registry::default).merge(r);
+    }
+}

@@ -1,0 +1,30 @@
+//! Zero-dependency observability: span tracer, metrics registry, and a
+//! leveled log facade (DESIGN.md §16).
+//!
+//! Three small pieces, all built on the standard library only (the vendor
+//! set has no tracing/metrics crates):
+//!
+//! - [`trace`] — hierarchical wall-clock spans and instant events with
+//!   thread-aware IDs, recorded into per-thread buffers (no shared lock on
+//!   the hot path) and exported as Chrome trace-event JSON
+//!   (`--trace PATH`; loads in Perfetto / `chrome://tracing`).
+//! - [`metrics`] — a named counter/gauge/histogram registry. Histograms
+//!   are fixed-bucket log2 (16 linear sub-buckets per power of two, ~6 %
+//!   value resolution); per-thread registries merge into a global sink at
+//!   thread exit and the whole registry exports as a machine-readable run
+//!   record (`--metrics PATH`).
+//! - [`log`] — the `obs_info!`/`obs_debug!` facade behind every CLI
+//!   diagnostic `eprintln!`: info always prints (byte-identical to the
+//!   pre-facade output), debug prints only under `--verbose`.
+//!
+//! **Zero-bit-drift contract.** Instrumentation only *observes*: span
+//! guards read a monotonic clock and push into thread-local buffers, never
+//! touching the data path, so tracing on or off cannot change a single
+//! output bit — pinned by the trace-on-vs-off identity tests
+//! (`tests/integration_obs.rs`, `serve::batch` tests). When both tracer
+//! and metrics are off (the default), every probe is one relaxed atomic
+//! load and a branch.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;

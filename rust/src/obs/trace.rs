@@ -1,0 +1,348 @@
+//! Span tracer with Chrome trace-event export (DESIGN.md §16).
+//!
+//! **Recording.** A [`span`] guard snapshots the monotonic clock on
+//! construction and, on drop, pushes one *complete* event (`ph: "X"`) into
+//! the calling thread's buffer; [`instant`] pushes a point event
+//! (`ph: "i"`). Buffers are `thread_local!`, so the hot path takes no
+//! shared lock. Pool workers are scoped to each `Pool::run` call
+//! (`util::pool`): when a worker exits, its buffer drains into the global
+//! sink via the TLS destructor, and [`export`] (on the coordinator, after
+//! the run) collects the sink plus the coordinator's own live buffer.
+//!
+//! **Thread rows.** Each recording thread leases the smallest free trace
+//! tid and returns it on exit, so concurrently-live threads always get
+//! distinct Chrome rows while the thousands of short-lived scoped workers
+//! a long run spawns reuse a bounded set of rows (≈ peak concurrency).
+//! Nested spans on one thread render as Chrome's stacked slices because
+//! a contained span's `[ts, ts+dur]` interval nests inside its parent's.
+//!
+//! **Off path.** Disabled (the default), [`span`]/[`instant`] cost one
+//! relaxed atomic load and a branch — no clock read, no allocation — and
+//! recording never re-enables: the contract that tracing cannot perturb
+//! what it measures, let alone an output bit.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+/// Next never-used tid; leased tids recycle through [`FREE_TIDS`].
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+static FREE_TIDS: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+/// Buffers drained from exited threads, awaiting [`export`].
+static SINK: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+
+/// One recorded trace event (a completed span or an instant).
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub name: &'static str,
+    pub cat: &'static str,
+    /// start (µs since the trace epoch)
+    pub ts_us: u64,
+    /// span length in µs; instants record 0 and export as `ph: "i"`
+    pub dur_us: u64,
+    pub tid: u64,
+    /// pre-rendered `args` object (built only while tracing is on)
+    pub args: Option<Json>,
+    instant: bool,
+}
+
+struct ThreadCtx {
+    tid: u64,
+    buf: Vec<Event>,
+}
+
+impl Drop for ThreadCtx {
+    fn drop(&mut self) {
+        if !self.buf.is_empty() {
+            SINK.lock().unwrap().append(&mut self.buf);
+        }
+        FREE_TIDS.lock().unwrap().push(self.tid);
+    }
+}
+
+thread_local! {
+    static CTX: RefCell<Option<ThreadCtx>> = const { RefCell::new(None) };
+}
+
+/// Lease the smallest tid not currently held by a live thread.
+fn acquire_tid() -> u64 {
+    let mut free = FREE_TIDS.lock().unwrap();
+    if free.is_empty() {
+        return NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    }
+    let mut at = 0;
+    for i in 1..free.len() {
+        if free[i] < free[at] {
+            at = i;
+        }
+    }
+    free.swap_remove(at)
+}
+
+/// Turn the tracer on (idempotent). The first call pins the trace epoch;
+/// timestamps are µs since that instant.
+pub fn enable() {
+    EPOCH.get_or_init(Instant::now);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Whether spans are being recorded — the one-branch hot-path gate.
+#[inline]
+pub fn on() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// µs since the trace epoch (pins the epoch on first use).
+pub fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+fn record(mut ev: Event) {
+    CTX.with(|c| {
+        let mut c = c.borrow_mut();
+        let ctx = c.get_or_insert_with(|| ThreadCtx { tid: acquire_tid(), buf: Vec::new() });
+        ev.tid = ctx.tid;
+        ctx.buf.push(ev);
+    });
+}
+
+/// RAII span guard: records one complete event from construction to drop.
+/// Inactive (when tracing is off) it is a two-word no-op.
+pub struct Span {
+    name: &'static str,
+    cat: &'static str,
+    start_us: u64,
+    args: Option<Json>,
+    live: bool,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        let end = now_us();
+        record(Event {
+            name: self.name,
+            cat: self.cat,
+            ts_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+            tid: 0,
+            args: self.args.take(),
+            instant: false,
+        });
+    }
+}
+
+/// Open a span; hold the guard for the region's lifetime
+/// (`let _sp = trace::span(..)` — never `let _ =`, which drops at once).
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    if !on() {
+        return Span { name, cat, start_us: 0, args: None, live: false };
+    }
+    Span { name, cat, start_us: now_us(), args: None, live: true }
+}
+
+/// [`span`] with an args object; the closure runs only while tracing is
+/// on, so arg construction is free on the disabled path.
+#[inline]
+pub fn span_with(cat: &'static str, name: &'static str, args: impl FnOnce() -> Json) -> Span {
+    if !on() {
+        return Span { name, cat, start_us: 0, args: None, live: false };
+    }
+    Span { name, cat, start_us: now_us(), args: Some(args()), live: true }
+}
+
+/// Record a point event (cache hit, page eviction, accept/reject …).
+#[inline]
+pub fn instant(cat: &'static str, name: &'static str) {
+    if on() {
+        record(Event { name, cat, ts_us: now_us(), dur_us: 0, tid: 0, args: None, instant: true });
+    }
+}
+
+/// [`instant`] with an args object (closure evaluated only when on).
+#[inline]
+pub fn instant_with(cat: &'static str, name: &'static str, args: impl FnOnce() -> Json) {
+    if on() {
+        record(Event {
+            name,
+            cat,
+            ts_us: now_us(),
+            dur_us: 0,
+            tid: 0,
+            args: Some(args()),
+            instant: true,
+        });
+    }
+}
+
+/// Drain every recorded event: the exited-thread sink plus the calling
+/// thread's live buffer (the coordinator's — scoped workers have already
+/// drained through their TLS destructors by the time the caller is back).
+pub fn take_events() -> Vec<Event> {
+    let mut out = std::mem::take(&mut *SINK.lock().unwrap());
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow_mut().as_mut() {
+            out.append(&mut ctx.buf);
+        }
+    });
+    out
+}
+
+/// Write the Chrome trace-event file: a `traceEvents` array of `"X"`
+/// (complete) and `"i"` (instant) events plus one `thread_name` metadata
+/// row per tid, all under `pid` 1. Drains the recorded events.
+pub fn export(path: &str) -> std::io::Result<()> {
+    let mut events = take_events();
+    // stable render order: by row, then start, widest-first so a parent
+    // slice precedes the children it contains
+    events.sort_by_key(|e| (e.tid, e.ts_us, u64::MAX - e.dur_us));
+    let my_tid = CTX.with(|c| c.borrow().as_ref().map(|ctx| ctx.tid));
+    let mut rows: Vec<Json> = Vec::with_capacity(events.len() + 4);
+    let mut tids: Vec<u64> = events.iter().map(|e| e.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    for &tid in &tids {
+        // the exporting thread is the coordinator; everything else is a
+        // (recycled) pool-worker row
+        let name = if Some(tid) == my_tid { "main".to_string() } else { format!("worker-{tid}") };
+        rows.push(
+            Json::obj()
+                .set("ph", "M")
+                .set("name", "thread_name")
+                .set("pid", 1usize)
+                .set("tid", tid as usize)
+                .set("args", Json::obj().set("name", name)),
+        );
+    }
+    for e in events {
+        let mut o = Json::obj()
+            .set("name", e.name)
+            .set("cat", e.cat)
+            .set("ph", if e.instant { "i" } else { "X" })
+            .set("ts", e.ts_us as usize)
+            .set("pid", 1usize)
+            .set("tid", e.tid as usize);
+        if e.instant {
+            o = o.set("s", "t");
+        } else {
+            o = o.set("dur", e.dur_us as usize);
+        }
+        if let Some(a) = e.args {
+            o = o.set("args", a);
+        }
+        rows.push(o);
+    }
+    let root = Json::obj().set("traceEvents", Json::Arr(rows)).set("displayTimeUnit", "ms");
+    std::fs::write(path, root.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The tracer is process-global and cargo test is multi-threaded, so
+    // assertions filter by this test's own span names instead of assuming
+    // exclusive ownership of the sink.
+
+    #[test]
+    fn disabled_spans_record_nothing_under_their_names() {
+        let was_on = on();
+        {
+            let _sp = span("test", "trace_test_never_on");
+            instant("test", "trace_test_never_on_i");
+        }
+        // enabling is monotonic, so "off before and after" proves the
+        // tracer was off at both recording sites; a concurrent test may
+        // have enabled it mid-run, in which case there is nothing to check
+        let still_off = !on();
+        let evs = take_events();
+        if !was_on && still_off {
+            assert!(
+                evs.iter().all(|e| !e.name.starts_with("trace_test_never_on")),
+                "disabled tracer must not record"
+            );
+        }
+        // put unrelated concurrent events back for their own test/export
+        SINK.lock().unwrap().extend(evs);
+    }
+
+    #[test]
+    fn spans_nest_and_instants_mark() {
+        enable();
+        assert!(on());
+        {
+            let _outer = span_with("test", "trace_test_outer", || Json::obj().set("k", 3usize));
+            {
+                let _inner = span("test", "trace_test_inner");
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            instant("test", "trace_test_mark");
+        }
+        let evs = take_events();
+        let find = |n: &str| evs.iter().find(|e| e.name == n).cloned();
+        let outer = find("trace_test_outer").expect("outer recorded");
+        let inner = find("trace_test_inner").expect("inner recorded");
+        let mark = find("trace_test_mark").expect("instant recorded");
+        assert_eq!(outer.tid, inner.tid, "same thread, same row");
+        assert!(outer.ts_us <= inner.ts_us, "parent starts first");
+        assert!(
+            inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us,
+            "child interval nests inside the parent"
+        );
+        assert!(mark.instant && mark.dur_us == 0);
+        assert!(outer.args.is_some() && inner.args.is_none());
+        SINK.lock().unwrap().extend(evs);
+    }
+
+    #[test]
+    fn worker_buffers_drain_on_thread_exit_with_distinct_tids() {
+        enable();
+        crate::util::Pool::new(3).run(6, |i| {
+            let _sp = span("test", "trace_test_pool_task");
+            i
+        });
+        let evs = take_events();
+        let mine: Vec<&Event> =
+            evs.iter().filter(|e| e.name == "trace_test_pool_task").collect();
+        assert_eq!(mine.len(), 6, "every task span drained through the TLS destructor");
+        // same-tid events must not overlap: a tid lease is exclusive
+        // while its thread lives, and is only recycled after it exits
+        for a in &mine {
+            for b in &mine {
+                if !std::ptr::eq(*a, *b) && a.tid == b.tid {
+                    assert!(
+                        a.ts_us + a.dur_us <= b.ts_us || b.ts_us + b.dur_us <= a.ts_us,
+                        "same-row task spans overlap"
+                    );
+                }
+            }
+        }
+        SINK.lock().unwrap().extend(evs);
+    }
+
+    #[test]
+    fn export_writes_loadable_json() {
+        enable();
+        {
+            let _sp = span("test", "trace_test_export");
+        }
+        let dir = std::env::temp_dir().join(format!("rsq_trace_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        export(path.to_str().unwrap()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with('{') && body.ends_with('}'));
+        assert!(body.contains("\"traceEvents\""));
+        assert!(body.contains("trace_test_export"));
+        assert!(body.contains("thread_name"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

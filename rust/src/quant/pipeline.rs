@@ -29,6 +29,7 @@ use crate::model::fuse::fuse_gains;
 use crate::model::outliers::kurtosis_ratio;
 use crate::model::rotate::{rotate_params_with, rotation_matrix};
 use crate::model::ParamSet;
+use crate::obs::{metrics, trace};
 use crate::runtime::{self, Engine};
 use crate::tensor::kernels::Backend;
 use crate::tensor::pack::RowGrid;
@@ -251,6 +252,14 @@ pub struct QuantReport {
     pub packed_bytes: Option<u64>,
 }
 
+/// Record a Hessian-cache outcome (`hess_cache.hit` / `.miss` / `.skip`)
+/// as a trace instant plus a metrics counter of affected layers — pure
+/// observation next to the `QuantReport` counters (DESIGN.md §16).
+fn note_hess_cache(outcome: &'static str, layers: usize) {
+    trace::instant("quant", outcome);
+    metrics::add(outcome, layers as u64);
+}
+
 /// Quantize `params` with the given options; returns the quantized set and
 /// a report. `params` is cloned — the caller keeps the full-precision model.
 ///
@@ -319,7 +328,9 @@ pub fn quantize(
         // timed from here so rotate_seconds is pure kernel time, not
         // gain fusion or Hadamard construction
         let tr = Instant::now();
+        let sp = trace::span("quant", "quant.rotate");
         rotate_params_with(&mut p, &q, &pool, opts.backend);
+        drop(sp);
         report.rotate_seconds = tr.elapsed().as_secs_f64();
     }
     report.kurtosis_after = kurtosis_ratio(&p);
@@ -408,6 +419,7 @@ pub fn quantize(
         let hessians = match cached {
             Some(h) => {
                 report.hess_cache_hits = cfg.layers;
+                note_hess_cache("hess_cache.hit", cfg.layers);
                 h
             }
             None => {
@@ -422,18 +434,22 @@ pub fn quantize(
                 match &cache {
                     Some(c) => {
                         report.hess_cache_misses = cfg.layers;
+                        note_hess_cache("hess_cache.miss", cfg.layers);
                         if let Err(e) = c.store(&key, &computed) {
-                            eprintln!("[hess-cache] store failed (run unaffected): {e:#}");
+                            crate::obs_info!("[hess-cache] store failed (run unaffected): {e:#}");
                         }
                     }
-                    None => report.hess_cache_skips = cfg.layers,
+                    None => {
+                        report.hess_cache_skips = cfg.layers;
+                        note_hess_cache("hess_cache.skip", cfg.layers);
+                    }
                 }
                 computed
             }
         };
         let a = super::alloc::allocate(&p, &hessians, opts, needs_uniform, &pool, budget)?;
         if opts.verbose {
-            eprintln!(
+            crate::obs_info!(
                 "[alloc] {}: avg {:.3} bits, {} packed bytes",
                 a.budget, a.avg_bits, a.packed_bytes
             );
@@ -469,6 +485,7 @@ pub fn quantize(
         Some(hessians) => {
             // warm: pass A, pass B, and the embed sweep are all skipped
             report.hess_cache_hits = cfg.layers;
+            note_hess_cache("hess_cache.hit", cfg.layers);
             sched::run_layers_cached(&ctx, &mut p, &mut report, hessians)?;
         }
         None => {
@@ -476,11 +493,15 @@ pub fn quantize(
             match &cache {
                 Some(c) => {
                     report.hess_cache_misses = cfg.layers;
+                    note_hess_cache("hess_cache.miss", cfg.layers);
                     if let Err(e) = c.store(&key, &computed) {
-                        eprintln!("[hess-cache] store failed (run unaffected): {e:#}");
+                        crate::obs_info!("[hess-cache] store failed (run unaffected): {e:#}");
                     }
                 }
-                None => report.hess_cache_skips = cfg.layers,
+                None => {
+                    report.hess_cache_skips = cfg.layers;
+                    note_hess_cache("hess_cache.skip", cfg.layers);
+                }
             }
         }
     }

@@ -39,8 +39,10 @@ use anyhow::Result;
 
 use crate::model::config::ModelConfig;
 use crate::model::ParamSet;
+use crate::obs::{metrics, trace};
 use crate::runtime::{Engine, SharedLiteral};
 use crate::tensor::pack::RowGrid;
+use crate::util::json::Json;
 use crate::util::Pool;
 
 use super::artifact::cache::LayerHessians;
@@ -157,7 +159,9 @@ pub(crate) fn run_layers_cached(
     for (l, lh) in hessians.into_iter().enumerate() {
         let acc = passes::HessAccum::from_layer_hessians(lh);
         let ts = Instant::now();
+        let _sp = trace::span_with("quant", "sched.solve", || Json::obj().set("layer", l));
         let (errsum, grids) = solve::solve_layer(ctx, p, l, &acc)?;
+        drop(_sp);
         report.layer_timings.push(LayerTiming {
             solve_seconds: ts.elapsed().as_secs_f64(),
             ..Default::default()
@@ -180,13 +184,17 @@ fn staged(
         let mut lt = LayerTiming::default();
 
         let ta = Instant::now();
+        let sp_a = trace::span_with("quant", "sched.pass_a", || Json::obj().set("layer", l));
         let lp = passes::layer_literals(p, l)?;
         let acc = passes::pass_a(ctx, z, &lp)?;
+        drop(sp_a);
         lt.pass_a_seconds = ta.elapsed().as_secs_f64();
         drop(lp);
 
         let ts = Instant::now();
+        let sp_s = trace::span_with("quant", "sched.solve", || Json::obj().set("layer", l));
         let (errsum, grids) = solve::solve_layer(ctx, p, l, &acc)?;
+        drop(sp_s);
         lt.solve_seconds = ts.elapsed().as_secs_f64();
         finish_layer(ctx, report, l, errsum, grids);
         if ctx.collect_hessians {
@@ -197,8 +205,10 @@ fn staged(
         // (saves 1/L of the re-forward cost; DESIGN.md §7)
         if l + 1 < ctx.cfg.layers {
             let tb = Instant::now();
+            let sp_b = trace::span_with("quant", "sched.pass_b", || Json::obj().set("layer", l));
             let lp_q = passes::layer_literals(p, l)?;
             passes::pass_b(ctx, z, &lp_q)?;
+            drop(sp_b);
             lt.pass_b_seconds = tb.elapsed().as_secs_f64();
         }
         report.layer_timings.push(lt);
@@ -220,22 +230,29 @@ fn pipelined(
     let mut saved = Vec::new();
 
     let ta = Instant::now();
+    let sp_a = trace::span_with("quant", "sched.pass_a", || Json::obj().set("layer", 0usize));
     let lp0 = passes::layer_literals(p, 0)?;
     let mut acc = passes::pass_a(ctx, z, &lp0)?;
+    drop(sp_a);
     drop(lp0);
     timings[0].pass_a_seconds = ta.elapsed().as_secs_f64();
 
     for l in 0..layers {
         let ts = Instant::now();
+        let sp_s = trace::span_with("quant", "sched.solve", || Json::obj().set("layer", l));
         let (errsum, grids) = solve::solve_layer(ctx, p, l, &acc)?;
+        drop(sp_s);
         timings[l].solve_seconds = ts.elapsed().as_secs_f64();
         finish_layer(ctx, report, l, errsum, grids);
 
         if l + 1 < layers {
             let tf = Instant::now();
+            let sp_f =
+                trace::span_with("quant", "sched.fused_b_a", || Json::obj().set("layer", l));
             let lp_q = passes::layer_literals(p, l)?;
             let lp_next = passes::layer_literals(p, l + 1)?;
             let next = passes::fused_b_a(ctx, z, &lp_q, &lp_next)?;
+            drop(sp_f);
             timings[l].fused_seconds = tf.elapsed().as_secs_f64();
             let prev = std::mem::replace(&mut acc, next);
             if ctx.collect_hessians {
@@ -261,8 +278,13 @@ fn finish_layer(
 ) {
     report.layer_err.push(errsum);
     report.grids.extend(grids);
+    // the per-layer reconstruction error the metrics record carries —
+    // what layer-adaptive allocation consumes (LSAQ; DESIGN.md §16)
+    if metrics::on() {
+        metrics::gauge(&format!("quant.layer_err.l{l:03}"), errsum as f64);
+    }
     if ctx.opts.verbose {
-        eprintln!(
+        crate::obs_info!(
             "[quant:{}] layer {l}: hessian-weighted err {errsum:.3}",
             ctx.opts.method.name()
         );

@@ -15,8 +15,10 @@ use anyhow::Result;
 
 use crate::model::config::InputStream;
 use crate::model::ParamSet;
+use crate::obs::{metrics, trace};
 use crate::runtime::{self, SharedLiteral};
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 
 use crate::quant::artifact::cache::LayerHessians;
 use crate::quant::strategy::{LayerScores, Strategy};
@@ -143,6 +145,7 @@ fn layer_fwd(ctx: &SchedCtx, z: &xla::Literal, lp: &[SharedLiteral]) -> Result<V
 /// capture stream via the L1 Pallas kernel. Runs inside a worker task.
 fn batch_hessians(ctx: &SchedCtx, bi: usize, outs: &[xla::Literal]) -> Result<BatchHessians> {
     let t = ctx.opts.seq_len;
+    let _sp = trace::span_with("quant", "sched.batch_hessians", || Json::obj().set("batch", bi));
     // outs: z2, xa, xo, xf, xd, attn_con, act_norm, act_diff, token_sim
     let scores = LayerScores {
         attn_con: rows_of(&runtime::literal_tensor(&outs[5])?),
@@ -150,6 +153,15 @@ fn batch_hessians(ctx: &SchedCtx, bi: usize, outs: &[xla::Literal]) -> Result<Ba
         act_diff: rows_of(&runtime::literal_tensor(&outs[7])?),
         token_sim: rows_of(&runtime::literal_tensor(&outs[8])?),
     };
+    // the paper's per-token attention-concentration measurement (RSQ
+    // §3), summarized into the metrics record as a ×1e6 fixed-point
+    // distribution instead of being computed and thrown away
+    if metrics::on() {
+        metrics::hist_many(
+            "quant.attn_con_x1e6",
+            scores.attn_con.iter().flatten().map(|&x| (f64::from(x.max(0.0)) * 1e6) as u64),
+        );
+    }
     let strategy = if ctx.opts.method.scales() { ctx.opts.strategy } else { Strategy::Uniform };
     let batch = ctx.batches[bi];
     let r = strategy.importance(

@@ -12,10 +12,12 @@ use anyhow::Result;
 
 use crate::model::config::{ModelConfig, Module};
 use crate::model::ParamSet;
+use crate::obs::trace;
 use crate::quantref;
 use crate::runtime::{self, Engine};
 use crate::tensor::pack::RowGrid;
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use crate::util::Pool;
 
 use crate::quant::pipeline::QuantOptions;
@@ -38,6 +40,9 @@ pub(crate) fn solve_layer(
     let opts = ctx.opts;
     let solved = ctx.pool.run(Module::ALL.len(), |mi| -> Result<(Tensor, f32, Option<RowGrid>)> {
         let m = Module::ALL[mi];
+        let _sp = trace::span_with("quant", "sched.solve_module", || {
+            Json::obj().set("layer", l).set("module", format!("{m:?}"))
+        });
         let scaled = match &opts.module_mask {
             Some(mask) => opts.method.scales() && mask.contains(&m),
             None => opts.method.scales(),

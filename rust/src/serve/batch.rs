@@ -64,6 +64,9 @@ use super::kvq::KvFormat;
 use super::model::{Decoder, PackedModel};
 use super::prefix::PrefixCache;
 use crate::eval::argmax;
+use crate::obs::metrics::{self, Hist};
+use crate::obs::trace;
+use crate::util::json::Json;
 use crate::util::Pool;
 
 /// One generation request.
@@ -189,6 +192,20 @@ pub struct ServeReport {
     pub draft_accepted: usize,
     /// `draft_accepted / draft_proposed` (0 when nothing was proposed)
     pub draft_accept_rate: f64,
+    /// requests retired past their wall-clock budget — the aggregate of
+    /// the per-request [`RequestStats::deadline_missed`] flags
+    pub deadline_missed: usize,
+    /// admission → first-token latency percentiles over every request
+    /// that produced a token, seconds (0 when none did)
+    pub ttft_p50_s: f64,
+    pub ttft_p95_s: f64,
+    pub ttft_p99_s: f64,
+    /// per-token inter-arrival percentiles, seconds: each ≥2-token
+    /// request contributes its mean `(wall − ttft) / (generated − 1)`
+    /// (0 when no request generated a second token)
+    pub itl_p50_s: f64,
+    pub itl_p95_s: f64,
+    pub itl_p99_s: f64,
 }
 
 /// One in-flight sequence.
@@ -227,6 +244,8 @@ impl<'m> Active<'m> {
             if self.admitted_at.elapsed().as_secs_f64() > deadline {
                 self.deadline_missed = true;
                 self.done = true;
+                trace::instant("serve", "serve.deadline_missed");
+                metrics::add("serve.deadline_missed", 1);
                 return;
             }
         }
@@ -312,6 +331,11 @@ impl<'m> Active<'m> {
         }
         // every emitted token after the first certified one proposal
         self.draft_accepted += emitted - 1;
+        trace::instant_with("serve", "spec.window", || {
+            Json::obj().set("proposed", k - 1).set("accepted", emitted - 1)
+        });
+        metrics::add("spec.proposed", (k - 1) as u64);
+        metrics::add("spec.accepted", (emitted - 1) as u64);
         // rewind to the canonical consumed length; rejected positions'
         // KV rows are overwritten by later writes
         self.decoder.truncate(t + emitted);
@@ -449,6 +473,9 @@ pub fn serve_with_draft(
     let mut peak_active = 0usize;
     let mut kv_peak_pages = 0usize;
     while !pending.is_empty() || !active.is_empty() {
+        let _step_sp = trace::span_with("serve", "serve.step", || {
+            Json::obj().set("step", steps).set("active", active.len())
+        });
         // admit while a slot and a full KV reservation are available;
         // admission pressure evicts prefix-cache entries oldest-first
         // before giving up, so cached pages can never starve admissions
@@ -511,6 +538,15 @@ pub fn serve_with_draft(
             };
             if let Some(c) = tcache.as_mut() {
                 c.record((covered > 0).then_some(covered));
+                if covered > 0 {
+                    trace::instant_with("serve", "prefix.hit", || {
+                        Json::obj().set("covered", covered)
+                    });
+                    metrics::add("prefix.hits", 1);
+                } else {
+                    trace::instant("serve", "prefix.miss");
+                    metrics::add("prefix.misses", 1);
+                }
             }
             let req = pending.pop_front().expect("front() was Some");
             active.push(Mutex::new(Active {
@@ -597,6 +633,21 @@ pub fn serve_with_draft(
     let hit_rate = tcache.as_ref().map_or(0.0, |c| c.hit_rate());
     let draft_proposed: usize = done.iter().map(|r| r.draft_proposed).sum();
     let draft_accepted: usize = done.iter().map(|r| r.draft_accepted).sum();
+    let deadline_missed = done.iter().filter(|r| r.deadline_missed).count();
+    // latency percentiles from the per-request stats, through the log2
+    // histogram at µs resolution (DESIGN.md §16)
+    let mut ttft_h = Hist::new();
+    let mut itl_h = Hist::new();
+    for r in &done {
+        if let Some(t) = r.ttft_s {
+            ttft_h.record((t * 1e6) as u64);
+            if r.generated.len() > 1 {
+                let per_tok = (r.wall_s - t).max(0.0) / (r.generated.len() - 1) as f64;
+                itl_h.record((per_tok * 1e6) as u64);
+            }
+        }
+    }
+    let secs = |h: &Hist, p: f64| h.percentile(p) as f64 / 1e6;
     Ok(ServeReport {
         steps,
         peak_active,
@@ -620,6 +671,13 @@ pub fn serve_with_draft(
         } else {
             draft_accepted as f64 / draft_proposed as f64
         },
+        deadline_missed,
+        ttft_p50_s: secs(&ttft_h, 50.0),
+        ttft_p95_s: secs(&ttft_h, 95.0),
+        ttft_p99_s: secs(&ttft_h, 99.0),
+        itl_p50_s: secs(&itl_h, 50.0),
+        itl_p95_s: secs(&itl_h, 95.0),
+        itl_p99_s: secs(&itl_h, 99.0),
         requests: done,
     })
 }
@@ -802,6 +860,43 @@ mod tests {
         assert!(rep.requests[0].deadline_missed);
         assert!(rep.requests[0].generated.is_empty());
         assert_eq!(rep.requests[0].ttft_s, None);
+        assert_eq!(rep.deadline_missed, 1, "aggregate mirrors the per-request flag");
+        assert_eq!(rep.ttft_p99_s, 0.0, "no first token, no TTFT sample");
+    }
+
+    #[test]
+    fn report_aggregates_deadlines_and_latency_percentiles() {
+        let m = model();
+        let pool = Pool::new(2);
+        let rep = serve(&m, &pool, reqs(5), &ServeOptions::default()).unwrap();
+        assert_eq!(rep.deadline_missed, 0);
+        // percentile order is a Hist invariant; absolute values are
+        // wall-clock and stay unasserted
+        assert!(rep.ttft_p50_s <= rep.ttft_p95_s && rep.ttft_p95_s <= rep.ttft_p99_s);
+        assert!(rep.itl_p50_s <= rep.itl_p95_s && rep.itl_p95_s <= rep.itl_p99_s);
+        assert!(rep.ttft_p50_s >= 0.0 && rep.itl_p50_s >= 0.0);
+    }
+
+    #[test]
+    fn tracing_on_never_changes_served_tokens() {
+        // the §16 binding contract, serve side: enabling the tracer and
+        // the metrics registry must not change one generated token, at
+        // batch {1, 4} × kv-bits {32, 8}
+        let m = model();
+        let pool = Pool::new(2);
+        let combos =
+            [(1usize, KvFormat::F32), (4, KvFormat::F32), (1, KvFormat::Linear8), (4, KvFormat::Linear8)];
+        let run = |mb: usize, kv: KvFormat| -> Vec<Vec<i32>> {
+            let opts = ServeOptions { max_batch: mb, kv, ..Default::default() };
+            let rep = serve(&m, &pool, reqs(4), &opts).unwrap();
+            rep.requests.into_iter().map(|r| r.generated).collect()
+        };
+        let baseline: Vec<_> = combos.iter().map(|&(mb, kv)| run(mb, kv)).collect();
+        crate::obs::trace::enable();
+        metrics::enable();
+        for (&(mb, kv), want) in combos.iter().zip(&baseline) {
+            assert_eq!(&run(mb, kv), want, "batch={mb} kv={kv:?}: tracing flipped a token");
+        }
     }
 
     #[test]

@@ -59,6 +59,8 @@
 use std::sync::{Arc, Mutex};
 
 use super::kvq::{decode_row, encode_row, KvFormat, RowSource};
+use crate::obs::{metrics, trace};
+use crate::util::json::Json;
 
 /// Positions per page: small enough that short sequences waste little
 /// capacity, large enough that page tables stay tiny.
@@ -285,6 +287,8 @@ impl PagePool {
         let needed = self.layers * per_layer;
         let mut free = self.free.lock().unwrap();
         if free.len() < needed {
+            trace::instant_with("serve", "kv.defer", || Json::obj().set("pages", needed));
+            metrics::add("kv.alloc_deferred", 1);
             return None;
         }
         let mut layers = Vec::with_capacity(self.layers);
@@ -292,6 +296,8 @@ impl PagePool {
             let pages = free.split_off(free.len() - per_layer);
             layers.push(pages.into_iter().map(SeqPage::Owned).collect());
         }
+        trace::instant_with("serve", "kv.alloc", || Json::obj().set("pages", needed));
+        metrics::add("kv.pages_allocated", needed as u64);
         Some(SeqKv { fmt: self.fmt, d: self.d, page: self.page, layers, spares: Vec::new() })
     }
 
@@ -320,8 +326,15 @@ impl PagePool {
         let needed = self.layers * own_per_layer + cow_spares * self.layers;
         let mut free = self.free.lock().unwrap();
         if free.len() < needed {
+            trace::instant_with("serve", "kv.defer", || Json::obj().set("pages", needed));
+            metrics::add("kv.alloc_deferred", 1);
             return None;
         }
+        trace::instant_with("serve", "kv.adopt", || {
+            Json::obj().set("pages", needed).set("shared", shared * self.layers)
+        });
+        metrics::add("kv.pages_allocated", needed as u64);
+        metrics::add("kv.pages_adopted", (shared * self.layers) as u64);
         let mut layers = Vec::with_capacity(self.layers);
         for l in 0..self.layers {
             let mut slots: Vec<SeqPage> =
@@ -344,6 +357,8 @@ impl PagePool {
     /// (another sequence, or the prefix cache via [`PagePool::reclaim`])
     /// returns it. Each physical page is pushed exactly once, ever.
     pub fn release(&self, seq: SeqKv) {
+        trace::instant("serve", "kv.release");
+        metrics::add("kv.releases", 1);
         let mut free = self.free.lock().unwrap();
         for slots in seq.layers {
             for slot in slots {
@@ -364,6 +379,8 @@ impl PagePool {
     /// any page no sequence still shares (cache eviction; see
     /// [`PagePool::release`] for the refcount rule).
     pub fn reclaim(&self, prefix: SharedPrefix) {
+        trace::instant("serve", "kv.reclaim");
+        metrics::add("kv.reclaims", 1);
         let mut free = self.free.lock().unwrap();
         for pages in prefix.pages {
             for arc in pages {

@@ -35,6 +35,7 @@ use super::kvq::{KvFormat, RowSource};
 use crate::eval::argmax;
 use crate::model::config::ModelConfig;
 use crate::model::ParamSet;
+use crate::obs::trace;
 use crate::quant::artifact::{self, ArtifactManifest, Blob};
 use crate::quantref;
 use crate::runtime::manifest::config_to_kv;
@@ -42,6 +43,7 @@ use crate::tensor::kernels::Backend;
 use crate::tensor::pack::{PackedRows, RowGrid, PACK_BITS};
 use crate::tensor::Tensor;
 use crate::util::hash::{Fnv1a64, FNV_BASIS};
+use crate::util::json::Json;
 use crate::util::Pool;
 
 /// RMSNorm epsilon — must match python/compile/model.py.
@@ -642,6 +644,8 @@ impl<'m> Decoder<'m> {
     /// log-probabilities — O(t) attention against the KV cache instead of
     /// a full-context recompute.
     pub fn step(&mut self, token: i32, pool: Option<&Pool>) -> Vec<f32> {
+        let pos = self.t;
+        let _sp = trace::span_with("serve", "serve.decode", || Json::obj().set("pos", pos));
         self.advance_pos(token, pool, true).expect("logits requested")
     }
 
@@ -653,6 +657,8 @@ impl<'m> Decoder<'m> {
     ///
     /// [`step`]: Decoder::step
     pub fn prefill(&mut self, token: i32, pool: Option<&Pool>) {
+        let pos = self.t;
+        let _sp = trace::span_with("serve", "serve.prefill", || Json::obj().set("pos", pos));
         let _ = self.advance_pos(token, pool, false);
     }
 
@@ -727,6 +733,9 @@ impl<'m> Decoder<'m> {
             let lp = self.step(tokens[0], pool);
             return Tensor::from_vec(&[1, lp.len()], lp);
         }
+        let _sp = trace::span_with("serve", "serve.verify", || {
+            Json::obj().set("pos", t0).set("n", n)
+        });
         let model = self.model;
         let cfg = &model.cfg;
         let (d, heads, hd) = (cfg.d, cfg.heads, cfg.head_dim());

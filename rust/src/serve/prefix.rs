@@ -31,6 +31,7 @@
 use std::collections::{HashMap, VecDeque};
 
 use super::kv::{PagePool, SharedPrefix};
+use crate::obs::{metrics, trace};
 use crate::util::hash::{Fnv1a64, FNV_BASIS};
 
 /// Bump when the key derivation below changes shape.
@@ -180,6 +181,8 @@ impl PrefixCache {
     pub fn evict_oldest(&mut self, pool: &PagePool) -> bool {
         let Some(key) = self.order.pop_front() else { return false };
         let e = self.entries.remove(&key).expect("order and entries stay in sync");
+        trace::instant("serve", "prefix.evict");
+        metrics::add("prefix.evictions", 1);
         pool.reclaim(e.prefix);
         true
     }

@@ -25,11 +25,24 @@
 //! every spelling degrades to the oracle, so reports record the
 //! *resolved* backend name, never the flag spelling.
 
+use crate::obs::trace;
 use crate::tensor::pack::PackedRows;
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use crate::util::Pool;
 
 use super::{gemm, gemv, simd};
+
+/// Shape-tagged span for a simd-dispatched kernel call (the reference
+/// free functions carry their own `backend: "reference"` spans; when a
+/// simd entry point falls back to them off-AVX2, the nested reference
+/// span documents the fallback).
+#[inline]
+fn simd_span(name: &'static str, m: usize, k: usize, n: usize) -> trace::Span {
+    trace::span_with("kernel", name, || {
+        Json::obj().set("m", m).set("k", k).set("n", n).set("backend", "simd")
+    })
+}
 
 /// The kernel entry points a backend must provide: the GEMM family, the
 /// fused dequantize kernels, and the dot/AXPY primitives the serving
@@ -129,24 +142,31 @@ impl KernelBackend for SimdKernels {
         "simd"
     }
     fn gemm(&self, a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+        let _sp = simd_span("kernel.gemm", a.rows(), a.cols(), b.cols());
         simd::gemm(a, b, pool)
     }
     fn gemm_at(&self, a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+        let _sp = simd_span("kernel.gemm_at", a.cols(), a.rows(), b.cols());
         simd::gemm_at(a, b, pool)
     }
     fn gemm_bt(&self, a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
+        let _sp = simd_span("kernel.gemm_bt", a.rows(), a.cols(), b.rows());
         simd::gemm_bt(a, b, pool)
     }
     fn syrk(&self, a: &Tensor, pool: Option<&Pool>) -> Tensor {
+        let _sp = simd_span("kernel.syrk", a.rows(), a.cols(), a.rows());
         simd::syrk(a, pool)
     }
     fn syrk_t(&self, a: &Tensor, pool: Option<&Pool>) -> Tensor {
+        let _sp = simd_span("kernel.syrk_t", a.cols(), a.rows(), a.cols());
         simd::syrk_t(a, pool)
     }
     fn deq_gemm_bt(&self, a: &Tensor, w: &PackedRows, pool: Option<&Pool>) -> Tensor {
+        let _sp = simd_span("kernel.deq_gemm_bt", a.rows(), a.cols(), w.rows);
         simd::deq_gemm_bt(a, w, pool)
     }
     fn deq_gemv(&self, x: &[f32], w: &PackedRows, pool: Option<&Pool>) -> Vec<f32> {
+        let _sp = simd_span("kernel.deq_gemv", 1, x.len(), w.rows);
         simd::deq_gemv(x, w, pool)
     }
     fn dot(&self, a: &[f32], b: &[f32]) -> f32 {

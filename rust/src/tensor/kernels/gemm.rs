@@ -6,7 +6,9 @@
 //! through [`par_rows_into`] straight into the output buffer, so the
 //! dispatch spine allocates per row *block* at most, never per row.
 
+use crate::obs::trace;
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use crate::util::Pool;
 
 use super::par_rows_into;
@@ -47,6 +49,9 @@ pub fn gemm(a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2, "gemm inner dim: {k} vs {k2}");
+    let _sp = trace::span_with("kernel", "kernel.gemm", || {
+        Json::obj().set("m", m).set("k", k).set("n", n).set("backend", "reference")
+    });
     let mut out = Tensor::zeros(&[m, n]);
     let span = |i: usize| i * n..(i + 1) * n;
     par_rows_into(pool, m, m * k * n, &mut out.data, span, |i, row| {
@@ -63,6 +68,9 @@ pub fn gemm_at(a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
     let (k, m) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2, "gemm_at inner dim: {k} vs {k2}");
+    let _sp = trace::span_with("kernel", "kernel.gemm_at", || {
+        Json::obj().set("m", m).set("k", k).set("n", n).set("backend", "reference")
+    });
     let mut out = Tensor::zeros(&[m, n]);
     let span = |i: usize| i * n..(i + 1) * n;
     par_rows_into(pool, m, m * k * n, &mut out.data, span, |i, row| {
@@ -96,6 +104,9 @@ pub fn gemm_bt(a: &Tensor, b: &Tensor, pool: Option<&Pool>) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (n, k2) = (b.rows(), b.cols());
     assert_eq!(k, k2, "gemm_bt inner dim: {k} vs {k2}");
+    let _sp = trace::span_with("kernel", "kernel.gemm_bt", || {
+        Json::obj().set("m", m).set("k", k).set("n", n).set("backend", "reference")
+    });
     let mut out = Tensor::zeros(&[m, n]);
     let span = |i: usize| i * n..(i + 1) * n;
     par_rows_into(pool, m, m * k * n, &mut out.data, span, |i, row| {
@@ -124,6 +135,9 @@ pub(super) fn mirror_upper(t: &mut Tensor) {
 /// ±0.0 that cannot move a +0.0-seeded accumulator).
 pub fn syrk(a: &Tensor, pool: Option<&Pool>) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
+    let _sp = trace::span_with("kernel", "kernel.syrk", || {
+        Json::obj().set("m", m).set("k", k).set("backend", "reference")
+    });
     let mut out = Tensor::zeros(&[m, m]);
     let span = |i: usize| i * m..i * m + i + 1;
     par_rows_into(pool, m, m * m * k / 2, &mut out.data, span, |i, row| {
@@ -139,6 +153,9 @@ pub fn syrk(a: &Tensor, pool: Option<&Pool>) -> Tensor {
 /// contract as [`syrk`].
 pub fn syrk_t(a: &Tensor, pool: Option<&Pool>) -> Tensor {
     let (k, m) = (a.rows(), a.cols());
+    let _sp = trace::span_with("kernel", "kernel.syrk_t", || {
+        Json::obj().set("m", m).set("k", k).set("backend", "reference")
+    });
     let mut out = Tensor::zeros(&[m, m]);
     let span = |i: usize| i * m..i * m + i + 1;
     par_rows_into(pool, m, m * m * k / 2, &mut out.data, span, |i, row| {

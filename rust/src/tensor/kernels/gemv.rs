@@ -19,8 +19,10 @@
 //! count. `tests/prop_serve.rs` asserts exact equality, not tolerance,
 //! across bit widths, ragged shapes, and jobs ∈ {1, 4}.
 
+use crate::obs::trace;
 use crate::tensor::pack::PackedRows;
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use crate::util::Pool;
 
 use super::{par_rows, pooled, ROW_BLOCK};
@@ -63,6 +65,9 @@ pub fn deq_gemm_bt(a: &Tensor, w: &PackedRows, pool: Option<&Pool>) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     assert_eq!(w.cols, k, "deq_gemm_bt inner dim: {k} vs {}", w.cols);
     let n = w.rows;
+    let _sp = trace::span_with("kernel", "kernel.deq_gemm_bt", || {
+        Json::obj().set("m", m).set("k", k).set("n", n).set("backend", "reference")
+    });
     let cols = par_rows(pool, n, m * k * n, |j| column(&a.data, m, k, w, j));
     let mut out = Tensor::zeros(&[m, n]);
     for (j, col) in cols.into_iter().enumerate() {
@@ -108,6 +113,9 @@ fn dot_row(x: &[f32], w: &PackedRows, j: usize, buf: &mut [f32; DEQ_TILE]) -> f3
 pub fn deq_gemv(x: &[f32], w: &PackedRows, pool: Option<&Pool>) -> Vec<f32> {
     assert_eq!(x.len(), w.cols, "deq_gemv inner dim: {} vs {}", x.len(), w.cols);
     let n = w.rows;
+    let _sp = trace::span_with("kernel", "kernel.deq_gemv", || {
+        Json::obj().set("k", w.cols).set("n", n).set("backend", "reference")
+    });
     let block = |lo: usize, hi: usize| -> Vec<f32> {
         let mut out = Vec::with_capacity(hi - lo);
         let mut buf = [0.0f32; DEQ_TILE];

@@ -22,6 +22,8 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::obs::{metrics, trace};
+
 /// Worker-pool handle. Cheap to construct; threads are scoped to each
 /// [`Pool::run`] call, so an idle `Pool` holds no OS resources.
 #[derive(Clone, Copy, Debug)]
@@ -61,20 +63,66 @@ impl Pool {
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
+        // observation only: spans/metrics wrap the same `f(i)` calls in
+        // the same order, so instrumented and bare paths return
+        // bit-identical results (DESIGN.md §16)
+        let obs_on = trace::on() || metrics::on();
         if self.jobs <= 1 || n <= 1 {
-            return (0..n).map(f).collect();
+            if !obs_on {
+                return (0..n).map(f).collect();
+            }
+            return (0..n)
+                .map(|i| {
+                    let _sp = trace::span("pool", "pool.task");
+                    let t0 = trace::now_us();
+                    let v = f(i);
+                    metrics::hist("pool.task_run_us", trace::now_us().saturating_sub(t0));
+                    v
+                })
+                .collect();
         }
         let next = AtomicUsize::new(0);
         let done = Mutex::new(Vec::with_capacity(n));
+        let t_dispatch = if obs_on { trace::now_us() } else { 0 };
         std::thread::scope(|s| {
             for _ in 0..self.jobs.min(n) {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
+                s.spawn(|| {
+                    let _worker_sp = obs_on.then(|| trace::span("pool", "pool.worker"));
+                    let mut busy = 0u64;
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        if obs_on {
+                            let t_claim = trace::now_us();
+                            metrics::hist(
+                                "pool.task_wait_us",
+                                t_claim.saturating_sub(t_dispatch),
+                            );
+                            let v = {
+                                let _sp = trace::span("pool", "pool.task");
+                                f(i)
+                            };
+                            let dt = trace::now_us().saturating_sub(t_claim);
+                            busy += dt;
+                            metrics::hist("pool.task_run_us", dt);
+                            done.lock().unwrap().push((i, v));
+                        } else {
+                            let v = f(i);
+                            done.lock().unwrap().push((i, v));
+                        }
                     }
-                    let v = f(i);
-                    done.lock().unwrap().push((i, v));
+                    if obs_on {
+                        // per-worker utilization = busy_us / alive_us,
+                        // aggregated across all scoped workers
+                        metrics::add("pool.worker_busy_us", busy);
+                        metrics::add(
+                            "pool.worker_alive_us",
+                            trace::now_us().saturating_sub(t_dispatch).max(1),
+                        );
+                        metrics::add("pool.workers", 1);
+                    }
                 });
             }
         });

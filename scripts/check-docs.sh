@@ -230,7 +230,30 @@ if [ -f rust/src/serve/prefix.rs ]; then
     done
 fi
 
-[ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler/artifact/kernel/serve/backend/alloc/prefix docs OK"
+# The observability subsystem: if rust/src/obs exists, §16 must document
+# the span tracer and its Chrome trace-event export, the metrics
+# registry with its log2 histograms, the CLI flags, the log facade, the
+# validator, and the zero-bit-drift contract the trace smokes pin.
+# Needles are grepped inside the §16 body only, same scoping rationale
+# as §9; `grep -qi --` so dash-leading needles are not parsed as options.
+if [ -d rust/src/obs ]; then
+    if ! grep -qE "^## 16\." DESIGN.md; then
+        echo "check-docs: FAIL — rust/src/obs exists but DESIGN.md has no '## 16.' section" >&2
+        fail=1
+    fi
+    sec16=$(awk '/^## 16\./{f=1; print; next} /^## /{f=0} f' DESIGN.md)
+    for needle in "obs/trace" "obs/metrics" "--trace" "--metrics" \
+                  "Chrome trace-event" "thread_name" "tid" "thread_local" \
+                  "log2" "percentile" "byte-identical" "obs_info" \
+                  "obs_debug" "validate_trace" "deadline_missed"; do
+        if ! grep -qi -- "${needle}" <<< "${sec16}"; then
+            echo "check-docs: FAIL — DESIGN.md §16 never mentions \"${needle}\" (observability contract drift)" >&2
+            fail=1
+        fi
+    done
+fi
+
+[ "$fail" -eq 0 ] && echo "check-docs: required sections + scheduler/artifact/kernel/serve/backend/alloc/prefix/obs docs OK"
 
 # --- 3+4. rustdoc + rustfmt ------------------------------------------------
 if [ "${CHECK_DOCS_SKIP_CARGO:-0}" = "1" ]; then

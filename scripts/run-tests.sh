@@ -254,6 +254,52 @@ fi
 rm -f "${px_log}"
 echo "run-tests: prefix smoke OK (${px_hits} hit(s), stdout identical to cold)"
 
+# Trace smoke (DESIGN.md §16): the same golden-fixture decode with
+# --trace/--metrics must keep stdout BYTE-IDENTICAL to the untraced run
+# — the binding contract that observability changes zero output bits —
+# and the exported files must pass the toolchain-free validator,
+# required span names included.
+echo "run-tests: trace smoke (rsq generate --trace/--metrics)"
+tr_log="$(mktemp)"
+tr_tmp="$(mktemp -d)"
+tr_smoke() {
+    cargo run --release --quiet -- generate \
+        --artifact tests/data/artifact_ok --prompt 1,2 --max-new 5 \
+        --jobs 2 --backend "${backend}" "$@" 2>"${tr_log}"
+}
+tr_plain="$(tr_smoke)" || {
+    echo "run-tests: FAIL — trace smoke untraced run exited non-zero:" >&2
+    cat "${tr_log}" >&2
+    exit 1
+}
+tr_on="$(tr_smoke --trace "${tr_tmp}/trace.json" --metrics "${tr_tmp}/metrics.json")" || {
+    echo "run-tests: FAIL — trace smoke traced run exited non-zero:" >&2
+    cat "${tr_log}" >&2
+    exit 1
+}
+rm -f "${tr_log}"
+if [ "${tr_plain}" != "${tr_on}" ]; then
+    echo "run-tests: FAIL — --trace/--metrics changed stdout:" >&2
+    printf 'untraced:\n%s\ntraced:\n%s\n' "${tr_plain}" "${tr_on}" >&2
+    exit 1
+fi
+if [ ! -s "${tr_tmp}/trace.json" ] || [ ! -s "${tr_tmp}/metrics.json" ]; then
+    echo "run-tests: FAIL — traced run wrote no trace/metrics files" >&2
+    exit 1
+fi
+if command -v python3 >/dev/null 2>&1; then
+    python3 ../scripts/validate_trace.py \
+        --trace "${tr_tmp}/trace.json" --metrics "${tr_tmp}/metrics.json" \
+        --require serve.prefill --require serve.decode --require pool.task || {
+        echo "run-tests: FAIL — trace/metrics files failed validation" >&2
+        exit 1
+    }
+else
+    echo "run-tests: NOTE — python3 not available, skipping trace validation" >&2
+fi
+rm -rf "${tr_tmp}"
+echo "run-tests: trace smoke OK (stdout identical, files validated)"
+
 # Mixed-precision smoke (DESIGN.md §14): quantize the tiny config under
 # --avg-bits 3.0, assert the achieved average respects the budget, and
 # assert `rsq eval --artifact` on the resulting mixed-width artifact is
@@ -313,5 +359,49 @@ if [ -d "${tiny_dir}" ]; then
     echo "run-tests: mixed-precision smoke OK (avg ${avg} <= 3.0, eval deterministic)"
 else
     echo "run-tests: NOTE — ${tiny_dir} absent (run \`make artifacts\`), skipping mixed-precision smoke" >&2
+fi
+
+# Quantize trace smoke (DESIGN.md §16): a full tiny quantization under
+# --trace/--metrics must cover the scheduler phases, and its stdout must
+# match an untraced run once the wall-timing line (nondeterministic
+# across ANY two runs) is filtered out. Gated on the AOT artifact set
+# like the mixed-precision smoke above.
+if [ -d "${tiny_dir}" ]; then
+    echo "run-tests: quantize trace smoke (rsq quantize --trace/--metrics)"
+    qt_log="$(mktemp)"
+    qt_tmp="$(mktemp -d)"
+    qt_smoke() {
+        cargo run --release --quiet -- quantize \
+            --config tiny --calib-n 4 --calib-t 64 --jobs 2 \
+            --hess-cache off --backend "${backend}" "$@" 2>"${qt_log}"
+    }
+    qt_plain="$(qt_smoke)" || {
+        echo "run-tests: FAIL — quantize trace smoke untraced run exited non-zero:" >&2
+        cat "${qt_log}" >&2
+        exit 1
+    }
+    qt_on="$(qt_smoke --trace "${qt_tmp}/trace.json" --metrics "${qt_tmp}/metrics.json")" || {
+        echo "run-tests: FAIL — quantize trace smoke traced run exited non-zero:" >&2
+        cat "${qt_log}" >&2
+        exit 1
+    }
+    rm -f "${qt_log}"
+    if [ "$(grep -v '^wall' <<< "${qt_plain}")" != "$(grep -v '^wall' <<< "${qt_on}")" ]; then
+        echo "run-tests: FAIL — --trace/--metrics changed quantize stdout:" >&2
+        printf 'untraced:\n%s\ntraced:\n%s\n' "${qt_plain}" "${qt_on}" >&2
+        exit 1
+    fi
+    if command -v python3 >/dev/null 2>&1; then
+        python3 ../scripts/validate_trace.py \
+            --trace "${qt_tmp}/trace.json" --metrics "${qt_tmp}/metrics.json" \
+            --require sched.solve_module --require quant.rotate --require pool.task || {
+            echo "run-tests: FAIL — quantize trace/metrics files failed validation" >&2
+            exit 1
+        }
+    fi
+    rm -rf "${qt_tmp}"
+    echo "run-tests: quantize trace smoke OK (stdout identical, scheduler spans present)"
+else
+    echo "run-tests: NOTE — ${tiny_dir} absent, skipping quantize trace smoke" >&2
 fi
 echo "run-tests: OK"

@@ -1,0 +1,175 @@
+#!/usr/bin/env python3
+"""Validate `rsq --trace` / `rsq --metrics` output (DESIGN.md §16).
+
+Stdlib-only on purpose: CI's trace smoke (scripts/run-tests.sh) runs this
+on the files a traced `rsq generate` run writes, so it must work on any
+host with a bare python3 — no rust toolchain, no third-party packages.
+
+Trace files are Chrome trace-event JSON: a root object whose
+``traceEvents`` array holds complete spans (``ph: "X"``), instants
+(``ph: "i"``) and ``thread_name`` metadata rows (``ph: "M"``), all under
+``pid`` 1. The exporter sorts events by ``(tid, ts)``, so timestamps are
+checked monotone **per tid**. Metrics files are the run record
+``{cmd, counters, gauges, hists}`` with per-histogram summaries whose
+percentiles must be ordered.
+
+Usage:
+    validate_trace.py --trace t.json [--require sched.pass_a ...]
+    validate_trace.py --metrics m.json
+    validate_trace.py --trace t.json --metrics m.json
+
+Exit status 0 when every check passes, 1 otherwise (problems on stderr).
+"""
+
+import argparse
+import json
+import sys
+
+#: phases the exporter emits; anything else is a malformed row
+KNOWN_PHASES = ("X", "i", "M")
+
+#: per-histogram summary fields the metrics record must carry
+HIST_FIELDS = ("count", "min", "max", "mean", "p50", "p90", "p95", "p99")
+
+
+def _num(v):
+    """True for a JSON number (bool is int in python — excluded)."""
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def validate_trace(doc, require=()):
+    """Return a list of problems with a parsed Chrome trace document."""
+    errs = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["trace root must be an object with a 'traceEvents' array"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["'traceEvents' is not an array"]
+    names = set()
+    event_tids = set()
+    named_tids = set()
+    last_ts = {}
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            errs.append(f"event {i}: not an object")
+            continue
+        ph = e.get("ph")
+        if ph not in KNOWN_PHASES:
+            errs.append(f"event {i}: unexpected ph {ph!r} (want one of {KNOWN_PHASES})")
+            continue
+        if e.get("pid") != 1:
+            errs.append(f"event {i}: pid {e.get('pid')!r} != 1")
+        tid = e.get("tid")
+        if not isinstance(tid, int) or isinstance(tid, bool) or tid < 0:
+            errs.append(f"event {i}: tid {tid!r} is not a non-negative integer")
+            continue
+        if ph == "M":
+            if e.get("name") == "thread_name":
+                named_tids.add(tid)
+            continue
+        name = e.get("name")
+        if not isinstance(name, str) or not name:
+            errs.append(f"event {i}: missing span name")
+        else:
+            names.add(name)
+        event_tids.add(tid)
+        ts = e.get("ts")
+        if not _num(ts) or ts < 0:
+            errs.append(f"event {i}: ts {ts!r} is not a non-negative number")
+            continue
+        if ph == "X":
+            dur = e.get("dur")
+            if not _num(dur) or dur < 0:
+                errs.append(f"event {i}: dur {dur!r} is not a non-negative number")
+        if ts < last_ts.get(tid, 0):
+            errs.append(
+                f"event {i}: ts {ts} goes backwards on tid {tid} "
+                f"(previous {last_ts[tid]})"
+            )
+        last_ts[tid] = ts
+    for tid in sorted(event_tids - named_tids):
+        errs.append(f"tid {tid} has events but no thread_name metadata row")
+    for want in require:
+        if want not in names:
+            errs.append(f"required span {want!r} missing (have {len(names)} names)")
+    return errs
+
+
+def validate_metrics(doc):
+    """Return a list of problems with a parsed metrics run record."""
+    errs = []
+    if not isinstance(doc, dict):
+        return ["metrics root is not an object"]
+    for key in ("cmd", "counters", "gauges", "hists"):
+        if key not in doc:
+            errs.append(f"metrics record missing {key!r}")
+    for key in ("counters", "gauges"):
+        sec = doc.get(key, {})
+        if not isinstance(sec, dict):
+            errs.append(f"{key!r} is not an object")
+            continue
+        for k, v in sec.items():
+            if not _num(v):
+                errs.append(f"{key}[{k!r}]: value {v!r} is not a number")
+    hists = doc.get("hists", {})
+    if not isinstance(hists, dict):
+        errs.append("'hists' is not an object")
+        return errs
+    for k, h in hists.items():
+        if not isinstance(h, dict):
+            errs.append(f"hists[{k!r}]: not an object")
+            continue
+        bad = [f for f in HIST_FIELDS if not _num(h.get(f))]
+        if bad:
+            errs.append(f"hists[{k!r}]: missing/non-numeric fields {bad}")
+            continue
+        if not (h["p50"] <= h["p90"] <= h["p95"] <= h["p99"]):
+            errs.append(f"hists[{k!r}]: percentiles out of order: {h}")
+        if h["min"] > h["max"]:
+            errs.append(f"hists[{k!r}]: min {h['min']} > max {h['max']}")
+        if h["count"] > 0 and not (h["min"] <= h["p50"] and h["p99"] <= h["max"]):
+            errs.append(f"hists[{k!r}]: percentiles outside [min, max]: {h}")
+    return errs
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", help="Chrome trace-event JSON to validate")
+    ap.add_argument("--metrics", help="metrics run record JSON to validate")
+    ap.add_argument(
+        "--require",
+        action="append",
+        default=[],
+        metavar="NAME",
+        help="span name that must appear in the trace (repeatable)",
+    )
+    args = ap.parse_args(argv)
+    if not args.trace and not args.metrics:
+        ap.error("nothing to validate: pass --trace and/or --metrics")
+    problems = []
+    if args.trace:
+        try:
+            problems += [f"trace: {p}" for p in validate_trace(_load(args.trace), args.require)]
+        except (OSError, ValueError) as e:
+            problems.append(f"trace: cannot load {args.trace}: {e}")
+    if args.metrics:
+        try:
+            problems += [f"metrics: {p}" for p in validate_metrics(_load(args.metrics))]
+        except (OSError, ValueError) as e:
+            problems.append(f"metrics: cannot load {args.metrics}: {e}")
+    if problems:
+        for p in problems:
+            print(f"validate_trace: {p}", file=sys.stderr)
+        return 1
+    checked = [p for p in (args.trace, args.metrics) if p]
+    print(f"validate_trace: OK ({', '.join(checked)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
